@@ -1,0 +1,89 @@
+//! Fig. 4 — "Communication-learning tradeoff": final test accuracy vs
+//! communication budget b ∈ {2,3,4,5} for QSGD / NQSGD / TQSGD / TNQSGD,
+//! with DSGD as the uncompressed anchor.
+//!
+//! Paper shape: every curve is increasing in b; the truncated schemes
+//! dominate at every budget; gaps shrink as b grows (all converge toward
+//! DSGD).  Includes an error-feedback ablation (our extension).
+//!
+//! Regenerate with `cargo bench --bench fig4_tradeoff`
+//! (`TQSGD_BENCH_ROUNDS=600` for tighter curves).
+
+use tqsgd::benchkit::{env_usize, section, Table};
+use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::train::Sweep;
+
+fn main() -> anyhow::Result<()> {
+    let rounds = env_usize("TQSGD_BENCH_ROUNDS", 250);
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.lr = 0.05; // operating point where low-bit noise separates schemes
+    cfg.rounds = rounds;
+    cfg.eval_every = rounds;
+
+    section(&format!("Fig. 4 — accuracy vs bits, {} rounds, N=8", rounds));
+    let sweep = Sweep::new(&cfg.artifacts_dir)?;
+
+    let mut dc = cfg.clone();
+    dc.quant.scheme = Scheme::Dsgd;
+    let anchor = sweep.run(dc, false)?;
+    println!("DSGD anchor (32-bit): acc {:.4}", anchor.final_accuracy);
+
+    let schemes = [Scheme::Qsgd, Scheme::Nqsgd, Scheme::Tqsgd, Scheme::Tnqsgd];
+    let bits = [2u32, 3, 4, 5];
+    let mut results = std::collections::BTreeMap::new();
+    for scheme in schemes {
+        for b in bits {
+            let mut c = cfg.clone();
+            c.quant.scheme = scheme;
+            c.quant.bits = b;
+            let r = sweep.run(c, false)?;
+            eprintln!("  {} b={}: acc {:.4}", scheme.name(), b, r.final_accuracy);
+            results.insert((scheme.name().to_string(), b), r);
+        }
+    }
+
+    let mut table = Table::new(&["bits", "qsgd", "nqsgd", "tqsgd", "tnqsgd", "MB up (tnqsgd)"]);
+    for b in bits {
+        table.row(&[
+            b.to_string(),
+            format!("{:.4}", results[&("qsgd".into(), b)].final_accuracy),
+            format!("{:.4}", results[&("nqsgd".into(), b)].final_accuracy),
+            format!("{:.4}", results[&("tqsgd".into(), b)].final_accuracy),
+            format!("{:.4}", results[&("tnqsgd".into(), b)].final_accuracy),
+            format!("{:.1}", results[&("tnqsgd".into(), b)].total_bytes_up as f64 / 1e6),
+        ]);
+    }
+    table.print();
+
+    section("paper-shape checks");
+    for scheme in ["tqsgd", "tnqsgd"] {
+        let a2 = results[&(scheme.to_string(), 2)].final_accuracy;
+        let a5 = results[&(scheme.to_string(), 5)].final_accuracy;
+        println!(
+            "[{}] {scheme}: accuracy increases with budget ({a2:.4} @b2 → {a5:.4} @b5)",
+            if a5 >= a2 - 0.01 { "PASS" } else { "FAIL" }
+        );
+    }
+    for b in bits {
+        let tq = results[&("tqsgd".into(), b)].final_accuracy;
+        let q = results[&("qsgd".into(), b)].final_accuracy;
+        println!(
+            "[{}] b={b}: truncated ≥ plain uniform ({tq:.4} vs {q:.4})",
+            if tq >= q - 0.02 { "PASS" } else { "FAIL" }
+        );
+    }
+
+    section("extension ablation: error feedback on TQSGD b=2");
+    let mut ef = cfg.clone();
+    ef.quant.scheme = Scheme::Tqsgd;
+    ef.quant.bits = 2;
+    ef.quant.error_feedback = true;
+    let r_ef = sweep.run(ef, false)?;
+    let r_plain = &results[&("tqsgd".into(), 2)];
+    println!(
+        "tqsgd b=2: plain {:.4} vs +error-feedback {:.4}",
+        r_plain.final_accuracy, r_ef.final_accuracy
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Fig. 5 / Appendix D — Truncated BiScaled Quantization (TBQSGD): the
+//! two-region density, the solved (k*, s_α, s_β, α*) design, and the
+//! Theorem 3 bound; plus a training comparison at b = 3.
+//!
+//! Paper shape: Q_B(α*, k*) ≤ 1 (Hölder), TBQSGD's E_TQ beats TQSGD's and
+//! its accuracy is competitive with TNQSGD at the same budget.
+//!
+//! Regenerate with `cargo bench --bench fig5_biscaled`.
+
+use tqsgd::benchkit::{env_usize, section, Table};
+use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::solver::{self, levels_for_bits};
+use tqsgd::tail::PowerLawModel;
+use tqsgd::theory;
+use tqsgd::train::Sweep;
+
+fn main() -> anyhow::Result<()> {
+    section("Fig. 5 — BiScaled design across tail indices (b=3)");
+    let s = levels_for_bits(3);
+    let mut t = Table::new(&[
+        "γ", "α*", "β*", "k*", "s_β", "s_α", "Q_B", "E_TQ(TBQ)", "E_TQ(TQ)", "E_TQ(TNQ)",
+    ]);
+    for &gamma in &[3.2, 3.5, 4.0, 4.5, 5.0] {
+        let m = PowerLawModel::new(gamma, 0.01, 0.1);
+        let d = solver::solve_biscaled(&m, s);
+        let e_b = solver::e_tq_biscaled(&m, &d, s);
+        let e_u = solver::e_tq_uniform(&m, solver::optimal_alpha_uniform(&m, s), s);
+        let e_n = solver::e_tq_nonuniform(&m, solver::optimal_alpha_nonuniform(&m, s), s);
+        t.row(&[
+            format!("{gamma:.1}"),
+            format!("{:.4}", d.alpha),
+            format!("{:.4}", d.beta),
+            format!("{:.3}", d.k),
+            d.s_beta.to_string(),
+            d.s_alpha.to_string(),
+            format!("{:.4}", d.q_b),
+            format!("{e_b:.3e}"),
+            format!("{e_u:.3e}"),
+            format!("{e_n:.3e}"),
+        ]);
+    }
+    t.print();
+
+    section("Theorem 3 bound vs Theorems 1/2 (d=37610, N=8)");
+    let mut tb = Table::new(&["s", "Thm1 (TQSGD)", "Thm2 (TNQSGD)", "Thm3 (TBQSGD)", "ordering"]);
+    let m = PowerLawModel::new(4.0, 0.01, 0.1);
+    for &s in &[3usize, 7, 15, 31] {
+        let t1 = theory::theorem1_bound(&m, 37610, 8, s);
+        let t2 = theory::theorem2_bound(&m, 37610, 8, s);
+        let t3 = theory::theorem3_bound(&m, 37610, 8, s);
+        tb.row(&[
+            s.to_string(),
+            format!("{t1:.3e}"),
+            format!("{t2:.3e}"),
+            format!("{t3:.3e}"),
+            format!(
+                "{}",
+                if t2 <= t1 && t3 <= t1 { "Thm2 ≤ Thm1, Thm3 ≤ Thm1 ✓" } else { "VIOLATED" }
+            ),
+        ]);
+    }
+    tb.print();
+
+    let rounds = env_usize("TQSGD_BENCH_ROUNDS", 250);
+    section(&format!("training comparison at b=3 ({rounds} rounds)"));
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.lr = 0.05;
+    cfg.rounds = rounds;
+    cfg.eval_every = rounds;
+    cfg.quant.bits = 3;
+    let sweep = Sweep::new(&cfg.artifacts_dir)?;
+    let mut res = Table::new(&["scheme", "final acc", "bits/param/round"]);
+    for scheme in [Scheme::Tqsgd, Scheme::Tnqsgd, Scheme::Tbqsgd] {
+        let mut c = cfg.clone();
+        c.quant.scheme = scheme;
+        let r = sweep.run(c, false)?;
+        res.row(&[
+            scheme.name().into(),
+            format!("{:.4}", r.final_accuracy),
+            format!("{:.2}", r.bits_per_param),
+        ]);
+    }
+    res.print();
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! §Perf — hot-path performance of the whole stack:
+//!
+//! * L3 codec throughput (encode+pack GB/s per scheme/bits; target ≥1 GB/s
+//!   for 4-bit uniform on one core),
+//! * bit-packing substrate throughput,
+//! * L1↔L3 parity + relative cost of running the Pallas quantizer through
+//!   PJRT (interpret-mode; structure, not TPU wallclock),
+//! * end-to-end round breakdown (PJRT grad exec vs codec vs aggregate) for
+//!   the CNN config, showing the coordinator is not the bottleneck.
+//!
+//! Regenerate with `cargo bench --bench perf_hotpath`.
+
+use tqsgd::benchkit::{bench, fmt_ns, section, Table};
+use tqsgd::config::{ExperimentConfig, QuantConfig, Scheme};
+use tqsgd::coordinator::Coordinator;
+use tqsgd::quant::{make_compressor, Payload};
+use tqsgd::runtime::{QuantExec, Runtime};
+use tqsgd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(99);
+    let d = 1 << 20; // 1M elements, CNN-to-MLP scale
+    let grads: Vec<f32> =
+        (0..d).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+
+    section("L3 codec throughput (1M elements, single core)");
+    let mut t = Table::new(&["codec", "bits", "encode", "GB/s in", "bytes out"]);
+    for (scheme, bits) in [
+        (Scheme::Dsgd, 32u32),
+        (Scheme::Qsgd, 3),
+        (Scheme::Tqsgd, 2),
+        (Scheme::Tqsgd, 3),
+        (Scheme::Tqsgd, 4),
+        (Scheme::Tqsgd, 5),
+        (Scheme::Tnqsgd, 3),
+        (Scheme::Tnqsgd, 5),
+        (Scheme::Tbqsgd, 3),
+        (Scheme::Terngrad, 2),
+        (Scheme::Topk, 32),
+    ] {
+        let mut c = make_compressor(&QuantConfig {
+            scheme,
+            bits: bits.min(8),
+            ..Default::default()
+        });
+        c.refit(&grads);
+        let mut out_len = 0usize;
+        let timing = bench(2, 8, || {
+            let mut r = Rng::new(1);
+            let frame = c.compress(&grads, &mut r);
+            out_len = frame.len();
+            std::hint::black_box(&frame);
+        });
+        t.row(&[
+            c.describe(),
+            bits.to_string(),
+            timing.pretty(),
+            format!("{:.2}", timing.gbps(d * 4)),
+            out_len.to_string(),
+        ]);
+    }
+    t.print();
+
+    section("decode + aggregate throughput");
+    let mut t = Table::new(&["codec", "decode+dequant", "GB/s out"]);
+    for scheme in [Scheme::Tqsgd, Scheme::Tnqsgd] {
+        let mut c = make_compressor(&QuantConfig { scheme, bits: 3, ..Default::default() });
+        c.refit(&grads);
+        let frame = c.compress(&grads, &mut rng);
+        let timing = bench(2, 8, || {
+            let v = Payload::decode(&frame).unwrap().dequantize();
+            std::hint::black_box(&v);
+        });
+        t.row(&[
+            c.describe(),
+            timing.pretty(),
+            format!("{:.2}", timing.gbps(d * 4)),
+        ]);
+    }
+    t.print();
+
+    section("L1 Pallas kernel via PJRT (parity + interpret-mode cost)");
+    match Runtime::open("artifacts") {
+        Ok(rt) => {
+            let q = QuantExec::new(&rt, "quant_uniform_b3")?;
+            let tile = q.tile;
+            let g = &grads[..tile];
+            let u: Vec<f32> = (0..tile).map(|_| rng.f32()).collect();
+            let alpha = 0.05f32;
+            let (_deq, idx) = q.run_uniform(g, &u, alpha)?;
+            // Parity: rust codec must produce identical indices.
+            let mut rust_idx = Vec::new();
+            tqsgd::quant::kernels::quantize_uniform_slice(g, &u, alpha, 7, &mut rust_idx);
+            let mismatches = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
+            println!("parity quant_uniform_b3 vs rust codec: {mismatches}/{tile} index mismatches");
+            let timing = bench(1, 5, || {
+                let r = q.run_uniform(g, &u, alpha).unwrap();
+                std::hint::black_box(&r);
+            });
+            println!(
+                "PJRT pallas tile ({tile} elems): {} ({:.3} GB/s) — interpret-mode CPU, structure-only proxy",
+                timing.pretty(),
+                timing.gbps(tile * 4)
+            );
+
+            section("end-to-end round breakdown (CNN, N=8, b=3)");
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = "cnn".into();
+            cfg.rounds = 4;
+            cfg.train_size = 2048;
+            cfg.test_size = 512;
+            cfg.quant.scheme = Scheme::Tnqsgd;
+            let mut coord = Coordinator::new(cfg, &rt)?;
+            coord.step()?; // warm the executable cache
+            let timing = bench(1, 6, || {
+                coord.step().unwrap();
+            });
+            println!("full round: {}", fmt_ns(timing.median_ns));
+
+            // Isolate codec share: same gradient size, 8 clients, 2 groups.
+            let spec = coord.model_spec().clone();
+            let per_client: Vec<f32> = grads[..spec.param_count].to_vec();
+            let mut c = make_compressor(&QuantConfig {
+                scheme: Scheme::Tnqsgd,
+                bits: 3,
+                ..Default::default()
+            });
+            c.refit(&per_client);
+            let codec_t = bench(1, 6, || {
+                for cl in 0..8 {
+                    let mut r = Rng::new(cl);
+                    std::hint::black_box(c.compress(&per_client, &mut r));
+                }
+            });
+            println!(
+                "8-client codec work (serial): {} → {:.1}% of round (threads hide most of it)",
+                fmt_ns(codec_t.median_ns),
+                100.0 * codec_t.median_ns / timing.median_ns
+            );
+        }
+        Err(e) => println!("(skipping PJRT sections: {e})"),
+    }
+    Ok(())
+}

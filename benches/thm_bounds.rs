@@ -1,0 +1,91 @@
+//! Theorems 1 & 2 — the E_TQ convergence-error terms at the optimized
+//! parameters:
+//!
+//! * fixed points Eq. (12)/(19) satisfied,
+//! * measured per-element quantization MSE at α* matches d/N · E_TQ scaled
+//!   back (we measure the per-element term itself),
+//! * the communication scaling E_TQ ∝ s^{(6−2γ)/(γ−1)} — the paper's
+//!   headline rate — recovered as a log-log slope,
+//! * Hölder ordering Q_N ≤ Q_U ⇒ Thm 2 ≤ Thm 1,
+//! * the Eq. (13)-vs-(14) approximation gap ε ≤ 2[1 − Q_U(α')].
+//!
+//! Regenerate with `cargo bench --bench thm_bounds`.
+
+use tqsgd::benchkit::{section, Table};
+use tqsgd::quant::kernels::{dequantize_uniform_elem, quantize_codebook_elem, quantize_uniform_elem};
+use tqsgd::solver::{self, levels_for_bits};
+use tqsgd::tail::PowerLawModel;
+use tqsgd::theory;
+use tqsgd::util::Rng;
+
+const N: usize = 150_000;
+
+fn measured_e_tq_uniform(m: &PowerLawModel, s: usize, rng: &mut Rng) -> f64 {
+    let alpha = solver::optimal_alpha_uniform(m, s) as f32;
+    let mut mse = 0.0;
+    for _ in 0..N {
+        let g = rng.power_law_gradient(m.g_min, m.gamma, 2.0 * m.rho) as f32;
+        let idx = quantize_uniform_elem(g, rng.f32(), alpha, s as u32);
+        mse += ((dequantize_uniform_elem(idx, alpha, s as u32) - g) as f64).powi(2);
+    }
+    mse / N as f64
+}
+
+fn measured_e_tq_nonuniform(m: &PowerLawModel, s: usize, rng: &mut Rng) -> f64 {
+    let alpha = solver::optimal_alpha_nonuniform(m, s);
+    let cb = solver::nonuniform_codebook(m, alpha, s);
+    let mut mse = 0.0;
+    for _ in 0..N {
+        let g = rng.power_law_gradient(m.g_min, m.gamma, 2.0 * m.rho) as f32;
+        let idx = quantize_codebook_elem(g, rng.f32(), &cb);
+        mse += ((cb[idx as usize] - g) as f64).powi(2);
+    }
+    mse / N as f64
+}
+
+fn main() {
+    let mut rng = Rng::new(2024);
+
+    for &gamma in &[3.5f64, 4.0, 4.5] {
+        let m = PowerLawModel::new(gamma, 0.01, 0.1);
+        section(&format!("Theorems 1/2 — γ = {gamma} (per-element E_TQ, d=N=1)"));
+        let mut t = Table::new(&[
+            "b", "s", "E_TQ thm1", "measured TQSGD", "E_TQ thm2", "measured TNQSGD", "thm2≤thm1",
+        ]);
+        for &b in &[2u32, 3, 4, 5] {
+            let s = levels_for_bits(b);
+            let t1 = theory::theorem1_bound(&m, 1, 1, s);
+            let t2 = theory::theorem2_bound(&m, 1, 1, s);
+            let m1 = measured_e_tq_uniform(&m, s, &mut rng);
+            let m2 = measured_e_tq_nonuniform(&m, s, &mut rng);
+            t.row(&[
+                b.to_string(),
+                s.to_string(),
+                format!("{t1:.3e}"),
+                format!("{m1:.3e}"),
+                format!("{t2:.3e}"),
+                format!("{m2:.3e}"),
+                (t2 <= t1 * 1.0000001).to_string(),
+            ]);
+        }
+        t.print();
+
+        // Communication-scaling slope.
+        let t_a = theory::theorem1_bound(&m, 1, 1, 7);
+        let t_b = theory::theorem1_bound(&m, 1, 1, 31);
+        let slope = (t_b / t_a).ln() / (31.0f64 / 7.0).ln();
+        let expect = (6.0 - 2.0 * gamma) / (gamma - 1.0);
+        let m_a = measured_e_tq_uniform(&m, 7, &mut rng);
+        let m_b = measured_e_tq_uniform(&m, 31, &mut rng);
+        let slope_meas = (m_b / m_a).ln() / (31.0f64 / 7.0).ln();
+        println!(
+            "scaling E_TQ ∝ s^x: theory x = {expect:.3}, bound slope = {slope:.3}, measured slope = {slope_meas:.3}"
+        );
+
+        let (eps, bound) = theory::theorem1_approx_gap(&m, 7);
+        println!(
+            "Eq.(13) vs Eq.(14) gap: ε = {eps:.4} ≤ 2[1 − Q_U(α')] = {bound:.4} → {}",
+            if eps <= bound + 1e-9 { "HOLDS" } else { "VIOLATED" }
+        );
+    }
+}

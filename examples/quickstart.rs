@@ -1,0 +1,47 @@
+//! Quickstart: train a small MLP with the paper's TNQSGD quantizer at
+//! b = 3 bits and compare the bytes-on-wire against the 32-bit oracle.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::train::Sweep;
+
+fn main() -> anyhow::Result<()> {
+    // One runtime, two experiments (artifacts compile once).
+    let sweep = Sweep::new("artifacts")?;
+
+    let mut cfg = ExperimentConfig::preset("quickstart")?;
+    cfg.rounds = 150;
+    cfg.eval_every = 25;
+    cfg.train_size = 4096;
+    cfg.test_size = 1024;
+
+    println!("== TNQSGD b=3 (the paper's truncated non-uniform quantizer) ==");
+    let tnq = sweep.run(cfg.clone(), true)?;
+
+    println!("\n== DSGD oracle (uncompressed fp32) ==");
+    cfg.quant.scheme = Scheme::Dsgd;
+    let dsgd = sweep.run(cfg, true)?;
+
+    println!("\n== summary ==");
+    println!(
+        "TNQSGD b=3: acc {:.4}, {:.1} MB uplink ({:.2} bits/param/round)",
+        tnq.final_accuracy,
+        tnq.total_bytes_up as f64 / 1e6,
+        tnq.bits_per_param
+    );
+    println!(
+        "DSGD fp32 : acc {:.4}, {:.1} MB uplink ({:.2} bits/param/round)",
+        dsgd.final_accuracy,
+        dsgd.total_bytes_up as f64 / 1e6,
+        dsgd.bits_per_param
+    );
+    println!(
+        "compression: {:.1}x fewer uplink bytes, {:.1}% accuracy gap",
+        dsgd.total_bytes_up as f64 / tnq.total_bytes_up as f64,
+        (dsgd.final_accuracy - tnq.final_accuracy) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Communication–learning tradeoff sweep (the Fig. 4 experiment as an
+//! application): final test accuracy vs uplink bytes for every scheme at
+//! b ∈ {2, 3, 4, 5}, plus the DSGD anchor.
+//!
+//! ```sh
+//! cargo run --release --example tradeoff_sweep [-- --rounds 300 --model cnn]
+//! ```
+
+use anyhow::Result;
+use tqsgd::benchkit::Table;
+use tqsgd::cli::Args;
+use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::train::Sweep;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = args.str_or("model", "cnn");
+    cfg.rounds = args.usize_or("rounds", 300)?;
+    cfg.eval_every = cfg.rounds; // final accuracy only
+    cfg.train_size = args.usize_or("train-size", 8192)?;
+    cfg.test_size = args.usize_or("test-size", 2048)?;
+
+    let sweep = Sweep::new(&cfg.artifacts_dir)?;
+    let mut table = Table::new(&["scheme", "bits", "final acc", "MB uplink", "bits/param/round"]);
+
+    // Oracle anchor.
+    let mut dc = cfg.clone();
+    dc.quant.scheme = Scheme::Dsgd;
+    let d = sweep.run(dc, false)?;
+    table.row(&[
+        "dsgd".into(),
+        "32".into(),
+        format!("{:.4}", d.final_accuracy),
+        format!("{:.1}", d.total_bytes_up as f64 / 1e6),
+        format!("{:.2}", d.bits_per_param),
+    ]);
+
+    for scheme in [Scheme::Qsgd, Scheme::Nqsgd, Scheme::Tqsgd, Scheme::Tnqsgd, Scheme::Tbqsgd] {
+        for bits in [2u32, 3, 4, 5] {
+            let mut c = cfg.clone();
+            c.quant.scheme = scheme;
+            c.quant.bits = bits;
+            let r = sweep.run(c, false)?;
+            table.row(&[
+                scheme.name().into(),
+                bits.to_string(),
+                format!("{:.4}", r.final_accuracy),
+                format!("{:.1}", r.total_bytes_up as f64 / 1e6),
+                format!("{:.2}", r.bits_per_param),
+            ]);
+            eprintln!("done {} b={}", scheme.name(), bits);
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,246 @@
+"""AOT pipeline: lower every L2/L1 entry point to HLO TEXT + manifest.json.
+
+This is the ONLY place python runs; afterwards the rust binary is
+self-contained.  Interchange format is HLO text, not a serialized
+HloModuleProto — jax >= 0.5 emits 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts written to --out (default ../artifacts):
+
+    <entry>.hlo.txt          one per entry point
+    <model>_init.bin         f32-LE initial flat parameters
+    manifest.json            shapes, dtypes, param layouts, quant tile size
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--models mlp,cnn,tfm_small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import transformer as T
+from .kernels.biscaled import quantize_biscaled
+from .kernels.nonuniform import quantize_codebook
+from .kernels.quantize import quantize_uniform
+from .kernels.stats import tail_stats
+
+# Flat tile the rust hot path feeds the standalone quantizer artifacts with.
+QUANT_TILE = 65536
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(shapes_in, shapes_out):
+    return {
+        "inputs": [{"name": n, "dtype": "f32", "shape": list(s)} for n, s in shapes_in],
+        "outputs": [
+            {"name": n, "dtype": d, "shape": list(s)} for n, d, s in shapes_out
+        ],
+    }
+
+
+def lower_entry(out_dir, name, fn, in_specs, io, manifest):
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {"file": fname, **io}
+    print(f"  {name:24s} -> {fname} ({len(text)} chars)")
+
+
+def export_classifier(out_dir, name, manifest):
+    m = M.MODELS[name]
+    lay = m["layout"]()
+    P = lay.total
+    fwd = m["forward"]
+    grad_fn = M.make_grad_fn(fwd)
+    eval_fn = M.make_eval_fn(fwd)
+    D = m["input_dim"]
+
+    lower_entry(
+        out_dir, f"{name}_grad", grad_fn,
+        (spec((P,)), spec((TRAIN_BATCH, D)), spec((TRAIN_BATCH,))),
+        _io(
+            [("params", (P,)), ("x", (TRAIN_BATCH, D)), ("y", (TRAIN_BATCH,))],
+            [("loss", "f32", ()), ("grads", "f32", (P,))],
+        ),
+        manifest,
+    )
+    lower_entry(
+        out_dir, f"{name}_eval", eval_fn,
+        (spec((P,)), spec((EVAL_BATCH, D)), spec((EVAL_BATCH,))),
+        _io(
+            [("params", (P,)), ("x", (EVAL_BATCH, D)), ("y", (EVAL_BATCH,))],
+            [("loss_sum", "f32", ()), ("correct", "f32", ())],
+        ),
+        manifest,
+    )
+
+    init = np.asarray(m["init"](jax.random.PRNGKey(42)), dtype=np.float32)
+    init_file = f"{name}_init.bin"
+    init.tofile(os.path.join(out_dir, init_file))
+    manifest["models"][name] = {
+        **lay.to_manifest(),
+        "kind": "classifier",
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "input_dim": D,
+        "init_file": init_file,
+        "grad_entry": f"{name}_grad",
+        "eval_entry": f"{name}_eval",
+    }
+
+
+def export_transformer(out_dir, preset, manifest):
+    cfg = T.PRESETS[preset]
+    lay = T.tfm_layout(cfg)
+    P = lay.total
+    grad_fn = T.make_tfm_grad_fn(cfg)
+    eval_fn = T.make_tfm_eval_fn(cfg)
+    B, L = cfg.batch, cfg.seq_len
+
+    lower_entry(
+        out_dir, f"{preset}_grad", grad_fn,
+        (spec((P,)), spec((B, L + 1))),
+        _io(
+            [("params", (P,)), ("tokens", (B, L + 1))],
+            [("loss", "f32", ()), ("grads", "f32", (P,))],
+        ),
+        manifest,
+    )
+    lower_entry(
+        out_dir, f"{preset}_eval", eval_fn,
+        (spec((P,)), spec((B, L + 1))),
+        _io(
+            [("params", (P,)), ("tokens", (B, L + 1))],
+            [("loss_sum", "f32", ()), ("count", "f32", ())],
+        ),
+        manifest,
+    )
+
+    init = np.asarray(T.tfm_init(jax.random.PRNGKey(7), cfg), dtype=np.float32)
+    init_file = f"{preset}_init.bin"
+    init.tofile(os.path.join(out_dir, init_file))
+    manifest["models"][preset] = {
+        **lay.to_manifest(),
+        "kind": "lm",
+        "train_batch": B,
+        "eval_batch": B,
+        "seq_len": L,
+        "vocab": cfg.vocab,
+        "init_file": init_file,
+        "grad_entry": f"{preset}_grad",
+        "eval_entry": f"{preset}_eval",
+    }
+
+
+def export_quant_kernels(out_dir, manifest):
+    """Standalone L1 quantizer artifacts over a fixed QUANT_TILE.
+
+    These exist for L1<->L3 parity benchmarking (runtime::QuantExec): the rust
+    codecs are the production encode path, and these artifacts prove the
+    Pallas kernel computes the identical function through PJRT.
+    """
+    D = QUANT_TILE
+    for b in (2, 3, 4, 5):
+        s = 2**b - 1
+        lower_entry(
+            out_dir, f"quant_uniform_b{b}",
+            lambda g, u, a, s=s: quantize_uniform(g, u, a, s=s),
+            (spec((D,)), spec((D,)), spec((1,))),
+            _io(
+                [("g", (D,)), ("u", (D,)), ("alpha", (1,))],
+                [("deq", "f32", (D,)), ("idx", "i32", (D,))],
+            ),
+            manifest,
+        )
+    s3 = 7
+    lower_entry(
+        out_dir, "quant_nonuniform_b3",
+        lambda g, u, cb: quantize_codebook(g, u, cb, s=s3),
+        (spec((D,)), spec((D,)), spec((s3 + 1,))),
+        _io(
+            [("g", (D,)), ("u", (D,)), ("codebook", (s3 + 1,))],
+            [("deq", "f32", (D,)), ("idx", "i32", (D,))],
+        ),
+        manifest,
+    )
+    # b=3 biscaled with the canonical 5-inner/2-outer split (k* near 0.5 gives
+    # s_beta=5, s_alpha=2 for s=7; the rust solver may choose other splits —
+    # this artifact pins one for parity testing).
+    lower_entry(
+        out_dir, "quant_biscaled_b3",
+        lambda g, u, ab: quantize_biscaled(g, u, ab, s_beta=5, s_alpha=2),
+        (spec((D,)), spec((D,)), spec((2,))),
+        _io(
+            [("g", (D,)), ("u", (D,)), ("alpha_beta", (2,))],
+            [("deq", "f32", (D,)), ("idx", "i32", (D,))],
+        ),
+        manifest,
+    )
+    lower_entry(
+        out_dir, "tail_stats",
+        lambda g, gm: tail_stats(g, gm),
+        (spec((D,)), spec((1,))),
+        _io(
+            [("g", (D,)), ("g_min", (1,))],
+            [("stats", "f32", (5,))],
+        ),
+        manifest,
+    )
+    manifest["quant"] = {
+        "tile": D,
+        "biscaled_b3": {"s_beta": 5, "s_alpha": 2},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn,tfm_small",
+                    help="comma list from {mlp, cnn, tfm_small, tfm_medium, tfm_100m}")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": {}, "models": {}}
+    for name in [m for m in args.models.split(",") if m]:
+        print(f"[aot] exporting {name}")
+        if name in M.MODELS:
+            export_classifier(args.out, name, manifest)
+        elif name in T.PRESETS:
+            export_transformer(args.out, name, manifest)
+        else:
+            raise SystemExit(f"unknown model {name!r}")
+    print("[aot] exporting quantizer kernels")
+    export_quant_kernels(args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: truncated BiScaled stochastic quantizer (TBQSGD, App. D).
+
+The BiScaled density (Eq. 25) is piecewise-constant over two regions
+
+    |g| in [0, beta]      -> s_beta  intervals of width 2 beta / s_beta
+    |g| in [beta, alpha]  -> s_alpha intervals of width 2 (alpha-beta)/s_alpha
+
+so unlike the general codebook kernel the interval index is CLOSED FORM per
+region — no ladder, just two scaled floors and a select.  This is the cheapest
+of the three kernels (pure element-wise VPU work, like the uniform one).
+
+Level indexing convention: the symmetric codebook has s_alpha/2 outer levels
+per side plus s_beta inner intervals; global index
+
+    idx in [0, s],  s = s_alpha + s_beta,
+    value(idx) = piecewise-linear over the three segments.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192
+
+
+def _value_of_idx(idx_f, alpha, beta, s_beta: int, s_alpha: int):
+    """Map a global level index (float) to its codebook value."""
+    half = s_alpha // 2
+    step_out = (alpha - beta) / half
+    step_in = 2.0 * beta / s_beta
+    # Segment boundaries in index space: [0, half], [half, half+s_beta],
+    # [half+s_beta, s].
+    left = -alpha + idx_f * step_out
+    mid = -beta + (idx_f - half) * step_in
+    right = beta + (idx_f - half - s_beta) * step_out
+    v = jnp.where(idx_f <= half, left, jnp.where(idx_f <= half + s_beta, mid, right))
+    # Exact end points where segments meet.
+    v = jnp.where(idx_f == half, -beta, v)
+    v = jnp.where(idx_f == half + s_beta, beta, v)
+    return v
+
+
+def _biscaled_kernel(g_ref, u_ref, ab_ref, o_ref, i_ref, *, s_beta: int, s_alpha: int):
+    alpha = ab_ref[0]
+    beta = ab_ref[1]
+    half = s_alpha // 2
+    s = s_alpha + s_beta
+    g = jnp.clip(g_ref[...], -alpha, alpha)
+    u = u_ref[...]
+    step_out = (alpha - beta) / half
+    step_in = 2.0 * beta / s_beta
+
+    # Closed-form interval index per region (index of the LOWER level).
+    k_left = jnp.clip(jnp.floor((g + alpha) / step_out), 0.0, half - 1.0)
+    k_mid = half + jnp.clip(jnp.floor((g + beta) / step_in), 0.0, s_beta - 1.0)
+    k_right = (
+        half
+        + s_beta
+        + jnp.clip(jnp.floor((g - beta) / step_out), 0.0, half - 1.0)
+    )
+    k = jnp.where(g < -beta, k_left, jnp.where(g <= beta, k_mid, k_right))
+
+    lower = _value_of_idx(k, alpha, beta, s_beta, s_alpha)
+    width = jnp.where(jnp.logical_and(k >= half, k < half + s_beta), step_in, step_out)
+    frac = (g - lower) / width
+    idx = k + (u < frac).astype(jnp.float32)
+    idx = jnp.clip(idx, 0.0, float(s))
+    o_ref[...] = _value_of_idx(idx, alpha, beta, s_beta, s_alpha).astype(jnp.float32)
+    i_ref[...] = idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("s_beta", "s_alpha"))
+def quantize_biscaled(g, u, alpha_beta, *, s_beta: int, s_alpha: int):
+    """Fused truncated BiScaled quantizer over a flat f32 vector.
+
+    Args:
+      g:          f32[d], d a multiple of BLOCK.
+      u:          f32[d] uniforms in [0, 1).
+      alpha_beta: f32[2] = [alpha, beta], alpha > beta > 0.
+      s_beta:     static inner interval count.
+      s_alpha:    static outer interval count (even; split across both sides).
+
+    Returns (deq f32[d], idx i32[d]) with idx in [0, s_beta + s_alpha].
+    """
+    d = g.shape[0]
+    assert d % BLOCK == 0, f"pad d={d} to a multiple of {BLOCK}"
+    assert s_alpha % 2 == 0
+    grid = (d // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_biscaled_kernel, s_beta=s_beta, s_alpha=s_alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.int32),
+        ],
+        interpret=True,
+    )(g, u, alpha_beta)

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: fused truncate -> uniform stochastic quantize -> dequantize.
+
+This is the per-element hot-spot of the paper (Eqs. 3-4 with the uniform
+density lambda_s = s / 2 alpha of Sec. IV-A).  The kernel streams the
+flattened gradient through VMEM in BLOCK-sized tiles:
+
+    HBM g[d], u[d]  --BlockSpec-->  VMEM tiles of BLOCK f32
+    per element: clip, scale, floor, stochastic round, rescale
+    VMEM tiles    --BlockSpec-->  HBM deq[d], idx[d]
+
+TPU mapping notes (DESIGN.md Hardware-Adaptation): the body is pure VPU
+element-wise work; with BLOCK = 8192 the working set is
+4 buffers * 32 KiB = 128 KiB of VMEM, leaving plenty of headroom for
+double-buffered prefetch of the next tile.  interpret=True everywhere in this
+repo (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size: multiple of the (8, 128) f32 VPU tile, sized for VMEM headroom.
+BLOCK = 8192
+
+
+def _uniform_kernel(g_ref, u_ref, alpha_ref, o_ref, i_ref, *, s: int):
+    """Per-tile body. alpha arrives as a (1,)-shaped scalar tile."""
+    alpha = alpha_ref[0]
+    g = g_ref[...]
+    u = u_ref[...]
+    g = jnp.clip(g, -alpha, alpha)
+    step = 2.0 * alpha / s
+    x = (g + alpha) / step
+    lo = jnp.clip(jnp.floor(x), 0.0, s - 1.0)
+    frac = x - lo
+    idx = lo + (u < frac).astype(jnp.float32)
+    idx = jnp.clip(idx, 0.0, float(s))
+    o_ref[...] = (-alpha + idx * step).astype(jnp.float32)
+    i_ref[...] = idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def quantize_uniform(g, u, alpha, *, s: int):
+    """Fused truncated uniform quantizer over a flat f32 vector.
+
+    Args:
+      g:     f32[d] flattened gradient, d a multiple of BLOCK (callers pad).
+      u:     f32[d] uniforms in [0, 1).
+      alpha: f32[1] truncation threshold.
+      s:     static level count 2^b - 1.
+
+    Returns (deq f32[d], idx i32[d]).
+    """
+    d = g.shape[0]
+    assert d % BLOCK == 0, f"pad d={d} to a multiple of {BLOCK}"
+    grid = (d // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_uniform_kernel, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.int32),
+        ],
+        interpret=True,
+    )(g, u, alpha)

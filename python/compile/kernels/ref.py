@@ -1,0 +1,129 @@
+"""Pure-jnp reference oracle for the two-stage quantizer.
+
+Everything here is the *specification*: the Pallas kernels in this package and
+the rust codecs in ``rust/src/quant`` are both validated against these
+functions (pytest on the python side, parity fixtures on the rust side).
+
+The two-stage quantizer of the paper (Eqs. 3-4):
+
+    T_alpha[g] = clip(g, -alpha, alpha)                        (truncation)
+    Q[g]       = l_{k-1} w.p. 1 - p,  l_k w.p. p = (g - l_{k-1}) / |Delta_k|
+
+where the codebook L = {l_0 < l_1 < ... < l_s} covers [-alpha, alpha] and
+s = 2^b - 1.  Stochastic rounding consumes an explicit uniform u ~ U[0,1) per
+element so that the oracle, the Pallas kernel and the rust codec are bit-wise
+comparable given the same uniforms.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def truncate(g, alpha):
+    """Eq. (3): clip each element of ``g`` to [-alpha, alpha]."""
+    return jnp.clip(g, -alpha, alpha)
+
+
+def uniform_codebook(alpha, s: int):
+    """Evenly spaced codebook {-alpha + k * 2 alpha / s : k = 0..s}."""
+    k = jnp.arange(s + 1, dtype=jnp.float32)
+    return -alpha + k * (2.0 * alpha / s)
+
+
+def quantize_uniform(g, u, alpha, s: int):
+    """Truncated uniform stochastic quantizer (TQSGD; Sec. IV-A).
+
+    Args:
+      g:      gradient elements, any shape, f32.
+      u:      uniforms in [0, 1), same shape as g.
+      alpha:  truncation threshold (scalar).
+      s:      number of intervals (2^b - 1), static.
+
+    Returns:
+      (deq, idx): dequantized f32 values (elements of the codebook) and the
+      integer level index in [0, s].
+    """
+    g = truncate(g, alpha)
+    step = 2.0 * alpha / s
+    # Position within the codebook; x in [0, s].
+    x = (g + alpha) / step
+    lo = jnp.floor(x)
+    # Guard the right edge: g == +alpha gives x == s exactly.
+    lo = jnp.clip(lo, 0.0, s - 1.0)
+    frac = x - lo
+    idx = lo + (u < frac).astype(jnp.float32)
+    idx = jnp.clip(idx, 0.0, float(s))
+    deq = -alpha + idx * step
+    return deq.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def quantize_codebook(g, u, codebook):
+    """Truncated non-uniform stochastic quantizer given an explicit codebook.
+
+    The codebook must be strictly increasing; its end points define the
+    truncation range [l_0, l_s].  Used for TNQSGD (density of Eq. 18 inverted
+    into level positions) and TBQSGD (piecewise-uniform codebook).
+
+    Index selection is the branchless comparison ladder described in
+    DESIGN.md (Hardware-Adaptation): k = sum_j [g >= l_j] - 1 over the
+    interior boundaries.
+    """
+    cb = jnp.asarray(codebook, dtype=jnp.float32)
+    s = cb.shape[0] - 1
+    g = jnp.clip(g, cb[0], cb[s])
+    # Ladder over interior boundaries l_1 .. l_{s-1}: counts how many interior
+    # boundaries are <= g, giving the interval index in [0, s-1].
+    interior = cb[1:s]
+    k = jnp.sum(
+        (g[..., None] >= interior[(None,) * g.ndim]).astype(jnp.int32), axis=-1
+    )
+    lower = jnp.take(cb, k)
+    upper = jnp.take(cb, k + 1)
+    width = upper - lower
+    frac = jnp.where(width > 0, (g - lower) / jnp.where(width > 0, width, 1.0), 0.0)
+    up = (u < frac).astype(jnp.int32)
+    idx = k + up
+    deq = jnp.take(cb, idx)
+    return deq.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def biscaled_codebook(alpha, beta, s_beta: int, s_alpha: int):
+    """Codebook for the BiScaled quantizer (Appendix D, Eq. 25).
+
+    The inner region [-beta, beta] is split into s_beta equal intervals and
+    the two outer regions [-alpha,-beta] and [beta,alpha] share s_alpha equal
+    intervals (s_alpha/2 per side, so s_alpha must be even).
+    """
+    assert s_alpha % 2 == 0, "s_alpha must be even for a symmetric codebook"
+    half = s_alpha // 2
+    inner = jnp.linspace(-beta, beta, s_beta + 1)
+    left = jnp.linspace(-alpha, -beta, half + 1)[:-1]
+    right = jnp.linspace(beta, alpha, half + 1)[1:]
+    return jnp.concatenate([left, inner, right]).astype(jnp.float32)
+
+
+def quantize_biscaled(g, u, alpha, beta, s_beta: int, s_alpha: int):
+    """Truncated BiScaled stochastic quantizer (TBQSGD, Appendix D)."""
+    cb = biscaled_codebook(alpha, beta, s_beta, s_alpha)
+    return quantize_codebook(g, u, cb)
+
+
+def tail_stats(g, g_min):
+    """Sufficient statistics for the power-law tail MLE (Sec. V).
+
+    gamma_hat = 1 + n / sum ln(|g_j| / g_min) over |g_j| > g_min.
+
+    Returns a 5-vector: [n_tail, sum_log, sum_abs, sum_sq, abs_max].
+    """
+    a = jnp.abs(g)
+    mask = a > g_min
+    n = jnp.sum(mask.astype(jnp.float32))
+    slog = jnp.sum(jnp.where(mask, jnp.log(jnp.where(mask, a, 1.0) / g_min), 0.0))
+    return jnp.stack([n, slog, jnp.sum(a), jnp.sum(g * g), jnp.max(a)])
+
+
+def quantization_mse(g, deq):
+    """Mean squared quantization error ||Q[T[g]] - g||^2 / d (Lemma 2)."""
+    e = deq - g
+    return jnp.mean(e * e)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: tail statistics for the power-law MLE (Sec. V).
+
+Computes, per VMEM tile, the partial sufficient statistics
+
+    [ n_tail, sum ln(|g|/g_min) over tail, sum |g|, sum g^2, max |g| ]
+
+which the caller (or the L2 wrapper) reduces across tiles.  These feed the
+paper's estimator  gamma_hat = 1 + n [ sum_j ln(g_j / g_min) ]^{-1}  and the
+rho_hat = n_tail / d  mass estimate used in Eqs. (12)/(19)/(33).
+
+The tile emits a (1, 5) partial row; the grid dimension concatenates rows so
+the final jnp.sum / jnp.max over axis 0 is a trivial (grid, 5) reduction that
+XLA fuses with the surrounding graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192
+
+
+def _stats_kernel(g_ref, gmin_ref, o_ref):
+    g = g_ref[...]
+    g_min = gmin_ref[0]
+    a = jnp.abs(g)
+    mask = a > g_min
+    n = jnp.sum(mask.astype(jnp.float32))
+    slog = jnp.sum(jnp.where(mask, jnp.log(jnp.where(mask, a, 1.0) / g_min), 0.0))
+    o_ref[0, 0] = n
+    o_ref[0, 1] = slog
+    o_ref[0, 2] = jnp.sum(a)
+    o_ref[0, 3] = jnp.sum(g * g)
+    o_ref[0, 4] = jnp.max(a)
+
+
+@jax.jit
+def tail_stats(g, g_min):
+    """Tail sufficient statistics over a flat f32 vector.
+
+    Args:
+      g:     f32[d], d a multiple of BLOCK.
+      g_min: f32[1] power-law lower cutoff.
+
+    Returns f32[5] = [n_tail, sum_log, sum_abs, sum_sq, abs_max].
+    """
+    d = g.shape[0]
+    assert d % BLOCK == 0, f"pad d={d} to a multiple of {BLOCK}"
+    grid = (d // BLOCK,)
+    partial = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 5), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d // BLOCK, 5), jnp.float32),
+        interpret=True,
+    )(g, g_min)
+    sums = jnp.sum(partial[:, :4], axis=0)
+    mx = jnp.max(partial[:, 4])
+    return jnp.concatenate([sums, mx[None]])

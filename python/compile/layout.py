@@ -1,0 +1,85 @@
+"""Flat-parameter ABI shared by every exported model.
+
+The rust coordinator owns optimizer state and quantization, so every AOT
+entry point exchanges parameters as ONE flat f32 vector.  `ParamLayout`
+records the (name, shape, group) of each tensor; offsets are static, so
+unflattening inside the jitted function lowers to zero-copy slices.
+
+`group` is the quantization group ("conv" / "fc" / "emb" ...): the paper
+(Sec. V) quantizes convolutional and fully-connected gradients independently
+because their distributions differ; the rust side reads the group ranges from
+manifest.json and runs one quantizer state per (client, group).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ParamEntry:
+    name: str
+    shape: tuple
+    group: str
+    offset: int = 0
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+
+@dataclass
+class ParamLayout:
+    entries: list = field(default_factory=list)
+
+    def add(self, name: str, shape: tuple, group: str) -> None:
+        e = ParamEntry(name, tuple(int(x) for x in shape), group)
+        e.offset = self.total
+        self.entries.append(e)
+
+    @property
+    def total(self) -> int:
+        if not self.entries:
+            return 0
+        last = self.entries[-1]
+        return last.offset + last.size
+
+    def unflatten(self, flat):
+        """Slice the flat vector into a {name: tensor} dict (static offsets)."""
+        out = {}
+        for e in self.entries:
+            out[e.name] = flat[e.offset : e.offset + e.size].reshape(e.shape)
+        return out
+
+    def group_ranges(self):
+        """Contiguous [start, end) per group, in layout order.
+
+        Entries of the same group may interleave with other groups; the rust
+        side wants contiguous runs, so we emit one (group, start, end) triple
+        per maximal run.
+        """
+        runs = []
+        for e in self.entries:
+            if runs and runs[-1][0] == e.group and runs[-1][2] == e.offset:
+                runs[-1][2] = e.offset + e.size
+            else:
+                runs.append([e.group, e.offset, e.offset + e.size])
+        return [(g, s, t) for g, s, t in runs]
+
+    def to_manifest(self):
+        return {
+            "param_count": self.total,
+            "groups": [
+                {"group": g, "start": s, "end": t} for g, s, t in self.group_ranges()
+            ],
+            "entries": [
+                {
+                    "name": e.name,
+                    "shape": list(e.shape),
+                    "group": e.group,
+                    "offset": e.offset,
+                }
+                for e in self.entries
+            ],
+        }

@@ -1,0 +1,169 @@
+"""L2 JAX models: MLP and LeNet-style CNN with the flat-parameter ABI.
+
+Exported entry points (see aot.py):
+
+    <model>_grad(params f32[P], x, y f32[B])   -> (loss f32[], grads f32[P])
+    <model>_eval(params f32[P], x, y f32[B])   -> (loss_sum f32[], correct f32[])
+
+Labels travel as f32 and are cast to int inside the graph — this keeps the
+rust FFI surface f32-only (one Literal dtype on the hot path).
+
+The CNN mirrors the paper's conv+fc split: gradients of convolutional and
+fully-connected layers have different tail behaviour (Sec. V cites TernGrad
+for this), so the layout tags each tensor with its quantization group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layout import ParamLayout
+
+# ---------------------------------------------------------------------------
+# MLP: 784 -> 256 -> 128 -> 10
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (784, 256, 128, 10)
+
+
+def mlp_layout() -> ParamLayout:
+    lay = ParamLayout()
+    for i in range(len(MLP_DIMS) - 1):
+        lay.add(f"fc{i}.w", (MLP_DIMS[i], MLP_DIMS[i + 1]), "fc")
+        lay.add(f"fc{i}.b", (MLP_DIMS[i + 1],), "fc")
+    return lay
+
+
+def mlp_init(key) -> jnp.ndarray:
+    lay = mlp_layout()
+    parts = []
+    for e in lay.entries:
+        key, sub = jax.random.split(key)
+        if e.name.endswith(".w"):
+            fan_in = e.shape[0]
+            parts.append(
+                jax.random.normal(sub, e.shape) * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            parts.append(jnp.zeros(e.shape))
+    return jnp.concatenate([p.reshape(-1) for p in parts]).astype(jnp.float32)
+
+
+def mlp_forward(flat, x):
+    p = mlp_layout().unflatten(flat)
+    h = x
+    n = len(MLP_DIMS) - 1
+    for i in range(n):
+        h = h @ p[f"fc{i}.w"] + p[f"fc{i}.b"]
+        if i + 1 < n:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# LeNet-style CNN: conv(5x5,8) -> pool -> conv(5x5,16) -> pool -> fc128 -> fc10
+# Input 28x28x1 (NHWC), VALID convs: 28 -> 24 -> 12 -> 8 -> 4.
+# ---------------------------------------------------------------------------
+
+
+def cnn_layout() -> ParamLayout:
+    lay = ParamLayout()
+    lay.add("conv0.w", (5, 5, 1, 8), "conv")
+    lay.add("conv0.b", (8,), "conv")
+    lay.add("conv1.w", (5, 5, 8, 16), "conv")
+    lay.add("conv1.b", (16,), "conv")
+    lay.add("fc0.w", (4 * 4 * 16, 128), "fc")
+    lay.add("fc0.b", (128,), "fc")
+    lay.add("fc1.w", (128, 10), "fc")
+    lay.add("fc1.b", (10,), "fc")
+    return lay
+
+
+def cnn_init(key) -> jnp.ndarray:
+    lay = cnn_layout()
+    parts = []
+    for e in lay.entries:
+        key, sub = jax.random.split(key)
+        if e.name.endswith(".w"):
+            if len(e.shape) == 4:
+                fan_in = e.shape[0] * e.shape[1] * e.shape[2]
+            else:
+                fan_in = e.shape[0]
+            parts.append(jax.random.normal(sub, e.shape) * jnp.sqrt(2.0 / fan_in))
+        else:
+            parts.append(jnp.zeros(e.shape))
+    return jnp.concatenate([p.reshape(-1) for p in parts]).astype(jnp.float32)
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _avg_pool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) / 4.0
+
+
+def cnn_forward(flat, x):
+    """x: f32[B, 784] (flattened 28x28 grayscale)."""
+    p = cnn_layout().unflatten(flat)
+    h = x.reshape(-1, 28, 28, 1)
+    h = jax.nn.relu(_conv(h, p["conv0.w"], p["conv0.b"]))
+    h = _avg_pool2(h)
+    h = jax.nn.relu(_conv(h, p["conv1.w"], p["conv1.b"]))
+    h = _avg_pool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc0.w"] + p["fc0.b"])
+    return h @ p["fc1.w"] + p["fc1.b"]
+
+
+# ---------------------------------------------------------------------------
+# Shared losses / entry points
+# ---------------------------------------------------------------------------
+
+
+def _ce_loss(logits, y_f32):
+    y = y_f32.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def make_grad_fn(forward):
+    """(params, x, y) -> (loss, grads) for a classification model."""
+
+    def loss_fn(flat, x, y):
+        return _ce_loss(forward(flat, x), y)
+
+    def grad_entry(flat, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+        return loss, grads
+
+    return grad_entry
+
+
+def make_eval_fn(forward):
+    """(params, x, y) -> (loss_sum, correct_count) for a classification model."""
+
+    def eval_entry(flat, x, y):
+        logits = forward(flat, x)
+        yi = y.astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, yi[:, None], axis=1)[:, 0]
+        pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+        correct = jnp.sum((pred == yi).astype(jnp.float32))
+        return jnp.sum(nll), correct
+
+    return eval_entry
+
+
+MODELS = {
+    "mlp": dict(layout=mlp_layout, init=mlp_init, forward=mlp_forward, input_dim=784),
+    "cnn": dict(layout=cnn_layout, init=cnn_init, forward=cnn_forward, input_dim=784),
+}

@@ -1,0 +1,148 @@
+"""L2 JAX model: decoder-only transformer LM with the flat-parameter ABI.
+
+Used by the end-to-end training example (examples/e2e_transformer.rs): the
+paper's distributed-SGD-with-quantized-gradients loop applied to a byte-level
+language model on a synthetic corpus.
+
+Exported entry points:
+
+    tfm_grad(params f32[P], tokens f32[B, L+1]) -> (loss f32[], grads f32[P])
+    tfm_eval(params f32[P], tokens f32[B, L+1]) -> (loss_sum f32[], count f32[])
+
+Tokens travel as f32 (cast to int inside) to keep the FFI surface f32-only.
+Configs are named presets; `tfm_small` (~0.9M params) is what the recorded
+e2e run uses on CPU, `tfm_100m` exists to show the pipeline is size-agnostic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layout import ParamLayout
+
+
+@dataclass(frozen=True)
+class TfmConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 128
+    batch: int = 8
+
+
+PRESETS = {
+    "tfm_small": TfmConfig(),
+    "tfm_medium": TfmConfig(d_model=256, n_layers=6, n_heads=8, d_ff=1024),
+    # ~100M: d=768, 12 layers, ff 3072 — compile-capable, not CPU-train-speed.
+    "tfm_100m": TfmConfig(d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+                          seq_len=256, batch=4),
+}
+
+
+def tfm_layout(cfg: TfmConfig) -> ParamLayout:
+    lay = ParamLayout()
+    lay.add("emb.tok", (cfg.vocab, cfg.d_model), "emb")
+    lay.add("emb.pos", (cfg.seq_len, cfg.d_model), "emb")
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        lay.add(p + "ln1.s", (cfg.d_model,), "fc")
+        lay.add(p + "ln1.b", (cfg.d_model,), "fc")
+        lay.add(p + "attn.wq", (cfg.d_model, cfg.d_model), "fc")
+        lay.add(p + "attn.wk", (cfg.d_model, cfg.d_model), "fc")
+        lay.add(p + "attn.wv", (cfg.d_model, cfg.d_model), "fc")
+        lay.add(p + "attn.wo", (cfg.d_model, cfg.d_model), "fc")
+        lay.add(p + "ln2.s", (cfg.d_model,), "fc")
+        lay.add(p + "ln2.b", (cfg.d_model,), "fc")
+        lay.add(p + "mlp.w1", (cfg.d_model, cfg.d_ff), "fc")
+        lay.add(p + "mlp.b1", (cfg.d_ff,), "fc")
+        lay.add(p + "mlp.w2", (cfg.d_ff, cfg.d_model), "fc")
+        lay.add(p + "mlp.b2", (cfg.d_model,), "fc")
+    lay.add("lnf.s", (cfg.d_model,), "fc")
+    lay.add("lnf.b", (cfg.d_model,), "fc")
+    lay.add("unemb", (cfg.d_model, cfg.vocab), "emb")
+    return lay
+
+
+def tfm_init(key, cfg: TfmConfig) -> jnp.ndarray:
+    lay = tfm_layout(cfg)
+    parts = []
+    for e in lay.entries:
+        key, sub = jax.random.split(key)
+        if e.name.endswith((".s",)):
+            parts.append(jnp.ones(e.shape))
+        elif e.name.endswith((".b", ".b1", ".b2")) and len(e.shape) == 1:
+            parts.append(jnp.zeros(e.shape))
+        else:
+            scale = 0.02
+            if e.name.endswith(("wo", "w2")):
+                # Residual-branch outputs scaled down by depth.
+                scale = 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+            parts.append(jax.random.normal(sub, e.shape) * scale)
+    return jnp.concatenate([p.reshape(-1) for p in parts]).astype(jnp.float32)
+
+
+def _ln(x, s, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * s + b
+
+
+def tfm_forward(flat, tokens_f32, cfg: TfmConfig):
+    """tokens_f32: f32[B, L] context; returns logits f32[B, L, V]."""
+    p = tfm_layout(cfg).unflatten(flat)
+    t = tokens_f32.astype(jnp.int32)
+    B, L = t.shape
+    h = p["emb.tok"][t] + p["emb.pos"][None, :L, :]
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        x = _ln(h, p[pre + "ln1.s"], p[pre + "ln1.b"])
+        q = (x @ p[pre + "attn.wq"]).reshape(B, L, nh, dh).transpose(0, 2, 1, 3)
+        k = (x @ p[pre + "attn.wk"]).reshape(B, L, nh, dh).transpose(0, 2, 1, 3)
+        v = (x @ p[pre + "attn.wv"]).reshape(B, L, nh, dh).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(dh))
+        att = jnp.where(mask[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(B, L, cfg.d_model)
+        h = h + o @ p[pre + "attn.wo"]
+        x = _ln(h, p[pre + "ln2.s"], p[pre + "ln2.b"])
+        x = jax.nn.gelu(x @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        h = h + x @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+    h = _ln(h, p["lnf.s"], p["lnf.b"])
+    return h @ p["unemb"]
+
+
+def _next_token_loss(flat, tokens_f32, cfg: TfmConfig):
+    """tokens_f32: f32[B, L+1]; mean CE of predicting token t+1 from 0..t."""
+    ctx = tokens_f32[:, :-1]
+    tgt = tokens_f32[:, 1:].astype(jnp.int32)
+    logits = tfm_forward(flat, ctx, cfg)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=2)[:, :, 0]
+    return jnp.mean(nll)
+
+
+def make_tfm_grad_fn(cfg: TfmConfig):
+    def grad_entry(flat, tokens):
+        loss, grads = jax.value_and_grad(_next_token_loss)(flat, tokens, cfg)
+        return loss, grads
+
+    return grad_entry
+
+
+def make_tfm_eval_fn(cfg: TfmConfig):
+    def eval_entry(flat, tokens):
+        ctx = tokens[:, :-1]
+        tgt = tokens[:, 1:].astype(jnp.int32)
+        logits = tfm_forward(flat, ctx, cfg)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=2)[:, :, 0]
+        return jnp.sum(nll), jnp.array(float(cfg.batch * cfg.seq_len))
+
+    return eval_entry

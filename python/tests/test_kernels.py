@@ -1,0 +1,143 @@
+"""Pallas kernels vs the pure-jnp oracle (the core L1 correctness signal)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quantize import quantize_uniform, BLOCK
+from compile.kernels.nonuniform import quantize_codebook
+from compile.kernels.biscaled import quantize_biscaled
+from compile.kernels.stats import tail_stats
+
+
+def heavy_tailed(rng, d, scale=0.01, df=3):
+    """Student-t draws: heavy-tailed like real conv/fc gradients."""
+    return (rng.standard_t(df, size=d) * scale).astype(np.float32)
+
+
+def uniforms(rng, d):
+    return rng.random(d, dtype=np.float64).astype(np.float32)
+
+
+@pytest.mark.parametrize("s", [3, 7, 15, 31])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_uniform_matches_ref(s, seed):
+    rng = np.random.default_rng(seed)
+    d = BLOCK * 2
+    g, u = heavy_tailed(rng, d), uniforms(rng, d)
+    alpha = np.float32(0.04)
+    dq, ix = quantize_uniform(jnp.array(g), jnp.array(u), jnp.array([alpha]), s=s)
+    rdq, rix = ref.quantize_uniform(jnp.array(g), jnp.array(u), alpha, s)
+    np.testing.assert_array_equal(np.array(ix), np.array(rix))
+    np.testing.assert_allclose(np.array(dq), np.array(rdq), atol=1e-7)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_nonuniform_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    d = BLOCK
+    g, u = heavy_tailed(rng, d), uniforms(rng, d)
+    # Non-uniform codebook: cube-root-density-like spacing.
+    q = np.linspace(-1.0, 1.0, 8)
+    cb = (0.05 * np.sign(q) * np.abs(q) ** 1.5).astype(np.float32)
+    cb = np.sort(cb)
+    dq, ix = quantize_codebook(jnp.array(g), jnp.array(u), jnp.array(cb), s=7)
+    rdq, rix = ref.quantize_codebook(jnp.array(g), jnp.array(u), cb)
+    np.testing.assert_array_equal(np.array(ix), np.array(rix))
+    np.testing.assert_allclose(np.array(dq), np.array(rdq), atol=1e-7)
+
+
+@pytest.mark.parametrize("s_beta,s_alpha", [(5, 2), (3, 4), (1, 6)])
+def test_biscaled_matches_ref(s_beta, s_alpha):
+    rng = np.random.default_rng(s_beta * 10 + s_alpha)
+    d = BLOCK
+    g, u = heavy_tailed(rng, d), uniforms(rng, d)
+    alpha, beta = np.float32(0.06), np.float32(0.015)
+    dq, ix = quantize_biscaled(
+        jnp.array(g), jnp.array(u), jnp.array([alpha, beta]),
+        s_beta=s_beta, s_alpha=s_alpha,
+    )
+    rdq, rix = ref.quantize_biscaled(
+        jnp.array(g), jnp.array(u), alpha, beta, s_beta, s_alpha
+    )
+    np.testing.assert_array_equal(np.array(ix), np.array(rix))
+    np.testing.assert_allclose(np.array(dq), np.array(rdq), atol=1e-6)
+
+
+def test_stats_matches_ref():
+    rng = np.random.default_rng(5)
+    d = BLOCK * 4
+    g = heavy_tailed(rng, d)
+    st_k = tail_stats(jnp.array(g), jnp.array([0.02], dtype=np.float32))
+    st_r = ref.tail_stats(jnp.array(g), 0.02)
+    np.testing.assert_allclose(np.array(st_k), np.array(st_r), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Statistical properties of the oracle itself (Lemma 1).
+# ---------------------------------------------------------------------------
+
+
+def test_unbiasedness_uniform():
+    """E[Q[g]] = g (Lemma 1, Eq. 5) — Monte-Carlo over many uniforms."""
+    rng = np.random.default_rng(0)
+    g = np.full(200_000, 0.0123, dtype=np.float32)
+    u = uniforms(rng, g.size)
+    dq, _ = ref.quantize_uniform(jnp.array(g), jnp.array(u), np.float32(0.05), 7)
+    assert abs(float(np.mean(np.array(dq))) - 0.0123) < 2e-4
+
+
+def test_variance_bound_uniform():
+    """E||Q[g]-g||^2 <= max_k |Delta_k|^2 / 4 element-wise (Lemma 1, Eq. 6)."""
+    rng = np.random.default_rng(1)
+    d = 100_000
+    alpha, s = np.float32(0.05), 7
+    g = np.clip(heavy_tailed(rng, d), -alpha, alpha)
+    u = uniforms(rng, d)
+    dq, _ = ref.quantize_uniform(jnp.array(g), jnp.array(u), alpha, s)
+    mse = float(np.mean((np.array(dq) - g) ** 2))
+    step = 2 * alpha / s
+    assert mse <= step**2 / 4 + 1e-9
+
+
+def test_truncation_is_clip():
+    g = np.array([-1.0, -0.04, 0.0, 0.04, 1.0], dtype=np.float32)
+    out = np.array(ref.truncate(jnp.array(g), 0.05))
+    np.testing.assert_allclose(out, [-0.05, -0.04, 0.0, 0.04, 0.05])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    s=st.sampled_from([3, 7, 15]),
+    alpha=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_uniform_idx_in_range_and_deq_on_codebook(s, alpha, seed):
+    """Property: indices always in [0, s]; deq always a codebook point."""
+    rng = np.random.default_rng(seed)
+    g = heavy_tailed(rng, 4096, scale=alpha / 2)
+    u = uniforms(rng, g.size)
+    dq, ix = ref.quantize_uniform(jnp.array(g), jnp.array(u), np.float32(alpha), s)
+    ix, dq = np.array(ix), np.array(dq)
+    assert ix.min() >= 0 and ix.max() <= s
+    cb = np.array(ref.uniform_codebook(np.float32(alpha), s))
+    np.testing.assert_allclose(dq, cb[ix], atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([3, 7, 15, 31]))
+def test_codebook_rounding_neighbours(seed, s):
+    """Property: Q[g] is one of the two codebook points bracketing g."""
+    rng = np.random.default_rng(seed)
+    cb = np.sort(rng.normal(size=s + 1)).astype(np.float32)
+    cb += np.arange(s + 1, dtype=np.float32) * 1e-3  # ensure strictly increasing
+    g = rng.uniform(cb[0], cb[-1], size=2048).astype(np.float32)
+    u = uniforms(rng, g.size)
+    dq, ix = ref.quantize_codebook(jnp.array(g), jnp.array(u), cb)
+    dq, ix = np.array(dq), np.array(ix)
+    k = np.searchsorted(cb, g, side="right") - 1
+    k = np.clip(k, 0, s - 1)
+    ok = (np.abs(dq - cb[k]) < 1e-6) | (np.abs(dq - cb[k + 1]) < 1e-6)
+    assert ok.all()

@@ -1,0 +1,150 @@
+"""L2 model sanity: shapes, loss decrease, gradient correctness, layout."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import transformer as T
+from compile.layout import ParamLayout
+
+
+def test_mlp_param_count():
+    lay = M.mlp_layout()
+    expect = 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10
+    assert lay.total == expect
+
+
+def test_cnn_param_count():
+    lay = M.cnn_layout()
+    expect = (5 * 5 * 1 * 8 + 8) + (5 * 5 * 8 * 16 + 16) + (256 * 128 + 128) + (
+        128 * 10 + 10
+    )
+    assert lay.total == expect
+
+
+def test_cnn_groups_are_conv_then_fc():
+    runs = M.cnn_layout().group_ranges()
+    assert [r[0] for r in runs] == ["conv", "fc"]
+    assert runs[0][1] == 0 and runs[1][2] == M.cnn_layout().total
+
+
+def test_layout_unflatten_roundtrip():
+    lay = ParamLayout()
+    lay.add("a", (2, 3), "x")
+    lay.add("b", (4,), "y")
+    flat = jnp.arange(10.0)
+    p = lay.unflatten(flat)
+    assert p["a"].shape == (2, 3)
+    np.testing.assert_allclose(np.array(p["b"]), [6, 7, 8, 9])
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn"])
+def test_grad_entry_shapes(name):
+    m = M.MODELS[name]
+    P = m["layout"]().total
+    params = m["init"](jax.random.PRNGKey(0))
+    assert params.shape == (P,)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 784))
+    y = jnp.array(np.arange(8) % 10, dtype=jnp.float32)
+    loss, grads = M.make_grad_fn(m["forward"])(params, x, y)
+    assert loss.shape == () and grads.shape == (P,)
+    assert np.isfinite(float(loss)) and np.isfinite(np.array(grads)).all()
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn"])
+def test_sgd_reduces_loss(name):
+    m = M.MODELS[name]
+    params = m["init"](jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(32, 784)), dtype=jnp.float32)
+    y = jnp.array(rng.integers(0, 10, 32), dtype=jnp.float32)
+    grad_fn = jax.jit(M.make_grad_fn(m["forward"]))
+    loss0, _ = grad_fn(params, x, y)
+    for _ in range(30):
+        loss, g = grad_fn(params, x, y)
+        params = params - 0.05 * g
+    assert float(loss) < float(loss0)
+
+
+def test_eval_entry_counts():
+    m = M.MODELS["mlp"]
+    params = m["init"](jax.random.PRNGKey(0))
+    x = jnp.zeros((16, 784))
+    y = jnp.zeros((16,))
+    loss_sum, correct = M.make_eval_fn(m["forward"])(params, x, y)
+    assert 0.0 <= float(correct) <= 16.0
+    assert float(loss_sum) > 0
+
+
+def test_grad_matches_finite_difference():
+    """Spot-check the value_and_grad entry against central differences."""
+    m = M.MODELS["mlp"]
+    params = m["init"](jax.random.PRNGKey(3))
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.normal(size=(4, 784)), dtype=jnp.float32)
+    y = jnp.array(rng.integers(0, 10, 4), dtype=jnp.float32)
+    grad_fn = M.make_grad_fn(m["forward"])
+    _, g = grad_fn(params, x, y)
+
+    def loss_at(p):
+        l, _ = grad_fn(p, x, y)
+        return float(l)
+
+    eps = 1e-3
+    idxs = rng.integers(0, params.shape[0], 5)
+    for i in idxs:
+        e = np.zeros(params.shape[0], dtype=np.float32)
+        e[i] = eps
+        fd = (loss_at(params + e) - loss_at(params - e)) / (2 * eps)
+        assert abs(fd - float(g[i])) < 5e-2, (i, fd, float(g[i]))
+
+
+# ---------------------------------------------------------------------------
+# Transformer
+# ---------------------------------------------------------------------------
+
+
+def test_tfm_small_param_count_about_1m():
+    cfg = T.PRESETS["tfm_small"]
+    P = T.tfm_layout(cfg).total
+    assert 5e5 < P < 2e6
+
+
+def test_tfm_grad_shapes_and_finite():
+    cfg = T.TfmConfig(d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16, batch=2)
+    P = T.tfm_layout(cfg).total
+    params = T.tfm_init(jax.random.PRNGKey(0), cfg)
+    assert params.shape == (P,)
+    rng = np.random.default_rng(0)
+    toks = jnp.array(rng.integers(0, cfg.vocab, (2, 17)), dtype=jnp.float32)
+    loss, grads = T.make_tfm_grad_fn(cfg)(params, toks)
+    assert grads.shape == (P,)
+    assert np.isfinite(float(loss)) and np.isfinite(np.array(grads)).all()
+
+
+def test_tfm_causality():
+    """Changing a future token must not change earlier logits."""
+    cfg = T.TfmConfig(d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=8, batch=1)
+    params = T.tfm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, cfg.vocab, (1, 8)).astype(np.float32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % cfg.vocab
+    l1 = T.tfm_forward(params, jnp.array(t1), cfg)
+    l2 = T.tfm_forward(params, jnp.array(t2), cfg)
+    np.testing.assert_allclose(np.array(l1)[0, :-1], np.array(l2)[0, :-1], atol=1e-5)
+
+
+def test_tfm_loss_decreases():
+    cfg = T.TfmConfig(d_model=32, n_layers=1, n_heads=2, d_ff=64, seq_len=16, batch=4)
+    params = T.tfm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.array(rng.integers(0, 16, (4, 17)), dtype=jnp.float32)
+    grad_fn = jax.jit(T.make_tfm_grad_fn(cfg))
+    loss0, _ = grad_fn(params, toks)
+    for _ in range(20):
+        loss, g = grad_fn(params, toks)
+        params = params - 0.5 * g
+    assert float(loss) < float(loss0)

@@ -1,0 +1,170 @@
+//! Bench harness substrate (criterion is not in the build image).
+//!
+//! Provides warmup + repeated timed runs with median/mean/stddev reporting,
+//! throughput helpers, and an aligned table printer used by every
+//! `benches/*.rs` target to render the paper's figures as text series.
+
+use std::time::Instant;
+
+/// Timing statistics over the measured runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub runs: usize,
+}
+
+impl Timing {
+    pub fn per_elem_ns(&self, elems: usize) -> f64 {
+        self.median_ns / elems as f64
+    }
+
+    /// Throughput in GB/s given bytes touched per run.
+    pub fn gbps(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.median_ns
+    }
+
+    pub fn pretty(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, returning stats. Warms up `warmup` times, measures `runs` times.
+pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var =
+        samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / samples.len() as f64;
+    Timing { median_ns: median, mean_ns: mean, stddev_ns: var.sqrt(), runs }
+}
+
+/// Auto-sizing: pick an iteration count so one measurement takes ≥ `min_ms`.
+pub fn calibrate<F: FnMut()>(mut f: F, min_ms: f64) -> usize {
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        if ms >= min_ms || iters >= 1 << 24 {
+            return iters;
+        }
+        iters = (iters as f64 * (min_ms / ms.max(1e-3)).clamp(2.0, 16.0)) as usize;
+    }
+}
+
+/// Aligned text table (markdown-ish) for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for width in &w {
+            sep.push_str(&format!("{:-<width$}|", "", width = width + 2));
+        }
+        println!("{sep}");
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+/// Section header used by the bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Env-var override for bench sizing (e.g. `TQSGD_BENCH_ROUNDS=800`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let t = bench(2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.median_ns > 0.0 && t.mean_ns > 0.0);
+        assert_eq!(t.runs, 10);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn calibrate_scales_up() {
+        let iters = calibrate(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            1.0,
+        );
+        assert!(iters > 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

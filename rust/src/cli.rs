@@ -1,0 +1,178 @@
+//! CLI substrate: subcommands + `--flag value` / `--flag=value` parsing.
+//!
+//! Hand-rolled (no clap in the build image). Supports:
+//! * positional subcommand as the first free argument,
+//! * `--key value`, `--key=value`, boolean `--key`,
+//! * typed getters with defaults and error messages,
+//! * auto-generated usage text from registered flags.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(body.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if a.starts_with('-') && a.len() > 1 && !a[1..].starts_with(|c: char| c.is_ascii_digit()) {
+                bail!("short flags are not supported: {a}");
+            } else if out.subcommand.is_none() && out.flags.is_empty() && out.positional.is_empty()
+            {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key} expects a boolean, got {v:?}"),
+        }
+    }
+}
+
+/// A registered flag, for usage text.
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: &'static str,
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, about: &str, flags: &[FlagSpec]) -> String {
+    let mut s = format!("tqsgd {cmd} — {about}\n\nflags:\n");
+    for f in flags {
+        s.push_str(&format!("  --{:<22} {} (default: {})\n", f.name, f.help, f.default));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--model", "cnn", "--bits=3", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("cnn"));
+        assert_eq!(a.usize_or("bits", 0).unwrap(), 3);
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn flag_value_can_be_negative_number() {
+        let a = parse(&["x", "--lr", "-0.5"]);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["x", "--dry-run", "--n", "4"]);
+        assert!(a.bool_or("dry-run", false).unwrap());
+        assert_eq!(a.usize_or("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.usize_or("rounds", 100).unwrap(), 100);
+        assert_eq!(a.str_or("model", "mlp"), "mlp");
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+        let b = parse(&["x", "--flag", "maybe"]);
+        assert!(b.bool_or("flag", false).is_err());
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("train", "train a model", &[FlagSpec { name: "bits", help: "quant bits", default: "3" }]);
+        assert!(u.contains("--bits"));
+    }
+}

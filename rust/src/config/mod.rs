@@ -1,0 +1,456 @@
+//! Typed configuration system over the JSON substrate.
+//!
+//! Experiments are described by [`ExperimentConfig`]: model + data sizes,
+//! distributed topology, optimizer hyper-parameters (the paper's §V values
+//! are the defaults), the compression scheme, and the simulated network.
+//! Configs round-trip through JSON files and ship with named presets used by
+//! the CLI, the examples and every figure bench.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Gradient-compression scheme (the paper's methods + its baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Oracle: uncompressed 32-bit gradients.
+    Dsgd,
+    /// QSGD: uniform quantization over [-max|g|, max|g|], no truncation.
+    Qsgd,
+    /// Non-uniform (p^{1/3}) quantization over the full range, no truncation.
+    Nqsgd,
+    /// Paper: truncated uniform quantization (Thm. 1).
+    Tqsgd,
+    /// Paper: truncated non-uniform quantization (Thm. 2).
+    Tnqsgd,
+    /// Paper: truncated BiScaled quantization (Thm. 3 / Appendix D).
+    Tbqsgd,
+    /// TernGrad baseline (Wen et al. 2017): ternary levels scaled by max|g|.
+    Terngrad,
+    /// Top-k sparsification baseline.
+    Topk,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Scheme> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dsgd" => Scheme::Dsgd,
+            "qsgd" => Scheme::Qsgd,
+            "nqsgd" => Scheme::Nqsgd,
+            "tqsgd" => Scheme::Tqsgd,
+            "tnqsgd" => Scheme::Tnqsgd,
+            "tbqsgd" => Scheme::Tbqsgd,
+            "terngrad" => Scheme::Terngrad,
+            "topk" => Scheme::Topk,
+            other => bail!("unknown scheme {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Dsgd => "dsgd",
+            Scheme::Qsgd => "qsgd",
+            Scheme::Nqsgd => "nqsgd",
+            Scheme::Tqsgd => "tqsgd",
+            Scheme::Tnqsgd => "tnqsgd",
+            Scheme::Tbqsgd => "tbqsgd",
+            Scheme::Terngrad => "terngrad",
+            Scheme::Topk => "topk",
+        }
+    }
+
+    /// Does this scheme use the truncated two-stage quantizer?
+    pub fn truncated(&self) -> bool {
+        matches!(self, Scheme::Tqsgd | Scheme::Tnqsgd | Scheme::Tbqsgd)
+    }
+
+    pub fn all() -> [Scheme; 8] {
+        [
+            Scheme::Dsgd,
+            Scheme::Qsgd,
+            Scheme::Nqsgd,
+            Scheme::Tqsgd,
+            Scheme::Tnqsgd,
+            Scheme::Tbqsgd,
+            Scheme::Terngrad,
+            Scheme::Topk,
+        ]
+    }
+}
+
+/// Compression configuration.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub scheme: Scheme,
+    /// Bit budget b per element (s = 2^b − 1 levels). Ignored by DSGD and
+    /// TernGrad (b = 2 effective).
+    pub bits: u32,
+    /// Fraction kept by Top-k.
+    pub topk_frac: f64,
+    /// Re-estimate the tail model every this many rounds (paper re-fits γ
+    /// per layer-group from local gradients).
+    pub estimate_every: usize,
+    /// Optional error-feedback wrapper (extension; off reproduces the paper).
+    pub error_feedback: bool,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            scheme: Scheme::Tnqsgd,
+            bits: 3,
+            topk_frac: 0.01,
+            estimate_every: 10,
+            error_feedback: false,
+        }
+    }
+}
+
+/// Simulated-network model for the wire between clients and server.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Link bandwidth in bytes/sec used for simulated latency accounting
+    /// (0 = infinite / accounting only).
+    pub bandwidth_bytes_per_sec: f64,
+    /// Fixed per-message latency in seconds (simulated).
+    pub latency_sec: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { bandwidth_bytes_per_sec: 0.0, latency_sec: 0.0 }
+    }
+}
+
+/// A full experiment description (paper §V defaults).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Model name from artifacts/manifest.json (mlp | cnn | tfm_small | ...).
+    pub model: String,
+    /// Number of clients N.
+    pub clients: usize,
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Server learning rate η.
+    pub lr: f64,
+    /// Momentum (paper: 0.9).
+    pub momentum: f64,
+    /// Weight decay (paper: 5e-4).
+    pub weight_decay: f64,
+    /// Evaluate every this many rounds.
+    pub eval_every: usize,
+    /// Training samples (total, sharded across clients).
+    pub train_size: usize,
+    /// Held-out test samples.
+    pub test_size: usize,
+    /// RNG seed for everything.
+    pub seed: u64,
+    pub quant: QuantConfig,
+    pub net: NetConfig,
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+    /// Fail-injection: drop this client's update every round (usize::MAX =
+    /// none) — exercises the coordinator's straggler/fault path.
+    pub drop_client: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "cnn".into(),
+            clients: 8,
+            rounds: 300,
+            lr: 0.01,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            eval_every: 25,
+            train_size: 8192,
+            test_size: 2048,
+            seed: 42,
+            quant: QuantConfig::default(),
+            net: NetConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            drop_client: usize::MAX,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Named presets. `<model>_<scheme>_b<bits>` plus a few specials.
+    pub fn preset(name: &str) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        match name {
+            "quickstart" => {
+                cfg.model = "mlp".into();
+                cfg.rounds = 60;
+                cfg.quant.scheme = Scheme::Tnqsgd;
+                cfg.quant.bits = 3;
+                return Ok(cfg);
+            }
+            "e2e_transformer" => {
+                cfg.model = "tfm_small".into();
+                cfg.rounds = 150;
+                cfg.clients = 4;
+                cfg.lr = 3e-3;
+                cfg.momentum = 0.9;
+                cfg.weight_decay = 0.0;
+                cfg.quant.scheme = Scheme::Tnqsgd;
+                cfg.quant.bits = 4;
+                cfg.train_size = 4096;
+                cfg.test_size = 512;
+                cfg.eval_every = 25;
+                return Ok(cfg);
+            }
+            _ => {}
+        }
+        // Grammar: <model>_<scheme>_b<bits>
+        let parts: Vec<&str> = name.split('_').collect();
+        if parts.len() == 3 && parts[2].starts_with('b') {
+            cfg.model = parts[0].to_string();
+            cfg.quant.scheme = Scheme::parse(parts[1])?;
+            cfg.quant.bits = parts[2][1..]
+                .parse()
+                .map_err(|e| anyhow!("bad bits in preset {name:?}: {e}"))?;
+            cfg.validate()?;
+            return Ok(cfg);
+        }
+        bail!("unknown preset {name:?}")
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 {
+            bail!("clients must be >= 1");
+        }
+        if !(1..=8).contains(&self.quant.bits) {
+            bail!("bits must be in 1..=8, got {}", self.quant.bits);
+        }
+        if self.lr <= 0.0 || !(0.0..1.0).contains(&self.momentum) {
+            bail!("bad optimizer hyper-parameters");
+        }
+        if !(0.0..=1.0).contains(&self.quant.topk_frac) {
+            bail!("topk_frac must be in [0, 1]");
+        }
+        if self.quant.estimate_every == 0 {
+            bail!("estimate_every must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Apply CLI flag overrides (`--model`, `--scheme`, `--bits`, ...).
+    pub fn apply_args(&mut self, args: &crate::cli::Args) -> Result<()> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        if let Some(s) = args.get("scheme") {
+            self.quant.scheme = Scheme::parse(s)?;
+        }
+        self.quant.bits = args.usize_or("bits", self.quant.bits as usize)? as u32;
+        self.clients = args.usize_or("clients", self.clients)?;
+        self.rounds = args.usize_or("rounds", self.rounds)?;
+        self.lr = args.f64_or("lr", self.lr)?;
+        self.momentum = args.f64_or("momentum", self.momentum)?;
+        self.weight_decay = args.f64_or("weight-decay", self.weight_decay)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.eval_every = args.usize_or("eval-every", self.eval_every)?;
+        self.train_size = args.usize_or("train-size", self.train_size)?;
+        self.test_size = args.usize_or("test-size", self.test_size)?;
+        self.quant.estimate_every =
+            args.usize_or("estimate-every", self.quant.estimate_every)?;
+        self.quant.error_feedback =
+            args.bool_or("error-feedback", self.quant.error_feedback)?;
+        self.quant.topk_frac = args.f64_or("topk-frac", self.quant.topk_frac)?;
+        if let Some(dir) = args.get("artifacts") {
+            self.artifacts_dir = dir.to_string();
+        }
+        self.drop_client = args.usize_or("drop-client", self.drop_client)?;
+        self.validate()
+    }
+
+    // -- JSON round trip ----------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("clients", json::num(self.clients as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("lr", json::num(self.lr)),
+            ("momentum", json::num(self.momentum)),
+            ("weight_decay", json::num(self.weight_decay)),
+            ("eval_every", json::num(self.eval_every as f64)),
+            ("train_size", json::num(self.train_size as f64)),
+            ("test_size", json::num(self.test_size as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("artifacts_dir", json::s(&self.artifacts_dir)),
+            ("drop_client", json::num(if self.drop_client == usize::MAX {
+                -1.0
+            } else {
+                self.drop_client as f64
+            })),
+            (
+                "quant",
+                json::obj(vec![
+                    ("scheme", json::s(self.quant.scheme.name())),
+                    ("bits", json::num(self.quant.bits as f64)),
+                    ("topk_frac", json::num(self.quant.topk_frac)),
+                    ("estimate_every", json::num(self.quant.estimate_every as f64)),
+                    ("error_feedback", Value::Bool(self.quant.error_feedback)),
+                ]),
+            ),
+            (
+                "net",
+                json::obj(vec![
+                    ("bandwidth_bytes_per_sec", json::num(self.net.bandwidth_bytes_per_sec)),
+                    ("latency_sec", json::num(self.net.latency_sec)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        let getf = |key: &str, dflt: f64| v.get(key).and_then(Value::as_f64).unwrap_or(dflt);
+        if let Some(m) = v.get("model").and_then(Value::as_str) {
+            cfg.model = m.to_string();
+        }
+        cfg.clients = getf("clients", cfg.clients as f64) as usize;
+        cfg.rounds = getf("rounds", cfg.rounds as f64) as usize;
+        cfg.lr = getf("lr", cfg.lr);
+        cfg.momentum = getf("momentum", cfg.momentum);
+        cfg.weight_decay = getf("weight_decay", cfg.weight_decay);
+        cfg.eval_every = getf("eval_every", cfg.eval_every as f64) as usize;
+        cfg.train_size = getf("train_size", cfg.train_size as f64) as usize;
+        cfg.test_size = getf("test_size", cfg.test_size as f64) as usize;
+        cfg.seed = getf("seed", cfg.seed as f64) as u64;
+        if let Some(dir) = v.get("artifacts_dir").and_then(Value::as_str) {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        let dc = getf("drop_client", -1.0);
+        cfg.drop_client = if dc < 0.0 { usize::MAX } else { dc as usize };
+        if let Some(q) = v.get("quant") {
+            if let Some(s) = q.get("scheme").and_then(Value::as_str) {
+                cfg.quant.scheme = Scheme::parse(s)?;
+            }
+            cfg.quant.bits =
+                q.get("bits").and_then(Value::as_f64).unwrap_or(cfg.quant.bits as f64) as u32;
+            cfg.quant.topk_frac =
+                q.get("topk_frac").and_then(Value::as_f64).unwrap_or(cfg.quant.topk_frac);
+            cfg.quant.estimate_every = q
+                .get("estimate_every")
+                .and_then(Value::as_f64)
+                .unwrap_or(cfg.quant.estimate_every as f64) as usize;
+            cfg.quant.error_feedback = q
+                .get("error_feedback")
+                .and_then(Value::as_bool)
+                .unwrap_or(cfg.quant.error_feedback);
+        }
+        if let Some(n) = v.get("net") {
+            cfg.net.bandwidth_bytes_per_sec = n
+                .get("bandwidth_bytes_per_sec")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0);
+            cfg.net.latency_sec = n.get("latency_sec").and_then(Value::as_f64).unwrap_or(0.0);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json())
+            .with_context(|| format!("writing config {path:?}"))
+    }
+
+    /// Short human id used in logs: `cnn/tnqsgd/b3/N8`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/b{}/N{}",
+            self.model,
+            self.quant.scheme.name(),
+            self.quant.bits,
+            self.clients
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_roundtrip() {
+        for s in Scheme::all() {
+            assert_eq!(Scheme::parse(s.name()).unwrap(), s);
+        }
+        assert!(Scheme::parse("nope").is_err());
+    }
+
+    #[test]
+    fn preset_grammar() {
+        let c = ExperimentConfig::preset("cnn_tnqsgd_b3").unwrap();
+        assert_eq!(c.model, "cnn");
+        assert_eq!(c.quant.scheme, Scheme::Tnqsgd);
+        assert_eq!(c.quant.bits, 3);
+        assert!(ExperimentConfig::preset("cnn_martian_b3").is_err());
+        assert!(ExperimentConfig::preset("garbage").is_err());
+    }
+
+    #[test]
+    fn defaults_match_paper_section_v() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.clients, 8);
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.momentum, 0.9);
+        assert_eq!(c.weight_decay, 5e-4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::preset("mlp_tbqsgd_b4").unwrap();
+        c.quant.error_feedback = true;
+        c.net.latency_sec = 0.01;
+        c.drop_client = 3;
+        let j = c.to_json().to_json();
+        let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.model, "mlp");
+        assert_eq!(c2.quant.scheme, Scheme::Tbqsgd);
+        assert_eq!(c2.quant.bits, 4);
+        assert!(c2.quant.error_feedback);
+        assert_eq!(c2.drop_client, 3);
+        assert!((c2.net.latency_sec - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = ExperimentConfig::default();
+        c.quant.bits = 0;
+        assert!(c.validate().is_err());
+        c.quant.bits = 3;
+        c.clients = 0;
+        assert!(c.validate().is_err());
+        c.clients = 2;
+        c.quant.topk_frac = 2.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn args_override() {
+        let mut c = ExperimentConfig::default();
+        let args = crate::cli::Args::parse(
+            ["x", "--scheme", "qsgd", "--bits", "5", "--rounds", "10"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.quant.scheme, Scheme::Qsgd);
+        assert_eq!(c.quant.bits, 5);
+        assert_eq!(c.rounds, 10);
+    }
+}

@@ -1,0 +1,390 @@
+//! The distributed DSGD coordinator — Algorithm 1 of the paper as a system.
+//!
+//! One process hosts the server and N logical clients:
+//!
+//! ```text
+//! round t:
+//!   server  --θ_t-->  clients                     (broadcast)
+//!   client i: g_i = grad(θ_t, batch_i)            (PJRT, main thread)
+//!             ĝ_i = Q_λs[T_α(g_i)] per layer group (rust codecs, N threads)
+//!   clients --frames-->  server                   (simulated network, real bytes)
+//!   server: ḡ = Σ w_i dequantize(frame_i);  θ_{t+1} = θ_t − η·step(ḡ)
+//! ```
+//!
+//! PJRT (`Rc`-based, not `Send`) stays on the driver thread; the
+//! embarrassingly parallel codec work fans out over `std::thread::scope`.
+//! Each (client, layer-group) pair owns an independent quantizer state whose
+//! tail model is re-fitted every `estimate_every` rounds — exactly the
+//! paper's per-layer γ estimation (§V).
+
+pub mod network;
+
+pub use network::{Message, SimNet};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{gather_batch, BatchSampler, Dataset, MarkovCorpus};
+use crate::metrics::{RoundRecord, RunLog, Timer};
+use crate::optim::MomentumSgd;
+use crate::quant::{make_compressor, Compressor, ErrorFeedback};
+use crate::runtime::{GroupRange, Runtime};
+use crate::util::Rng;
+
+/// Per-(client, group) compression state: plain codec or EF-wrapped.
+enum GroupCodec {
+    Plain(Box<dyn Compressor>),
+    Ef(ErrorFeedback),
+}
+
+impl GroupCodec {
+    fn refit(&mut self, grads: &[f32]) {
+        match self {
+            GroupCodec::Plain(c) => c.refit(grads),
+            GroupCodec::Ef(c) => c.refit(grads),
+        }
+    }
+
+    fn compress(&mut self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+        match self {
+            GroupCodec::Plain(c) => c.compress(grads, rng),
+            GroupCodec::Ef(c) => c.compress_with_feedback(grads, rng),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            GroupCodec::Plain(c) => c.describe(),
+            GroupCodec::Ef(c) => c.describe(),
+        }
+    }
+}
+
+/// The task a client trains on.
+pub enum TaskData {
+    Vision { shard: Dataset },
+    Lm { corpus: MarkovCorpus, seq_len: usize },
+}
+
+/// One logical client.
+pub struct Client {
+    pub id: usize,
+    data: TaskData,
+    sampler: BatchSampler,
+    codecs: Vec<GroupCodec>,
+    /// Fraction of the global data this client holds (aggregation weight).
+    pub weight: f64,
+}
+
+impl Client {
+    /// Produce this round's training batch as flat input buffers.
+    fn next_batch(&mut self, train_batch: usize, seed: u64, round: u64) -> (Vec<f32>, Vec<f32>) {
+        match &self.data {
+            TaskData::Vision { shard } => {
+                let idxs = self.sampler.next_batch(train_batch);
+                gather_batch(shard, &idxs)
+            }
+            TaskData::Lm { corpus, seq_len } => {
+                let mut rng = Rng::for_stream(seed, 0x70C5, self.id as u64, round);
+                let mut toks = Vec::with_capacity(train_batch * (seq_len + 1));
+                for _ in 0..train_batch {
+                    toks.extend(corpus.sample(seq_len + 1, &mut rng));
+                }
+                (toks, Vec::new())
+            }
+        }
+    }
+
+    /// Compress a gradient per layer group into a message (runs on a worker
+    /// thread; pure rust).
+    fn compress(
+        &mut self,
+        grads: &[f32],
+        groups: &[GroupRange],
+        round: usize,
+        seed: u64,
+        refit_now: bool,
+        loss: f32,
+    ) -> Message {
+        let mut frames = Vec::with_capacity(groups.len());
+        for (gi, g) in groups.iter().enumerate() {
+            let slice = &grads[g.start..g.end];
+            if refit_now {
+                self.codecs[gi].refit(slice);
+            }
+            let mut rng = Rng::for_stream(seed, 0x9A7E, (self.id * 1031 + gi) as u64, round as u64);
+            frames.push((gi, self.codecs[gi].compress(slice, &mut rng)));
+        }
+        Message { client: self.id, round, frames, loss }
+    }
+
+    pub fn describe_codecs(&self) -> Vec<String> {
+        self.codecs.iter().map(|c| c.describe()).collect()
+    }
+}
+
+/// Server + clients + network for one experiment.
+pub struct Coordinator<'rt> {
+    pub cfg: ExperimentConfig,
+    rt: &'rt Runtime,
+    pub clients: Vec<Client>,
+    pub params: Vec<f32>,
+    opt: MomentumSgd,
+    pub net: SimNet,
+    groups: Vec<GroupRange>,
+    grad_exe: std::rc::Rc<crate::runtime::Executable>,
+    eval_exe: std::rc::Rc<crate::runtime::Executable>,
+    test: Option<Dataset>,
+    lm_eval_corpus: Option<MarkovCorpus>,
+    pub round: usize,
+    /// Scratch: aggregated gradient buffer.
+    agg: Vec<f32>,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(cfg: ExperimentConfig, rt: &'rt Runtime) -> Result<Self> {
+        cfg.validate()?;
+        let spec = rt.model(&cfg.model)?.clone();
+        spec.validate()?;
+        let params = rt.init_params(&cfg.model)?;
+        let grad_exe = rt.load(&spec.grad_entry)?;
+        let eval_exe = rt.load(&spec.eval_entry)?;
+        let opt = MomentumSgd::new(params.len(), cfg.lr, cfg.momentum, cfg.weight_decay);
+
+        let mut clients = Vec::with_capacity(cfg.clients);
+        let mut test = None;
+        let mut lm_eval_corpus = None;
+        if spec.kind == "classifier" {
+            let train = crate::data::mnist_like_split(cfg.train_size, cfg.seed, 0);
+            test = Some(crate::data::mnist_like_split(cfg.test_size, cfg.seed, 1));
+            let total = train.len() as f64;
+            for i in 0..cfg.clients {
+                let shard = train.shard(i, cfg.clients);
+                let weight = shard.len() as f64 / total;
+                clients.push(Client {
+                    id: i,
+                    sampler: BatchSampler::new(shard.len(), cfg.seed, i as u64),
+                    data: TaskData::Vision { shard },
+                    codecs: make_codecs(&cfg, &spec.groups),
+                    weight,
+                });
+            }
+        } else {
+            // LM task: every client samples from the same chain (IID).
+            let alphabet = spec.vocab.min(64).max(2);
+            for i in 0..cfg.clients {
+                clients.push(Client {
+                    id: i,
+                    sampler: BatchSampler::new(1, cfg.seed, i as u64),
+                    data: TaskData::Lm {
+                        corpus: MarkovCorpus::new(alphabet, cfg.seed),
+                        seq_len: spec.seq_len,
+                    },
+                    codecs: make_codecs(&cfg, &spec.groups),
+                    weight: 1.0 / cfg.clients as f64,
+                });
+            }
+            lm_eval_corpus = Some(MarkovCorpus::new(alphabet, cfg.seed));
+        }
+
+        let dim = params.len();
+        Ok(Coordinator {
+            net: SimNet::new(cfg.net),
+            groups: spec.groups.clone(),
+            cfg,
+            rt,
+            clients,
+            params,
+            opt,
+            grad_exe,
+            eval_exe,
+            test,
+            lm_eval_corpus,
+            round: 0,
+            agg: vec![0.0; dim],
+        })
+    }
+
+    pub fn model_spec(&self) -> &crate::runtime::ModelSpec {
+        self.rt.model(&self.cfg.model).unwrap()
+    }
+
+    /// The last round's aggregated (dequantized, weighted-mean) gradient.
+    /// Under DSGD this is the exact mean raw gradient — used by `fit-tail`
+    /// and the Fig. 1 bench to harvest realistic gradients.
+    pub fn last_aggregate(&self) -> &[f32] {
+        &self.agg
+    }
+
+    /// Execute one communication round; returns the round record.
+    pub fn step(&mut self) -> Result<RoundRecord> {
+        let timer = Timer::start();
+        let round = self.round;
+        let spec = self.rt.model(&self.cfg.model)?.clone();
+        let train_batch = spec.train_batch;
+
+        // 1. Local gradients (PJRT on this thread; XLA parallelizes inside).
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.clients.len());
+        let mut losses: Vec<f32> = Vec::with_capacity(self.clients.len());
+        for c in self.clients.iter_mut() {
+            let (x, y) = c.next_batch(train_batch, self.cfg.seed, round as u64);
+            let outs = if y.is_empty() {
+                self.grad_exe.run(&[&self.params, &x])?
+            } else {
+                self.grad_exe.run(&[&self.params, &x, &y])?
+            };
+            losses.push(outs[0][0]);
+            grads.push(outs[1].clone());
+        }
+
+        // 2. Per-client compression, fanned out across threads.
+        let refit_now = round % self.cfg.quant.estimate_every == 0;
+        let seed = self.cfg.seed;
+        let groups = &self.groups;
+        let msgs: Vec<Message> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.clients.len());
+            for (c, (g, l)) in self
+                .clients
+                .iter_mut()
+                .zip(grads.iter().zip(losses.iter()))
+            {
+                handles.push(scope.spawn(move || {
+                    c.compress(g, groups, round, seed, refit_now, *l)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("codec thread")).collect()
+        });
+
+        // 3. Uplink through the simulated network (fault injection drops a
+        //    client's message entirely — a crashed/straggling node).
+        let delivered: Vec<&Message> = msgs
+            .iter()
+            .filter(|m| m.client != self.cfg.drop_client)
+            .collect();
+        if delivered.is_empty() {
+            return Err(anyhow!("all clients dropped; nothing to aggregate"));
+        }
+        let owned: Vec<Message> = delivered.iter().map(|m| (*m).clone()).collect();
+        let (bytes_up, net_secs) = self.net.round_uplink(&owned);
+
+        // 4. Server: decode + weighted aggregate + optimizer step.
+        self.agg.iter_mut().for_each(|a| *a = 0.0);
+        let w_total: f64 = delivered.iter().map(|m| self.clients[m.client].weight).sum();
+        for m in &delivered {
+            let w = (self.clients[m.client].weight / w_total) as f32;
+            for (gi, frame) in &m.frames {
+                let g = &self.groups[*gi];
+                let decoded = crate::quant::wire::decode_dequantize(frame)?;
+                if decoded.len() != g.end - g.start {
+                    return Err(anyhow!(
+                        "frame length {} != group size {}",
+                        decoded.len(),
+                        g.end - g.start
+                    ));
+                }
+                for (a, &d) in self.agg[g.start..g.end].iter_mut().zip(&decoded) {
+                    *a += w * d;
+                }
+            }
+        }
+        let agg = std::mem::take(&mut self.agg);
+        self.opt.step(&mut self.params, &agg);
+        self.agg = agg;
+
+        let train_loss =
+            losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64;
+        self.round += 1;
+        Ok(RoundRecord {
+            round,
+            train_loss,
+            bytes_up,
+            test_loss: None,
+            test_accuracy: None,
+            secs: timer.secs(),
+            net_secs,
+        })
+    }
+
+    /// Evaluate the current global model on the held-out set.
+    /// Classifier: (mean loss, accuracy). LM: (mean token NLL, None).
+    pub fn evaluate(&mut self) -> Result<(f64, Option<f64>)> {
+        let spec = self.rt.model(&self.cfg.model)?.clone();
+        if let Some(test) = &self.test {
+            let b = spec.eval_batch;
+            let chunks = test.len() / b;
+            if chunks == 0 {
+                return Err(anyhow!("test set smaller than eval batch {b}"));
+            }
+            let mut loss_sum = 0.0;
+            let mut correct = 0.0;
+            for ch in 0..chunks {
+                let idxs: Vec<usize> = (ch * b..(ch + 1) * b).collect();
+                let (x, y) = gather_batch(test, &idxs);
+                let outs = self.eval_exe.run(&[&self.params, &x, &y])?;
+                loss_sum += outs[0][0] as f64;
+                correct += outs[1][0] as f64;
+            }
+            let n = (chunks * b) as f64;
+            Ok((loss_sum / n, Some(correct / n)))
+        } else if let Some(corpus) = &self.lm_eval_corpus {
+            let b = spec.train_batch;
+            let mut rng = Rng::for_stream(self.cfg.seed, 0xE7A1, 0, 0);
+            let mut loss_sum = 0.0;
+            let mut count = 0.0;
+            for _ in 0..4 {
+                let mut toks = Vec::with_capacity(b * (spec.seq_len + 1));
+                for _ in 0..b {
+                    toks.extend(corpus.sample(spec.seq_len + 1, &mut rng));
+                }
+                let outs = self.eval_exe.run(&[&self.params, &toks])?;
+                loss_sum += outs[0][0] as f64;
+                count += outs[1][0] as f64;
+            }
+            Ok((loss_sum / count, None))
+        } else {
+            Err(anyhow!("no evaluation data"))
+        }
+    }
+
+    /// Run the full experiment, logging every round + periodic evals.
+    pub fn run(&mut self, verbose: bool) -> Result<RunLog> {
+        let mut log = RunLog { config_id: self.cfg.id(), ..Default::default() };
+        for _ in 0..self.cfg.rounds {
+            let mut rec = self.step()?;
+            let last = self.round == self.cfg.rounds;
+            if self.round % self.cfg.eval_every == 0 || last {
+                let (l, a) = self.evaluate()?;
+                rec.test_loss = Some(l);
+                rec.test_accuracy = a;
+                if verbose {
+                    match a {
+                        Some(acc) => println!(
+                            "[{}] round {:>5} train_loss {:.4} test_loss {:.4} acc {:.4}",
+                            log.config_id, rec.round, rec.train_loss, l, acc
+                        ),
+                        None => println!(
+                            "[{}] round {:>5} train_loss {:.4} test_nll {:.4}",
+                            log.config_id, rec.round, rec.train_loss, l
+                        ),
+                    }
+                }
+            }
+            log.push(rec);
+        }
+        Ok(log)
+    }
+}
+
+fn make_codecs(cfg: &ExperimentConfig, groups: &[GroupRange]) -> Vec<GroupCodec> {
+    groups
+        .iter()
+        .map(|_| {
+            let inner = make_compressor(&cfg.quant);
+            if cfg.quant.error_feedback {
+                GroupCodec::Ef(ErrorFeedback::new(inner))
+            } else {
+                GroupCodec::Plain(inner)
+            }
+        })
+        .collect()
+}

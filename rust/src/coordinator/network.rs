@@ -1,0 +1,102 @@
+//! Simulated network between clients and server.
+//!
+//! The coordinator exchanges REAL bytes (wire frames); this module accounts
+//! for them and models transfer time under a bandwidth/latency model.  The
+//! paper's communication budget is bits-per-element-per-round; the benches
+//! read `bytes_up` directly from here.
+
+use crate::config::NetConfig;
+
+/// Per-round message with its payload bytes.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub client: usize,
+    pub round: usize,
+    /// (group index, frame bytes) per quantization group.
+    pub frames: Vec<(usize, Vec<u8>)>,
+    /// Client-side training loss this round (scalar metadata).
+    pub loss: f32,
+}
+
+impl Message {
+    /// Total bytes on the wire: fixed header + per-frame length prefix +
+    /// frame payloads.
+    pub fn wire_bytes(&self) -> u64 {
+        let header = 16u64; // client, round, loss, frame count
+        header
+            + self
+                .frames
+                .iter()
+                .map(|(_, f)| 4 + f.len() as u64)
+                .sum::<u64>()
+    }
+}
+
+/// Accounting + latency model for one round of uplinks.
+pub struct SimNet {
+    cfg: NetConfig,
+    pub total_bytes_up: u64,
+}
+
+impl SimNet {
+    pub fn new(cfg: NetConfig) -> Self {
+        SimNet { cfg, total_bytes_up: 0 }
+    }
+
+    /// Register a round's uplink messages; returns the simulated wall-clock
+    /// seconds the round spends in communication. Clients upload in
+    /// parallel, so round time = max over clients (latency + bytes / bw).
+    pub fn round_uplink(&mut self, msgs: &[Message]) -> (u64, f64) {
+        let mut round_bytes = 0u64;
+        let mut slowest = 0.0f64;
+        for m in msgs {
+            let b = m.wire_bytes();
+            round_bytes += b;
+            let t = self.cfg.latency_sec
+                + if self.cfg.bandwidth_bytes_per_sec > 0.0 {
+                    b as f64 / self.cfg.bandwidth_bytes_per_sec
+                } else {
+                    0.0
+                };
+            slowest = slowest.max(t);
+        }
+        self.total_bytes_up += round_bytes;
+        (round_bytes, slowest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(bytes: usize) -> Message {
+        Message { client: 0, round: 0, frames: vec![(0, vec![0u8; bytes])], loss: 0.0 }
+    }
+
+    #[test]
+    fn wire_bytes_counts_everything() {
+        let m = msg(100);
+        assert_eq!(m.wire_bytes(), 16 + 4 + 100);
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut net = SimNet::new(NetConfig::default());
+        let (b, t) = net.round_uplink(&[msg(100), msg(50)]);
+        assert_eq!(b, (16 + 4 + 100) + (16 + 4 + 50));
+        assert_eq!(t, 0.0);
+        net.round_uplink(&[msg(10)]);
+        assert_eq!(net.total_bytes_up, b + 16 + 4 + 10);
+    }
+
+    #[test]
+    fn latency_model_takes_slowest() {
+        let mut net = SimNet::new(NetConfig {
+            bandwidth_bytes_per_sec: 1000.0,
+            latency_sec: 0.01,
+        });
+        let (_, t) = net.round_uplink(&[msg(1000), msg(10)]);
+        // slowest message: (16 + 4 + 1000) bytes at 1000 B/s + 10ms latency.
+        assert!((t - (0.01 + 1020.0 / 1000.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,376 @@
+//! Synthetic data substrate.
+//!
+//! The build image has no network, so MNIST is substituted with a
+//! deterministic generator (documented in DESIGN.md §Substitutions):
+//!
+//! * [`mnist_like`] — 10-class 28×28 grayscale images built from
+//!   class-specific Gaussian-blob prototypes with per-sample affine jitter
+//!   and pixel noise. Learnable by the same MLP/CNN architectures, and —
+//!   the property the paper actually needs — training gradients on it are
+//!   heavy-tailed (verified by the Fig. 1 bench).
+//! * [`markov_corpus`] — byte-level token sequences from a seeded Markov
+//!   chain, for the transformer LM end-to-end example.
+//!
+//! Data is sharded across clients by contiguous ranges (the paper's
+//! `D^(i)`), with per-client deterministic batch sampling.
+
+use crate::util::Rng;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const NUM_CLASSES: usize = 10;
+
+/// A labelled image dataset, images flattened row-major, pixels in [0, 1].
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]
+    }
+
+    /// Contiguous shard `i` of `n` (sizes differ by at most 1).
+    pub fn shard(&self, i: usize, n: usize) -> Dataset {
+        assert!(i < n);
+        let len = self.len();
+        let base = len / n;
+        let extra = len % n;
+        let start = i * base + i.min(extra);
+        let count = base + usize::from(i < extra);
+        Dataset {
+            images: self.images[start * IMG_PIXELS..(start + count) * IMG_PIXELS].to_vec(),
+            labels: self.labels[start..start + count].to_vec(),
+        }
+    }
+}
+
+/// Class prototypes: a SHARED base pattern (common to all classes, so
+/// classes overlap and the task is non-trivial) plus a few class-specific
+/// Gaussian bumps. Difficulty is controlled by the bump amplitude relative
+/// to the base + sample noise.
+fn prototype(class: usize, seed: u64) -> Vec<f32> {
+    let mut img = vec![0.0f32; IMG_PIXELS];
+    let mut add_blobs = |rng: &mut Rng, count: usize, amp_lo: f64, amp_hi: f64| {
+        for _ in 0..count {
+            let cx = 5.0 + rng.f64() * 18.0;
+            let cy = 5.0 + rng.f64() * 18.0;
+            let sx = 1.5 + rng.f64() * 3.0;
+            let sy = 1.5 + rng.f64() * 3.0;
+            let amp = amp_lo + rng.f64() * (amp_hi - amp_lo);
+            for y in 0..IMG_SIDE {
+                for x in 0..IMG_SIDE {
+                    let dx = (x as f64 - cx) / sx;
+                    let dy = (y as f64 - cy) / sy;
+                    img[y * IMG_SIDE + x] +=
+                        (amp * (-0.5 * (dx * dx + dy * dy)).exp()) as f32;
+                }
+            }
+        }
+    };
+    // Shared base: identical across classes.
+    let mut base_rng = Rng::for_stream(seed, 0xDA7A, 0xFFFF, 0);
+    add_blobs(&mut base_rng, 4, 0.6, 1.0);
+    // Class-specific detail on top.
+    let mut class_rng = Rng::for_stream(seed, 0xDA7A, class as u64, 0);
+    add_blobs(&mut class_rng, 2 + class % 2, 0.25, 0.45);
+    // Normalize peak to 1.
+    let mx = img.iter().cloned().fold(0.0f32, f32::max).max(1e-6);
+    for p in img.iter_mut() {
+        *p /= mx;
+    }
+    img
+}
+
+/// Generate an MNIST-like dataset: `n` samples, balanced classes, per-sample
+/// integer shift jitter (±2 px) and Gaussian pixel noise.
+///
+/// The class prototypes depend on `seed` only; train/test splits of the SAME
+/// task use the same seed with different `split` ids (fresh jitter + noise).
+pub fn mnist_like_split(n: usize, seed: u64, split: u64) -> Dataset {
+    let protos: Vec<Vec<f32>> = (0..NUM_CLASSES).map(|c| prototype(c, seed)).collect();
+    let mut rng = Rng::for_stream(seed, 0xDA7A, 1, split);
+    let mut images = Vec::with_capacity(n * IMG_PIXELS);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % NUM_CLASSES;
+        let dx = rng.below(7) as i64 - 3;
+        let dy = rng.below(7) as i64 - 3;
+        let proto = &protos[class];
+        for y in 0..IMG_SIDE as i64 {
+            for x in 0..IMG_SIDE as i64 {
+                let sx = x - dx;
+                let sy = y - dy;
+                let base = if (0..IMG_SIDE as i64).contains(&sx)
+                    && (0..IMG_SIDE as i64).contains(&sy)
+                {
+                    proto[(sy as usize) * IMG_SIDE + sx as usize]
+                } else {
+                    0.0
+                };
+                let noisy = base + (rng.normal() * 0.25) as f32;
+                images.push(noisy.clamp(0.0, 1.0));
+            }
+        }
+        labels.push(class as u8);
+    }
+    // Shuffle sample order (keeping image/label pairing).
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut s_images = Vec::with_capacity(images.len());
+    let mut s_labels = Vec::with_capacity(n);
+    for &i in &order {
+        s_images.extend_from_slice(&images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]);
+        s_labels.push(labels[i]);
+    }
+    Dataset { images: s_images, labels: s_labels }
+}
+
+/// Train-split convenience (`split = 0`).
+pub fn mnist_like(n: usize, seed: u64) -> Dataset {
+    mnist_like_split(n, seed, 0)
+}
+
+/// Deterministic batch sampler over a shard: reshuffles every epoch.
+pub struct BatchSampler {
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl BatchSampler {
+    pub fn new(len: usize, seed: u64, client: u64) -> Self {
+        let mut rng = Rng::for_stream(seed, 0xBA7C, client, 0);
+        let mut order: Vec<usize> = (0..len).collect();
+        rng.shuffle(&mut order);
+        BatchSampler { order, cursor: 0, rng }
+    }
+
+    /// Next batch of indices (wraps with a reshuffle at epoch end).
+    pub fn next_batch(&mut self, batch: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Gather a batch into (x f32[B*784], y f32[B]) buffers for the runtime.
+pub fn gather_batch(ds: &Dataset, idxs: &[usize]) -> (Vec<f32>, Vec<f32>) {
+    let mut x = Vec::with_capacity(idxs.len() * IMG_PIXELS);
+    let mut y = Vec::with_capacity(idxs.len());
+    for &i in idxs {
+        x.extend_from_slice(ds.image(i));
+        y.push(ds.labels[i] as f32);
+    }
+    (x, y)
+}
+
+// ---------------------------------------------------------------------------
+// Token corpus (transformer e2e)
+// ---------------------------------------------------------------------------
+
+/// Seeded Markov-chain byte corpus over an `alphabet`-symbol subset.
+/// Sequences are learnable (entropy well below ln(alphabet)) but not
+/// trivially constant.
+pub struct MarkovCorpus {
+    /// Transition CDF rows: `alphabet x alphabet`.
+    cdf: Vec<f64>,
+    pub alphabet: usize,
+}
+
+impl MarkovCorpus {
+    pub fn new(alphabet: usize, seed: u64) -> Self {
+        assert!(alphabet >= 2);
+        let mut rng = Rng::for_stream(seed, 0xC0DE, alphabet as u64, 0);
+        let mut cdf = vec![0.0f64; alphabet * alphabet];
+        for r in 0..alphabet {
+            // Sparse-ish rows: a few favoured successors per symbol.
+            let mut probs = vec![0.05f64 / alphabet as f64; alphabet];
+            for _ in 0..3 {
+                probs[rng.below(alphabet as u64) as usize] += 0.3 + rng.f64() * 0.4;
+            }
+            let total: f64 = probs.iter().sum();
+            let mut acc = 0.0;
+            for c in 0..alphabet {
+                acc += probs[c] / total;
+                cdf[r * alphabet + c] = acc;
+            }
+            cdf[r * alphabet + alphabet - 1] = 1.0;
+        }
+        MarkovCorpus { cdf, alphabet }
+    }
+
+    /// Sample a token sequence of length `len` (values < alphabet ≤ 256).
+    pub fn sample(&self, len: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(len);
+        let mut state = rng.below(self.alphabet as u64) as usize;
+        out.push(state as f32);
+        for _ in 1..len {
+            let u = rng.f64();
+            let row = &self.cdf[state * self.alphabet..(state + 1) * self.alphabet];
+            state = row.partition_point(|&c| c < u).min(self.alphabet - 1);
+            out.push(state as f32);
+        }
+        out
+    }
+
+    /// Entropy rate (nats/token) of the chain under its stationary
+    /// distribution — the loss floor the LM should approach.
+    pub fn entropy_rate(&self) -> f64 {
+        // Estimate the stationary distribution by power iteration.
+        let a = self.alphabet;
+        let mut pi = vec![1.0 / a as f64; a];
+        for _ in 0..500 {
+            let mut next = vec![0.0f64; a];
+            for r in 0..a {
+                let mut prev = 0.0;
+                for c in 0..a {
+                    let p = self.cdf[r * a + c] - prev;
+                    prev = self.cdf[r * a + c];
+                    next[c] += pi[r] * p;
+                }
+            }
+            pi = next;
+        }
+        let mut h = 0.0;
+        for r in 0..a {
+            let mut prev = 0.0;
+            for c in 0..a {
+                let p = self.cdf[r * a + c] - prev;
+                prev = self.cdf[r * a + c];
+                if p > 1e-12 {
+                    h -= pi[r] * p * p.ln();
+                }
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_shapes_and_range() {
+        let ds = mnist_like(100, 1);
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.images.len(), 100 * IMG_PIXELS);
+        assert!(ds.images.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        assert!(ds.labels.iter().all(|&l| (l as usize) < NUM_CLASSES));
+    }
+
+    #[test]
+    fn dataset_deterministic() {
+        let a = mnist_like(50, 7);
+        let b = mnist_like(50, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = mnist_like(50, 8);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean intra-class pixel distance must be well below inter-class.
+        let ds = mnist_like(400, 3);
+        let mut by_class: Vec<Vec<usize>> = vec![vec![]; NUM_CLASSES];
+        for i in 0..ds.len() {
+            by_class[ds.labels[i] as usize].push(i);
+        }
+        let dist = |a: usize, b: usize| -> f64 {
+            ds.image(a)
+                .iter()
+                .zip(ds.image(b))
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+        };
+        // Average over several pairs — single pairs are noisy by design
+        // (the task must be hard enough that quantization noise matters).
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut n = 0.0;
+        for c in 0..NUM_CLASSES {
+            for k in 0..4 {
+                intra += dist(by_class[c][k], by_class[c][k + 1]);
+                inter += dist(by_class[c][k], by_class[(c + 1) % NUM_CLASSES][k]);
+                n += 1.0;
+            }
+        }
+        assert!(intra / n < inter / n, "intra {intra} vs inter {inter}");
+    }
+
+    #[test]
+    fn shards_partition() {
+        let ds = mnist_like(103, 1);
+        let n = 8;
+        let total: usize = (0..n).map(|i| ds.shard(i, n).len()).sum();
+        assert_eq!(total, 103);
+        let sizes: Vec<usize> = (0..n).map(|i| ds.shard(i, n).len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn sampler_covers_epoch() {
+        let mut s = BatchSampler::new(10, 1, 0);
+        let mut seen = vec![false; 10];
+        for _ in 0..5 {
+            for i in s.next_batch(2) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn sampler_deterministic_per_client() {
+        let mut a = BatchSampler::new(100, 1, 3);
+        let mut b = BatchSampler::new(100, 1, 3);
+        assert_eq!(a.next_batch(32), b.next_batch(32));
+        let mut c = BatchSampler::new(100, 1, 4);
+        assert_ne!(a.next_batch(32), c.next_batch(32));
+    }
+
+    #[test]
+    fn gather_batch_shapes() {
+        let ds = mnist_like(20, 1);
+        let (x, y) = gather_batch(&ds, &[0, 5, 7]);
+        assert_eq!(x.len(), 3 * IMG_PIXELS);
+        assert_eq!(y.len(), 3);
+        assert_eq!(y[1], ds.labels[5] as f32);
+    }
+
+    #[test]
+    fn markov_tokens_in_alphabet() {
+        let c = MarkovCorpus::new(64, 1);
+        let mut rng = Rng::new(2);
+        let seq = c.sample(500, &mut rng);
+        assert!(seq.iter().all(|&t| t >= 0.0 && t < 64.0 && t.fract() == 0.0));
+    }
+
+    #[test]
+    fn markov_entropy_below_uniform() {
+        let c = MarkovCorpus::new(64, 1);
+        let h = c.entropy_rate();
+        assert!(h > 0.0 && h < (64.0f64).ln(), "h = {h}");
+        // Learnability: needs real structure, not near-uniform.
+        assert!(h < 0.8 * (64.0f64).ln(), "chain too uniform: {h}");
+    }
+}

@@ -1,0 +1,57 @@
+//! # tqsgd — Truncated Quantization for Heavy-Tailed Gradients in Distributed SGD
+//!
+//! Production-quality reproduction of *"Improved Quantization Strategies for
+//! Managing Heavy-tailed Gradients in Distributed Learning"* (Yan, Li, Xiao,
+//! Hou, Song — cs.LG 2024).
+//!
+//! The library implements the paper's two-stage quantizer `Q_λs[T_α(·)]`
+//! (truncation + stochastic quantization) with the three densities the paper
+//! analyses — uniform (**TQSGD**), optimal non-uniform `p(g)^{1/3}`
+//! (**TNQSGD**, Eq. 18) and BiScaled (**TBQSGD**, Appendix D) — plus the
+//! baselines it compares against (QSGD, NQSGD, TernGrad, Top-k, oracle DSGD),
+//! a power-law tail estimator (§V), the fixed-point solvers for the optimal
+//! truncation threshold (Eqs. 12/19/33), the closed-form convergence-bound
+//! calculators (Lemma 1/2, Theorems 1–3), and a multi-threaded distributed
+//! SGD coordinator whose compute (model fwd/bwd, Pallas quantizer kernels)
+//! is AOT-compiled JAX executed through PJRT — python never runs at train
+//! time.
+//!
+//! ## Layer map
+//!
+//! | Layer | Where | What |
+//! |-------|-------|------|
+//! | L3 | [`coordinator`], [`train`], [`quant`] | distributed runtime + wire codecs |
+//! | L2 | `python/compile/{model,transformer}.py` → [`runtime`] | model fwd/bwd as HLO |
+//! | L1 | `python/compile/kernels/*.py` → [`runtime::QuantExec`] | Pallas quantizer |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tqsgd::config::ExperimentConfig;
+//! use tqsgd::train::Trainer;
+//!
+//! let cfg = ExperimentConfig::preset("cnn_tnqsgd_b3").unwrap();
+//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final test accuracy: {:.4}", report.final_accuracy);
+//! ```
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod optim;
+pub mod prop;
+pub mod quant;
+pub mod runtime;
+pub mod solver;
+pub mod tail;
+pub mod theory;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,212 @@
+//! `tqsgd` CLI — leader entrypoint for the distributed-SGD coordinator.
+//!
+//! ```text
+//! tqsgd train   [--preset cnn_tnqsgd_b3] [--model cnn --scheme tnqsgd --bits 3 ...]
+//! tqsgd sweep   --schemes qsgd,tqsgd,tnqsgd --bits-list 2,3,4,5 [...]
+//! tqsgd fit-tail [--model cnn --rounds 5]
+//! tqsgd solve   --gamma 4.0 --gmin 0.01 --rho 0.1 --bits 3
+//! tqsgd info
+//! ```
+
+use anyhow::{bail, Result};
+use tqsgd::benchkit::Table;
+use tqsgd::cli::Args;
+use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::coordinator::Coordinator;
+use tqsgd::runtime::Runtime;
+use tqsgd::solver;
+use tqsgd::tail::{fit_gaussian, fit_laplace, fit_power_law, PowerLawModel};
+use tqsgd::train::{run_experiment, Sweep};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("fit-tail") => cmd_fit_tail(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown subcommand {other:?}; try: train sweep fit-tail solve info"),
+        None => {
+            println!(
+                "tqsgd — truncated quantization for heavy-tailed gradients in distributed SGD\n\n\
+                 subcommands:\n\
+                 \x20 train     run one distributed training experiment\n\
+                 \x20 sweep     scheme x bits sweep (communication-learning tradeoff)\n\
+                 \x20 fit-tail  fit power-law/gaussian/laplace to real model gradients\n\
+                 \x20 solve     print optimal quantizer parameters for a tail model\n\
+                 \x20 info      show artifacts and models\n\n\
+                 common flags: --model --scheme --bits --clients --rounds --lr --seed\n\
+                 \x20             --error-feedback --drop-client --artifacts --preset"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn base_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("preset") {
+        Some(p) => ExperimentConfig::preset(p)?,
+        None => match args.get("config") {
+            Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+            None => ExperimentConfig::default(),
+        },
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    println!("config: {}", cfg.id());
+    let report = run_experiment(cfg.clone(), true)?;
+    println!(
+        "\nfinal: acc {:.4} (best {:.4}) train_loss {:.4} bytes_up {} ({:.2} bits/param/round)",
+        report.final_accuracy,
+        report.best_accuracy,
+        report.final_train_loss,
+        report.total_bytes_up,
+        report.bits_per_param
+    );
+    if let Some(out) = args.get("out") {
+        report.log.save_csv(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let schemes: Vec<Scheme> = args
+        .str_or("schemes", "qsgd,nqsgd,tqsgd,tnqsgd,tbqsgd")
+        .split(',')
+        .map(Scheme::parse)
+        .collect::<Result<_>>()?;
+    let bits: Vec<u32> = args
+        .str_or("bits-list", "2,3,4,5")
+        .split(',')
+        .map(|b| b.parse::<u32>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+    let sweep = Sweep::new(&cfg.artifacts_dir)?;
+    let mut table =
+        Table::new(&["scheme", "bits", "final acc", "best acc", "MB up", "bits/param"]);
+    for &scheme in &schemes {
+        for &b in &bits {
+            let mut c = cfg.clone();
+            c.quant.scheme = scheme;
+            c.quant.bits = b;
+            let r = sweep.run(c, false)?;
+            table.row(&[
+                scheme.name().to_string(),
+                b.to_string(),
+                format!("{:.4}", r.final_accuracy),
+                format!("{:.4}", r.best_accuracy),
+                format!("{:.2}", r.total_bytes_up as f64 / 1e6),
+                format!("{:.2}", r.bits_per_param),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+/// Train briefly uncompressed, harvest the aggregate gradient, fit all three
+/// families per layer group — the Fig. 1 experiment from the CLI.
+fn cmd_fit_tail(args: &Args) -> Result<()> {
+    let mut cfg = base_config(args)?;
+    cfg.quant.scheme = Scheme::Dsgd;
+    cfg.rounds = args.usize_or("rounds", 5)?;
+    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    let mut coord = Coordinator::new(cfg.clone(), &rt)?;
+    let spec = coord.model_spec().clone();
+    for _ in 0..cfg.rounds {
+        coord.step()?;
+    }
+    let grads = coord.last_aggregate().to_vec();
+    let mut table = Table::new(&["group", "family", "params", "KS"]);
+    for g in &spec.groups {
+        let xs = &grads[g.start..g.end];
+        if let Some(pl) = fit_power_law(xs) {
+            table.row(&[
+                g.group.clone(),
+                "power-law".into(),
+                format!(
+                    "γ={:.2} g_min={:.4} ρ={:.4}",
+                    pl.params[0], pl.params[1], pl.params[2]
+                ),
+                format!("{:.4}", pl.ks),
+            ]);
+        }
+        let ga = fit_gaussian(xs);
+        table.row(&[
+            g.group.clone(),
+            "gaussian".into(),
+            format!("µ={:.1e} σ={:.3e}", ga.params[0], ga.params[1]),
+            format!("{:.4}", ga.ks),
+        ]);
+        let la = fit_laplace(xs);
+        table.row(&[
+            g.group.clone(),
+            "laplace".into(),
+            format!("µ={:.1e} b={:.3e}", la.params[0], la.params[1]),
+            format!("{:.4}", la.ks),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let gamma = args.f64_or("gamma", 4.0)?;
+    let g_min = args.f64_or("gmin", 0.01)?;
+    let rho = args.f64_or("rho", 0.1)?;
+    let bits = args.usize_or("bits", 3)? as u32;
+    let m = PowerLawModel::new(gamma, g_min, rho);
+    let s = solver::levels_for_bits(bits);
+    let au = solver::optimal_alpha_uniform(&m, s);
+    let an = solver::optimal_alpha_nonuniform(&m, s);
+    let d = solver::solve_biscaled(&m, s);
+    println!("model: γ={gamma} g_min={g_min} ρ={rho}  (b={bits}, s={s})");
+    println!("TQSGD   α* = {au:.5}   E_TQ = {:.3e}", solver::e_tq_uniform(&m, au, s));
+    println!("TNQSGD  α* = {an:.5}   E_TQ = {:.3e}", solver::e_tq_nonuniform(&m, an, s));
+    println!(
+        "TBQSGD  α* = {:.5} β* = {:.5} (k*={:.3}, s_β={}, s_α={})  E_TQ = {:.3e}",
+        d.alpha,
+        d.beta,
+        d.k,
+        d.s_beta,
+        d.s_alpha,
+        solver::e_tq_biscaled(&m, &d, s)
+    );
+    println!("\nTNQSGD codebook: {:?}", solver::nonuniform_codebook(&m, an, s));
+    println!("TBQSGD codebook: {:?}", d.codebook());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let rt = Runtime::open(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("quant tile: {}", rt.manifest.quant_tile);
+    let mut table = Table::new(&["model", "kind", "params", "groups", "train B", "eval B"]);
+    for (name, m) in &rt.manifest.models {
+        table.row(&[
+            name.clone(),
+            m.kind.clone(),
+            m.param_count.to_string(),
+            m.groups
+                .iter()
+                .map(|g| format!("{}[{}..{})", g.group, g.start, g.end))
+                .collect::<Vec<_>>()
+                .join(" "),
+            m.train_batch.to_string(),
+            m.eval_batch.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nartifacts: {}",
+        rt.manifest.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+    );
+    Ok(())
+}

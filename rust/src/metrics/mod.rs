@@ -1,0 +1,195 @@
+//! Metrics: per-round records, wire-byte accounting, CSV/JSONL sinks.
+//!
+//! Every training run produces a [`RunLog`] the benches and examples render
+//! (and optionally persist) — this is the data behind Figs. 3 and 4.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+
+/// One communication round's record.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub train_loss: f64,
+    /// Bytes shipped client→server this round (all clients).
+    pub bytes_up: u64,
+    /// Evaluation (if run this round).
+    pub test_loss: Option<f64>,
+    pub test_accuracy: Option<f64>,
+    /// Wall-clock seconds spent in this round.
+    pub secs: f64,
+    /// Simulated network seconds (bandwidth/latency model), if enabled.
+    pub net_secs: f64,
+}
+
+/// Full run log.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub records: Vec<RoundRecord>,
+    pub config_id: String,
+}
+
+impl RunLog {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn total_bytes_up(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_up).sum()
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.test_accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.test_accuracy)
+            .fold(None, |m, a| Some(m.map_or(a, |m: f64| m.max(a))))
+    }
+
+    pub fn final_train_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.train_loss)
+    }
+
+    /// (round, accuracy) series for plotting Fig. 3.
+    pub fn accuracy_series(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.test_accuracy.map(|a| (r.round, a)))
+            .collect()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,train_loss,bytes_up,test_loss,test_accuracy,secs,net_secs\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.round,
+                r.train_loss,
+                r.bytes_up,
+                r.test_loss.map_or(String::new(), |v| v.to_string()),
+                r.test_accuracy.map_or(String::new(), |v| v.to_string()),
+                r.secs,
+                r.net_secs,
+            ));
+        }
+        s
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            let mut pairs = vec![
+                ("round", json::num(r.round as f64)),
+                ("train_loss", json::num(r.train_loss)),
+                ("bytes_up", json::num(r.bytes_up as f64)),
+                ("secs", json::num(r.secs)),
+                ("net_secs", json::num(r.net_secs)),
+                ("config", json::s(&self.config_id)),
+            ];
+            if let Some(l) = r.test_loss {
+                pairs.push(("test_loss", json::num(l)));
+            }
+            if let Some(a) = r.test_accuracy {
+                pairs.push(("test_accuracy", json::num(a)));
+            }
+            s.push_str(&json::obj(pairs).to_json());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Parse a JSONL metrics line back (used by tests and tooling).
+pub fn parse_jsonl_line(line: &str) -> Result<Value> {
+    Value::parse(line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> RunLog {
+        let mut log = RunLog { config_id: "cnn/tnqsgd/b3/N8".into(), ..Default::default() };
+        log.push(RoundRecord {
+            round: 0,
+            train_loss: 2.3,
+            bytes_up: 1000,
+            test_loss: None,
+            test_accuracy: None,
+            secs: 0.1,
+            net_secs: 0.0,
+        });
+        log.push(RoundRecord {
+            round: 1,
+            train_loss: 1.9,
+            bytes_up: 1000,
+            test_loss: Some(1.8),
+            test_accuracy: Some(0.55),
+            secs: 0.1,
+            net_secs: 0.0,
+        });
+        log
+    }
+
+    #[test]
+    fn accounting() {
+        let log = sample_log();
+        assert_eq!(log.total_bytes_up(), 2000);
+        assert_eq!(log.final_accuracy(), Some(0.55));
+        assert_eq!(log.best_accuracy(), Some(0.55));
+        assert_eq!(log.accuracy_series(), vec![(1, 0.55)]);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample_log().to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("round,"));
+        assert!(csv.contains("0.55"));
+    }
+
+    #[test]
+    fn jsonl_roundtrips() {
+        let jl = sample_log().to_jsonl();
+        for line in jl.lines() {
+            let v = parse_jsonl_line(line).unwrap();
+            assert!(v.get("round").is_some());
+            assert_eq!(v.get("config").unwrap().as_str(), Some("cnn/tnqsgd/b3/N8"));
+        }
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+}

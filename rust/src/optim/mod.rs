@@ -1,0 +1,135 @@
+//! Server-side optimizer (paper §V: momentum SGD, lr 0.01, momentum 0.9,
+//! weight decay 5e-4) over the flat parameter vector, plus LR schedules.
+//!
+//! The optimizer lives in rust because the coordinator owns the global
+//! model: the AOT graph computes (loss, grads) only.
+
+/// Momentum SGD with (decoupled-from-graph) L2 weight decay:
+///
+/// ```text
+/// v ← μ v + (g + λ θ)
+/// θ ← θ − η v
+/// ```
+pub struct MomentumSgd {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    velocity: Vec<f32>,
+}
+
+impl MomentumSgd {
+    pub fn new(dim: usize, lr: f64, momentum: f64, weight_decay: f64) -> Self {
+        assert!(lr > 0.0 && (0.0..1.0).contains(&momentum) && weight_decay >= 0.0);
+        MomentumSgd { lr, momentum, weight_decay, velocity: vec![0.0; dim] }
+    }
+
+    /// One update in place. `grads.len() == params.len()`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.velocity.len());
+        let mu = self.momentum as f32;
+        let lr = self.lr as f32;
+        let wd = self.weight_decay as f32;
+        for ((p, &g), v) in params.iter_mut().zip(grads).zip(self.velocity.iter_mut()) {
+            let eff = g + wd * *p;
+            *v = mu * *v + eff;
+            *p -= lr * *v;
+        }
+    }
+
+    pub fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant,
+    /// Multiply by `factor` every `every` rounds.
+    Step { every: usize, factor: f64 },
+    /// Linear warmup for `warmup` rounds then constant.
+    Warmup { warmup: usize },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, base: f64, round: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant => base,
+            LrSchedule::Step { every, factor } => {
+                base * factor.powi((round / every.max(1)) as i32)
+            }
+            LrSchedule::Warmup { warmup } => {
+                if round < warmup {
+                    base * (round + 1) as f64 / warmup as f64
+                } else {
+                    base
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        // Minimize f(θ) = ||θ||² / 2; grad = θ.
+        let mut opt = MomentumSgd::new(4, 0.1, 0.9, 0.0);
+        let mut p = vec![1.0f32, -2.0, 3.0, -4.0];
+        for _ in 0..200 {
+            let g = p.clone();
+            opt.step(&mut p, &g);
+        }
+        assert!(p.iter().all(|&x| x.abs() < 1e-3), "{p:?}");
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        // On an ill-conditioned quadratic, momentum reaches a tighter ball
+        // in the same number of steps than plain SGD.
+        let run = |mu: f64| {
+            let mut opt = MomentumSgd::new(2, 0.02, mu, 0.0);
+            let mut p = vec![10.0f32, 10.0];
+            for _ in 0..300 {
+                let g = vec![p[0] * 0.1, p[1] * 2.0];
+                opt.step(&mut p, &g);
+            }
+            (p[0].abs() + p[1].abs()) as f64
+        };
+        assert!(run(0.9) < run(0.0), "momentum should help");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = MomentumSgd::new(1, 0.1, 0.0, 0.1);
+        let mut p = vec![1.0f32];
+        for _ in 0..100 {
+            opt.step(&mut p, &[0.0]); // zero gradient: pure decay
+        }
+        assert!(p[0] < 0.5 && p[0] > 0.0, "{}", p[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let mut opt = MomentumSgd::new(2, 0.1, 0.9, 0.0);
+        let mut p = vec![0.0f32; 2];
+        opt.step(&mut p, &[0.0; 3]);
+    }
+
+    #[test]
+    fn schedules() {
+        let s = LrSchedule::Step { every: 10, factor: 0.5 };
+        assert_eq!(s.lr_at(1.0, 0), 1.0);
+        assert_eq!(s.lr_at(1.0, 10), 0.5);
+        assert_eq!(s.lr_at(1.0, 25), 0.25);
+        let w = LrSchedule::Warmup { warmup: 4 };
+        assert_eq!(w.lr_at(1.0, 0), 0.25);
+        assert_eq!(w.lr_at(1.0, 3), 1.0);
+        assert_eq!(w.lr_at(1.0, 100), 1.0);
+        assert_eq!(LrSchedule::Constant.lr_at(0.3, 99), 0.3);
+    }
+}

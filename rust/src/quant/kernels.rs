@@ -1,0 +1,325 @@
+//! Scalar quantization kernels — the rust-native hot path.
+//!
+//! These mirror `python/compile/kernels/ref.py` operation-for-operation in
+//! f32 so that, given the same uniforms, the rust codec, the pure-jnp oracle
+//! and the Pallas kernel produce IDENTICAL indices (verified by the parity
+//! integration test through PJRT).
+
+/// Truncated uniform stochastic quantization of one element.
+/// Returns the level index in [0, s].
+#[inline(always)]
+pub fn quantize_uniform_elem(g: f32, u: f32, alpha: f32, s: u32) -> u32 {
+    let g = g.clamp(-alpha, alpha);
+    let step = 2.0f32 * alpha / s as f32;
+    let x = (g + alpha) / step;
+    let lo = x.floor().clamp(0.0, (s - 1) as f32);
+    let frac = x - lo;
+    let mut idx = lo + f32::from(u < frac);
+    if idx > s as f32 {
+        idx = s as f32;
+    }
+    idx as u32
+}
+
+/// Dequantize a uniform level index.
+#[inline(always)]
+pub fn dequantize_uniform_elem(idx: u32, alpha: f32, s: u32) -> f32 {
+    let step = 2.0f32 * alpha / s as f32;
+    -alpha + idx as f32 * step
+}
+
+/// Truncated codebook stochastic quantization of one element.
+/// `codebook` is strictly increasing with s+1 levels; returns index in [0, s].
+///
+/// Interval lookup matches ref.py's ladder semantics (k = #{j in 1..s :
+/// g >= l_j}) via `partition_point` — O(log s) instead of O(s).
+#[inline(always)]
+pub fn quantize_codebook_elem(g: f32, u: f32, codebook: &[f32]) -> u32 {
+    let s = codebook.len() - 1;
+    let g = g.clamp(codebook[0], codebook[s]);
+    // Count interior boundaries l_1..l_{s-1} that are <= g.
+    let k = codebook[1..s].partition_point(|&b| b <= g);
+    let lower = codebook[k];
+    let upper = codebook[k + 1];
+    let width = upper - lower;
+    let frac = if width > 0.0 { (g - lower) / width } else { 0.0 };
+    (k + usize::from(u < frac)) as u32
+}
+
+/// Vectorized uniform quantization into a preallocated index buffer.
+/// `uniforms` must have the same length as `grads`.
+pub fn quantize_uniform_slice(
+    grads: &[f32],
+    uniforms: &[f32],
+    alpha: f32,
+    s: u32,
+    out: &mut Vec<u32>,
+) {
+    assert_eq!(grads.len(), uniforms.len());
+    out.clear();
+    out.reserve(grads.len());
+    // Hoist the reciprocal: idx math is the throughput limiter at b<=5.
+    let step = 2.0f32 * alpha / s as f32;
+    let inv_step = 1.0f32 / step;
+    let s_m1 = (s - 1) as f32;
+    for (&g, &u) in grads.iter().zip(uniforms) {
+        let g = g.clamp(-alpha, alpha);
+        let x = (g + alpha) * inv_step;
+        let lo = x.floor().min(s_m1).max(0.0);
+        let idx = lo + f32::from(u < x - lo);
+        out.push(idx.min(s as f32) as u32);
+    }
+}
+
+/// Fused quantize + bit-pack for the uniform quantizer: consumes uniforms
+/// straight from `rng` (one `f32` per element, same stream order as the
+/// unfused path) and writes `bits`-wide indices directly into the packed
+/// output — no intermediate 4 B/elem index or uniform buffers.
+///
+/// This is the production hot path (see EXPERIMENTS.md §Perf); the unfused
+/// slice functions remain the reference and the Pallas-parity surface.
+pub fn quantize_uniform_packed(
+    grads: &[f32],
+    rng: &mut crate::util::Rng,
+    alpha: f32,
+    s: u32,
+    bits: u32,
+) -> Vec<u8> {
+    debug_assert!(s < (1 << bits));
+    let mut out = vec![0u8; super::bitpack::packed_len(grads.len(), bits)];
+    let step = 2.0f32 * alpha / s as f32;
+    let inv_step = 1.0f32 / step;
+    let s_m1 = (s - 1) as f32;
+    let s_f = s as f32;
+    let mut bitpos = 0usize;
+    // NOTE(perf): a two-uniforms-per-u64 variant (Rng::f32_pair) was tried
+    // and measured <1% faster — the RNG is not the bottleneck — so the
+    // simple one-f32-per-element stream (identical to the unfused reference
+    // path) is kept. See EXPERIMENTS.md §Perf iteration log.
+    for &g in grads {
+        let u = rng.f32();
+        let gc = g.clamp(-alpha, alpha);
+        let x = (gc + alpha) * inv_step;
+        let lo = x.floor().min(s_m1).max(0.0);
+        let idx = (lo + f32::from(u < x - lo)).min(s_f) as u32;
+        // Inline LSB-first pack (span ≤ 2 bytes for bits ≤ 8).
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u32;
+        let wide = (idx as u16) << off;
+        out[byte] |= (wide & 0xFF) as u8;
+        if wide > 0xFF {
+            out[byte + 1] |= (wide >> 8) as u8;
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Fused quantize + bit-pack for a codebook quantizer (same contract as
+/// [`quantize_uniform_packed`]).
+pub fn quantize_codebook_packed(
+    grads: &[f32],
+    rng: &mut crate::util::Rng,
+    codebook: &[f32],
+    bits: u32,
+) -> Vec<u8> {
+    let s = codebook.len() - 1;
+    debug_assert!(s < (1 << bits));
+    let mut out = vec![0u8; super::bitpack::packed_len(grads.len(), bits)];
+    let lo_bound = codebook[0];
+    let hi_bound = codebook[s];
+    let interior = &codebook[1..s];
+    let mut bitpos = 0usize;
+    for &g in grads {
+        let gc = g.clamp(lo_bound, hi_bound);
+        let k = interior.partition_point(|&b| b <= gc);
+        let lower = codebook[k];
+        let width = codebook[k + 1] - lower;
+        let frac = if width > 0.0 { (gc - lower) / width } else { 0.0 };
+        let idx = (k + usize::from(rng.f32() < frac)) as u32;
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u32;
+        let wide = (idx as u16) << off;
+        out[byte] |= (wide & 0xFF) as u8;
+        if wide > 0xFF {
+            out[byte + 1] |= (wide >> 8) as u8;
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Vectorized codebook quantization.
+pub fn quantize_codebook_slice(
+    grads: &[f32],
+    uniforms: &[f32],
+    codebook: &[f32],
+    out: &mut Vec<u32>,
+) {
+    assert_eq!(grads.len(), uniforms.len());
+    out.clear();
+    out.reserve(grads.len());
+    for (&g, &u) in grads.iter().zip(uniforms) {
+        out.push(quantize_codebook_elem(g, u, codebook));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_elem_exact_cases() {
+        // g at a level with u anything -> that level.
+        let (alpha, s) = (1.0f32, 4u32);
+        assert_eq!(quantize_uniform_elem(-1.0, 0.99, alpha, s), 0);
+        assert_eq!(quantize_uniform_elem(1.0, 0.0, alpha, s), 4);
+        assert_eq!(quantize_uniform_elem(0.0, 0.5, alpha, s), 2);
+        // Midpoint of interval 0: rounds up iff u < 0.5.
+        assert_eq!(quantize_uniform_elem(-0.75, 0.49, alpha, s), 1);
+        assert_eq!(quantize_uniform_elem(-0.75, 0.51, alpha, s), 0);
+    }
+
+    #[test]
+    fn uniform_truncates_outliers() {
+        let idx = quantize_uniform_elem(99.0, 0.3, 0.05, 7);
+        assert_eq!(idx, 7);
+        let idx = quantize_uniform_elem(-99.0, 0.3, 0.05, 7);
+        assert_eq!(idx, 0);
+    }
+
+    #[test]
+    fn codebook_elem_matches_uniform_on_even_grid() {
+        // A uniform codebook must agree with the closed-form uniform path.
+        let (alpha, s) = (0.08f32, 7u32);
+        let cb: Vec<f32> = (0..=s)
+            .map(|k| -alpha + 2.0 * alpha * k as f32 / s as f32)
+            .collect();
+        let mut rng = Rng::new(1);
+        for _ in 0..5000 {
+            let g = (rng.student_t(3.0) * 0.03) as f32;
+            let u = rng.f32();
+            let a = quantize_uniform_elem(g, u, alpha, s);
+            let b = quantize_codebook_elem(g, u, &cb);
+            // The two index computations may differ by FP rounding exactly at
+            // boundaries; dequantized values must still agree.
+            let da = dequantize_uniform_elem(a, alpha, s);
+            let db = cb[b as usize];
+            assert!(
+                (da - db).abs() <= 2.0 * alpha / s as f32 + 1e-7,
+                "g={g} u={u}: {a}({da}) vs {b}({db})"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_matches_elem() {
+        let mut rng = Rng::new(2);
+        let g: Vec<f32> = (0..4096).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+        let u: Vec<f32> = (0..4096).map(|_| rng.f32()).collect();
+        let mut out = Vec::new();
+        quantize_uniform_slice(&g, &u, 0.04, 7, &mut out);
+        for i in 0..g.len() {
+            assert_eq!(out[i], quantize_uniform_elem(g[i], u[i], 0.04, 7), "i={i}");
+        }
+    }
+
+    #[test]
+    fn packed_matches_unfused_uniform() {
+        // Same RNG stream ⇒ identical indices ⇒ identical packed bytes.
+        let mut rng = Rng::new(11);
+        let g: Vec<f32> = (0..10_000).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+        for &(s, bits) in &[(3u32, 2u32), (7, 3), (15, 4), (31, 5)] {
+            let mut r1 = Rng::new(77);
+            let packed = quantize_uniform_packed(&g, &mut r1, 0.03, s, bits);
+            let mut r2 = Rng::new(77);
+            let u: Vec<f32> = (0..g.len()).map(|_| r2.f32()).collect();
+            let mut idx = Vec::new();
+            quantize_uniform_slice(&g, &u, 0.03, s, &mut idx);
+            assert_eq!(packed, crate::quant::bitpack::pack(&idx, bits), "s={s}");
+        }
+    }
+
+    #[test]
+    fn packed_matches_unfused_codebook() {
+        let mut rng = Rng::new(12);
+        let g: Vec<f32> = (0..10_000).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+        let cb: Vec<f32> = vec![-0.05, -0.01, -0.002, 0.0, 0.002, 0.01, 0.02, 0.05];
+        let mut r1 = Rng::new(88);
+        let packed = quantize_codebook_packed(&g, &mut r1, &cb, 3);
+        let mut r2 = Rng::new(88);
+        let u: Vec<f32> = (0..g.len()).map(|_| r2.f32()).collect();
+        let mut idx = Vec::new();
+        quantize_codebook_slice(&g, &u, &cb, &mut idx);
+        assert_eq!(packed, crate::quant::bitpack::pack(&idx, 3));
+    }
+
+    #[test]
+    fn property_unbiased_uniform() {
+        // Monte-Carlo unbiasedness of the stochastic rounding (Lemma 1).
+        prop::check(20, |rng| {
+            let alpha = 0.1f32;
+            let s = 7u32;
+            let g = ((rng.f64() * 1.8 - 0.9) * alpha as f64) as f32;
+            let n = 20_000;
+            let mean: f64 = (0..n)
+                .map(|_| {
+                    let idx = quantize_uniform_elem(g, rng.f32(), alpha, s);
+                    dequantize_uniform_elem(idx, alpha, s) as f64
+                })
+                .sum::<f64>()
+                / n as f64;
+            let step = 2.0 * alpha as f64 / s as f64;
+            // CLT: |mean - g| should be within ~4 sigma of the rounding noise.
+            let tol = 4.0 * step / (n as f64).sqrt();
+            prop::assert_prop((mean - g as f64).abs() < tol, format!("mean {mean} vs g {g} (tol {tol})"))
+        });
+    }
+
+    #[test]
+    fn property_codebook_idx_valid_and_brackets() {
+        prop::check(100, |rng| {
+            let cb = prop::gen_codebook(rng, 5);
+            let s = cb.len() - 1;
+            for _ in 0..200 {
+                let g = (rng.student_t(3.0) * 0.3) as f32;
+                let u = rng.f32();
+                let idx = quantize_codebook_elem(g, u, &cb) as usize;
+                if idx > s {
+                    return Err(format!("idx {idx} out of range"));
+                }
+                let gc = g.clamp(cb[0], cb[s]);
+                let val = cb[idx];
+                // Q[g] must be one of the two levels bracketing g.
+                let k = cb[1..s].partition_point(|&b| b <= gc);
+                if (val - cb[k]).abs() > 1e-9 && (val - cb[k + 1]).abs() > 1e-9 {
+                    return Err(format!("value {val} not bracketing g={g}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_variance_within_lemma1_bound() {
+        // E(Q[g]-g)^2 <= Δ²/4 per element for the interval containing g.
+        prop::check(10, |rng| {
+            let alpha = 0.05f32;
+            let s = 7u32;
+            let g = ((rng.f64() * 2.0 - 1.0) * alpha as f64 * 0.99) as f32;
+            let n = 30_000;
+            let var: f64 = (0..n)
+                .map(|_| {
+                    let idx = quantize_uniform_elem(g, rng.f32(), alpha, s);
+                    let d = dequantize_uniform_elem(idx, alpha, s) as f64 - g as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                / n as f64;
+            let step = 2.0 * alpha as f64 / s as f64;
+            prop::assert_prop(var <= step * step / 4.0 * 1.05, format!("var {var} vs bound {}", step * step / 4.0))
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! Gradient compression: the paper's two-stage quantizers, baselines, and
+//! the wire format they serialize to.
+//!
+//! * [`kernels`] — scalar/slice quantization primitives (mirror ref.py),
+//! * [`bitpack`] — tight n-bit index packing,
+//! * [`wire`] — self-describing frames (the bytes on the simulated network),
+//! * [`codecs`] — TQSGD / TNQSGD / TBQSGD + QSGD / NQSGD / TernGrad / Top-k,
+//! * [`error_feedback`] — optional EF wrapper (extension).
+
+pub mod bitpack;
+pub mod codecs;
+pub mod error_feedback;
+pub mod kernels;
+pub mod wire;
+
+pub use codecs::{make_compressor, Compressor};
+pub use error_feedback::ErrorFeedback;
+pub use wire::Payload;
+
+/// Convenience: compress → decode → dequantize (used by tests/benches to
+/// measure pure quantization error without a network in the loop).
+pub fn roundtrip(
+    c: &dyn Compressor,
+    grads: &[f32],
+    rng: &mut crate::util::Rng,
+) -> crate::Result<Vec<f32>> {
+    Ok(Payload::decode(&c.compress(grads, rng))?.dequantize())
+}
+
+/// Mean squared error between two equally sized vectors.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{QuantConfig, Scheme};
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_helper_works() {
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = (0..100).map(|_| rng.f32() - 0.5).collect();
+        let c = make_compressor(&QuantConfig { scheme: Scheme::Dsgd, ..Default::default() });
+        let out = roundtrip(c.as_ref(), &g, &mut rng).unwrap();
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(mse(&[0.0], &[2.0]), 4.0);
+    }
+}

@@ -1,0 +1,426 @@
+//! Wire format: the exact bytes a client ships to the server.
+//!
+//! Every compressed gradient is one self-describing frame; the simulated
+//! network transmits these bytes and the byte count IS the paper's
+//! communication cost (`ceil(d·b/8)` payload + a few header bytes).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! [0..2)  magic 0x5154 ("TQ")
+//! [2]     payload kind: 0 raw | 1 uniform | 2 codebook | 3 sparse
+//! [3]     bits per index (uniform/codebook; 0 otherwise)
+//! [4..8)  d: element count u32
+//! then kind-specific:
+//!   raw:      d * f32
+//!   uniform:  alpha f32, s u16, packed indices
+//!   codebook: len u16, len * f32 levels, packed indices
+//!   sparse:   k u32, k * (u32 index), k * (f32 value)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use super::bitpack;
+
+const MAGIC: u16 = 0x5154;
+
+/// Decoded frame payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Uncompressed f32s (DSGD oracle).
+    Raw(Vec<f32>),
+    /// Uniform codebook on [−α, α] with s intervals; values are indices.
+    Uniform { alpha: f32, s: u16, idx: Vec<u32> },
+    /// Explicit codebook levels; values are indices into it.
+    Codebook { levels: Vec<f32>, idx: Vec<u32> },
+    /// Sparse (index, value) pairs over a d-element vector (Top-k).
+    Sparse { d: u32, pairs: Vec<(u32, f32)> },
+}
+
+impl Payload {
+    /// Number of gradient elements this frame reconstructs.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Raw(v) => v.len(),
+            Payload::Uniform { idx, .. } => idx.len(),
+            Payload::Codebook { idx, .. } => idx.len(),
+            Payload::Sparse { d, .. } => *d as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize with the given index bit width (uniform/codebook).
+    pub fn encode(&self, bits: u32) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.len() / 2);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        match self {
+            Payload::Raw(v) => {
+                out.push(0u8);
+                out.push(0u8);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::Uniform { alpha, s, idx } => {
+                out.push(1u8);
+                out.push(bits as u8);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                out.extend_from_slice(&alpha.to_le_bytes());
+                out.extend_from_slice(&s.to_le_bytes());
+                out.extend_from_slice(&bitpack::pack(idx, bits));
+            }
+            Payload::Codebook { levels, idx } => {
+                out.push(2u8);
+                out.push(bits as u8);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                out.extend_from_slice(&(levels.len() as u16).to_le_bytes());
+                for l in levels {
+                    out.extend_from_slice(&l.to_le_bytes());
+                }
+                out.extend_from_slice(&bitpack::pack(idx, bits));
+            }
+            Payload::Sparse { d, pairs } => {
+                out.push(3u8);
+                out.push(0u8);
+                out.extend_from_slice(&d.to_le_bytes());
+                out.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+                for (i, _) in pairs {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for (_, v) in pairs {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Payload> {
+        let mut r = Reader { b: bytes, i: 0 };
+        if r.u16()? != MAGIC {
+            bail!("bad frame magic");
+        }
+        let kind = r.u8()?;
+        let bits = r.u8()? as u32;
+        let d = r.u32()? as usize;
+        Ok(match kind {
+            0 => {
+                let mut v = Vec::with_capacity(d);
+                for _ in 0..d {
+                    v.push(r.f32()?);
+                }
+                Payload::Raw(v)
+            }
+            1 => {
+                let alpha = r.f32()?;
+                let s = r.u16()?;
+                let idx = bitpack::unpack(r.rest(), bits, d);
+                Payload::Uniform { alpha, s, idx }
+            }
+            2 => {
+                let n = r.u16()? as usize;
+                let mut levels = Vec::with_capacity(n);
+                for _ in 0..n {
+                    levels.push(r.f32()?);
+                }
+                let idx = bitpack::unpack(r.rest(), bits, d);
+                Payload::Codebook { levels, idx }
+            }
+            3 => {
+                let k = r.u32()? as usize;
+                let mut is = Vec::with_capacity(k);
+                for _ in 0..k {
+                    is.push(r.u32()?);
+                }
+                let mut pairs = Vec::with_capacity(k);
+                for &i in &is {
+                    pairs.push((i, r.f32()?));
+                }
+                Payload::Sparse { d: d as u32, pairs }
+            }
+            k => bail!("unknown payload kind {k}"),
+        })
+    }
+
+    /// Reconstruct the dense gradient vector (the server-side dequantize).
+    pub fn dequantize(&self) -> Vec<f32> {
+        match self {
+            Payload::Raw(v) => v.clone(),
+            Payload::Uniform { alpha, s, idx } => {
+                let step = 2.0f32 * alpha / *s as f32;
+                idx.iter().map(|&k| -alpha + k as f32 * step).collect()
+            }
+            Payload::Codebook { levels, idx } => {
+                idx.iter().map(|&k| levels[k as usize]).collect()
+            }
+            Payload::Sparse { d, pairs } => {
+                let mut v = vec![0.0f32; *d as usize];
+                for &(i, x) in pairs {
+                    v[i as usize] = x;
+                }
+                v
+            }
+        }
+    }
+}
+
+/// Build a uniform frame directly from pre-packed indices (the fused hot
+/// path — byte-identical to `Payload::Uniform{..}.encode(bits)`).
+pub fn encode_uniform_packed(alpha: f32, s: u16, d: u32, bits: u32, packed: &[u8]) -> Vec<u8> {
+    debug_assert_eq!(packed.len(), super::bitpack::packed_len(d as usize, bits));
+    let mut out = Vec::with_capacity(14 + packed.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(1u8);
+    out.push(bits as u8);
+    out.extend_from_slice(&d.to_le_bytes());
+    out.extend_from_slice(&alpha.to_le_bytes());
+    out.extend_from_slice(&s.to_le_bytes());
+    out.extend_from_slice(packed);
+    out
+}
+
+/// Build a codebook frame directly from pre-packed indices.
+pub fn encode_codebook_packed(levels: &[f32], d: u32, bits: u32, packed: &[u8]) -> Vec<u8> {
+    debug_assert_eq!(packed.len(), super::bitpack::packed_len(d as usize, bits));
+    let mut out = Vec::with_capacity(10 + 4 * levels.len() + packed.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(2u8);
+    out.push(bits as u8);
+    out.extend_from_slice(&d.to_le_bytes());
+    out.extend_from_slice(&(levels.len() as u16).to_le_bytes());
+    for l in levels {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+    out.extend_from_slice(packed);
+    out
+}
+
+/// Fused decode → dense gradient (skips the intermediate index vector for
+/// uniform/codebook frames; the server-side hot path).
+pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.u16()? != MAGIC {
+        bail!("bad frame magic");
+    }
+    let kind = r.u8()?;
+    let bits = r.u8()? as u32;
+    let d = r.u32()? as usize;
+    match kind {
+        1 => {
+            let alpha = r.f32()?;
+            let s = r.u16()?;
+            let step = 2.0f32 * alpha / s as f32;
+            let packed = r.rest();
+            if packed.len() < super::bitpack::packed_len(d, bits) {
+                bail!("truncated uniform payload");
+            }
+            let mut out = Vec::with_capacity(d);
+            let mask = (1u32 << bits) - 1;
+            let mut bitpos = 0usize;
+            for _ in 0..d {
+                let byte = bitpos >> 3;
+                let off = (bitpos & 7) as u32;
+                let mut wide = packed[byte] as u32;
+                if let Some(&b1) = packed.get(byte + 1) {
+                    wide |= (b1 as u32) << 8;
+                }
+                let idx = (wide >> off) & mask;
+                out.push(-alpha + idx as f32 * step);
+                bitpos += bits as usize;
+            }
+            Ok(out)
+        }
+        2 => {
+            let n = r.u16()? as usize;
+            let mut levels = Vec::with_capacity(n);
+            for _ in 0..n {
+                levels.push(r.f32()?);
+            }
+            let packed = r.rest();
+            if packed.len() < super::bitpack::packed_len(d, bits) {
+                bail!("truncated codebook payload");
+            }
+            let mut out = Vec::with_capacity(d);
+            let mask = (1u32 << bits) - 1;
+            let mut bitpos = 0usize;
+            for _ in 0..d {
+                let byte = bitpos >> 3;
+                let off = (bitpos & 7) as u32;
+                let mut wide = packed[byte] as u32;
+                if let Some(&b1) = packed.get(byte + 1) {
+                    wide |= (b1 as u32) << 8;
+                }
+                let idx = ((wide >> off) & mask) as usize;
+                out.push(*levels.get(idx).ok_or_else(|| anyhow!("index {idx} out of codebook"))?);
+                bitpos += bits as usize;
+            }
+            Ok(out)
+        }
+        // Raw/sparse: no fusion to be had; fall through to the general path.
+        _ => Ok(Payload::decode(bytes)?.dequantize()),
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated frame at offset {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.b[self.i..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_roundtrip() {
+        let p = Payload::Raw(vec![1.0, -2.5, 0.0]);
+        let q = Payload::decode(&p.encode(0)).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(q.dequantize(), vec![1.0, -2.5, 0.0]);
+    }
+
+    #[test]
+    fn uniform_roundtrip_and_size() {
+        let idx: Vec<u32> = (0..1000).map(|i| i % 8).collect();
+        let p = Payload::Uniform { alpha: 0.05, s: 7, idx };
+        let bytes = p.encode(3);
+        // header 8 + alpha 4 + s 2 + ceil(1000*3/8)
+        assert_eq!(bytes.len(), 8 + 4 + 2 + 375);
+        let q = Payload::decode(&bytes).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn uniform_dequantize_endpoints() {
+        let p = Payload::Uniform { alpha: 1.0, s: 4, idx: vec![0, 2, 4] };
+        assert_eq!(p.dequantize(), vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn codebook_roundtrip() {
+        let p = Payload::Codebook {
+            levels: vec![-0.5, -0.1, 0.0, 0.1, 0.5],
+            idx: vec![4, 0, 2, 2, 3],
+        };
+        let q = Payload::decode(&p.encode(3)).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(q.dequantize()[0], 0.5);
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let p = Payload::Sparse { d: 10, pairs: vec![(3, 1.5), (7, -0.25)] };
+        let q = Payload::decode(&p.encode(0)).unwrap();
+        assert_eq!(p, q);
+        let dense = q.dequantize();
+        assert_eq!(dense.len(), 10);
+        assert_eq!(dense[3], 1.5);
+        assert_eq!(dense[0], 0.0);
+    }
+
+    #[test]
+    fn fused_decode_equals_general_path() {
+        // decode_dequantize (hot path) must produce exactly what
+        // Payload::decode().dequantize() (reference path) produces, for
+        // every payload kind and bit width.
+        crate::prop::check(100, |rng| {
+            let d = 1 + rng.below(3000) as usize;
+            let bits = 2 + rng.below(4) as u32;
+            let s = (1u32 << bits) - 1;
+            let kind = rng.below(4);
+            let bytes = match kind {
+                0 => Payload::Raw((0..d).map(|_| rng.f32() - 0.5).collect()).encode(0),
+                1 => {
+                    let idx: Vec<u32> = (0..d).map(|_| rng.below(s as u64 + 1) as u32).collect();
+                    Payload::Uniform { alpha: 0.1, s: s as u16, idx }.encode(bits)
+                }
+                2 => {
+                    let cb = crate::prop::gen_codebook(rng, 5);
+                    let n = cb.len() as u64;
+                    let idx: Vec<u32> = (0..d).map(|_| rng.below(n) as u32).collect();
+                    let b = 32 - (cb.len() as u32 - 1).leading_zeros();
+                    Payload::Codebook { levels: cb, idx }.encode(b)
+                }
+                _ => {
+                    let k = 1 + rng.below(d as u64) as usize;
+                    let mut pairs: Vec<(u32, f32)> =
+                        (0..k).map(|i| (i as u32, rng.f32())).collect();
+                    pairs.dedup_by_key(|p| p.0);
+                    Payload::Sparse { d: d as u32, pairs }.encode(0)
+                }
+            };
+            let fused = decode_dequantize(&bytes).map_err(|e| e.to_string())?;
+            let general = Payload::decode(&bytes).map_err(|e| e.to_string())?.dequantize();
+            crate::prop::assert_prop(fused == general, format!("kind {kind} mismatch"))
+        });
+    }
+
+    #[test]
+    fn fused_decode_rejects_truncated_payloads() {
+        let idx: Vec<u32> = (0..100).map(|i| i % 8).collect();
+        let bytes = Payload::Uniform { alpha: 0.1, s: 7, idx }.encode(3);
+        assert!(decode_dequantize(&bytes[..bytes.len() - 5]).is_err());
+        let cb = Payload::Codebook { levels: vec![-1.0, 0.0, 1.0], idx: vec![0, 2, 1] }.encode(2);
+        assert!(decode_dequantize(&cb[..cb.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn packed_encoders_match_payload_encode() {
+        // encode_uniform_packed / encode_codebook_packed must be
+        // byte-identical to the Payload enum encoders.
+        let idx: Vec<u32> = (0..500).map(|i| i % 8).collect();
+        let packed = super::super::bitpack::pack(&idx, 3);
+        let a = encode_uniform_packed(0.07, 7, 500, 3, &packed);
+        let b = Payload::Uniform { alpha: 0.07, s: 7, idx: idx.clone() }.encode(3);
+        assert_eq!(a, b);
+        let levels = vec![-0.1f32, -0.02, 0.0, 0.02, 0.05, 0.07, 0.08, 0.1];
+        let c = encode_codebook_packed(&levels, 500, 3, &packed);
+        let d = Payload::Codebook { levels, idx }.encode(3);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(Payload::decode(&[]).is_err());
+        assert!(Payload::decode(&[0x54, 0x51, 9, 0, 0, 0, 0, 0]).is_err());
+        let p = Payload::Raw(vec![1.0; 4]).encode(0);
+        assert!(Payload::decode(&p[..p.len() - 2]).is_err());
+        let mut bad = p.clone();
+        bad[0] ^= 0xFF;
+        assert!(Payload::decode(&bad).is_err());
+    }
+}

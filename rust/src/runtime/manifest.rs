@@ -1,0 +1,227 @@
+//! `artifacts/manifest.json` schema — the L2↔L3 contract written by
+//! `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Value;
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A contiguous parameter range belonging to one quantization group
+/// ("conv" / "fc" / "emb"). The paper quantizes conv and fc gradients
+/// independently (Sec. V).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupRange {
+    pub group: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// One exported model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub kind: String,
+    pub param_count: usize,
+    pub groups: Vec<GroupRange>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    /// Classifier: flat input dim. LM: 0.
+    pub input_dim: usize,
+    /// LM: context length. Classifier: 0.
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub init_file: String,
+    pub grad_entry: String,
+    pub eval_entry: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+    /// Flat tile size for the standalone quantizer artifacts.
+    pub quant_tile: usize,
+}
+
+fn tensor_list(v: &Value) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensors"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.req("name")?.as_str().unwrap_or_default().to_string(),
+                dtype: t.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+                shape: t
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("shape must be array"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(v: &Value) -> Result<Manifest> {
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts must be object"))? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                    inputs: tensor_list(a.req("inputs")?)?,
+                    outputs: tensor_list(a.req("outputs")?)?,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj().ok_or_else(|| anyhow!("models must be object"))? {
+            let geti = |k: &str| m.get(k).and_then(Value::as_usize).unwrap_or(0);
+            let gets = |k: &str| m.get(k).and_then(Value::as_str).unwrap_or("").to_string();
+            let groups = m
+                .req("groups")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("groups must be array"))?
+                .iter()
+                .map(|g| {
+                    Ok(GroupRange {
+                        group: g.req("group")?.as_str().unwrap_or_default().to_string(),
+                        start: g.req("start")?.as_usize().unwrap_or(0),
+                        end: g.req("end")?.as_usize().unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    kind: gets("kind"),
+                    param_count: geti("param_count"),
+                    groups,
+                    train_batch: geti("train_batch"),
+                    eval_batch: geti("eval_batch"),
+                    input_dim: geti("input_dim"),
+                    seq_len: geti("seq_len"),
+                    vocab: geti("vocab"),
+                    init_file: gets("init_file"),
+                    grad_entry: gets("grad_entry"),
+                    eval_entry: gets("eval_entry"),
+                },
+            );
+        }
+        let quant_tile = v
+            .get("quant")
+            .and_then(|q| q.get("tile"))
+            .and_then(Value::as_usize)
+            .unwrap_or(65536);
+        Ok(Manifest { artifacts, models, quant_tile })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse(&Value::parse(&text)?)
+    }
+}
+
+impl ModelSpec {
+    /// Sanity-check group ranges tile [0, param_count).
+    pub fn validate(&self) -> Result<()> {
+        let mut pos = 0;
+        for g in &self.groups {
+            if g.start != pos || g.end <= g.start {
+                return Err(anyhow!("group ranges must tile the params: {:?}", self.groups));
+            }
+            pos = g.end;
+        }
+        if pos != self.param_count {
+            return Err(anyhow!("groups end at {pos}, params {}", self.param_count));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "m_grad": {
+          "file": "m_grad.hlo.txt",
+          "inputs": [{"name":"params","dtype":"f32","shape":[10]},
+                     {"name":"x","dtype":"f32","shape":[2,4]}],
+          "outputs": [{"name":"loss","dtype":"f32","shape":[]},
+                      {"name":"grads","dtype":"f32","shape":[10]}]
+        }
+      },
+      "models": {
+        "m": {
+          "kind": "classifier", "param_count": 10,
+          "groups": [{"group":"conv","start":0,"end":4},
+                     {"group":"fc","start":4,"end":10}],
+          "train_batch": 2, "eval_batch": 4, "input_dim": 4,
+          "init_file": "m_init.bin", "grad_entry": "m_grad",
+          "eval_entry": "m_eval"
+        }
+      },
+      "quant": {"tile": 1024}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&Value::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.quant_tile, 1024);
+        let a = &m.artifacts["m_grad"];
+        assert_eq!(a.inputs[1].shape, vec![2, 4]);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        let spec = &m.models["m"];
+        assert_eq!(spec.param_count, 10);
+        spec.validate().unwrap();
+        assert_eq!(spec.groups[1].group, "fc");
+    }
+
+    #[test]
+    fn validate_rejects_gaps() {
+        let mut m = Manifest::parse(&Value::parse(SAMPLE).unwrap()).unwrap();
+        let spec = m.models.get_mut("m").unwrap();
+        spec.groups[1].start = 5;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn missing_keys_error() {
+        assert!(Manifest::parse(&Value::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"));
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.artifacts.contains_key("cnn_grad"));
+            let cnn = &m.models["cnn"];
+            cnn.validate().unwrap();
+            assert_eq!(cnn.groups.len(), 2, "cnn should have conv+fc groups");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! L1↔L3 parity path: run the Pallas quantizer kernels through PJRT.
+//!
+//! The rust codecs in `quant::kernels` are the production encode path; this
+//! wrapper executes the SAME computation through the AOT-compiled Pallas
+//! artifact (`quant_uniform_b*`, `quant_nonuniform_b3`, `quant_biscaled_b3`,
+//! `tail_stats`) so integration tests and the perf bench can prove the two
+//! implementations agree bit-for-bit on indices given identical uniforms.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::{Executable, Runtime};
+
+/// Pallas quantizer executor over the fixed manifest tile.
+pub struct QuantExec {
+    exe: Rc<Executable>,
+    pub tile: usize,
+}
+
+impl QuantExec {
+    /// `entry` is e.g. `"quant_uniform_b3"`.
+    pub fn new(rt: &Runtime, entry: &str) -> Result<QuantExec> {
+        let exe = rt.load(entry)?;
+        let tile = exe
+            .spec
+            .inputs
+            .first()
+            .and_then(|t| t.shape.first().copied())
+            .ok_or_else(|| anyhow!("{entry}: no tile dimension"))?;
+        Ok(QuantExec { exe, tile })
+    }
+
+    /// Uniform kernel: returns (dequantized, indices) for one tile.
+    pub fn run_uniform(&self, g: &[f32], u: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<u32>)> {
+        self.check(g, u)?;
+        let out = self.exe.run(&[g, u, &[alpha]])?;
+        Ok((out[0].clone(), out[1].iter().map(|&x| x as u32).collect()))
+    }
+
+    /// Codebook kernel (`quant_nonuniform_b3`): codebook length must match
+    /// the artifact (s+1).
+    pub fn run_codebook(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        codebook: &[f32],
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        self.check(g, u)?;
+        let out = self.exe.run(&[g, u, codebook])?;
+        Ok((out[0].clone(), out[1].iter().map(|&x| x as u32).collect()))
+    }
+
+    /// BiScaled kernel (`quant_biscaled_b3`).
+    pub fn run_biscaled(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        self.check(g, u)?;
+        let out = self.exe.run(&[g, u, &[alpha, beta]])?;
+        Ok((out[0].clone(), out[1].iter().map(|&x| x as u32).collect()))
+    }
+
+    /// `tail_stats` kernel: [n_tail, sum_log, sum_abs, sum_sq, abs_max].
+    pub fn run_stats(&self, g: &[f32], g_min: f32) -> Result<Vec<f32>> {
+        if g.len() != self.tile {
+            return Err(anyhow!("tile mismatch: {} vs {}", g.len(), self.tile));
+        }
+        Ok(self.exe.run(&[g, &[g_min]])?.remove(0))
+    }
+
+    fn check(&self, g: &[f32], u: &[f32]) -> Result<()> {
+        if g.len() != self.tile || u.len() != self.tile {
+            return Err(anyhow!(
+                "tile mismatch: g={} u={} tile={}",
+                g.len(),
+                u.len(),
+                self.tile
+            ));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,374 @@
+//! Optimal quantizer parameter design (paper Sec. IV + Appendix D).
+//!
+//! Given the fitted tail model and the bit budget `b` (⇒ `s = 2^b − 1`
+//! intervals), these solvers produce the truncation threshold α and the
+//! codebook realizing the chosen density λ_s:
+//!
+//! * [`optimal_alpha_uniform`] — Eq. (12) fixed point (TQSGD),
+//! * [`optimal_alpha_nonuniform`] — Eq. (19) fixed point (TNQSGD),
+//! * [`nonuniform_codebook`] — CDF-inversion of λ_s(g) ∝ p(g)^{1/3} (Eq. 18),
+//! * [`solve_biscaled`] — k*, s_α/s_β split and α of Eqs. (29)–(33) (TBQSGD).
+
+use crate::tail::PowerLawModel;
+use crate::util::math::{fixed_point, golden_min};
+
+/// s = 2^b − 1 quantization intervals for a b-bit budget.
+pub fn levels_for_bits(bits: u32) -> usize {
+    (1usize << bits) - 1
+}
+
+/// Eq. (12): α = g_min [ 2ρ s² / ((γ−2) Q_U(α)) ]^{1/(γ−1)}, solved by the
+/// paper's "alternating iterations" (damped fixed point; Q_U ≈ 1 makes this
+/// contract very fast).
+pub fn optimal_alpha_uniform(m: &PowerLawModel, s: usize) -> f64 {
+    let s2 = (s * s) as f64;
+    let step = |alpha: f64| {
+        let qu = m.q_u(alpha.max(m.g_min)).max(1e-9);
+        m.g_min * (2.0 * m.rho * s2 / ((m.gamma - 2.0) * qu)).powf(1.0 / (m.gamma - 1.0))
+    };
+    let x0 = step(m.g_min * 4.0);
+    fixed_point(step, x0, 1.0, 1e-10, 200).max(m.g_min)
+}
+
+/// Closed-form approximation α' with Q_U ≈ 1 (discussion below Thm. 1).
+pub fn approx_alpha_uniform(m: &PowerLawModel, s: usize) -> f64 {
+    let s2 = (s * s) as f64;
+    m.g_min * (2.0 * m.rho * s2 / (m.gamma - 2.0)).powf(1.0 / (m.gamma - 1.0))
+}
+
+/// Eq. (19): same fixed point with Q_N(α) in the denominator (TNQSGD).
+pub fn optimal_alpha_nonuniform(m: &PowerLawModel, s: usize) -> f64 {
+    let s2 = (s * s) as f64;
+    let step = |alpha: f64| {
+        let qn = m.q_n(alpha.max(m.g_min)).max(1e-9);
+        m.g_min * (2.0 * m.rho * s2 / ((m.gamma - 2.0) * qn)).powf(1.0 / (m.gamma - 1.0))
+    };
+    let x0 = optimal_alpha_uniform(m, s); // Q_N ≤ Q_U ⇒ final α is larger
+    fixed_point(step, x0, 0.8, 1e-10, 300).max(m.g_min)
+}
+
+/// Build the non-uniform codebook realizing λ_s(g) = s p(g)^{1/3} / ∫ p^{1/3}
+/// (Eq. 18) on [−α, α]: level l_k solves ∫_{−α}^{l_k} λ_s = k, i.e. the
+/// codebook is the inverse of the (normalized) cumulative of p^{1/3}.
+///
+/// The cumulative has closed form for the body+tail model; we invert each of
+/// the three segments analytically and stitch them.
+pub fn nonuniform_codebook(m: &PowerLawModel, alpha: f64, s: usize) -> Vec<f32> {
+    assert!(alpha >= m.g_min, "alpha {alpha} below g_min {}", m.g_min);
+    assert!(s >= 1);
+    // Cumulative of p^{1/3} from 0 to x (one side), x in [0, alpha].
+    let p_body_cbrt = ((1.0 - 2.0 * m.rho) / (2.0 * m.g_min)).cbrt();
+    let c3 = m.tail_coeff().cbrt();
+    let e = 1.0 - m.gamma / 3.0;
+    let cum_body = |x: f64| p_body_cbrt * x; // x <= g_min
+    let cum_tail = |x: f64| {
+        // g_min < x: body full + tail part
+        cum_body(m.g_min)
+            + if e.abs() < 1e-12 {
+                c3 * (x / m.g_min).ln()
+            } else {
+                c3 * (x.powf(e) - m.g_min.powf(e)) / e
+            }
+    };
+    let half_total = cum_tail(alpha);
+    let body_cum = cum_body(m.g_min);
+    // Invert the one-sided cumulative.
+    let inv = |t: f64| -> f64 {
+        if t <= body_cum {
+            t / p_body_cbrt
+        } else if e.abs() < 1e-12 {
+            m.g_min * ((t - body_cum) / c3).exp()
+        } else {
+            ((t - body_cum) * e / c3 + m.g_min.powf(e)).powf(1.0 / e)
+        }
+    };
+    let mut cb = Vec::with_capacity(s + 1);
+    for k in 0..=s {
+        // Symmetric target in [-half_total, half_total].
+        let t = -half_total + 2.0 * half_total * k as f64 / s as f64;
+        let x = if t >= 0.0 { inv(t) } else { -inv(-t) };
+        cb.push(x as f32);
+    }
+    // Pin exact end points and enforce strict monotonicity against FP noise.
+    cb[0] = -alpha as f32;
+    cb[s] = alpha as f32;
+    for i in 1..cb.len() {
+        if cb[i] <= cb[i - 1] {
+            cb[i] = f32::from_bits(cb[i - 1].to_bits() + 1);
+        }
+    }
+    cb
+}
+
+/// Uniform codebook on [−α, α] with s intervals.
+pub fn uniform_codebook(alpha: f64, s: usize) -> Vec<f32> {
+    (0..=s)
+        .map(|k| (-alpha + 2.0 * alpha * k as f64 / s as f64) as f32)
+        .collect()
+}
+
+/// The solved BiScaled design (Appendix D).
+#[derive(Clone, Debug)]
+pub struct BiScaledDesign {
+    pub alpha: f64,
+    pub beta: f64,
+    pub k: f64,
+    /// Inner intervals on [−β, β].
+    pub s_beta: usize,
+    /// Outer intervals, split evenly across [−α,−β] and [β,α] (even).
+    pub s_alpha: usize,
+    /// Q_B(α, k*) at the solution.
+    pub q_b: f64,
+}
+
+impl BiScaledDesign {
+    /// Materialize the piecewise-uniform codebook.
+    pub fn codebook(&self) -> Vec<f32> {
+        let half = self.s_alpha / 2;
+        let mut cb = Vec::with_capacity(self.s_beta + self.s_alpha + 1);
+        for i in 0..half {
+            cb.push(
+                (-self.alpha + (self.alpha - self.beta) * i as f64 / half as f64) as f32,
+            );
+        }
+        for i in 0..=self.s_beta {
+            cb.push((-self.beta + 2.0 * self.beta * i as f64 / self.s_beta as f64) as f32);
+        }
+        for i in 1..=half {
+            cb.push((self.beta + (self.alpha - self.beta) * i as f64 / half as f64) as f32);
+        }
+        for i in 1..cb.len() {
+            assert!(cb[i] > cb[i - 1], "biscaled codebook not increasing: {cb:?}");
+        }
+        cb
+    }
+}
+
+/// Solve the TBQSGD design: one step of alternating minimization as the
+/// paper prescribes — k* = argmin_k Q_B(α, k) by golden search, then α from
+/// the Eq. (33) fixed point, iterated to mutual consistency; finally the
+/// level split of Eqs. (29)/(30) rounded to integers (s_α even ≥ 2,
+/// s_β ≥ 1, s_α + s_β = s).
+pub fn solve_biscaled(m: &PowerLawModel, s: usize) -> BiScaledDesign {
+    assert!(s >= 3, "biscaled needs at least 3 intervals, got {s}");
+    let mut alpha = optimal_alpha_uniform(m, s);
+    let mut k = 0.5;
+    for _ in 0..20 {
+        let a = alpha;
+        k = golden_min(|kk| m.q_b(a, kk), 1e-3, 1.0 - 1e-3, 1e-6);
+        let qb = m.q_b(alpha, k).max(1e-9);
+        let next = m.g_min
+            * (2.0 * m.rho * (s * s) as f64 / ((m.gamma - 2.0) * qb))
+                .powf(1.0 / (m.gamma - 1.0));
+        if (next - alpha).abs() < 1e-10 * alpha {
+            alpha = next;
+            break;
+        }
+        alpha = next.max(m.g_min);
+    }
+    let beta = k * alpha;
+    // Eqs. (29)/(30): split s by cube-root average densities.
+    let p1 = ((m.cdf(beta) - m.cdf(0.0)) / beta).max(1e-300); // avg density inner
+    let p2 = ((m.cdf(alpha) - m.cdf(beta)) / (alpha - beta)).max(1e-300); // outer
+    let denom = p2.cbrt() * (1.0 - k) + p1.cbrt() * k;
+    let s_alpha_f = p2.cbrt() * (1.0 - k) / denom * s as f64;
+    // Round s_alpha to the nearest even >= 2, keep s_beta >= 1.
+    let mut s_alpha = ((s_alpha_f / 2.0).round() as usize * 2).max(2);
+    if s_alpha > s - 1 {
+        s_alpha = if s % 2 == 0 { s - 2 } else { s - 1 };
+        s_alpha = s_alpha.max(2);
+    }
+    let s_beta = s - s_alpha;
+    BiScaledDesign { alpha, beta, k, s_beta, s_alpha, q_b: m.q_b(alpha, k) }
+}
+
+/// Per-element truncated-quantization error E_TQ (Eq. 11 without d/N):
+/// uniform density. `quant = Q_U(α) α² / s²`, `bias` from the model.
+pub fn e_tq_uniform(m: &PowerLawModel, alpha: f64, s: usize) -> f64 {
+    m.q_u(alpha) * alpha * alpha / (s * s) as f64 + m.truncation_bias(alpha)
+}
+
+/// Per-element E_TQ for the optimal non-uniform density (Eq. 15 with Eq. 18
+/// substituted): quantization variance becomes Q_N(α) α² / s².
+pub fn e_tq_nonuniform(m: &PowerLawModel, alpha: f64, s: usize) -> f64 {
+    m.q_n(alpha) * alpha * alpha / (s * s) as f64 + m.truncation_bias(alpha)
+}
+
+/// Per-element E_TQ for a BiScaled design (Eq. 31).
+pub fn e_tq_biscaled(m: &PowerLawModel, d: &BiScaledDesign, s: usize) -> f64 {
+    m.q_b(d.alpha, d.k) * d.alpha * d.alpha / (s * s) as f64 + m.truncation_bias(d.alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> PowerLawModel {
+        PowerLawModel::new(4.0, 0.01, 0.1)
+    }
+
+    #[test]
+    fn levels() {
+        assert_eq!(levels_for_bits(2), 3);
+        assert_eq!(levels_for_bits(3), 7);
+        assert_eq!(levels_for_bits(5), 31);
+    }
+
+    #[test]
+    fn alpha_uniform_satisfies_fixed_point() {
+        let m = m();
+        for &s in &[3usize, 7, 15, 31] {
+            let a = optimal_alpha_uniform(&m, s);
+            let rhs = m.g_min
+                * (2.0 * m.rho * (s * s) as f64 / ((m.gamma - 2.0) * m.q_u(a)))
+                    .powf(1.0 / (m.gamma - 1.0));
+            assert!((a - rhs).abs() < 1e-6 * a, "s={s}: {a} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn alpha_grows_with_budget() {
+        let m = m();
+        let a3 = optimal_alpha_uniform(&m, 7);
+        let a5 = optimal_alpha_uniform(&m, 31);
+        assert!(a5 > a3);
+    }
+
+    #[test]
+    fn alpha_shrinks_with_thinner_tail() {
+        // Larger gamma ⇒ thinner tail ⇒ smaller alpha (paper's intuition).
+        let a_heavy = optimal_alpha_uniform(&PowerLawModel::new(3.5, 0.01, 0.1), 7);
+        let a_thin = optimal_alpha_uniform(&PowerLawModel::new(5.0, 0.01, 0.1), 7);
+        assert!(a_thin < a_heavy, "{a_thin} vs {a_heavy}");
+    }
+
+    #[test]
+    fn approx_alpha_close_to_exact() {
+        let m = m();
+        let exact = optimal_alpha_uniform(&m, 7);
+        let approx = approx_alpha_uniform(&m, 7);
+        assert!((exact - approx).abs() / exact < 0.05, "{exact} vs {approx}");
+    }
+
+    #[test]
+    fn nonuniform_alpha_ge_uniform_alpha() {
+        // Q_N ≤ Q_U ⇒ TNQSGD's α is larger (end of Sec. IV-B).
+        let m = m();
+        for &s in &[7usize, 15] {
+            let au = optimal_alpha_uniform(&m, s);
+            let an = optimal_alpha_nonuniform(&m, s);
+            assert!(an >= au, "s={s}: {an} < {au}");
+        }
+    }
+
+    #[test]
+    fn alpha_near_optimal_for_e_tq() {
+        // Eq. (12) comes from a first-order condition that treats Q_U(α) as
+        // locally constant, so the fixed point is a *near*-minimizer of
+        // E_TQ: within 2% of the scanned optimum, and far better than
+        // naive choices like α = g_min or α = 10 α*.
+        let m = m();
+        let s = 7;
+        let a_star = optimal_alpha_uniform(&m, s);
+        let e_star = e_tq_uniform(&m, a_star, s);
+        let mut best = f64::INFINITY;
+        for i in 1..=400 {
+            let a = m.g_min * (1.0 + i as f64 * 0.05);
+            best = best.min(e_tq_uniform(&m, a, s));
+        }
+        assert!(e_star <= best * 1.02, "e* {e_star} vs scanned best {best}");
+        assert!(e_star < 0.5 * e_tq_uniform(&m, 10.0 * a_star, s));
+        assert!(e_star <= e_tq_uniform(&m, m.g_min, s));
+    }
+
+    #[test]
+    fn codebook_monotone_with_exact_endpoints() {
+        let m = m();
+        let alpha = optimal_alpha_nonuniform(&m, 7);
+        let cb = nonuniform_codebook(&m, alpha, 7);
+        assert_eq!(cb.len(), 8);
+        assert_eq!(cb[0], -alpha as f32);
+        assert_eq!(cb[7], alpha as f32);
+        for i in 1..cb.len() {
+            assert!(cb[i] > cb[i - 1]);
+        }
+    }
+
+    #[test]
+    fn codebook_denser_near_zero() {
+        // λ ∝ p^{1/3} puts more levels where p is larger: central interval
+        // must be narrower than the outermost interval.
+        let m = m();
+        let alpha = optimal_alpha_nonuniform(&m, 7);
+        let cb = nonuniform_codebook(&m, alpha, 7);
+        let central = cb[4] - cb[3];
+        let outer = cb[7] - cb[6];
+        assert!(central < outer, "central {central} outer {outer}");
+    }
+
+    #[test]
+    fn codebook_realizes_density() {
+        // Each interval should carry equal ∫ λ mass ⇒ ∫ p^{1/3} over every
+        // interval is equal.
+        let m = m();
+        let alpha = 0.05;
+        let s = 15;
+        let cb = nonuniform_codebook(&m, alpha, s);
+        let masses: Vec<f64> = (0..s)
+            .map(|k| {
+                crate::util::math::integrate(
+                    &|g| m.pdf(g).cbrt(),
+                    cb[k] as f64,
+                    cb[k + 1] as f64,
+                    1e-12,
+                )
+            })
+            .collect();
+        let avg: f64 = masses.iter().sum::<f64>() / s as f64;
+        for (k, ms) in masses.iter().enumerate() {
+            assert!((ms - avg).abs() < 0.05 * avg, "interval {k}: {ms} vs {avg}");
+        }
+    }
+
+    #[test]
+    fn uniform_codebook_even() {
+        let cb = uniform_codebook(0.06, 3);
+        assert_eq!(cb.len(), 4);
+        assert!((cb[1] - cb[0] - (cb[2] - cb[1])).abs() < 1e-7);
+    }
+
+    #[test]
+    fn biscaled_design_consistent() {
+        let m = m();
+        let d = solve_biscaled(&m, 7);
+        assert!(d.beta > 0.0 && d.beta < d.alpha);
+        assert_eq!(d.s_alpha + d.s_beta, 7);
+        assert!(d.s_alpha % 2 == 0 && d.s_alpha >= 2);
+        let cb = d.codebook();
+        assert_eq!(cb.len(), 8);
+        assert!((cb[0] + d.alpha as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn biscaled_q_b_le_one_and_improves_on_uniform() {
+        let m = m();
+        let d = solve_biscaled(&m, 7);
+        assert!(d.q_b <= 1.0 + 1e-9);
+        // Q_B(α, k*) ≤ Q_U(α): two regions can only help.
+        assert!(d.q_b <= m.q_u(d.alpha) + 1e-9);
+    }
+
+    #[test]
+    fn e_tq_ordering_matches_theory() {
+        // E_TQ(TNQSGD) ≤ E_TQ(TQSGD) at each method's own optimum.
+        let m = m();
+        for &s in &[7usize, 15, 31] {
+            let eu = e_tq_uniform(&m, optimal_alpha_uniform(&m, s), s);
+            let en = e_tq_nonuniform(&m, optimal_alpha_nonuniform(&m, s), s);
+            let d = solve_biscaled(&m, s);
+            let eb = e_tq_biscaled(&m, &d, s);
+            assert!(en <= eu + 1e-15, "s={s}: nonuniform {en} vs uniform {eu}");
+            assert!(eb <= eu + 1e-15, "s={s}: biscaled {eb} vs uniform {eu}");
+        }
+    }
+}

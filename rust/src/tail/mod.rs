@@ -1,0 +1,114 @@
+//! Gradient-distribution estimation: the power-law tail model of the paper
+//! (Definition 1 / Eq. 10) plus the Gaussian/Laplace comparison fits of
+//! Fig. 1 and the KS machinery to decide which fits best.
+
+pub mod fit;
+pub mod model;
+
+pub use fit::{fit_gaussian, fit_laplace, fit_power_law, ks_distance, FitReport};
+pub use model::PowerLawModel;
+
+/// Log-spaced histogram of |g| — the Fig. 1 density plot substrate.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    /// Bin edges, length `bins + 1`, log-spaced on [lo, hi].
+    pub edges: Vec<f64>,
+    /// Counts per bin.
+    pub counts: Vec<u64>,
+    /// Samples below `lo` (not binned).
+    pub underflow: u64,
+    /// Samples above `hi` (not binned).
+    pub overflow: u64,
+    pub total: u64,
+}
+
+impl LogHistogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && bins > 0);
+        let l0 = lo.ln();
+        let l1 = hi.ln();
+        let edges = (0..=bins)
+            .map(|i| (l0 + (l1 - l0) * i as f64 / bins as f64).exp())
+            .collect();
+        LogHistogram { edges, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let a = x.abs();
+        self.total += 1;
+        let lo = self.edges[0];
+        let hi = *self.edges.last().unwrap();
+        if a < lo {
+            self.underflow += 1;
+            return;
+        }
+        if a >= hi {
+            self.overflow += 1;
+            return;
+        }
+        let bins = self.counts.len() as f64;
+        let t = (a.ln() - lo.ln()) / (hi.ln() - lo.ln());
+        let mut i = (t * bins) as usize;
+        i = i.min(self.counts.len() - 1);
+        // Guard against FP edge effects.
+        while a < self.edges[i] {
+            i -= 1;
+        }
+        while a >= self.edges[i + 1] {
+            i += 1;
+        }
+        self.counts[i] += 1;
+    }
+
+    pub fn extend(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x as f64);
+        }
+    }
+
+    /// Empirical density of |g| at each bin center: count / (total * width).
+    pub fn density(&self) -> Vec<(f64, f64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let w = self.edges[i + 1] - self.edges[i];
+                let center = (self.edges[i] * self.edges[i + 1]).sqrt();
+                (center, c as f64 / (self.total as f64 * w))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_everything_in_range() {
+        let mut h = LogHistogram::new(1e-4, 1.0, 16);
+        for i in 1..1000 {
+            h.add(i as f64 * 1e-3);
+        }
+        assert_eq!(h.total, 999);
+        assert_eq!(h.counts.iter().sum::<u64>() + h.underflow + h.overflow, 999);
+        assert_eq!(h.overflow, 0);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_mass() {
+        let mut h = LogHistogram::new(1e-3, 10.0, 64);
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..200_000 {
+            h.add(rng.pareto(0.01, 4.0));
+        }
+        let mass: f64 = h
+            .density()
+            .iter()
+            .enumerate()
+            .map(|(i, (_, d))| d * (h.edges[i + 1] - h.edges[i]))
+            .sum();
+        let expected = 1.0 - (h.underflow + h.overflow) as f64 / h.total as f64;
+        assert!((mass - expected).abs() < 1e-9, "{mass} vs {expected}");
+    }
+}

@@ -1,0 +1,243 @@
+//! The paper's gradient-distribution model (Definition 1 / Eq. 10):
+//!
+//! ```text
+//! p(g) = rho * (gamma-1) / g_min^{1-gamma} * |g|^{-gamma}   for |g| > g_min
+//! ```
+//!
+//! with one-sided tail mass `rho = ∫_{g_min}^∞ p(g) dg` and `3 < gamma <= 5`.
+//! Below the cutoff the paper leaves `p` unspecified; we close the model with
+//! a uniform body on `[-g_min, g_min]` carrying the remaining mass
+//! `1 - 2 rho` — the minimal symmetric completion, and exactly what the
+//! synthetic sampler `Rng::power_law_gradient` draws.
+//!
+//! All the paper's distribution functionals live here: `Q_U(α)` (Eq. 11),
+//! the `∫ p^{1/3}` integrals behind `Q_N(α)` (Thm. 2) and `Q_B(α,k)`
+//! (Appendix D), and the closed-form truncation bias.
+
+use crate::util::math::integrate;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerLawModel {
+    /// Tail index γ (paper assumes 3 < γ ≤ 5 for finite E_TQ).
+    pub gamma: f64,
+    /// Lower cutoff of power-law behaviour.
+    pub g_min: f64,
+    /// One-sided tail mass ρ = P(g > g_min) = P(g < -g_min).
+    pub rho: f64,
+}
+
+impl PowerLawModel {
+    pub fn new(gamma: f64, g_min: f64, rho: f64) -> Self {
+        assert!(gamma > 1.0, "gamma must exceed 1, got {gamma}");
+        assert!(g_min > 0.0, "g_min must be positive");
+        assert!((0.0..=0.5).contains(&rho), "one-sided rho in [0, 0.5], got {rho}");
+        PowerLawModel { gamma, g_min, rho }
+    }
+
+    /// Tail normalization c with p(g) = c |g|^{-γ} for |g| > g_min.
+    #[inline]
+    pub fn tail_coeff(&self) -> f64 {
+        self.rho * (self.gamma - 1.0) * self.g_min.powf(self.gamma - 1.0)
+    }
+
+    /// Symmetric density p(g) (body closed uniformly — see module docs).
+    pub fn pdf(&self, g: f64) -> f64 {
+        let a = g.abs();
+        if a > self.g_min {
+            self.tail_coeff() * a.powf(-self.gamma)
+        } else {
+            (1.0 - 2.0 * self.rho) / (2.0 * self.g_min)
+        }
+    }
+
+    /// CDF P(G <= g).
+    pub fn cdf(&self, g: f64) -> f64 {
+        if g < 0.0 {
+            return 1.0 - self.cdf(-g);
+        }
+        if g <= self.g_min {
+            0.5 + g * (1.0 - 2.0 * self.rho) / (2.0 * self.g_min)
+        } else {
+            1.0 - self.rho * (g / self.g_min).powf(1.0 - self.gamma)
+        }
+    }
+
+    /// One-sided tail mass above x (x >= g_min): ∫_x^∞ p = ρ (x/g_min)^{1-γ}.
+    pub fn tail_mass(&self, x: f64) -> f64 {
+        assert!(x >= self.g_min);
+        self.rho * (x / self.g_min).powf(1.0 - self.gamma)
+    }
+
+    /// Q_U(α) = ∫_{-α}^{α} p(g) dg = 1 - 2 ρ (α/g_min)^{1-γ}  (α ≥ g_min).
+    pub fn q_u(&self, alpha: f64) -> f64 {
+        1.0 - 2.0 * self.tail_mass(alpha)
+    }
+
+    /// ∫_{-α}^{α} p(g)^{1/3} dg — the numerator behind Eq. (18) and Q_N.
+    /// Closed form: body 2 g_min p_b^{1/3}; tail 2 c^{1/3} ∫ g^{-γ/3}.
+    pub fn int_p_cbrt(&self, alpha: f64) -> f64 {
+        assert!(alpha >= self.g_min);
+        let p_body = (1.0 - 2.0 * self.rho) / (2.0 * self.g_min);
+        let body = 2.0 * self.g_min * p_body.cbrt();
+        let c3 = self.tail_coeff().cbrt();
+        let e = 1.0 - self.gamma / 3.0; // exponent of the antiderivative
+        let tail = if e.abs() < 1e-12 {
+            2.0 * c3 * (alpha / self.g_min).ln()
+        } else {
+            2.0 * c3 * (alpha.powf(e) - self.g_min.powf(e)) / e
+        };
+        body + tail
+    }
+
+    /// Q_N(α) = [ ∫_{-α}^{α} p^{1/3} (1/2α)^{2/3} dg ]^3  (Thm. 2).
+    pub fn q_n(&self, alpha: f64) -> f64 {
+        let i = self.int_p_cbrt(alpha) * (1.0 / (2.0 * alpha)).powf(2.0 / 3.0);
+        i.powi(3)
+    }
+
+    /// Q_B(α, k) of Appendix D:
+    /// [ (2∫_{kα}^{α} p)^{1/3} (1-k)^{2/3} + (2∫_0^{kα} p)^{1/3} k^{2/3} ]^3.
+    pub fn q_b(&self, alpha: f64, k: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&k));
+        let beta = k * alpha;
+        let inner2 = (self.cdf(beta) - self.cdf(-beta)).max(0.0); // 2∫_0^{kα} p
+        let outer2 = (self.cdf(alpha) - self.cdf(beta)) * 2.0; // 2∫_{kα}^{α} p
+        let t = outer2.max(0.0).cbrt() * (1.0 - k).powf(2.0 / 3.0)
+            + inner2.cbrt() * k.powf(2.0 / 3.0);
+        t.powi(3)
+    }
+
+    /// Per-element truncation bias 2 ∫_α^∞ (g-α)² p(g) dg
+    /// = 4 ρ g_min^{γ-1} α^{3-γ} / ((γ-2)(γ-3))   (Eq. 11, needs γ > 3).
+    pub fn truncation_bias(&self, alpha: f64) -> f64 {
+        assert!(self.gamma > 3.0, "bias finite only for gamma > 3");
+        4.0 * self.rho * self.g_min.powf(self.gamma - 1.0) * alpha.powf(3.0 - self.gamma)
+            / ((self.gamma - 2.0) * (self.gamma - 3.0))
+    }
+
+    /// Same bias via numerical quadrature — cross-check for tests/benches.
+    pub fn truncation_bias_numeric(&self, alpha: f64) -> f64 {
+        let c = self.tail_coeff();
+        // Integrate to a far horizon; integrand decays like g^{2-γ}.
+        let hi = alpha * 1e5;
+        2.0 * integrate(&|g| (g - alpha).powi(2) * c * g.powf(-self.gamma), alpha, hi, 1e-14)
+    }
+
+    /// Second moment E[g²] (finite for γ > 3).
+    pub fn second_moment(&self) -> f64 {
+        let body = (1.0 - 2.0 * self.rho) * self.g_min.powi(2) / 3.0;
+        // 2 ∫_{g_min}^∞ g² c g^{-γ} dg = 2 c g_min^{3-γ}/(γ-3)
+        let tail =
+            2.0 * self.tail_coeff() * self.g_min.powf(3.0 - self.gamma) / (self.gamma - 3.0);
+        body + tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> PowerLawModel {
+        PowerLawModel::new(4.0, 0.01, 0.1)
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let m = m();
+        let body = integrate(&|g| m.pdf(g), -m.g_min, m.g_min, 1e-12);
+        let tail = 2.0 * integrate(&|g| m.pdf(g), m.g_min, 100.0, 1e-12);
+        assert!((body + tail - 1.0).abs() < 1e-6, "{}", body + tail);
+    }
+
+    #[test]
+    fn cdf_consistent_with_pdf() {
+        let m = m();
+        for &x in &[0.005, 0.01, 0.02, 0.05, 0.2] {
+            let num = 0.5 + integrate(&|g| m.pdf(g), 0.0, x, 1e-12);
+            assert!((m.cdf(x) - num).abs() < 1e-8, "x={x}");
+        }
+        assert!((m.cdf(-0.02) - (1.0 - m.cdf(0.02))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_u_matches_tail_mass() {
+        let m = m();
+        let alpha = 0.05;
+        let direct = m.cdf(alpha) - m.cdf(-alpha);
+        assert!((m.q_u(alpha) - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_p_cbrt_matches_quadrature() {
+        let m = m();
+        for &alpha in &[0.01, 0.03, 0.1] {
+            let num = integrate(&|g| m.pdf(g).cbrt(), -alpha, alpha, 1e-12);
+            let cf = m.int_p_cbrt(alpha);
+            assert!((num - cf).abs() < 1e-6 * cf, "alpha={alpha}: {num} vs {cf}");
+        }
+    }
+
+    #[test]
+    fn truncation_bias_closed_form_matches_numeric() {
+        let m = m();
+        for &alpha in &[0.02, 0.05, 0.1] {
+            let cf = m.truncation_bias(alpha);
+            let num = m.truncation_bias_numeric(alpha);
+            assert!((cf - num).abs() < 1e-4 * cf, "alpha={alpha}: {cf} vs {num}");
+        }
+    }
+
+    #[test]
+    fn holder_q_n_le_q_u() {
+        // Thm. 2 corollary: Q_N(α) ≤ Q_U(α) by Hölder.
+        let m = m();
+        for &alpha in &[0.02, 0.05, 0.2] {
+            assert!(m.q_n(alpha) <= m.q_u(alpha) + 1e-12, "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn holder_q_b_le_one() {
+        // Thm. 3 corollary: Q_B(α, k) ≤ 1.
+        let m = m();
+        for &k in &[0.1, 0.3, 0.5, 0.9] {
+            assert!(m.q_b(0.05, k) <= 1.0 + 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn q_b_at_k_limits_degenerates_to_q_u_form() {
+        // k→0 or k→1 collapses to single-region: Q_B → 2∫ p over that region.
+        let m = m();
+        let alpha = 0.05;
+        assert!((m.q_b(alpha, 0.0) - m.q_u(alpha)).abs() < 1e-9);
+        assert!((m.q_b(alpha, 1.0) - m.q_u(alpha)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn second_moment_positive_and_scales() {
+        let m = m();
+        assert!(m.second_moment() > 0.0);
+        let m2 = PowerLawModel::new(4.0, 0.02, 0.1);
+        assert!(m2.second_moment() > m.second_moment());
+    }
+
+    #[test]
+    fn sampler_matches_model_cdf() {
+        // Empirical CDF of Rng::power_law_gradient vs model.cdf (KS-style).
+        let m = m();
+        let mut rng = crate::util::Rng::new(11);
+        let n = 100_000;
+        let mut xs: Vec<f64> =
+            (0..n).map(|_| rng.power_law_gradient(m.g_min, m.gamma, 2.0 * m.rho)).collect();
+        // NOTE: power_law_gradient takes the TOTAL tail probability (both
+        // sides), while rho here is one-sided.
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut worst: f64 = 0.0;
+        for (i, &x) in xs.iter().enumerate().step_by(997) {
+            let emp = (i + 1) as f64 / n as f64;
+            worst = worst.max((emp - m.cdf(x)).abs());
+        }
+        assert!(worst < 0.01, "KS distance {worst}");
+    }
+}

@@ -1,0 +1,248 @@
+//! Closed-form convergence-bound calculators (Lemmas 1–2, Theorems 1–3).
+//!
+//! These turn the paper's bounds into numbers so the benches can print
+//! *predicted vs measured* for every error term:
+//!
+//! * Lemma 1 — quantization variance bound `Σ P_k |Δ_k|² / 4` for an
+//!   arbitrary codebook,
+//! * Lemma 2 / Eq. (21) — MSE decomposition into quantization variance +
+//!   truncation bias,
+//! * Theorems 1/2/3 — the `E_TQ` convergence-error terms at the optimized
+//!   parameters, exposing the `s^{(6−2γ)/(γ−1)}` communication scaling.
+
+use crate::solver;
+use crate::tail::PowerLawModel;
+use crate::util::math::integrate;
+
+/// Ingredients of the `E_DSGD` term in Eq. (7).
+#[derive(Clone, Copy, Debug)]
+pub struct DsgdTerm {
+    /// F(θ₀) − F(θ*) optimality gap.
+    pub f_gap: f64,
+    /// Learning rate η.
+    pub eta: f64,
+    /// Rounds T.
+    pub rounds: usize,
+    /// Per-sample gradient variance bound σ².
+    pub sigma2: f64,
+    /// Clients N.
+    pub clients: usize,
+    /// Batch size B.
+    pub batch: usize,
+}
+
+impl DsgdTerm {
+    /// E_DSGD = 2[F(θ₀) − F(θ*)] / (T η) + σ² / (N B).
+    pub fn value(&self) -> f64 {
+        2.0 * self.f_gap / (self.rounds as f64 * self.eta)
+            + self.sigma2 / (self.clients * self.batch) as f64
+    }
+}
+
+/// Lemma 1 upper bound on E‖Q[g] − g‖² for a codebook: Σ_k P_k |Δ_k|² / 4,
+/// with P_k the model mass of interval k (conditioned on the truncated
+/// range, masses outside map to the end intervals).
+pub fn lemma1_variance_bound(m: &PowerLawModel, codebook: &[f32]) -> f64 {
+    let s = codebook.len() - 1;
+    let mut total = 0.0;
+    for k in 0..s {
+        let lo = codebook[k] as f64;
+        let hi = codebook[k + 1] as f64;
+        let mut p = m.cdf(hi) - m.cdf(lo);
+        // Truncation folds the tails onto the end points: the mass beyond
+        // ±α sits exactly ON l_0 / l_s and contributes no quantization
+        // variance, so no correction is needed — but mass conservation for
+        // the *truncated* variable keeps P_k as-is inside the range.
+        if p < 0.0 {
+            p = 0.0;
+        }
+        total += p * (hi - lo) * (hi - lo) / 4.0;
+    }
+    total
+}
+
+/// Lemma 2 / Eq. (21): per-element quantization variance
+/// `∫_{−α}^{α} p(g) / (4 λ_s(g)²) dg` for an arbitrary density λ_s given as
+/// a closure.
+pub fn quantization_variance(
+    m: &PowerLawModel,
+    alpha: f64,
+    lambda: impl Fn(f64) -> f64,
+) -> f64 {
+    integrate(
+        &|g| {
+            let l = lambda(g);
+            m.pdf(g) / (4.0 * l * l)
+        },
+        -alpha,
+        alpha,
+        1e-13,
+    )
+}
+
+/// Per-element truncation bias `2 ∫_α^∞ (g−α)² p(g) dg` (Eq. 21, right).
+pub fn truncation_bias(m: &PowerLawModel, alpha: f64) -> f64 {
+    m.truncation_bias(alpha)
+}
+
+/// The common Theorem 1/2/3 coefficient
+/// `(γ−1) Q^{(γ−3)/(γ−1)} d g_min² (2ρ)^{2/(γ−1)} s^{(6−2γ)/(γ−1)} /
+///  (N (γ−3) (γ−2)^{2/(γ−1)})`, parameterized by which Q functional is
+/// plugged in (Q_U for Thm 1, Q_N for Thm 2, Q_B for Thm 3).
+pub fn theorem_e_tq(m: &PowerLawModel, q: f64, d: usize, n: usize, s: usize) -> f64 {
+    let g = m.gamma;
+    let inv = 1.0 / (g - 1.0);
+    (g - 1.0)
+        * q.powf((g - 3.0) * inv)
+        * d as f64
+        * m.g_min.powi(2)
+        * (2.0 * m.rho).powf(2.0 * inv)
+        * (s as f64).powf((6.0 - 2.0 * g) * inv)
+        / (n as f64 * (g - 3.0) * (g - 2.0).powf(2.0 * inv))
+}
+
+/// Theorem 1 (TQSGD): E_TQ with Q = Q_U(α*) at the Eq. (12) threshold.
+pub fn theorem1_bound(m: &PowerLawModel, d: usize, n: usize, s: usize) -> f64 {
+    let alpha = solver::optimal_alpha_uniform(m, s);
+    theorem_e_tq(m, m.q_u(alpha), d, n, s)
+}
+
+/// Theorem 2 (TNQSGD): E_TQ with Q = Q_N(α*) at the Eq. (19) threshold.
+pub fn theorem2_bound(m: &PowerLawModel, d: usize, n: usize, s: usize) -> f64 {
+    let alpha = solver::optimal_alpha_nonuniform(m, s);
+    theorem_e_tq(m, m.q_n(alpha), d, n, s)
+}
+
+/// Theorem 3 (TBQSGD): E_TQ with Q = Q_B(α*, k*).
+pub fn theorem3_bound(m: &PowerLawModel, d: usize, n: usize, s: usize) -> f64 {
+    let design = solver::solve_biscaled(m, s);
+    theorem_e_tq(m, design.q_b, d, n, s)
+}
+
+/// The `ε` gap between Eq. (13) and the Q_U≈1 approximation Eq. (14):
+/// ε = (γ−3) Q_U(α') + 2 − (γ−1) Q_U(α)^{(γ−3)/(γ−1)} ≤ 2[1 − Q_U(α')].
+pub fn theorem1_approx_gap(m: &PowerLawModel, s: usize) -> (f64, f64) {
+    let g = m.gamma;
+    let alpha = solver::optimal_alpha_uniform(m, s);
+    let alpha_p = solver::approx_alpha_uniform(m, s);
+    let eps = (g - 3.0) * m.q_u(alpha_p) + 2.0
+        - (g - 1.0) * m.q_u(alpha).powf((g - 3.0) / (g - 1.0));
+    let bound = 2.0 * (1.0 - m.q_u(alpha_p));
+    (eps, bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{
+        nonuniform_codebook, optimal_alpha_nonuniform, optimal_alpha_uniform,
+        uniform_codebook,
+    };
+
+    fn m() -> PowerLawModel {
+        PowerLawModel::new(4.0, 0.01, 0.1)
+    }
+
+    #[test]
+    fn dsgd_term_decays_with_rounds_and_clients() {
+        let base = DsgdTerm { f_gap: 1.0, eta: 0.01, rounds: 100, sigma2: 1.0, clients: 8, batch: 32 };
+        let more_rounds = DsgdTerm { rounds: 1000, ..base };
+        let more_clients = DsgdTerm { clients: 64, ..base };
+        assert!(more_rounds.value() < base.value());
+        assert!(more_clients.value() < base.value());
+    }
+
+    #[test]
+    fn lemma1_bound_uniform_codebook_form() {
+        // For a uniform codebook the bound collapses to Q_U(α) (2α/s)²/4.
+        let m = m();
+        let (alpha, s) = (0.05, 7usize);
+        let cb = uniform_codebook(alpha, s);
+        let b = lemma1_variance_bound(&m, &cb);
+        let closed = m.q_u(alpha) * (2.0 * alpha / s as f64).powi(2) / 4.0;
+        assert!((b - closed).abs() < 1e-9, "{b} vs {closed}");
+    }
+
+    #[test]
+    fn quantization_variance_uniform_density_matches_closed_form() {
+        // λ = s/2α ⇒ ∫ p/(4λ²) = Q_U(α) α²/s².
+        let m = m();
+        let (alpha, s) = (0.05, 7.0);
+        let v = quantization_variance(&m, alpha, |_| s / (2.0 * alpha));
+        let closed = m.q_u(alpha) * alpha * alpha / (s * s);
+        assert!((v - closed).abs() < 1e-8, "{v} vs {closed}");
+    }
+
+    #[test]
+    fn nonuniform_density_beats_uniform_variance() {
+        // At the same α and s, the p^{1/3} density yields lower variance.
+        let m = m();
+        let (alpha, s) = (0.05, 15usize);
+        let vu = quantization_variance(&m, alpha, |_| s as f64 / (2.0 * alpha));
+        let norm = m.int_p_cbrt(alpha);
+        let vn = quantization_variance(&m, alpha, |g| {
+            s as f64 * m.pdf(g).cbrt() / norm
+        });
+        assert!(vn < vu, "nonuniform {vn} vs uniform {vu}");
+    }
+
+    #[test]
+    fn lemma1_on_solver_codebook_close_to_integral() {
+        // Discrete Σ P_k Δ_k²/4 over the built codebook should approximate
+        // the continuous ∫ p/(4λ²).
+        let m = m();
+        let s = 31;
+        let alpha = optimal_alpha_nonuniform(&m, s);
+        let cb = nonuniform_codebook(&m, alpha, s);
+        let discrete = lemma1_variance_bound(&m, &cb);
+        let norm = m.int_p_cbrt(alpha);
+        let continuous =
+            quantization_variance(&m, alpha, |g| s as f64 * m.pdf(g).cbrt() / norm);
+        let rel = (discrete - continuous).abs() / continuous;
+        assert!(rel < 0.15, "discrete {discrete} vs continuous {continuous}");
+    }
+
+    #[test]
+    fn theorem_bounds_ordering() {
+        // Thm2 ≤ Thm1 and Thm3 ≤ Thm1 (Hölder corollaries).
+        let m = m();
+        for &s in &[7usize, 15, 31] {
+            let t1 = theorem1_bound(&m, 1000, 8, s);
+            let t2 = theorem2_bound(&m, 1000, 8, s);
+            let t3 = theorem3_bound(&m, 1000, 8, s);
+            assert!(t2 <= t1 + 1e-15, "s={s}");
+            assert!(t3 <= t1 + 1e-15, "s={s}");
+        }
+    }
+
+    #[test]
+    fn theorem1_equals_e_tq_at_optimum() {
+        // The Thm 1 coefficient equals d/N * E_TQ(α*) by construction.
+        let m = m();
+        let (d, n, s) = (100usize, 8usize, 7usize);
+        let alpha = optimal_alpha_uniform(&m, s);
+        let direct = d as f64 / n as f64 * solver::e_tq_uniform(&m, alpha, s);
+        let thm = theorem1_bound(&m, d, n, s);
+        assert!((direct - thm).abs() < 1e-4 * thm.max(1e-300), "{direct} vs {thm}");
+    }
+
+    #[test]
+    fn communication_scaling_exponent() {
+        // E_TQ(s) should scale like s^{(6−2γ)/(γ−1)}: check the log-log
+        // slope between s=7 and s=31.
+        let m = m();
+        let t_a = theorem1_bound(&m, 1, 1, 7);
+        let t_b = theorem1_bound(&m, 1, 1, 31);
+        let slope = (t_b / t_a).ln() / (31.0f64 / 7.0).ln();
+        let expected = (6.0 - 2.0 * m.gamma) / (m.gamma - 1.0);
+        assert!((slope - expected).abs() < 0.05, "slope {slope} vs {expected}");
+    }
+
+    #[test]
+    fn approx_gap_small_and_bounded() {
+        let m = m();
+        let (eps, bound) = theorem1_approx_gap(&m, 7);
+        assert!(eps.abs() <= bound + 0.05, "eps {eps} bound {bound}");
+        assert!(bound < 0.2, "Q_U(α') should be near 1; bound {bound}");
+    }
+}

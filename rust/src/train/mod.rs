@@ -1,0 +1,100 @@
+//! High-level training API: config in, report out.
+//!
+//! [`Trainer`] owns the PJRT runtime + coordinator for one experiment;
+//! [`run_experiment`] is the one-call entry the CLI, examples and figure
+//! benches use. Sweeps (Fig. 4) reuse a single `Runtime` across configs via
+//! [`Sweep`], so each artifact compiles once.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Coordinator;
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+
+/// Result of one experiment.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub log: RunLog,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_train_loss: f64,
+    pub final_test_loss: f64,
+    pub total_bytes_up: u64,
+    /// Mean bits shipped per parameter per round per client.
+    pub bits_per_param: f64,
+}
+
+impl TrainReport {
+    fn from_log(log: RunLog, param_count: usize, clients: usize) -> TrainReport {
+        let rounds = log.records.len().max(1);
+        let bits = log.total_bytes_up() as f64 * 8.0
+            / (rounds * param_count * clients) as f64;
+        TrainReport {
+            final_accuracy: log.final_accuracy().unwrap_or(0.0),
+            best_accuracy: log.best_accuracy().unwrap_or(0.0),
+            final_train_loss: log.final_train_loss().unwrap_or(f64::NAN),
+            final_test_loss: log
+                .records
+                .iter()
+                .rev()
+                .find_map(|r| r.test_loss)
+                .unwrap_or(f64::NAN),
+            total_bytes_up: log.total_bytes_up(),
+            bits_per_param: bits,
+            log,
+        }
+    }
+}
+
+/// One-experiment trainer.
+pub struct Trainer {
+    rt: Runtime,
+    cfg: ExperimentConfig,
+}
+
+impl Trainer {
+    pub fn new(cfg: ExperimentConfig) -> Result<Trainer> {
+        let rt = Runtime::open(&cfg.artifacts_dir)?;
+        Ok(Trainer { rt, cfg })
+    }
+
+    pub fn run(&mut self) -> Result<TrainReport> {
+        self.run_verbose(false)
+    }
+
+    pub fn run_verbose(&mut self, verbose: bool) -> Result<TrainReport> {
+        let mut coord = Coordinator::new(self.cfg.clone(), &self.rt)?;
+        let params = coord.params.len();
+        let clients = self.cfg.clients;
+        let log = coord.run(verbose)?;
+        Ok(TrainReport::from_log(log, params, clients))
+    }
+}
+
+/// Run one experiment end to end (convenience).
+pub fn run_experiment(cfg: ExperimentConfig, verbose: bool) -> Result<TrainReport> {
+    Trainer::new(cfg.clone())?.run_verbose(verbose)
+}
+
+/// Multi-config sweep sharing one runtime (one compile per artifact).
+pub struct Sweep {
+    rt: Runtime,
+}
+
+impl Sweep {
+    pub fn new(artifacts_dir: &str) -> Result<Sweep> {
+        Ok(Sweep { rt: Runtime::open(artifacts_dir)? })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn run(&self, cfg: ExperimentConfig, verbose: bool) -> Result<TrainReport> {
+        let mut coord = Coordinator::new(cfg.clone(), &self.rt)?;
+        let params = coord.params.len();
+        let log = coord.run(verbose)?;
+        Ok(TrainReport::from_log(log, params, cfg.clients))
+    }
+}

@@ -1,0 +1,165 @@
+//! Numerical math substrate: quadrature, special functions, root finding.
+//!
+//! Everything the solver/theory layers need — adaptive Simpson quadrature for
+//! the `∫ p(g)/λ(g)²` style integrals of Lemma 2, `erf` for the Gaussian CDF
+//! (Fig. 1 fits / KS tests), and a guarded fixed-point iterator for the
+//! alternating-iteration thresholds of Eqs. (12)/(19)/(33).
+
+/// Adaptive Simpson quadrature of `f` on [a, b] to absolute tolerance `eps`.
+pub fn integrate<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, eps: f64) -> f64 {
+    if a == b {
+        return 0.0;
+    }
+    let c = 0.5 * (a + b);
+    let (fa, fb, fc) = (f(a), f(b), f(c));
+    let whole = simpson(a, b, fa, fc, fb);
+    adaptive(f, a, b, fa, fb, fc, whole, eps, 50)
+}
+
+#[inline]
+fn simpson(a: f64, b: f64, fa: f64, fc: f64, fb: f64) -> f64 {
+    (b - a) / 6.0 * (fa + 4.0 * fc + fb)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adaptive<F: Fn(f64) -> f64>(
+    f: &F, a: f64, b: f64, fa: f64, fb: f64, fc: f64, whole: f64, eps: f64, depth: u32,
+) -> f64 {
+    let c = 0.5 * (a + b);
+    let d = 0.5 * (a + c);
+    let e = 0.5 * (c + b);
+    let (fd, fe) = (f(d), f(e));
+    let left = simpson(a, c, fa, fd, fc);
+    let right = simpson(c, b, fc, fe, fb);
+    if depth == 0 || (left + right - whole).abs() <= 15.0 * eps {
+        return left + right + (left + right - whole) / 15.0;
+    }
+    adaptive(f, a, c, fa, fc, fd, left, eps / 2.0, depth - 1)
+        + adaptive(f, c, b, fc, fb, fe, right, eps / 2.0, depth - 1)
+}
+
+/// Error function (Abramowitz & Stegun 7.1.26, |err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn normal_cdf(x: f64, mu: f64, sigma: f64) -> f64 {
+    0.5 * (1.0 + erf((x - mu) / (sigma * std::f64::consts::SQRT_2)))
+}
+
+/// Laplace CDF with location `mu`, scale `b`.
+pub fn laplace_cdf(x: f64, mu: f64, b: f64) -> f64 {
+    if x < mu {
+        0.5 * ((x - mu) / b).exp()
+    } else {
+        1.0 - 0.5 * (-(x - mu) / b).exp()
+    }
+}
+
+/// Damped fixed-point iteration `x <- (1-w) x + w f(x)` with relative
+/// convergence tolerance; returns the final iterate (guarded against NaN by
+/// keeping the last finite value).
+pub fn fixed_point<F: Fn(f64) -> f64>(f: F, x0: f64, damping: f64, tol: f64, max_iter: usize) -> f64 {
+    let mut x = x0;
+    for _ in 0..max_iter {
+        let fx = f(x);
+        if !fx.is_finite() {
+            return x;
+        }
+        let next = (1.0 - damping) * x + damping * fx;
+        if (next - x).abs() <= tol * x.abs().max(1e-300) {
+            return next;
+        }
+        x = next;
+    }
+    x
+}
+
+/// Golden-section minimization of a unimodal `f` on [a, b].
+pub fn golden_min<F: Fn(f64) -> f64>(f: F, mut a: f64, mut b: f64, tol: f64) -> f64 {
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    let mut c = b - phi * (b - a);
+    let mut d = a + phi * (b - a);
+    let (mut fc, mut fd) = (f(c), f(d));
+    while (b - a).abs() > tol {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - phi * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + phi * (b - a);
+            fd = f(d);
+        }
+    }
+    0.5 * (a + b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrate_polynomial() {
+        // ∫_0^1 3x² = 1
+        let v = integrate(&|x| 3.0 * x * x, 0.0, 1.0, 1e-10);
+        assert!((v - 1.0).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn integrate_power_law_tail() {
+        // ∫_1^∞ x^-4 dx = 1/3; truncate at large B.
+        let v = integrate(&|x| x.powi(-4), 1.0, 1e4, 1e-12);
+        assert!((v - 1.0 / 3.0).abs() < 1e-6, "{v}");
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdfs_monotone_and_bounded() {
+        let mut last_n = 0.0;
+        let mut last_l = 0.0;
+        for i in 0..100 {
+            let x = -5.0 + i as f64 * 0.1;
+            let n = normal_cdf(x, 0.0, 1.0);
+            let l = laplace_cdf(x, 0.0, 1.0);
+            assert!((0.0..=1.0).contains(&n) && (0.0..=1.0).contains(&l));
+            assert!(n >= last_n && l >= last_l);
+            last_n = n;
+            last_l = l;
+        }
+    }
+
+    #[test]
+    fn fixed_point_sqrt2() {
+        // x = f(x) = (x + 2/x)/2 converges to sqrt(2).
+        let r = fixed_point(|x| 0.5 * (x + 2.0 / x), 1.0, 1.0, 1e-12, 100);
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn golden_min_parabola() {
+        let x = golden_min(|x| (x - 0.3).powi(2), -1.0, 1.0, 1e-8);
+        assert!((x - 0.3).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,316 @@
+//! Integration tests over the full stack: PJRT runtime + AOT artifacts +
+//! coordinator + codecs. Require `make artifacts` to have run (the Makefile
+//! `test` target guarantees it).
+
+use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::coordinator::Coordinator;
+use tqsgd::quant::kernels::{quantize_codebook_slice, quantize_uniform_slice};
+use tqsgd::runtime::{QuantExec, Runtime};
+use tqsgd::util::Rng;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn small_cfg(model: &str, scheme: Scheme) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = model.into();
+    cfg.artifacts_dir = artifacts_dir();
+    cfg.quant.scheme = scheme;
+    cfg.quant.bits = 3;
+    cfg.clients = 4;
+    cfg.rounds = 6;
+    cfg.eval_every = 3;
+    cfg.train_size = 512;
+    cfg.test_size = 256;
+    cfg
+}
+
+#[test]
+fn runtime_loads_and_runs_mlp_grad() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let spec = rt.model("mlp").unwrap().clone();
+    let exe = rt.load(&spec.grad_entry).unwrap();
+    let params = rt.init_params("mlp").unwrap();
+    assert_eq!(params.len(), spec.param_count);
+    let b = spec.train_batch;
+    let x = vec![0.5f32; b * spec.input_dim];
+    let y: Vec<f32> = (0..b).map(|i| (i % 10) as f32).collect();
+    let out = exe.run(&[&params, &x, &y]).unwrap();
+    assert_eq!(out.len(), 2);
+    let loss = out[0][0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert_eq!(out[1].len(), spec.param_count);
+    let gnorm: f64 = out[1].iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(gnorm > 0.0 && gnorm.is_finite());
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let spec = rt.model("mlp").unwrap().clone();
+    let exe = rt.load(&spec.grad_entry).unwrap();
+    let params = rt.init_params("mlp").unwrap();
+    // Wrong input count.
+    assert!(exe.run(&[&params]).is_err());
+    // Wrong element count.
+    let bad = vec![0.0f32; 7];
+    assert!(exe.run(&[&params, &bad, &bad]).is_err());
+}
+
+#[test]
+fn dsgd_training_reduces_loss() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let mut cfg = small_cfg("mlp", Scheme::Dsgd);
+    cfg.rounds = 25;
+    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    let first = coord.step().unwrap().train_loss;
+    let mut last = first;
+    for _ in 0..24 {
+        last = coord.step().unwrap().train_loss;
+    }
+    assert!(last < first, "loss should fall: {first} -> {last}");
+}
+
+#[test]
+fn quantized_training_runs_and_accounts_bytes() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    for scheme in [Scheme::Tqsgd, Scheme::Tnqsgd, Scheme::Tbqsgd, Scheme::Qsgd] {
+        let cfg = small_cfg("cnn", scheme);
+        let mut coord = Coordinator::new(cfg.clone(), &rt).unwrap();
+        let spec = coord.model_spec().clone();
+        let rec = coord.step().unwrap();
+        // b=3 bits/element + frame overhead; 4 clients, whole model.
+        let payload_bits = (spec.param_count * 3) as f64;
+        let bytes_min = payload_bits / 8.0 * cfg.clients as f64;
+        let bytes_max = bytes_min * 1.1 + 1024.0 * cfg.clients as f64;
+        assert!(
+            (rec.bytes_up as f64) >= bytes_min && (rec.bytes_up as f64) <= bytes_max,
+            "{scheme:?}: bytes_up {} outside [{bytes_min}, {bytes_max}]",
+            rec.bytes_up
+        );
+        assert!(rec.train_loss.is_finite());
+    }
+}
+
+#[test]
+fn training_is_deterministic_given_seed() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let run = |seed: u64| {
+        let mut cfg = small_cfg("mlp", Scheme::Tnqsgd);
+        cfg.seed = seed;
+        cfg.rounds = 4;
+        let mut coord = Coordinator::new(cfg, &rt).unwrap();
+        for _ in 0..4 {
+            coord.step().unwrap();
+        }
+        coord.params.clone()
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a, b, "same seed must reproduce bit-identically");
+    let c = run(8);
+    assert_ne!(a, c, "different seed should differ");
+}
+
+#[test]
+fn fault_injection_drops_client_and_still_trains() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let mut cfg = small_cfg("mlp", Scheme::Tqsgd);
+    cfg.drop_client = 0;
+    let mut coord = Coordinator::new(cfg.clone(), &rt).unwrap();
+    let rec = coord.step().unwrap();
+    // Only 3 of 4 clients' bytes arrive.
+    let full = {
+        let mut cfg2 = cfg.clone();
+        cfg2.drop_client = usize::MAX;
+        let mut c2 = Coordinator::new(cfg2, &rt).unwrap();
+        c2.step().unwrap().bytes_up
+    };
+    assert!(rec.bytes_up < full, "dropped client must reduce bytes");
+    assert!((rec.bytes_up as f64) > 0.6 * full as f64);
+}
+
+#[test]
+fn error_feedback_path_runs() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let mut cfg = small_cfg("mlp", Scheme::Tqsgd);
+    cfg.quant.error_feedback = true;
+    cfg.rounds = 3;
+    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    for _ in 0..3 {
+        let rec = coord.step().unwrap();
+        assert!(rec.train_loss.is_finite());
+    }
+}
+
+#[test]
+fn evaluation_reports_sane_accuracy() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let cfg = small_cfg("cnn", Scheme::Dsgd);
+    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    let (loss, acc) = coord.evaluate().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let acc = acc.unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    // Untrained model ≈ chance.
+    assert!(acc < 0.5, "untrained accuracy {acc} should be near 0.1");
+}
+
+#[test]
+fn lm_coordinator_trains_transformer() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let mut cfg = small_cfg("tfm_small", Scheme::Tnqsgd);
+    cfg.quant.bits = 4;
+    cfg.clients = 2;
+    cfg.rounds = 3;
+    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    let first = coord.step().unwrap().train_loss;
+    assert!(first.is_finite() && first > 3.0, "init NLL ~ ln(64): {first}");
+    let (nll, acc) = coord.evaluate().unwrap();
+    assert!(nll.is_finite() && nll > 0.0);
+    assert!(acc.is_none(), "LM eval reports NLL only");
+}
+
+// ---------------------------------------------------------------------------
+// L1 ↔ L3 parity through PJRT: the pallas kernels and the rust codecs are
+// the same function.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pallas_uniform_parity_bitexact() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let q = QuantExec::new(&rt, "quant_uniform_b3").unwrap();
+    let mut rng = Rng::new(5);
+    let g: Vec<f32> =
+        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+    let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
+    let alpha = 0.04f32;
+    let (deq, idx) = q.run_uniform(&g, &u, alpha).unwrap();
+    let mut rust_idx = Vec::new();
+    quantize_uniform_slice(&g, &u, alpha, 7, &mut rust_idx);
+    assert_eq!(idx, rust_idx, "pallas and rust indices must agree exactly");
+    for (i, (&d, &k)) in deq.iter().zip(&rust_idx).enumerate() {
+        let expect = -alpha + k as f32 * (2.0 * alpha / 7.0);
+        assert!((d - expect).abs() < 1e-6, "i={i}: {d} vs {expect}");
+    }
+}
+
+#[test]
+fn pallas_codebook_parity_bitexact() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let q = QuantExec::new(&rt, "quant_nonuniform_b3").unwrap();
+    let mut rng = Rng::new(6);
+    let g: Vec<f32> =
+        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+    let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
+    let m = tqsgd::tail::PowerLawModel::new(4.0, 0.01, 0.1);
+    let alpha = tqsgd::solver::optimal_alpha_nonuniform(&m, 7);
+    let cb = tqsgd::solver::nonuniform_codebook(&m, alpha, 7);
+    let (_deq, idx) = q.run_codebook(&g, &u, &cb).unwrap();
+    let mut rust_idx = Vec::new();
+    quantize_codebook_slice(&g, &u, &cb, &mut rust_idx);
+    let mismatches = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
+    assert_eq!(mismatches, 0, "{mismatches} codebook index mismatches");
+}
+
+#[test]
+fn pallas_biscaled_parity() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let q = QuantExec::new(&rt, "quant_biscaled_b3").unwrap();
+    let mut rng = Rng::new(7);
+    let g: Vec<f32> =
+        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+    let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
+    // The artifact pins s_beta=5, s_alpha=2 (manifest quant.biscaled_b3).
+    let (alpha, beta) = (0.05f32, 0.02f32);
+    let (deq, idx) = q.run_biscaled(&g, &u, alpha, beta).unwrap();
+    // Compare against the rust codebook path with the equivalent codebook.
+    let mut cb = Vec::new();
+    cb.push(-alpha);
+    for i in 0..=5 {
+        cb.push(-beta + 2.0 * beta * i as f32 / 5.0);
+    }
+    cb.push(alpha);
+    let mut rust_idx = Vec::new();
+    quantize_codebook_slice(&g, &u, &cb, &mut rust_idx);
+    let mismatch = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
+    // Boundary FP differences allowed at a tiny rate; values must agree.
+    assert!(
+        mismatch < q.tile / 1000,
+        "biscaled parity: {mismatch}/{} index mismatches",
+        q.tile
+    );
+    for (&d, &k) in deq.iter().zip(&rust_idx) {
+        if (d - cb[k as usize]).abs() > 1e-6 {
+            // allow the neighbour level at FP boundaries
+            let kk = k as usize;
+            let near = (kk > 0 && (d - cb[kk - 1]).abs() < 1e-6)
+                || (kk + 1 < cb.len() && (d - cb[kk + 1]).abs() < 1e-6);
+            assert!(near, "deq {d} not near level {k}");
+        }
+    }
+}
+
+#[test]
+fn pallas_tail_stats_matches_rust() {
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let q = QuantExec::new(&rt, "tail_stats").unwrap();
+    let mut rng = Rng::new(8);
+    let g: Vec<f32> =
+        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+    let g_min = 0.01f32;
+    let stats = q.run_stats(&g, g_min).unwrap();
+    // Rust-side reference.
+    let mut n = 0f64;
+    let mut slog = 0f64;
+    let mut sabs = 0f64;
+    let mut ssq = 0f64;
+    let mut amax = 0f32;
+    for &x in &g {
+        let a = x.abs();
+        if a > g_min {
+            n += 1.0;
+            slog += (a as f64 / g_min as f64).ln();
+        }
+        sabs += a as f64;
+        ssq += (x as f64) * (x as f64);
+        amax = amax.max(a);
+    }
+    assert_eq!(stats.len(), 5);
+    assert!((stats[0] as f64 - n).abs() < 0.5, "n: {} vs {n}", stats[0]);
+    assert!((stats[1] as f64 - slog).abs() / slog < 1e-3);
+    assert!((stats[2] as f64 - sabs).abs() / sabs < 1e-3);
+    assert!((stats[3] as f64 - ssq).abs() / ssq < 1e-2);
+    assert!((stats[4] - amax).abs() < 1e-6);
+    // MLE from kernel stats recovers gamma ≈ 4.
+    let gamma_hat = 1.0 + stats[0] as f64 / stats[1] as f64;
+    assert!((gamma_hat - 4.0).abs() < 0.3, "gamma_hat {gamma_hat}");
+}
+
+#[test]
+fn cnn_gradients_are_heavy_tailed() {
+    // The paper's empirical premise (Fig. 1), as a regression test: after a
+    // few rounds the fc-group gradient's power-law fit beats Gaussian by a
+    // wide KS margin.
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let mut cfg = small_cfg("cnn", Scheme::Dsgd);
+    cfg.rounds = 8;
+    cfg.clients = 4;
+    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    for _ in 0..8 {
+        coord.step().unwrap();
+    }
+    let spec = coord.model_spec().clone();
+    let grads = coord.last_aggregate();
+    let fc = spec.groups.iter().find(|g| g.group == "fc").unwrap();
+    let xs = &grads[fc.start..fc.end];
+    let pl = tqsgd::tail::fit_power_law(xs).expect("fit");
+    let ga = tqsgd::tail::fit_gaussian(xs);
+    assert!(
+        pl.ks < 0.1 && ga.ks > 2.0 * pl.ks,
+        "power-law KS {} vs gaussian KS {}",
+        pl.ks,
+        ga.ks
+    );
+}
