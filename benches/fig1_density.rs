@@ -12,7 +12,7 @@
 use tqsgd::benchkit::{env_usize, section, Table};
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
-use tqsgd::runtime::Runtime;
+use tqsgd::runtime::make_backend;
 use tqsgd::tail::{fit::report_to_model, fit_gaussian, fit_laplace, fit_power_law, LogHistogram};
 use tqsgd::util::math::{laplace_cdf, normal_cdf};
 
@@ -25,8 +25,8 @@ fn main() -> anyhow::Result<()> {
     cfg.train_size = 2048;
     cfg.test_size = 512;
 
-    let rt = Runtime::open(&cfg.artifacts_dir)?;
-    let mut coord = Coordinator::new(cfg.clone(), &rt)?;
+    let backend = make_backend(&cfg)?;
+    let mut coord = Coordinator::new(cfg.clone(), backend.as_ref())?;
     let spec = coord.model_spec().clone();
     section(&format!("harvesting gradients: {} rounds of uncompressed CNN training", rounds));
     for _ in 0..rounds {

@@ -3,10 +3,11 @@
 //! * L3 codec throughput (encode+pack GB/s per scheme/bits; target ≥1 GB/s
 //!   for 4-bit uniform on one core),
 //! * bit-packing substrate throughput,
-//! * L1↔L3 parity + relative cost of running the Pallas quantizer through
-//!   PJRT (interpret-mode; structure, not TPU wallclock),
-//! * end-to-end round breakdown (PJRT grad exec vs codec vs aggregate) for
-//!   the CNN config, showing the coordinator is not the bottleneck.
+//! * L1↔L3 parity + relative cost of running the quantizer kernel through
+//!   the backend's `QuantKernel` interface (native scalar kernels by
+//!   default; the Pallas/PJRT artifact when built with `--features pjrt`),
+//! * end-to-end round breakdown (grad exec vs codec vs aggregate) for the
+//!   CNN config, showing the coordinator is not the bottleneck.
 //!
 //! Regenerate with `cargo bench --bench perf_hotpath`.
 
@@ -14,7 +15,7 @@ use tqsgd::benchkit::{bench, fmt_ns, section, Table};
 use tqsgd::config::{ExperimentConfig, QuantConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
 use tqsgd::quant::{make_compressor, Payload};
-use tqsgd::runtime::{QuantExec, Runtime};
+use tqsgd::runtime::backend_for;
 use tqsgd::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -79,66 +80,68 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    section("L1 Pallas kernel via PJRT (parity + interpret-mode cost)");
-    match Runtime::open("artifacts") {
-        Ok(rt) => {
-            let q = QuantExec::new(&rt, "quant_uniform_b3")?;
-            let tile = q.tile;
-            let g = &grads[..tile];
-            let u: Vec<f32> = (0..tile).map(|_| rng.f32()).collect();
-            let alpha = 0.05f32;
-            let (_deq, idx) = q.run_uniform(g, &u, alpha)?;
-            // Parity: rust codec must produce identical indices.
-            let mut rust_idx = Vec::new();
-            tqsgd::quant::kernels::quantize_uniform_slice(g, &u, alpha, 7, &mut rust_idx);
-            let mismatches = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
-            println!("parity quant_uniform_b3 vs rust codec: {mismatches}/{tile} index mismatches");
-            let timing = bench(1, 5, || {
-                let r = q.run_uniform(g, &u, alpha).unwrap();
-                std::hint::black_box(&r);
-            });
-            println!(
-                "PJRT pallas tile ({tile} elems): {} ({:.3} GB/s) — interpret-mode CPU, structure-only proxy",
-                timing.pretty(),
-                timing.gbps(tile * 4)
-            );
+    section("L1 quantizer kernel via Backend::quant_kernel (parity + cost)");
+    // Auto-select, but degrade gracefully (e.g. pjrt feature + artifacts
+    // present but only the xla stub linked) instead of aborting the bench.
+    let backend = backend_for("auto", "artifacts").unwrap_or_else(|e| {
+        println!("(auto backend unavailable: {e}; falling back to native)");
+        backend_for("native", "artifacts").expect("native backend is always available")
+    });
+    println!("backend: {}", backend.name());
+    let q = backend.quant_kernel("quant_uniform_b3")?;
+    let tile = q.tile().min(grads.len());
+    let g = &grads[..tile];
+    let u: Vec<f32> = (0..tile).map(|_| rng.f32()).collect();
+    let alpha = 0.05f32;
+    let (_deq, idx) = q.run_uniform(g, &u, alpha)?;
+    // Parity: rust codec must produce identical indices.
+    let mut rust_idx = Vec::new();
+    tqsgd::quant::kernels::quantize_uniform_slice(g, &u, alpha, 7, &mut rust_idx);
+    let mismatches = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
+    println!("parity quant_uniform_b3 vs rust codec: {mismatches}/{tile} index mismatches");
+    let timing = bench(1, 5, || {
+        let r = q.run_uniform(g, &u, alpha).unwrap();
+        std::hint::black_box(&r);
+    });
+    println!(
+        "kernel tile ({tile} elems): {} ({:.3} GB/s)",
+        timing.pretty(),
+        timing.gbps(tile * 4)
+    );
 
-            section("end-to-end round breakdown (CNN, N=8, b=3)");
-            let mut cfg = ExperimentConfig::default();
-            cfg.model = "cnn".into();
-            cfg.rounds = 4;
-            cfg.train_size = 2048;
-            cfg.test_size = 512;
-            cfg.quant.scheme = Scheme::Tnqsgd;
-            let mut coord = Coordinator::new(cfg, &rt)?;
-            coord.step()?; // warm the executable cache
-            let timing = bench(1, 6, || {
-                coord.step().unwrap();
-            });
-            println!("full round: {}", fmt_ns(timing.median_ns));
+    section("end-to-end round breakdown (CNN, N=8, b=3)");
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "cnn".into();
+    cfg.rounds = 4;
+    cfg.train_size = 2048;
+    cfg.test_size = 512;
+    cfg.quant.scheme = Scheme::Tnqsgd;
+    let mut coord = Coordinator::new(cfg, backend.as_ref())?;
+    coord.step()?; // warm caches (executables on PJRT, allocators on native)
+    let timing = bench(1, 6, || {
+        coord.step().unwrap();
+    });
+    println!("full round: {}", fmt_ns(timing.median_ns));
 
-            // Isolate codec share: same gradient size, 8 clients, 2 groups.
-            let spec = coord.model_spec().clone();
-            let per_client: Vec<f32> = grads[..spec.param_count].to_vec();
-            let mut c = make_compressor(&QuantConfig {
-                scheme: Scheme::Tnqsgd,
-                bits: 3,
-                ..Default::default()
-            });
-            c.refit(&per_client);
-            let codec_t = bench(1, 6, || {
-                for cl in 0..8 {
-                    let mut r = Rng::new(cl);
-                    std::hint::black_box(c.compress(&per_client, &mut r));
-                }
-            });
-            println!(
-                "8-client codec work (serial): {} → {:.1}% of round (threads hide most of it)",
-                fmt_ns(codec_t.median_ns),
-                100.0 * codec_t.median_ns / timing.median_ns
-            );
+    // Isolate codec share: same gradient size, 8 clients, 2 groups.
+    let spec = coord.model_spec().clone();
+    let per_client: Vec<f32> = grads[..spec.param_count].to_vec();
+    let mut c = make_compressor(&QuantConfig {
+        scheme: Scheme::Tnqsgd,
+        bits: 3,
+        ..Default::default()
+    });
+    c.refit(&per_client);
+    let codec_t = bench(1, 6, || {
+        for cl in 0..8 {
+            let mut r = Rng::new(cl);
+            std::hint::black_box(c.compress(&per_client, &mut r));
         }
-        Err(e) => println!("(skipping PJRT sections: {e})"),
-    }
+    });
+    println!(
+        "8-client codec work (serial): {} → {:.1}% of round (threads hide most of it)",
+        fmt_ns(codec_t.median_ns),
+        100.0 * codec_t.median_ns / timing.median_ns
+    );
     Ok(())
 }

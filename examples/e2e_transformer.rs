@@ -34,7 +34,8 @@ fn main() -> Result<()> {
         (64f64).ln()
     );
 
-    let sweep = Sweep::new(&cfg.artifacts_dir)?;
+    // apply_args may have set --backend; honor it rather than auto-selecting.
+    let sweep = Sweep::with_backend(tqsgd::runtime::make_backend(&cfg)?);
 
     println!("\n== TNQSGD b={} ==", cfg.quant.bits);
     let tnq = sweep.run(cfg.clone(), true)?;

@@ -15,7 +15,7 @@ use tqsgd::benchkit::Table;
 use tqsgd::cli::Args;
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
-use tqsgd::runtime::Runtime;
+use tqsgd::runtime::make_backend;
 use tqsgd::solver;
 use tqsgd::tail::{fit::report_to_model, fit_gaussian, fit_laplace, fit_power_law, LogHistogram};
 
@@ -28,12 +28,14 @@ fn main() -> Result<()> {
     cfg.train_size = 2048;
     cfg.test_size = 512;
 
-    let rt = Runtime::open(&cfg.artifacts_dir)?;
-    let mut coord = Coordinator::new(cfg.clone(), &rt)?;
+    let backend = make_backend(&cfg)?;
+    let mut coord = Coordinator::new(cfg.clone(), backend.as_ref())?;
     let spec = coord.model_spec().clone();
     println!(
-        "training {} for {} uncompressed rounds to harvest gradients...",
-        cfg.model, cfg.rounds
+        "training {} for {} uncompressed rounds on the {} backend to harvest gradients...",
+        cfg.model,
+        cfg.rounds,
+        backend.name()
     );
     for _ in 0..cfg.rounds {
         coord.step()?;

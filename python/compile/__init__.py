@@ -1,0 +1,5 @@
+"""AOT compile toolchain: JAX/Pallas models and kernels exported as HLO.
+
+Only needed to (re)generate `artifacts/` for the rust runtime's `pjrt`
+feature; the default NativeBackend trains without any of this installed.
+"""

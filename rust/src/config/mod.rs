@@ -151,6 +151,9 @@ pub struct ExperimentConfig {
     pub net: NetConfig,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
+    /// Compute backend: "auto" (pjrt when built + artifacts exist, else
+    /// native), "native" (pure Rust), or "pjrt" (AOT HLO via PJRT).
+    pub backend: String,
     /// Fail-injection: drop this client's update every round (usize::MAX =
     /// none) — exercises the coordinator's straggler/fault path.
     pub drop_client: usize,
@@ -172,6 +175,7 @@ impl Default for ExperimentConfig {
             quant: QuantConfig::default(),
             net: NetConfig::default(),
             artifacts_dir: "artifacts".into(),
+            backend: "auto".into(),
             drop_client: usize::MAX,
         }
     }
@@ -235,6 +239,9 @@ impl ExperimentConfig {
         if self.quant.estimate_every == 0 {
             bail!("estimate_every must be >= 1");
         }
+        if !matches!(self.backend.as_str(), "auto" | "native" | "pjrt") {
+            bail!("backend must be auto | native | pjrt, got {:?}", self.backend);
+        }
         Ok(())
     }
 
@@ -264,6 +271,9 @@ impl ExperimentConfig {
         if let Some(dir) = args.get("artifacts") {
             self.artifacts_dir = dir.to_string();
         }
+        if let Some(b) = args.get("backend") {
+            self.backend = b.to_string();
+        }
         self.drop_client = args.usize_or("drop-client", self.drop_client)?;
         self.validate()
     }
@@ -283,6 +293,7 @@ impl ExperimentConfig {
             ("test_size", json::num(self.test_size as f64)),
             ("seed", json::num(self.seed as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
+            ("backend", json::s(&self.backend)),
             ("drop_client", json::num(if self.drop_client == usize::MAX {
                 -1.0
             } else {
@@ -325,6 +336,9 @@ impl ExperimentConfig {
         cfg.seed = getf("seed", cfg.seed as f64) as u64;
         if let Some(dir) = v.get("artifacts_dir").and_then(Value::as_str) {
             cfg.artifacts_dir = dir.to_string();
+        }
+        if let Some(b) = v.get("backend").and_then(Value::as_str) {
+            cfg.backend = b.to_string();
         }
         let dc = getf("drop_client", -1.0);
         cfg.drop_client = if dc < 0.0 { usize::MAX } else { dc as usize };
@@ -411,11 +425,29 @@ mod tests {
     }
 
     #[test]
+    fn backend_validation_and_override() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.backend, "auto");
+        c.backend = "native".into();
+        c.validate().unwrap();
+        c.backend = "tpu9000".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        let args = crate::cli::Args::parse(
+            ["x", "--backend", "native"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.backend, "native");
+    }
+
+    #[test]
     fn json_roundtrip() {
         let mut c = ExperimentConfig::preset("mlp_tbqsgd_b4").unwrap();
         c.quant.error_feedback = true;
         c.net.latency_sec = 0.01;
         c.drop_client = 3;
+        c.backend = "native".into();
         let j = c.to_json().to_json();
         let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.model, "mlp");
@@ -423,6 +455,7 @@ mod tests {
         assert_eq!(c2.quant.bits, 4);
         assert!(c2.quant.error_feedback);
         assert_eq!(c2.drop_client, 3);
+        assert_eq!(c2.backend, "native");
         assert!((c2.net.latency_sec - 0.01).abs() < 1e-12);
     }
 

@@ -5,17 +5,19 @@
 //! ```text
 //! round t:
 //!   server  --θ_t-->  clients                     (broadcast)
-//!   client i: g_i = grad(θ_t, batch_i)            (PJRT, main thread)
+//!   client i: g_i = grad(θ_t, batch_i)            (backend, main thread)
 //!             ĝ_i = Q_λs[T_α(g_i)] per layer group (rust codecs, N threads)
 //!   clients --frames-->  server                   (simulated network, real bytes)
 //!   server: ḡ = Σ w_i dequantize(frame_i);  θ_{t+1} = θ_t − η·step(ḡ)
 //! ```
 //!
-//! PJRT (`Rc`-based, not `Send`) stays on the driver thread; the
-//! embarrassingly parallel codec work fans out over `std::thread::scope`.
-//! Each (client, layer-group) pair owns an independent quantizer state whose
-//! tail model is re-fitted every `estimate_every` rounds — exactly the
-//! paper's per-layer γ estimation (§V).
+//! Compute (model fwd/bwd) goes through the pluggable [`Backend`] — pure
+//! Rust by default, PJRT behind the `pjrt` feature. Backends may be
+//! single-threaded (PJRT's client is `Rc`-based and not `Send`), so gradient
+//! execution stays on the driver thread; the embarrassingly parallel codec
+//! work fans out over `std::thread::scope`. Each (client, layer-group) pair
+//! owns an independent quantizer state whose tail model is re-fitted every
+//! `estimate_every` rounds — exactly the paper's per-layer γ estimation (§V).
 
 pub mod network;
 
@@ -28,7 +30,7 @@ use crate::data::{gather_batch, BatchSampler, Dataset, MarkovCorpus};
 use crate::metrics::{RoundRecord, RunLog, Timer};
 use crate::optim::MomentumSgd;
 use crate::quant::{make_compressor, Compressor, ErrorFeedback};
-use crate::runtime::{GroupRange, Runtime};
+use crate::runtime::{Backend, GroupRange, ModelSpec};
 use crate::util::Rng;
 
 /// Per-(client, group) compression state: plain codec or EF-wrapped.
@@ -62,12 +64,23 @@ impl GroupCodec {
 
 /// The task a client trains on.
 pub enum TaskData {
-    Vision { shard: Dataset },
-    Lm { corpus: MarkovCorpus, seq_len: usize },
+    /// Image classification over a contiguous shard of the dataset.
+    Vision {
+        /// This client's shard.
+        shard: Dataset,
+    },
+    /// Language modelling over a shared Markov corpus.
+    Lm {
+        /// Token source.
+        corpus: MarkovCorpus,
+        /// Context length per sample.
+        seq_len: usize,
+    },
 }
 
 /// One logical client.
 pub struct Client {
+    /// Client index in `0..N`.
     pub id: usize,
     data: TaskData,
     sampler: BatchSampler,
@@ -118,37 +131,41 @@ impl Client {
         Message { client: self.id, round, frames, loss }
     }
 
+    /// One-line description of each layer group's codec state.
     pub fn describe_codecs(&self) -> Vec<String> {
         self.codecs.iter().map(|c| c.describe()).collect()
     }
 }
 
 /// Server + clients + network for one experiment.
-pub struct Coordinator<'rt> {
+pub struct Coordinator<'b> {
+    /// The experiment description this coordinator runs.
     pub cfg: ExperimentConfig,
-    rt: &'rt Runtime,
+    backend: &'b dyn Backend,
+    spec: ModelSpec,
+    /// The logical clients.
     pub clients: Vec<Client>,
+    /// The global flat parameter vector (server copy).
     pub params: Vec<f32>,
     opt: MomentumSgd,
+    /// Simulated uplink network (accounts real wire bytes).
     pub net: SimNet,
     groups: Vec<GroupRange>,
-    grad_exe: std::rc::Rc<crate::runtime::Executable>,
-    eval_exe: std::rc::Rc<crate::runtime::Executable>,
     test: Option<Dataset>,
     lm_eval_corpus: Option<MarkovCorpus>,
+    /// Number of completed communication rounds.
     pub round: usize,
     /// Scratch: aggregated gradient buffer.
     agg: Vec<f32>,
 }
 
-impl<'rt> Coordinator<'rt> {
-    pub fn new(cfg: ExperimentConfig, rt: &'rt Runtime) -> Result<Self> {
+impl<'b> Coordinator<'b> {
+    /// Build the server, clients and their codecs for one experiment.
+    pub fn new(cfg: ExperimentConfig, backend: &'b dyn Backend) -> Result<Self> {
         cfg.validate()?;
-        let spec = rt.model(&cfg.model)?.clone();
+        let spec = backend.model(&cfg.model)?;
         spec.validate()?;
-        let params = rt.init_params(&cfg.model)?;
-        let grad_exe = rt.load(&spec.grad_entry)?;
-        let eval_exe = rt.load(&spec.eval_entry)?;
+        let params = backend.init_params(&cfg.model)?;
         let opt = MomentumSgd::new(params.len(), cfg.lr, cfg.momentum, cfg.weight_decay);
 
         let mut clients = Vec::with_capacity(cfg.clients);
@@ -191,13 +208,12 @@ impl<'rt> Coordinator<'rt> {
         Ok(Coordinator {
             net: SimNet::new(cfg.net),
             groups: spec.groups.clone(),
+            spec,
             cfg,
-            rt,
+            backend,
             clients,
             params,
             opt,
-            grad_exe,
-            eval_exe,
             test,
             lm_eval_corpus,
             round: 0,
@@ -205,8 +221,14 @@ impl<'rt> Coordinator<'rt> {
         })
     }
 
-    pub fn model_spec(&self) -> &crate::runtime::ModelSpec {
-        self.rt.model(&self.cfg.model).unwrap()
+    /// Metadata of the model this experiment trains.
+    pub fn model_spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// The compute backend this coordinator runs on.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend
     }
 
     /// The last round's aggregated (dequantized, weighted-mean) gradient.
@@ -220,21 +242,17 @@ impl<'rt> Coordinator<'rt> {
     pub fn step(&mut self) -> Result<RoundRecord> {
         let timer = Timer::start();
         let round = self.round;
-        let spec = self.rt.model(&self.cfg.model)?.clone();
-        let train_batch = spec.train_batch;
+        let train_batch = self.spec.train_batch;
 
-        // 1. Local gradients (PJRT on this thread; XLA parallelizes inside).
+        // 1. Local gradients (backend on this thread; PJRT/XLA parallelizes
+        //    inside, the native path is cheap scalar math).
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.clients.len());
         let mut losses: Vec<f32> = Vec::with_capacity(self.clients.len());
         for c in self.clients.iter_mut() {
             let (x, y) = c.next_batch(train_batch, self.cfg.seed, round as u64);
-            let outs = if y.is_empty() {
-                self.grad_exe.run(&[&self.params, &x])?
-            } else {
-                self.grad_exe.run(&[&self.params, &x, &y])?
-            };
-            losses.push(outs[0][0]);
-            grads.push(outs[1].clone());
+            let out = self.backend.grad(&self.cfg.model, &self.params, &x, &y)?;
+            losses.push(out.loss);
+            grads.push(out.grads);
         }
 
         // 2. Per-client compression, fanned out across threads.
@@ -307,10 +325,9 @@ impl<'rt> Coordinator<'rt> {
 
     /// Evaluate the current global model on the held-out set.
     /// Classifier: (mean loss, accuracy). LM: (mean token NLL, None).
-    pub fn evaluate(&mut self) -> Result<(f64, Option<f64>)> {
-        let spec = self.rt.model(&self.cfg.model)?.clone();
+    pub fn evaluate(&self) -> Result<(f64, Option<f64>)> {
         if let Some(test) = &self.test {
-            let b = spec.eval_batch;
+            let b = self.spec.eval_batch;
             let chunks = test.len() / b;
             if chunks == 0 {
                 return Err(anyhow!("test set smaller than eval batch {b}"));
@@ -320,25 +337,25 @@ impl<'rt> Coordinator<'rt> {
             for ch in 0..chunks {
                 let idxs: Vec<usize> = (ch * b..(ch + 1) * b).collect();
                 let (x, y) = gather_batch(test, &idxs);
-                let outs = self.eval_exe.run(&[&self.params, &x, &y])?;
-                loss_sum += outs[0][0] as f64;
-                correct += outs[1][0] as f64;
+                let ev = self.backend.eval(&self.cfg.model, &self.params, &x, &y)?;
+                loss_sum += ev.loss_sum;
+                correct += ev.count;
             }
             let n = (chunks * b) as f64;
             Ok((loss_sum / n, Some(correct / n)))
         } else if let Some(corpus) = &self.lm_eval_corpus {
-            let b = spec.train_batch;
+            let b = self.spec.train_batch;
             let mut rng = Rng::for_stream(self.cfg.seed, 0xE7A1, 0, 0);
             let mut loss_sum = 0.0;
             let mut count = 0.0;
             for _ in 0..4 {
-                let mut toks = Vec::with_capacity(b * (spec.seq_len + 1));
+                let mut toks = Vec::with_capacity(b * (self.spec.seq_len + 1));
                 for _ in 0..b {
-                    toks.extend(corpus.sample(spec.seq_len + 1, &mut rng));
+                    toks.extend(corpus.sample(self.spec.seq_len + 1, &mut rng));
                 }
-                let outs = self.eval_exe.run(&[&self.params, &toks])?;
-                loss_sum += outs[0][0] as f64;
-                count += outs[1][0] as f64;
+                let ev = self.backend.eval(&self.cfg.model, &self.params, &toks, &[])?;
+                loss_sum += ev.loss_sum;
+                count += ev.count;
             }
             Ok((loss_sum / count, None))
         } else {

@@ -12,17 +12,31 @@
 //! a power-law tail estimator (§V), the fixed-point solvers for the optimal
 //! truncation threshold (Eqs. 12/19/33), the closed-form convergence-bound
 //! calculators (Lemma 1/2, Theorems 1–3), and a multi-threaded distributed
-//! SGD coordinator whose compute (model fwd/bwd, Pallas quantizer kernels)
-//! is AOT-compiled JAX executed through PJRT — python never runs at train
-//! time.
+//! SGD coordinator whose compute (model fwd/bwd, quantizer kernels) runs on
+//! a pluggable [`runtime::Backend`].
 //!
 //! ## Layer map
 //!
 //! | Layer | Where | What |
 //! |-------|-------|------|
 //! | L3 | [`coordinator`], [`train`], [`quant`] | distributed runtime + wire codecs |
-//! | L2 | `python/compile/{model,transformer}.py` → [`runtime`] | model fwd/bwd as HLO |
-//! | L1 | `python/compile/kernels/*.py` → [`runtime::QuantExec`] | Pallas quantizer |
+//! | L2 | [`runtime::Backend`] — [`runtime::NativeBackend`] (default) or PJRT (`--features pjrt`, from `python/compile/{model,transformer}.py` HLO) | model fwd/bwd |
+//! | L1 | [`runtime::QuantKernel`] — scalar kernels in [`quant::kernels`] (default) or AOT Pallas via PJRT | quantizer kernels |
+//!
+//! ## Backends and feature flags
+//!
+//! * **default** — [`runtime::NativeBackend`]: pure Rust, zero dependencies
+//!   beyond the vendored `anyhow`; builds, tests and trains from a clean
+//!   checkout with no Python/JAX installed.
+//! * **`pjrt`** — compiles the PJRT/XLA execution path ([`runtime::pjrt`])
+//!   for AOT artifacts produced by `python/compile/aot.py`. Without real
+//!   xla-rs bindings linked, it compiles against an in-tree stub and reports
+//!   a clear error at runtime (see `runtime/xla_stub.rs`).
+//!
+//! Backend selection is per-experiment via `ExperimentConfig::backend`
+//! (`"auto"` | `"native"` | `"pjrt"`) or the CLI's `--backend` flag; `auto`
+//! uses PJRT only when it is compiled in AND `artifacts/manifest.json`
+//! exists.
 //!
 //! ## Quickstart
 //!
@@ -35,6 +49,21 @@
 //! let report = trainer.run().unwrap();
 //! println!("final test accuracy: {:.4}", report.final_accuracy);
 //! ```
+//!
+//! Local commands mirroring CI (see `.github/workflows/ci.yml`):
+//!
+//! ```text
+//! cargo build --release          # default = native backend
+//! cargo test -q
+//! cargo build --release --features pjrt
+//! cargo clippy --all-targets -- -D warnings -A missing_docs
+//! cargo fmt --all --check
+//! cargo bench --no-run           # compile-only smoke gate for benches
+//! cargo run --release --example quickstart
+//! ```
+
+#![deny(unsafe_code)]
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod cli;

@@ -13,7 +13,7 @@ use tqsgd::benchkit::Table;
 use tqsgd::cli::Args;
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
-use tqsgd::runtime::Runtime;
+use tqsgd::runtime::make_backend;
 use tqsgd::solver;
 use tqsgd::tail::{fit_gaussian, fit_laplace, fit_power_law, PowerLawModel};
 use tqsgd::train::{run_experiment, Sweep};
@@ -35,9 +35,10 @@ fn main() -> Result<()> {
                  \x20 sweep     scheme x bits sweep (communication-learning tradeoff)\n\
                  \x20 fit-tail  fit power-law/gaussian/laplace to real model gradients\n\
                  \x20 solve     print optimal quantizer parameters for a tail model\n\
-                 \x20 info      show artifacts and models\n\n\
+                 \x20 info      show the selected backend and its models\n\n\
                  common flags: --model --scheme --bits --clients --rounds --lr --seed\n\
-                 \x20             --error-feedback --drop-client --artifacts --preset"
+                 \x20             --backend (auto|native|pjrt) --error-feedback\n\
+                 \x20             --drop-client --artifacts --preset"
             );
             Ok(())
         }
@@ -87,7 +88,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .split(',')
         .map(|b| b.parse::<u32>().map_err(Into::into))
         .collect::<Result<_>>()?;
-    let sweep = Sweep::new(&cfg.artifacts_dir)?;
+    // Honor --backend (apply_args already validated it) rather than always
+    // auto-selecting like Sweep::new does.
+    let sweep = Sweep::with_backend(make_backend(&cfg)?);
     let mut table =
         Table::new(&["scheme", "bits", "final acc", "best acc", "MB up", "bits/param"]);
     for &scheme in &schemes {
@@ -116,8 +119,8 @@ fn cmd_fit_tail(args: &Args) -> Result<()> {
     let mut cfg = base_config(args)?;
     cfg.quant.scheme = Scheme::Dsgd;
     cfg.rounds = args.usize_or("rounds", 5)?;
-    let rt = Runtime::open(&cfg.artifacts_dir)?;
-    let mut coord = Coordinator::new(cfg.clone(), &rt)?;
+    let backend = make_backend(&cfg)?;
+    let mut coord = Coordinator::new(cfg.clone(), backend.as_ref())?;
     let spec = coord.model_spec().clone();
     for _ in 0..cfg.rounds {
         coord.step()?;
@@ -184,12 +187,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let dir = args.str_or("artifacts", "artifacts");
-    let rt = Runtime::open(&dir)?;
-    println!("platform: {}", rt.platform());
-    println!("quant tile: {}", rt.manifest.quant_tile);
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_args(args)?;
+    let backend = make_backend(&cfg)?;
+    println!("backend: {}", backend.name());
     let mut table = Table::new(&["model", "kind", "params", "groups", "train B", "eval B"]);
-    for (name, m) in &rt.manifest.models {
+    for name in backend.models() {
+        let m = backend.model(&name)?;
         table.row(&[
             name.clone(),
             m.kind.clone(),
@@ -204,9 +208,5 @@ fn cmd_info(args: &Args) -> Result<()> {
         ]);
     }
     table.print();
-    println!(
-        "\nartifacts: {}",
-        rt.manifest.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
-    );
     Ok(())
 }

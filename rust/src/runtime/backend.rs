@@ -1,0 +1,137 @@
+//! The pluggable compute backend: model forward/backward and quantizer-kernel
+//! execution behind one object-safe trait.
+//!
+//! The quantizer/solver math (L3) is backend-agnostic; what differs is where
+//! gradients come from and where the L1 quantizer kernels run:
+//!
+//! * [`NativeBackend`](super::NativeBackend) — pure Rust, zero dependencies,
+//!   the default. Linear/MLP and bigram-LM fwd/bwd plus the scalar kernels in
+//!   [`quant::kernels`](crate::quant::kernels).
+//! * `PjrtBackend` (cargo feature `pjrt`) — AOT-compiled JAX/Pallas HLO
+//!   executed through PJRT, loaded from `artifacts/manifest.json`.
+//!
+//! The [`Coordinator`](crate::coordinator::Coordinator) and
+//! [`Trainer`](crate::train::Trainer) only ever see `&dyn Backend`, so new
+//! backends (GPU, remote executor, ...) slot in without touching the
+//! distributed runtime.
+
+use anyhow::{bail, Result};
+
+use super::manifest::ModelSpec;
+use super::native::NativeBackend;
+use crate::config::ExperimentConfig;
+
+/// Output of one gradient computation: batch-mean loss + flat gradient.
+#[derive(Clone, Debug)]
+pub struct GradResult {
+    /// Mean training loss over the batch.
+    pub loss: f32,
+    /// Gradient of the mean loss w.r.t. the flat parameter vector.
+    pub grads: Vec<f32>,
+}
+
+/// Output of one evaluation batch (sums, so chunks can be accumulated).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    /// Sum of per-sample losses (classifier) or per-token NLLs (LM).
+    pub loss_sum: f64,
+    /// Number of correct predictions (classifier) or tokens scored (LM).
+    pub count: f64,
+}
+
+/// A compute backend: owns the models it can run and executes fwd/bwd and
+/// quantizer kernels for the coordinator.
+///
+/// Buffer conventions match the AOT artifact signatures: inputs and outputs
+/// are flat `f32` slices. Classifier models take `x = [B * input_dim]`
+/// pixels and `y = [B]` labels; LM models take `x = [B * (seq_len + 1)]`
+/// tokens and an empty `y`.
+pub trait Backend {
+    /// Human-readable backend identifier (e.g. `"native"`, `"pjrt (cpu)"`).
+    fn name(&self) -> String;
+
+    /// Names of the models this backend can run.
+    fn models(&self) -> Vec<String>;
+
+    /// Metadata for one model (parameter count, layer groups, batch sizes).
+    fn model(&self, name: &str) -> Result<ModelSpec>;
+
+    /// Deterministic initial flat parameter vector for a model.
+    fn init_params(&self, model: &str) -> Result<Vec<f32>>;
+
+    /// Batch-mean loss and gradient at `params` for one training batch.
+    fn grad(&self, model: &str, params: &[f32], x: &[f32], y: &[f32]) -> Result<GradResult>;
+
+    /// Evaluation sums at `params` for one held-out batch.
+    fn eval(&self, model: &str, params: &[f32], x: &[f32], y: &[f32]) -> Result<EvalResult>;
+
+    /// Quantizer-kernel executor for a manifest entry name such as
+    /// `"quant_uniform_b3"`, `"quant_nonuniform_b3"`, `"quant_biscaled_b3"`
+    /// or `"tail_stats"` — the L1↔L3 parity surface.
+    fn quant_kernel(&self, entry: &str) -> Result<Box<dyn QuantKernel>>;
+}
+
+/// Executor for the standalone quantizer kernels (the L1 surface).
+///
+/// `g` is the gradient tile, `u` the per-element uniforms driving stochastic
+/// rounding; both must have equal length. Implementations built on fixed-tile
+/// artifacts additionally require `g.len() == tile()`.
+pub trait QuantKernel {
+    /// Preferred tile length (fixed for AOT artifacts, advisory for native).
+    fn tile(&self) -> usize;
+
+    /// Truncated uniform quantizer: returns (dequantized values, indices).
+    fn run_uniform(&self, g: &[f32], u: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<u32>)>;
+
+    /// Codebook quantizer: `codebook` is strictly increasing with s+1 levels.
+    fn run_codebook(&self, g: &[f32], u: &[f32], codebook: &[f32])
+        -> Result<(Vec<f32>, Vec<u32>)>;
+
+    /// BiScaled quantizer with outer threshold `alpha`, inner `beta`.
+    fn run_biscaled(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(Vec<f32>, Vec<u32>)>;
+
+    /// Tail statistics: `[n_tail, sum_log, sum_abs, sum_sq, abs_max]`.
+    fn run_stats(&self, g: &[f32], g_min: f32) -> Result<Vec<f32>>;
+}
+
+/// Build the backend an experiment asks for (`cfg.backend`).
+pub fn make_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    backend_for(&cfg.backend, &cfg.artifacts_dir)
+}
+
+/// Build a backend by kind: `"native"`, `"pjrt"`, or `"auto"`.
+///
+/// `"auto"` selects PJRT when the crate was built with the `pjrt` feature AND
+/// `artifacts_dir/manifest.json` exists, falling back to the native backend —
+/// so a clean checkout with no Python/JAX toolchain always runs.
+pub fn backend_for(kind: &str, artifacts_dir: &str) -> Result<Box<dyn Backend>> {
+    match kind {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "pjrt" => pjrt_backend(artifacts_dir),
+        "auto" => {
+            if cfg!(feature = "pjrt")
+                && std::path::Path::new(artifacts_dir).join("manifest.json").exists()
+            {
+                return pjrt_backend(artifacts_dir);
+            }
+            Ok(Box::new(NativeBackend::new()))
+        }
+        other => bail!("unknown backend {other:?}; expected auto | native | pjrt"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifacts_dir: &str) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::pjrt::PjrtBackend::open(artifacts_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifacts_dir: &str) -> Result<Box<dyn Backend>> {
+    bail!("this build has no PJRT support; rebuild with `--features pjrt` or use --backend native")
+}

@@ -1,0 +1,766 @@
+//! Pure-Rust reference backend: model fwd/bwd and quantizer kernels with no
+//! Python, XLA or PJRT anywhere in the loop.
+//!
+//! This is the default compute path. It ships surrogate architectures under
+//! the same model names the AOT manifest exports, so every preset, bench and
+//! example runs from a clean checkout:
+//!
+//! | name        | native architecture                    | groups        |
+//! |-------------|----------------------------------------|---------------|
+//! | `mlp`       | 784 → 128 → 10 ReLU MLP                | `fc1` / `fc2` |
+//! | `mlp_tiny`  | 784 → 16 → 10 ReLU MLP (test-sized)    | `fc1` / `fc2` |
+//! | `cnn`       | 784 → 256 → 64 → 10 ReLU MLP           | `conv` / `fc` |
+//! | `tfm_small` | factored bigram LM (emb 32, vocab 64)  | `emb` / `fc`  |
+//!
+//! (`cnn`'s first layer stands in for the conv feature extractor so the
+//! paper's per-group conv/fc quantization split is preserved; `tfm_small` is
+//! a factored bigram model — the exact Bayes-optimal family for the Markov
+//! corpus the LM task trains on.)
+//!
+//! Forward/backward accumulate in `f64` (params and gradients stay `f32` at
+//! the interface), which makes the finite-difference gradient check in the
+//! integration suite tight and keeps training bit-deterministic.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::data::{IMG_PIXELS, NUM_CLASSES};
+use crate::quant::kernels;
+use crate::util::rng::hash_seed;
+use crate::util::Rng;
+
+use super::backend::{Backend, EvalResult, GradResult, QuantKernel};
+use super::manifest::{GroupRange, ModelSpec};
+
+/// Architecture of a native model.
+#[derive(Clone, Debug)]
+enum Arch {
+    /// Fully-connected ReLU classifier; `dims = [input, hidden.., classes]`.
+    Mlp { dims: Vec<usize> },
+    /// Factored bigram LM: `logits = W · emb[token] + b`.
+    BigramLm { vocab: usize, dim: usize },
+}
+
+#[derive(Clone, Debug)]
+struct NativeModel {
+    spec: ModelSpec,
+    arch: Arch,
+}
+
+/// The pure-Rust compute backend (see module docs).
+pub struct NativeBackend {
+    models: BTreeMap<String, NativeModel>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+impl NativeBackend {
+    /// Build the backend with its built-in model zoo.
+    pub fn new() -> NativeBackend {
+        let mut models = BTreeMap::new();
+        add_mlp(&mut models, "mlp", &[IMG_PIXELS, 128, NUM_CLASSES], 64, 256, ["fc1", "fc2"]);
+        add_mlp(&mut models, "mlp_tiny", &[IMG_PIXELS, 16, NUM_CLASSES], 16, 128, ["fc1", "fc2"]);
+        add_mlp(&mut models, "cnn", &[IMG_PIXELS, 256, 64, NUM_CLASSES], 64, 256, ["conv", "fc"]);
+        add_bigram(&mut models, "tfm_small", 64, 32, 16, 32);
+        NativeBackend { models }
+    }
+
+    fn get(&self, name: &str) -> Result<&NativeModel> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not available on the native backend (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn add_mlp(
+    models: &mut BTreeMap<String, NativeModel>,
+    name: &str,
+    dims: &[usize],
+    train_batch: usize,
+    eval_batch: usize,
+    group_names: [&str; 2],
+) {
+    let layer_size = |w: &[usize]| w[0] * w[1] + w[1];
+    let first: usize = layer_size(&[dims[0], dims[1]]);
+    let rest: usize = dims[1..].windows(2).map(layer_size).sum();
+    let spec = ModelSpec {
+        kind: "classifier".to_string(),
+        param_count: first + rest,
+        groups: vec![
+            GroupRange { group: group_names[0].to_string(), start: 0, end: first },
+            GroupRange { group: group_names[1].to_string(), start: first, end: first + rest },
+        ],
+        train_batch,
+        eval_batch,
+        input_dim: dims[0],
+        seq_len: 0,
+        vocab: *dims.last().unwrap(),
+        init_file: String::new(),
+        grad_entry: String::new(),
+        eval_entry: String::new(),
+    };
+    let model = NativeModel { spec, arch: Arch::Mlp { dims: dims.to_vec() } };
+    models.insert(name.to_string(), model);
+}
+
+fn add_bigram(
+    models: &mut BTreeMap<String, NativeModel>,
+    name: &str,
+    vocab: usize,
+    dim: usize,
+    train_batch: usize,
+    seq_len: usize,
+) {
+    let emb = vocab * dim;
+    let fc = dim * vocab + vocab;
+    let spec = ModelSpec {
+        kind: "lm".to_string(),
+        param_count: emb + fc,
+        groups: vec![
+            GroupRange { group: "emb".to_string(), start: 0, end: emb },
+            GroupRange { group: "fc".to_string(), start: emb, end: emb + fc },
+        ],
+        train_batch,
+        eval_batch: train_batch,
+        input_dim: 0,
+        seq_len,
+        vocab,
+        init_file: String::new(),
+        grad_entry: String::new(),
+        eval_entry: String::new(),
+    };
+    let model = NativeModel { spec, arch: Arch::BigramLm { vocab, dim } };
+    models.insert(name.to_string(), model);
+}
+
+/// Stable per-model seed so initial parameters are deterministic across
+/// processes and independent of the experiment seed (matching the AOT path,
+/// where init ships as a fixed artifact).
+fn model_seed(name: &str) -> u64 {
+    let h = name
+        .bytes()
+        .fold(0xCBF2_9CE4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3));
+    hash_seed(&[h, 0x7E57_AB1E])
+}
+
+fn check_params(model: &str, params: &[f32], spec: &ModelSpec) -> Result<()> {
+    ensure!(
+        params.len() == spec.param_count,
+        "{model}: got {} parameters, expected {}",
+        params.len(),
+        spec.param_count
+    );
+    Ok(())
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native".to_string()
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    fn model(&self, name: &str) -> Result<ModelSpec> {
+        Ok(self.get(name)?.spec.clone())
+    }
+
+    fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let m = self.get(model)?;
+        let mut rng = Rng::new(model_seed(model));
+        let mut params = Vec::with_capacity(m.spec.param_count);
+        match &m.arch {
+            Arch::Mlp { dims } => {
+                for w in dims.windows(2) {
+                    let (n_in, n_out) = (w[0], w[1]);
+                    let limit = (6.0 / (n_in + n_out) as f64).sqrt();
+                    for _ in 0..n_in * n_out {
+                        params.push(((rng.f64() * 2.0 - 1.0) * limit) as f32);
+                    }
+                    params.extend(std::iter::repeat(0.0f32).take(n_out));
+                }
+            }
+            Arch::BigramLm { vocab, dim } => {
+                let e_limit = (6.0 / (vocab + dim) as f64).sqrt();
+                for _ in 0..vocab * dim {
+                    params.push(((rng.f64() * 2.0 - 1.0) * e_limit) as f32);
+                }
+                let w_limit = (6.0 / (dim + vocab) as f64).sqrt();
+                for _ in 0..dim * vocab {
+                    params.push(((rng.f64() * 2.0 - 1.0) * w_limit) as f32);
+                }
+                params.extend(std::iter::repeat(0.0f32).take(*vocab));
+            }
+        }
+        debug_assert_eq!(params.len(), m.spec.param_count);
+        Ok(params)
+    }
+
+    fn grad(&self, model: &str, params: &[f32], x: &[f32], y: &[f32]) -> Result<GradResult> {
+        let m = self.get(model)?;
+        check_params(model, params, &m.spec)?;
+        let mut gbuf = vec![0.0f64; params.len()];
+        let (loss_sum, denom) = match &m.arch {
+            Arch::Mlp { dims } => {
+                let (loss_sum, _correct, batch) = mlp_pass(dims, params, x, y, Some(&mut gbuf))?;
+                (loss_sum, batch)
+            }
+            Arch::BigramLm { vocab, dim } => {
+                ensure!(y.is_empty(), "{model}: LM grad expects an empty label buffer");
+                let (loss_sum, tokens) =
+                    bigram_pass(*vocab, *dim, m.spec.seq_len, params, x, Some(&mut gbuf))?;
+                (loss_sum, tokens)
+            }
+        };
+        let scale = 1.0 / denom;
+        Ok(GradResult {
+            loss: (loss_sum * scale) as f32,
+            grads: gbuf.iter().map(|&g| (g * scale) as f32).collect(),
+        })
+    }
+
+    fn eval(&self, model: &str, params: &[f32], x: &[f32], y: &[f32]) -> Result<EvalResult> {
+        let m = self.get(model)?;
+        check_params(model, params, &m.spec)?;
+        match &m.arch {
+            Arch::Mlp { dims } => {
+                let (loss_sum, correct, _batch) = mlp_pass(dims, params, x, y, None)?;
+                Ok(EvalResult { loss_sum, count: correct })
+            }
+            Arch::BigramLm { vocab, dim } => {
+                ensure!(y.is_empty(), "{model}: LM eval expects an empty label buffer");
+                let (loss_sum, tokens) =
+                    bigram_pass(*vocab, *dim, m.spec.seq_len, params, x, None)?;
+                Ok(EvalResult { loss_sum, count: tokens })
+            }
+        }
+    }
+
+    fn quant_kernel(&self, entry: &str) -> Result<Box<dyn QuantKernel>> {
+        Ok(Box::new(NativeQuantKernel::parse(entry)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP forward/backward
+// ---------------------------------------------------------------------------
+
+/// One pass over a classifier batch. Returns `(loss_sum, correct, batch)`;
+/// when `grads` is given, accumulates d(loss_sum)/d(params) into it (caller
+/// scales by 1/batch for the mean-loss gradient).
+fn mlp_pass(
+    dims: &[usize],
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    mut grads: Option<&mut [f64]>,
+) -> Result<(f64, f64, f64)> {
+    let d_in = dims[0];
+    let classes = *dims.last().unwrap();
+    let batch = y.len();
+    ensure!(batch > 0, "empty batch");
+    ensure!(
+        x.len() == batch * d_in,
+        "input buffer has {} elements, expected batch {} x input_dim {}",
+        x.len(),
+        batch,
+        d_in
+    );
+
+    let nl = dims.len() - 1;
+    // (weight offset, bias offset) per layer in the flat parameter vector.
+    let mut offs = Vec::with_capacity(nl);
+    let mut pos = 0;
+    for w in dims.windows(2) {
+        offs.push((pos, pos + w[0] * w[1]));
+        pos += w[0] * w[1] + w[1];
+    }
+    debug_assert_eq!(pos, params.len());
+
+    // acts[0] = input, acts[li + 1] = layer li output (ReLU, logits for last).
+    let mut acts: Vec<Vec<f64>> = dims.iter().map(|&d| vec![0.0f64; d]).collect();
+    let mut deltas: Vec<Vec<f64>> = dims[1..].iter().map(|&d| vec![0.0f64; d]).collect();
+
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    for b in 0..batch {
+        let label = y[b];
+        let yi = label as usize;
+        ensure!(
+            label >= 0.0 && yi < classes,
+            "label {label} out of range for {classes} classes"
+        );
+        for (a, &v) in acts[0].iter_mut().zip(&x[b * d_in..(b + 1) * d_in]) {
+            *a = v as f64;
+        }
+        // Forward.
+        for li in 0..nl {
+            let (n_in, n_out) = (dims[li], dims[li + 1]);
+            let (w_off, b_off) = offs[li];
+            let (prev, rest) = acts.split_at_mut(li + 1);
+            let input = &prev[li];
+            let out = &mut rest[0];
+            let last = li + 1 == nl;
+            for o in 0..n_out {
+                let row = &params[w_off + o * n_in..w_off + (o + 1) * n_in];
+                let mut z = params[b_off + o] as f64;
+                for (wv, hv) in row.iter().zip(input.iter()) {
+                    z += *wv as f64 * *hv;
+                }
+                out[o] = if last { z } else { z.max(0.0) };
+            }
+        }
+        // Softmax cross-entropy on the logits.
+        let logits = &acts[nl];
+        let zmax = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let sumexp: f64 = logits.iter().map(|&z| (z - zmax).exp()).sum();
+        let lse = zmax + sumexp.ln();
+        loss_sum += lse - logits[yi];
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        if argmax == yi {
+            correct += 1.0;
+        }
+
+        // Backward.
+        if let Some(g) = grads.as_deref_mut() {
+            for o in 0..classes {
+                deltas[nl - 1][o] =
+                    (acts[nl][o] - lse).exp() - if o == yi { 1.0 } else { 0.0 };
+            }
+            for li in (0..nl).rev() {
+                let (n_in, n_out) = (dims[li], dims[li + 1]);
+                let (w_off, b_off) = offs[li];
+                let (dl, dr) = deltas.split_at_mut(li);
+                let dz = &dr[0];
+                let input = &acts[li];
+                for o in 0..n_out {
+                    let d = dz[o];
+                    if d != 0.0 {
+                        let grow = &mut g[w_off + o * n_in..w_off + (o + 1) * n_in];
+                        for (gv, hv) in grow.iter_mut().zip(input.iter()) {
+                            *gv += d * *hv;
+                        }
+                    }
+                    g[b_off + o] += d;
+                }
+                if li > 0 {
+                    let dprev = &mut dl[li - 1];
+                    for (i, dp) in dprev.iter_mut().enumerate() {
+                        // ReLU mask: the stored activation is already max(z, 0).
+                        if input[i] > 0.0 {
+                            let mut acc = 0.0f64;
+                            for o in 0..n_out {
+                                acc += params[w_off + o * n_in + i] as f64 * dz[o];
+                            }
+                            *dp = acc;
+                        } else {
+                            *dp = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((loss_sum, correct, batch as f64))
+}
+
+// ---------------------------------------------------------------------------
+// Bigram LM forward/backward
+// ---------------------------------------------------------------------------
+
+/// One pass over an LM batch of `B * (seq_len + 1)` tokens: each position
+/// predicts its successor from the current token's embedding. Returns
+/// `(nll_sum, tokens_scored)`; `grads` accumulates d(nll_sum)/d(params).
+fn bigram_pass(
+    vocab: usize,
+    dim: usize,
+    seq_len: usize,
+    params: &[f32],
+    x: &[f32],
+    mut grads: Option<&mut [f64]>,
+) -> Result<(f64, f64)> {
+    let stride = seq_len + 1;
+    ensure!(
+        !x.is_empty() && x.len() % stride == 0,
+        "token buffer has {} elements, expected a multiple of seq_len+1 = {stride}",
+        x.len()
+    );
+    let batch = x.len() / stride;
+    let emb_off = 0;
+    let w_off = vocab * dim;
+    let b_off = w_off + dim * vocab;
+
+    let mut probs = vec![0.0f64; vocab];
+    let mut loss_sum = 0.0f64;
+    let mut tokens = 0.0f64;
+    for b in 0..batch {
+        let seq = &x[b * stride..(b + 1) * stride];
+        for t in 0..seq_len {
+            let tok = seq[t] as usize;
+            let tgt = seq[t + 1] as usize;
+            ensure!(
+                seq[t] >= 0.0 && tok < vocab && seq[t + 1] >= 0.0 && tgt < vocab,
+                "token out of range for vocab {vocab}"
+            );
+            let e = &params[emb_off + tok * dim..emb_off + (tok + 1) * dim];
+            // Logits + stable softmax.
+            let mut zmax = f64::NEG_INFINITY;
+            for (v, p) in probs.iter_mut().enumerate() {
+                let row = &params[w_off + v * dim..w_off + (v + 1) * dim];
+                let mut z = params[b_off + v] as f64;
+                for (wv, ev) in row.iter().zip(e.iter()) {
+                    z += *wv as f64 * *ev as f64;
+                }
+                *p = z;
+                zmax = zmax.max(z);
+            }
+            let sumexp: f64 = probs.iter().map(|&z| (z - zmax).exp()).sum();
+            let lse = zmax + sumexp.ln();
+            loss_sum += lse - probs[tgt];
+            tokens += 1.0;
+
+            if let Some(g) = grads.as_deref_mut() {
+                // probs currently holds logits; turn into dz = softmax - onehot.
+                for p in probs.iter_mut() {
+                    *p = (*p - lse).exp();
+                }
+                probs[tgt] -= 1.0;
+                for (v, &d) in probs.iter().enumerate() {
+                    let grow = &mut g[w_off + v * dim..w_off + (v + 1) * dim];
+                    for (gv, ev) in grow.iter_mut().zip(e.iter()) {
+                        *gv += d * *ev as f64;
+                    }
+                    g[b_off + v] += d;
+                }
+                let gemb = emb_off + tok * dim;
+                for di in 0..dim {
+                    let mut acc = 0.0f64;
+                    for (v, &d) in probs.iter().enumerate() {
+                        acc += params[w_off + v * dim + di] as f64 * d;
+                    }
+                    g[gemb + di] += acc;
+                }
+            }
+        }
+    }
+    Ok((loss_sum, tokens))
+}
+
+// ---------------------------------------------------------------------------
+// Native quantizer kernels (the L1 surface without PJRT)
+// ---------------------------------------------------------------------------
+
+/// Default tile the AOT artifacts use; the native kernels accept any length
+/// but advertise the same tile so callers can size buffers identically.
+pub const NATIVE_QUANT_TILE: usize = 65536;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum KernelOp {
+    Uniform { s: u32 },
+    Codebook { s: u32 },
+    BiScaled { s: u32 },
+    Stats,
+}
+
+/// Scalar-kernel implementation of [`QuantKernel`], mirroring the Pallas
+/// artifact entry points (`quant_uniform_b*`, `quant_nonuniform_b*`,
+/// `quant_biscaled_b*`, `tail_stats`).
+pub struct NativeQuantKernel {
+    op: KernelOp,
+    entry: String,
+}
+
+impl NativeQuantKernel {
+    /// Parse an artifact entry name into a native kernel.
+    pub fn parse(entry: &str) -> Result<NativeQuantKernel> {
+        let op = if entry == "tail_stats" {
+            KernelOp::Stats
+        } else if let Some(b) = entry.strip_prefix("quant_uniform_b") {
+            KernelOp::Uniform { s: levels(entry, b)? }
+        } else if let Some(b) = entry.strip_prefix("quant_nonuniform_b") {
+            KernelOp::Codebook { s: levels(entry, b)? }
+        } else if let Some(b) = entry.strip_prefix("quant_biscaled_b") {
+            let s = levels(entry, b)?;
+            ensure!(s >= 3, "{entry}: biscaled needs at least 2 bits");
+            KernelOp::BiScaled { s }
+        } else {
+            bail!("unknown quantizer kernel entry {entry:?}");
+        };
+        Ok(NativeQuantKernel { op, entry: entry.to_string() })
+    }
+
+    fn check_pair(&self, g: &[f32], u: &[f32]) -> Result<()> {
+        ensure!(
+            !g.is_empty() && g.len() == u.len(),
+            "{}: gradient/uniform length mismatch ({} vs {})",
+            self.entry,
+            g.len(),
+            u.len()
+        );
+        Ok(())
+    }
+}
+
+fn levels(entry: &str, bits: &str) -> Result<u32> {
+    let b: u32 = bits.parse().map_err(|e| anyhow!("{entry}: bad bit width: {e}"))?;
+    ensure!((1..=8).contains(&b), "{entry}: bits must be in 1..=8");
+    Ok((1u32 << b) - 1)
+}
+
+impl QuantKernel for NativeQuantKernel {
+    fn tile(&self) -> usize {
+        NATIVE_QUANT_TILE
+    }
+
+    fn run_uniform(&self, g: &[f32], u: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<u32>)> {
+        let KernelOp::Uniform { s } = self.op else {
+            bail!("{}: not a uniform kernel", self.entry);
+        };
+        self.check_pair(g, u)?;
+        let mut idx = Vec::new();
+        kernels::quantize_uniform_slice(g, u, alpha, s, &mut idx);
+        let deq = idx.iter().map(|&k| kernels::dequantize_uniform_elem(k, alpha, s)).collect();
+        Ok((deq, idx))
+    }
+
+    fn run_codebook(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        codebook: &[f32],
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        let KernelOp::Codebook { s } = self.op else {
+            bail!("{}: not a codebook kernel", self.entry);
+        };
+        self.check_pair(g, u)?;
+        ensure!(
+            codebook.len() == s as usize + 1,
+            "{}: codebook has {} levels, expected {}",
+            self.entry,
+            codebook.len(),
+            s + 1
+        );
+        let mut idx = Vec::new();
+        kernels::quantize_codebook_slice(g, u, codebook, &mut idx);
+        let deq = idx.iter().map(|&k| codebook[k as usize]).collect();
+        Ok((deq, idx))
+    }
+
+    fn run_biscaled(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        let KernelOp::BiScaled { s } = self.op else {
+            bail!("{}: not a biscaled kernel", self.entry);
+        };
+        self.check_pair(g, u)?;
+        ensure!(
+            beta > 0.0 && alpha > beta,
+            "{}: need alpha > beta > 0 (got alpha={alpha}, beta={beta})",
+            self.entry
+        );
+        let cb = biscaled_codebook(alpha, beta, s);
+        let mut idx = Vec::new();
+        kernels::quantize_codebook_slice(g, u, &cb, &mut idx);
+        let deq = idx.iter().map(|&k| cb[k as usize]).collect();
+        Ok((deq, idx))
+    }
+
+    fn run_stats(&self, g: &[f32], g_min: f32) -> Result<Vec<f32>> {
+        ensure!(self.op == KernelOp::Stats, "{}: not the tail_stats kernel", self.entry);
+        ensure!(!g.is_empty(), "{}: empty input", self.entry);
+        let mut n = 0.0f64;
+        let mut slog = 0.0f64;
+        let mut sabs = 0.0f64;
+        let mut ssq = 0.0f64;
+        let mut amax = 0.0f32;
+        for &xv in g {
+            let a = xv.abs();
+            if a > g_min {
+                n += 1.0;
+                slog += (a as f64 / g_min as f64).ln();
+            }
+            sabs += a as f64;
+            ssq += xv as f64 * xv as f64;
+            amax = amax.max(a);
+        }
+        Ok(vec![n as f32, slog as f32, sabs as f32, ssq as f32, amax])
+    }
+}
+
+/// BiScaled codebook for `s + 1` levels: `[-alpha]`, `s - 1` uniform levels
+/// across `[-beta, beta]`, `[alpha]` — the layout the `quant_biscaled_b*`
+/// artifacts pin (e.g. b=3: s_beta = 5 inner intervals, s_alpha = 2 outer).
+fn biscaled_codebook(alpha: f32, beta: f32, s: u32) -> Vec<f32> {
+    let s_beta = s - 2;
+    let mut cb = Vec::with_capacity(s as usize + 1);
+    cb.push(-alpha);
+    for i in 0..=s_beta {
+        cb.push(-beta + 2.0 * beta * i as f32 / s_beta as f32);
+    }
+    cb.push(alpha);
+    cb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    #[test]
+    fn model_specs_validate() {
+        let b = backend();
+        for name in b.models() {
+            let spec = b.model(&name).unwrap();
+            spec.validate().unwrap();
+            let params = b.init_params(&name).unwrap();
+            assert_eq!(params.len(), spec.param_count, "{name}");
+            assert!(params.iter().all(|p| p.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_model_specific() {
+        let b = backend();
+        assert_eq!(b.init_params("mlp").unwrap(), b.init_params("mlp").unwrap());
+        let mlp = b.init_params("mlp").unwrap();
+        let cnn = b.init_params("cnn").unwrap();
+        assert_ne!(mlp[..16], cnn[..16], "different models must init differently");
+    }
+
+    #[test]
+    fn grad_rejects_bad_buffers() {
+        let b = backend();
+        let spec = b.model("mlp_tiny").unwrap();
+        let params = b.init_params("mlp_tiny").unwrap();
+        // Wrong param count.
+        assert!(b.grad("mlp_tiny", &params[1..], &[0.0; 784], &[0.0]).is_err());
+        // Wrong pixel count for the batch.
+        assert!(b.grad("mlp_tiny", &params, &[0.0; 7], &[0.0]).is_err());
+        // Label out of range.
+        let x = vec![0.1f32; spec.input_dim];
+        assert!(b.grad("mlp_tiny", &params, &x, &[99.0]).is_err());
+        // Unknown model.
+        assert!(b.grad("nope", &params, &x, &[0.0]).is_err());
+    }
+
+    #[test]
+    fn untrained_classifier_loss_near_ln10() {
+        let b = backend();
+        let params = b.init_params("mlp_tiny").unwrap();
+        let x = vec![0.3f32; 4 * IMG_PIXELS];
+        let y = vec![0.0f32, 1.0, 2.0, 3.0];
+        let out = b.grad("mlp_tiny", &params, &x, &y).unwrap();
+        assert!(out.loss.is_finite());
+        assert!(
+            (out.loss as f64 - (NUM_CLASSES as f64).ln()).abs() < 1.5,
+            "init loss {} should be near ln(10)",
+            out.loss
+        );
+        assert_eq!(out.grads.len(), params.len());
+        let gnorm: f64 = out.grads.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(gnorm > 0.0 && gnorm.is_finite());
+    }
+
+    #[test]
+    fn untrained_lm_loss_near_ln_vocab() {
+        let b = backend();
+        let spec = b.model("tfm_small").unwrap();
+        let params = b.init_params("tfm_small").unwrap();
+        let mut rng = Rng::new(3);
+        let toks: Vec<f32> =
+            (0..2 * (spec.seq_len + 1)).map(|_| rng.below(spec.vocab as u64) as f32).collect();
+        let out = b.grad("tfm_small", &params, &toks, &[]).unwrap();
+        assert!(
+            (out.loss as f64 - (spec.vocab as f64).ln()).abs() < 1.0,
+            "init NLL {} should be near ln(64)",
+            out.loss
+        );
+        let ev = b.eval("tfm_small", &params, &toks, &[]).unwrap();
+        assert_eq!(ev.count, (2 * spec.seq_len) as f64);
+    }
+
+    #[test]
+    fn quant_kernel_parses_and_validates() {
+        let b = backend();
+        assert!(b.quant_kernel("quant_uniform_b3").is_ok());
+        assert!(b.quant_kernel("quant_nonuniform_b3").is_ok());
+        assert!(b.quant_kernel("quant_biscaled_b3").is_ok());
+        assert!(b.quant_kernel("tail_stats").is_ok());
+        assert!(b.quant_kernel("quant_uniform_b0").is_err());
+        assert!(b.quant_kernel("bogus").is_err());
+        // Op mismatch is an error, not silent misbehavior.
+        let q = b.quant_kernel("tail_stats").unwrap();
+        assert!(q.run_uniform(&[0.0], &[0.5], 0.1).is_err());
+    }
+
+    #[test]
+    fn native_uniform_kernel_matches_scalar_path() {
+        let b = backend();
+        let q = b.quant_kernel("quant_uniform_b3").unwrap();
+        let mut rng = Rng::new(5);
+        let g: Vec<f32> = (0..4096).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let u: Vec<f32> = (0..4096).map(|_| rng.f32()).collect();
+        let alpha = 0.04f32;
+        let (deq, idx) = q.run_uniform(&g, &u, alpha).unwrap();
+        for i in 0..g.len() {
+            let k = kernels::quantize_uniform_elem(g[i], u[i], alpha, 7);
+            assert_eq!(idx[i], k, "i={i}");
+            assert_eq!(deq[i], kernels::dequantize_uniform_elem(k, alpha, 7), "i={i}");
+        }
+    }
+
+    #[test]
+    fn native_biscaled_matches_explicit_codebook() {
+        let b = backend();
+        let q = b.quant_kernel("quant_biscaled_b3").unwrap();
+        let (alpha, beta) = (0.05f32, 0.02f32);
+        let mut rng = Rng::new(7);
+        let g: Vec<f32> = (0..2048).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let u: Vec<f32> = (0..2048).map(|_| rng.f32()).collect();
+        let (_deq, idx) = q.run_biscaled(&g, &u, alpha, beta).unwrap();
+        // Reference: the same codebook the integration parity test builds.
+        let mut cb = vec![-alpha];
+        for i in 0..=5 {
+            cb.push(-beta + 2.0 * beta * i as f32 / 5.0);
+        }
+        cb.push(alpha);
+        let mut want = Vec::new();
+        kernels::quantize_codebook_slice(&g, &u, &cb, &mut want);
+        assert_eq!(idx, want);
+    }
+
+    #[test]
+    fn native_stats_match_direct_computation() {
+        let b = backend();
+        let q = b.quant_kernel("tail_stats").unwrap();
+        let mut rng = Rng::new(8);
+        let g: Vec<f32> = (0..8192).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let stats = q.run_stats(&g, 0.01).unwrap();
+        assert_eq!(stats.len(), 5);
+        let gamma_hat = 1.0 + stats[0] as f64 / stats[1] as f64;
+        assert!((gamma_hat - 4.0).abs() < 0.5, "gamma_hat {gamma_hat}");
+        let amax = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert_eq!(stats[4], amax);
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT runtime (cargo feature `pjrt`): load `artifacts/*.hlo.txt`, compile
+//! once, execute from the rust hot path. Python never runs here — the
+//! artifacts directory is the entire L2/L1 interface (HLO text +
+//! `manifest.json` + init params).
+//!
+//! `PjRtClient` wraps an `Rc`, so the runtime is deliberately
+//! single-threaded: the coordinator calls PJRT from one thread and
+//! parallelizes the pure-rust codec work instead (see `coordinator`).
+//!
+//! In this build the `xla` API resolves to the in-tree stub
+//! ([`super::xla_stub`]): everything compiles and type-checks, and
+//! [`Runtime::open`] reports a clear error until real xla-rs bindings are
+//! linked. [`PjrtBackend`] adapts the runtime to the [`Backend`] trait so the
+//! coordinator is oblivious to which compute path it runs on.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::backend::{Backend, EvalResult, GradResult, QuantKernel};
+use super::manifest::{ArtifactSpec, Manifest, ModelSpec};
+use super::quant_exec::QuantExec;
+use super::xla_stub as xla;
+
+/// A loaded-and-compiled AOT entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    /// Manifest entry name (e.g. `"cnn_grad"`).
+    pub name: String,
+    /// Input/output signature from the manifest.
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with flat f32 input buffers (shapes from the manifest) and
+    /// return flat f32 outputs, one per manifest output.
+    ///
+    /// Scalars come back as single-element vectors.
+    ///
+    /// Inputs are transferred with `buffer_from_host_buffer` + `execute_b`
+    /// rather than `execute(&[Literal])`: the crate's `execute` leaks the
+    /// input device buffers (xla_rs.cc releases them and never frees), and
+    /// the buffer path also skips one host-side copy.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut buffers = Vec::with_capacity(inputs.len());
+        for (buf, ispec) in inputs.iter().zip(&self.spec.inputs) {
+            let want: usize = ispec.shape.iter().product::<usize>().max(1);
+            if buf.len() != want {
+                return Err(anyhow!(
+                    "{}: input {} expects {} elements ({:?}), got {}",
+                    self.name,
+                    ispec.name,
+                    want,
+                    ispec.shape,
+                    buf.len()
+                ));
+            }
+            let dims: Vec<usize> =
+                if ispec.shape.is_empty() { vec![] } else { ispec.shape.clone() };
+            buffers.push(self.client.buffer_from_host_buffer::<f32>(buf, &dims, None)?);
+        }
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        drop(buffers); // frees the input device buffers (leak fix)
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, ospec) in tuple.into_iter().zip(&self.spec.outputs) {
+            // Integer outputs (e.g. quantizer indices) are converted via i32.
+            if ospec.dtype == "i32" {
+                let v: Vec<i32> = lit.to_vec()?;
+                out.push(v.into_iter().map(|x| x as f32).collect());
+            } else {
+                out.push(lit.to_vec::<f32>()?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Artifact loader + executable cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// The parsed `manifest.json` contract.
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain `manifest.json`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// PJRT platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) a compiled entry point by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let executable = Rc::new(Executable {
+            exe,
+            client: self.client.clone(),
+            name: name.to_string(),
+            spec,
+        });
+        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Read a model's initial flat parameters (f32-LE .bin).
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let spec = self.model(model)?;
+        let path = self.dir.join(&spec.init_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading init params {path:?}"))?;
+        if bytes.len() != spec.param_count * 4 {
+            return Err(anyhow!(
+                "{model}: init file has {} bytes, expected {}",
+                bytes.len(),
+                spec.param_count * 4
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Look up a model's manifest entry.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.manifest.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.manifest.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+/// [`Backend`] adapter over the PJRT [`Runtime`].
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Open a backend over an AOT artifacts directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::open(dir)? })
+    }
+
+    /// The underlying runtime, for artifact-level access (parity tests).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt ({})", self.rt.platform())
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.rt.manifest.models.keys().cloned().collect()
+    }
+
+    fn model(&self, name: &str) -> Result<ModelSpec> {
+        Ok(self.rt.model(name)?.clone())
+    }
+
+    fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        self.rt.init_params(model)
+    }
+
+    fn grad(&self, model: &str, params: &[f32], x: &[f32], y: &[f32]) -> Result<GradResult> {
+        let spec = self.rt.model(model)?.clone();
+        let exe = self.rt.load(&spec.grad_entry)?;
+        let mut outs =
+            if y.is_empty() { exe.run(&[params, x])? } else { exe.run(&[params, x, y])? };
+        if outs.len() != 2 || outs[0].is_empty() {
+            return Err(anyhow!("{model}: grad entry returned a malformed output tuple"));
+        }
+        let grads = outs.pop().unwrap();
+        Ok(GradResult { loss: outs[0][0], grads })
+    }
+
+    fn eval(&self, model: &str, params: &[f32], x: &[f32], y: &[f32]) -> Result<EvalResult> {
+        let spec = self.rt.model(model)?.clone();
+        let exe = self.rt.load(&spec.eval_entry)?;
+        let outs =
+            if y.is_empty() { exe.run(&[params, x])? } else { exe.run(&[params, x, y])? };
+        if outs.len() != 2 || outs[0].is_empty() || outs[1].is_empty() {
+            return Err(anyhow!("{model}: eval entry returned a malformed output tuple"));
+        }
+        Ok(EvalResult { loss_sum: outs[0][0] as f64, count: outs[1][0] as f64 })
+    }
+
+    fn quant_kernel(&self, entry: &str) -> Result<Box<dyn QuantKernel>> {
+        Ok(Box::new(QuantExec::new(&self.rt, entry)?))
+    }
+}

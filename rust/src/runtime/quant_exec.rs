@@ -1,20 +1,25 @@
-//! L1↔L3 parity path: run the Pallas quantizer kernels through PJRT.
+//! L1↔L3 parity path (cargo feature `pjrt`): run the Pallas quantizer
+//! kernels through PJRT.
 //!
 //! The rust codecs in `quant::kernels` are the production encode path; this
 //! wrapper executes the SAME computation through the AOT-compiled Pallas
 //! artifact (`quant_uniform_b*`, `quant_nonuniform_b3`, `quant_biscaled_b3`,
 //! `tail_stats`) so integration tests and the perf bench can prove the two
 //! implementations agree bit-for-bit on indices given identical uniforms.
+//! It implements [`QuantKernel`], the same interface the native kernels
+//! expose, so parity harnesses are backend-generic.
 
 use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
-use super::{Executable, Runtime};
+use super::backend::QuantKernel;
+use super::pjrt::{Executable, Runtime};
 
 /// Pallas quantizer executor over the fixed manifest tile.
 pub struct QuantExec {
     exe: Rc<Executable>,
+    /// Fixed tile length the artifact was compiled for.
     pub tile: usize,
 }
 
@@ -82,5 +87,38 @@ impl QuantExec {
             ));
         }
         Ok(())
+    }
+}
+
+impl QuantKernel for QuantExec {
+    fn tile(&self) -> usize {
+        self.tile
+    }
+
+    fn run_uniform(&self, g: &[f32], u: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<u32>)> {
+        QuantExec::run_uniform(self, g, u, alpha)
+    }
+
+    fn run_codebook(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        codebook: &[f32],
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        QuantExec::run_codebook(self, g, u, codebook)
+    }
+
+    fn run_biscaled(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        QuantExec::run_biscaled(self, g, u, alpha, beta)
+    }
+
+    fn run_stats(&self, g: &[f32], g_min: f32) -> Result<Vec<f32>> {
+        QuantExec::run_stats(self, g, g_min)
     }
 }

@@ -1,0 +1,124 @@
+//! Stub of the `xla-rs` API surface the PJRT path compiles against.
+//!
+//! The build image has no XLA/PJRT shared libraries, so the `pjrt` cargo
+//! feature compiles the full runtime wiring against this stub instead of the
+//! real bindings. Every *entry* constructor ([`PjRtClient::cpu`],
+//! [`HloModuleProto::from_text_file`]) returns an error, so the PJRT backend
+//! fails fast at `Runtime::open` with a clear message; downstream methods are
+//! therefore unreachable and panic if somehow invoked.
+//!
+//! To link the real runtime, replace this module with `use xla::*` from the
+//! actual `xla-rs` bindings (the method signatures below mirror them 1:1)
+//! and add the crate to `Cargo.toml` — no other file changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`; converts into `anyhow::Error` via `?`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "tqsgd was built with the in-tree PJRT stub; link the real xla-rs \
+     bindings (see rust/src/runtime/xla_stub.rs) or use the default NativeBackend";
+
+/// Element types transferable to/from device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Stub of `xla::PjRtClient`.
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Real bindings: create a CPU PJRT client. Stub: always errors.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+
+    /// Platform name of the underlying PJRT client.
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+
+    /// Compile an XLA computation into a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+
+    /// Transfer a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with device buffers, returning per-device output buffers.
+    pub fn execute_b<B>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unreachable!("stub PjRtLoadedExecutable cannot be constructed")
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the device buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unreachable!("stub PjRtBuffer cannot be constructed")
+    }
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unreachable!("stub Literal cannot be constructed")
+    }
+
+    /// Copy out the flat element data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unreachable!("stub Literal cannot be constructed")
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Real bindings: parse HLO text. Stub: always errors.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module as a computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

@@ -1,25 +1,32 @@
 //! High-level training API: config in, report out.
 //!
-//! [`Trainer`] owns the PJRT runtime + coordinator for one experiment;
-//! [`run_experiment`] is the one-call entry the CLI, examples and figure
-//! benches use. Sweeps (Fig. 4) reuse a single `Runtime` across configs via
-//! [`Sweep`], so each artifact compiles once.
+//! [`Trainer`] owns the compute [`Backend`] + coordinator for one
+//! experiment; [`run_experiment`] is the one-call entry the CLI, examples
+//! and figure benches use. Sweeps (Fig. 4) reuse a single backend across
+//! configs via [`Sweep`], so PJRT artifacts compile once (and the native
+//! backend's model zoo is shared).
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Coordinator;
 use crate::metrics::RunLog;
-use crate::runtime::Runtime;
+use crate::runtime::{backend_for, make_backend, Backend};
 
 /// Result of one experiment.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// Per-round records for the whole run.
     pub log: RunLog,
+    /// Test accuracy at the final evaluation (0 when never evaluated).
     pub final_accuracy: f64,
+    /// Best test accuracy seen during the run.
     pub best_accuracy: f64,
+    /// Training loss of the last round.
     pub final_train_loss: f64,
+    /// Test loss (or LM NLL) at the final evaluation.
     pub final_test_loss: f64,
+    /// Total client→server bytes across the run.
     pub total_bytes_up: u64,
     /// Mean bits shipped per parameter per round per client.
     pub bits_per_param: f64,
@@ -49,22 +56,31 @@ impl TrainReport {
 
 /// One-experiment trainer.
 pub struct Trainer {
-    rt: Runtime,
+    backend: Box<dyn Backend>,
     cfg: ExperimentConfig,
 }
 
 impl Trainer {
+    /// Build the backend the config asks for (`cfg.backend`) and prepare to
+    /// train.
     pub fn new(cfg: ExperimentConfig) -> Result<Trainer> {
-        let rt = Runtime::open(&cfg.artifacts_dir)?;
-        Ok(Trainer { rt, cfg })
+        let backend = make_backend(&cfg)?;
+        Ok(Trainer { backend, cfg })
     }
 
+    /// The compute backend this trainer selected.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Run the experiment quietly.
     pub fn run(&mut self) -> Result<TrainReport> {
         self.run_verbose(false)
     }
 
+    /// Run the experiment, optionally logging evals to stdout.
     pub fn run_verbose(&mut self, verbose: bool) -> Result<TrainReport> {
-        let mut coord = Coordinator::new(self.cfg.clone(), &self.rt)?;
+        let mut coord = Coordinator::new(self.cfg.clone(), self.backend.as_ref())?;
         let params = coord.params.len();
         let clients = self.cfg.clients;
         let log = coord.run(verbose)?;
@@ -77,22 +93,31 @@ pub fn run_experiment(cfg: ExperimentConfig, verbose: bool) -> Result<TrainRepor
     Trainer::new(cfg.clone())?.run_verbose(verbose)
 }
 
-/// Multi-config sweep sharing one runtime (one compile per artifact).
+/// Multi-config sweep sharing one backend (one PJRT compile per artifact).
 pub struct Sweep {
-    rt: Runtime,
+    backend: Box<dyn Backend>,
 }
 
 impl Sweep {
+    /// Auto-select a backend for an artifacts directory: PJRT when built in
+    /// and `manifest.json` exists, the native backend otherwise.
     pub fn new(artifacts_dir: &str) -> Result<Sweep> {
-        Ok(Sweep { rt: Runtime::open(artifacts_dir)? })
+        Ok(Sweep { backend: backend_for("auto", artifacts_dir)? })
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
+    /// Sweep over an explicit backend.
+    pub fn with_backend(backend: Box<dyn Backend>) -> Sweep {
+        Sweep { backend }
     }
 
+    /// The shared compute backend.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Run one configuration on the shared backend.
     pub fn run(&self, cfg: ExperimentConfig, verbose: bool) -> Result<TrainReport> {
-        let mut coord = Coordinator::new(cfg.clone(), &self.rt)?;
+        let mut coord = Coordinator::new(cfg.clone(), self.backend.as_ref())?;
         let params = coord.params.len();
         let log = coord.run(verbose)?;
         Ok(TrainReport::from_log(log, params, cfg.clients))

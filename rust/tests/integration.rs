@@ -1,21 +1,28 @@
-//! Integration tests over the full stack: PJRT runtime + AOT artifacts +
-//! coordinator + codecs. Require `make artifacts` to have run (the Makefile
-//! `test` target guarantees it).
+//! Integration tests over the full stack: pluggable compute backend +
+//! coordinator + codecs + trainer.
+//!
+//! The default suite runs entirely on the pure-Rust [`NativeBackend`] — no
+//! Python, JAX or AOT artifacts required — so `cargo test -q` is green from
+//! a clean checkout. The PJRT↔rust parity tests live at the bottom behind
+//! the `pjrt` cargo feature and are `#[ignore]`d: they additionally need
+//! `make artifacts` output and real xla-rs bindings linked in place of the
+//! in-tree stub.
 
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
 use tqsgd::quant::kernels::{quantize_codebook_slice, quantize_uniform_slice};
-use tqsgd::runtime::{QuantExec, Runtime};
+use tqsgd::runtime::{backend_for, Backend};
+use tqsgd::train::{Sweep, Trainer};
 use tqsgd::util::Rng;
 
-fn artifacts_dir() -> String {
-    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+fn native() -> Box<dyn Backend> {
+    backend_for("native", "unused").unwrap()
 }
 
 fn small_cfg(model: &str, scheme: Scheme) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
     cfg.model = model.into();
-    cfg.artifacts_dir = artifacts_dir();
+    cfg.backend = "native".into();
     cfg.quant.scheme = scheme;
     cfg.quant.bits = 3;
     cfg.clients = 4;
@@ -26,44 +33,116 @@ fn small_cfg(model: &str, scheme: Scheme) -> ExperimentConfig {
     cfg
 }
 
+// ---------------------------------------------------------------------------
+// Backend surface
+// ---------------------------------------------------------------------------
+
 #[test]
-fn runtime_loads_and_runs_mlp_grad() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let spec = rt.model("mlp").unwrap().clone();
-    let exe = rt.load(&spec.grad_entry).unwrap();
-    let params = rt.init_params("mlp").unwrap();
+fn native_backend_lists_models_and_runs_mlp_grad() {
+    let backend = native();
+    let models = backend.models();
+    for want in ["mlp", "mlp_tiny", "cnn", "tfm_small"] {
+        assert!(models.iter().any(|m| m == want), "missing model {want}: {models:?}");
+    }
+    let spec = backend.model("mlp").unwrap();
+    spec.validate().unwrap();
+    let params = backend.init_params("mlp").unwrap();
     assert_eq!(params.len(), spec.param_count);
     let b = spec.train_batch;
     let x = vec![0.5f32; b * spec.input_dim];
     let y: Vec<f32> = (0..b).map(|i| (i % 10) as f32).collect();
-    let out = exe.run(&[&params, &x, &y]).unwrap();
-    assert_eq!(out.len(), 2);
-    let loss = out[0][0];
-    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
-    assert_eq!(out[1].len(), spec.param_count);
-    let gnorm: f64 = out[1].iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+    let out = backend.grad("mlp", &params, &x, &y).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0, "loss {}", out.loss);
+    assert_eq!(out.grads.len(), spec.param_count);
+    let gnorm: f64 = out.grads.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
     assert!(gnorm > 0.0 && gnorm.is_finite());
 }
 
 #[test]
-fn runtime_rejects_bad_shapes() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let spec = rt.model("mlp").unwrap().clone();
-    let exe = rt.load(&spec.grad_entry).unwrap();
-    let params = rt.init_params("mlp").unwrap();
-    // Wrong input count.
-    assert!(exe.run(&[&params]).is_err());
-    // Wrong element count.
+fn backend_rejects_bad_shapes() {
+    let backend = native();
+    let params = backend.init_params("mlp").unwrap();
+    // Wrong parameter count.
+    assert!(backend.grad("mlp", &params[..10], &[0.0; 784], &[0.0]).is_err());
+    // Wrong element count for the batch.
     let bad = vec![0.0f32; 7];
-    assert!(exe.run(&[&params, &bad, &bad]).is_err());
+    assert!(backend.grad("mlp", &params, &bad, &[0.0]).is_err());
+    // Unknown model name.
+    assert!(backend.model("resnet152").is_err());
+    // Unknown backend kind.
+    assert!(backend_for("cuda", "unused").is_err());
 }
 
 #[test]
+fn sweep_auto_falls_back_to_native_without_artifacts() {
+    let sweep = Sweep::new("definitely_missing_artifacts_dir").unwrap();
+    assert_eq!(sweep.backend().name(), "native");
+}
+
+// ---------------------------------------------------------------------------
+// Backend gradient correctness: finite differences
+// ---------------------------------------------------------------------------
+
+/// Central-difference check of `Backend::grad` against its own loss output.
+/// `probe` coordinates are checked: the last few (output biases) plus a
+/// random spread across the parameter vector.
+fn gradcheck(backend: &dyn Backend, model: &str, x: &[f32], y: &[f32], probes: usize) {
+    let mut params = backend.init_params(model).unwrap();
+    let analytic = backend.grad(model, &params, x, y).unwrap();
+    let n = params.len();
+    let mut rng = Rng::new(42);
+    for t in 0..probes {
+        let i = if t < 8 { n - 1 - t } else { rng.below(n as u64) as usize };
+        let orig = params[i];
+        let h = 1e-3f32;
+        let p_plus = orig + h;
+        let p_minus = orig - h;
+        params[i] = p_plus;
+        let lp = backend.grad(model, &params, x, y).unwrap().loss as f64;
+        params[i] = p_minus;
+        let lm = backend.grad(model, &params, x, y).unwrap().loss as f64;
+        params[i] = orig;
+        let fd = (lp - lm) / ((p_plus - p_minus) as f64);
+        let an = analytic.grads[i] as f64;
+        assert!(
+            (fd - an).abs() <= 1e-3 + 0.02 * an.abs(),
+            "{model} param {i}: finite-diff {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn native_mlp_gradient_matches_finite_differences() {
+    let backend = native();
+    let ds = tqsgd::data::mnist_like(8, 11);
+    let idxs: Vec<usize> = (0..4).collect();
+    let (x, y) = tqsgd::data::gather_batch(&ds, &idxs);
+    gradcheck(backend.as_ref(), "mlp_tiny", &x, &y, 48);
+}
+
+#[test]
+fn native_lm_gradient_matches_finite_differences() {
+    let backend = native();
+    let spec = backend.model("tfm_small").unwrap();
+    let corpus = tqsgd::data::MarkovCorpus::new(spec.vocab, 9);
+    let mut rng = Rng::new(10);
+    let mut toks = Vec::new();
+    for _ in 0..2 {
+        toks.extend(corpus.sample(spec.seq_len + 1, &mut rng));
+    }
+    gradcheck(backend.as_ref(), "tfm_small", &toks, &[], 48);
+}
+
+// ---------------------------------------------------------------------------
+// Distributed training on the native path
+// ---------------------------------------------------------------------------
+
+#[test]
 fn dsgd_training_reduces_loss() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let mut cfg = small_cfg("mlp", Scheme::Dsgd);
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Dsgd);
     cfg.rounds = 25;
-    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
     let first = coord.step().unwrap().train_loss;
     let mut last = first;
     for _ in 0..24 {
@@ -74,10 +153,10 @@ fn dsgd_training_reduces_loss() {
 
 #[test]
 fn quantized_training_runs_and_accounts_bytes() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let backend = native();
     for scheme in [Scheme::Tqsgd, Scheme::Tnqsgd, Scheme::Tbqsgd, Scheme::Qsgd] {
-        let cfg = small_cfg("cnn", scheme);
-        let mut coord = Coordinator::new(cfg.clone(), &rt).unwrap();
+        let cfg = small_cfg("mlp_tiny", scheme);
+        let mut coord = Coordinator::new(cfg.clone(), backend.as_ref()).unwrap();
         let spec = coord.model_spec().clone();
         let rec = coord.step().unwrap();
         // b=3 bits/element + frame overhead; 4 clients, whole model.
@@ -95,12 +174,12 @@ fn quantized_training_runs_and_accounts_bytes() {
 
 #[test]
 fn training_is_deterministic_given_seed() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let backend = native();
     let run = |seed: u64| {
-        let mut cfg = small_cfg("mlp", Scheme::Tnqsgd);
+        let mut cfg = small_cfg("mlp_tiny", Scheme::Tnqsgd);
         cfg.seed = seed;
         cfg.rounds = 4;
-        let mut coord = Coordinator::new(cfg, &rt).unwrap();
+        let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
         for _ in 0..4 {
             coord.step().unwrap();
         }
@@ -115,16 +194,16 @@ fn training_is_deterministic_given_seed() {
 
 #[test]
 fn fault_injection_drops_client_and_still_trains() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let mut cfg = small_cfg("mlp", Scheme::Tqsgd);
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
     cfg.drop_client = 0;
-    let mut coord = Coordinator::new(cfg.clone(), &rt).unwrap();
+    let mut coord = Coordinator::new(cfg.clone(), backend.as_ref()).unwrap();
     let rec = coord.step().unwrap();
     // Only 3 of 4 clients' bytes arrive.
     let full = {
         let mut cfg2 = cfg.clone();
         cfg2.drop_client = usize::MAX;
-        let mut c2 = Coordinator::new(cfg2, &rt).unwrap();
+        let mut c2 = Coordinator::new(cfg2, backend.as_ref()).unwrap();
         c2.step().unwrap().bytes_up
     };
     assert!(rec.bytes_up < full, "dropped client must reduce bytes");
@@ -133,11 +212,11 @@ fn fault_injection_drops_client_and_still_trains() {
 
 #[test]
 fn error_feedback_path_runs() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let mut cfg = small_cfg("mlp", Scheme::Tqsgd);
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
     cfg.quant.error_feedback = true;
     cfg.rounds = 3;
-    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
     for _ in 0..3 {
         let rec = coord.step().unwrap();
         assert!(rec.train_loss.is_finite());
@@ -146,9 +225,9 @@ fn error_feedback_path_runs() {
 
 #[test]
 fn evaluation_reports_sane_accuracy() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let cfg = small_cfg("cnn", Scheme::Dsgd);
-    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    let backend = native();
+    let cfg = small_cfg("mlp_tiny", Scheme::Dsgd);
+    let coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
     let (loss, acc) = coord.evaluate().unwrap();
     assert!(loss.is_finite() && loss > 0.0);
     let acc = acc.unwrap();
@@ -158,13 +237,13 @@ fn evaluation_reports_sane_accuracy() {
 }
 
 #[test]
-fn lm_coordinator_trains_transformer() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
+fn lm_coordinator_trains_bigram() {
+    let backend = native();
     let mut cfg = small_cfg("tfm_small", Scheme::Tnqsgd);
     cfg.quant.bits = 4;
     cfg.clients = 2;
     cfg.rounds = 3;
-    let mut coord = Coordinator::new(cfg, &rt).unwrap();
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
     let first = coord.step().unwrap().train_loss;
     assert!(first.is_finite() && first > 3.0, "init NLL ~ ln(64): {first}");
     let (nll, acc) = coord.evaluate().unwrap();
@@ -173,23 +252,51 @@ fn lm_coordinator_trains_transformer() {
 }
 
 // ---------------------------------------------------------------------------
-// L1 ↔ L3 parity through PJRT: the pallas kernels and the rust codecs are
-// the same function.
+// Trainer round trips (uniform TQSGD + non-uniform TNQSGD presets)
+// ---------------------------------------------------------------------------
+
+fn trainer_roundtrip(scheme: Scheme) {
+    let mut cfg = small_cfg("mlp_tiny", scheme);
+    cfg.rounds = 2;
+    cfg.eval_every = 1;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    assert_eq!(trainer.backend().name(), "native");
+    let report = trainer.run().unwrap();
+    assert_eq!(report.log.records.len(), 2, "trainer must complete both rounds");
+    assert!(report.final_train_loss.is_finite());
+    assert!(report.final_test_loss.is_finite());
+    assert!((0.0..=1.0).contains(&report.final_accuracy));
+    assert!(report.total_bytes_up > 0);
+    assert!(report.bits_per_param > 0.0);
+}
+
+#[test]
+fn trainer_completes_on_native_tqsgd() {
+    trainer_roundtrip(Scheme::Tqsgd);
+}
+
+#[test]
+fn trainer_completes_on_native_tnqsgd() {
+    trainer_roundtrip(Scheme::Tnqsgd);
+}
+
+// ---------------------------------------------------------------------------
+// L1 quantizer kernels through the Backend interface (native parity)
 // ---------------------------------------------------------------------------
 
 #[test]
-fn pallas_uniform_parity_bitexact() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let q = QuantExec::new(&rt, "quant_uniform_b3").unwrap();
+fn backend_uniform_kernel_parity_bitexact() {
+    let backend = native();
+    let q = backend.quant_kernel("quant_uniform_b3").unwrap();
     let mut rng = Rng::new(5);
-    let g: Vec<f32> =
-        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
-    let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
+    let n = 8192;
+    let g: Vec<f32> = (0..n).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+    let u: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
     let alpha = 0.04f32;
     let (deq, idx) = q.run_uniform(&g, &u, alpha).unwrap();
     let mut rust_idx = Vec::new();
     quantize_uniform_slice(&g, &u, alpha, 7, &mut rust_idx);
-    assert_eq!(idx, rust_idx, "pallas and rust indices must agree exactly");
+    assert_eq!(idx, rust_idx, "kernel and rust codec indices must agree exactly");
     for (i, (&d, &k)) in deq.iter().zip(&rust_idx).enumerate() {
         let expect = -alpha + k as f32 * (2.0 * alpha / 7.0);
         assert!((d - expect).abs() < 1e-6, "i={i}: {d} vs {expect}");
@@ -197,120 +304,159 @@ fn pallas_uniform_parity_bitexact() {
 }
 
 #[test]
-fn pallas_codebook_parity_bitexact() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let q = QuantExec::new(&rt, "quant_nonuniform_b3").unwrap();
+fn backend_codebook_kernel_parity_bitexact() {
+    let backend = native();
+    let q = backend.quant_kernel("quant_nonuniform_b3").unwrap();
     let mut rng = Rng::new(6);
-    let g: Vec<f32> =
-        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
-    let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
+    let n = 8192;
+    let g: Vec<f32> = (0..n).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+    let u: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
     let m = tqsgd::tail::PowerLawModel::new(4.0, 0.01, 0.1);
     let alpha = tqsgd::solver::optimal_alpha_nonuniform(&m, 7);
     let cb = tqsgd::solver::nonuniform_codebook(&m, alpha, 7);
     let (_deq, idx) = q.run_codebook(&g, &u, &cb).unwrap();
     let mut rust_idx = Vec::new();
     quantize_codebook_slice(&g, &u, &cb, &mut rust_idx);
-    let mismatches = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
-    assert_eq!(mismatches, 0, "{mismatches} codebook index mismatches");
+    assert_eq!(idx, rust_idx, "codebook kernel parity");
 }
 
-#[test]
-fn pallas_biscaled_parity() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let q = QuantExec::new(&rt, "quant_biscaled_b3").unwrap();
-    let mut rng = Rng::new(7);
-    let g: Vec<f32> =
-        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
-    let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
-    // The artifact pins s_beta=5, s_alpha=2 (manifest quant.biscaled_b3).
-    let (alpha, beta) = (0.05f32, 0.02f32);
-    let (deq, idx) = q.run_biscaled(&g, &u, alpha, beta).unwrap();
-    // Compare against the rust codebook path with the equivalent codebook.
-    let mut cb = Vec::new();
-    cb.push(-alpha);
-    for i in 0..=5 {
-        cb.push(-beta + 2.0 * beta * i as f32 / 5.0);
+// ---------------------------------------------------------------------------
+// L1 ↔ L3 parity through PJRT: the pallas kernels and the rust codecs are
+// the same function. Requires `--features pjrt`, `make artifacts`, and real
+// xla-rs bindings in place of the stub — hence #[ignore] by default (run
+// with `cargo test --features pjrt -- --ignored`).
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_parity {
+    use super::*;
+    use tqsgd::runtime::{PjrtBackend, QuantExec, Runtime};
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
     }
-    cb.push(alpha);
-    let mut rust_idx = Vec::new();
-    quantize_codebook_slice(&g, &u, &cb, &mut rust_idx);
-    let mismatch = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
-    // Boundary FP differences allowed at a tiny rate; values must agree.
-    assert!(
-        mismatch < q.tile / 1000,
-        "biscaled parity: {mismatch}/{} index mismatches",
-        q.tile
-    );
-    for (&d, &k) in deq.iter().zip(&rust_idx) {
-        if (d - cb[k as usize]).abs() > 1e-6 {
-            // allow the neighbour level at FP boundaries
-            let kk = k as usize;
-            let near = (kk > 0 && (d - cb[kk - 1]).abs() < 1e-6)
-                || (kk + 1 < cb.len() && (d - cb[kk + 1]).abs() < 1e-6);
-            assert!(near, "deq {d} not near level {k}");
+
+    fn pjrt_cfg(model: &str, scheme: Scheme) -> ExperimentConfig {
+        let mut cfg = small_cfg(model, scheme);
+        cfg.backend = "pjrt".into();
+        cfg.artifacts_dir = artifacts_dir();
+        cfg
+    }
+
+    #[test]
+    #[ignore = "requires AOT artifacts and linked PJRT runtime"]
+    fn runtime_loads_and_runs_mlp_grad() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let spec = rt.model("mlp").unwrap().clone();
+        let exe = rt.load(&spec.grad_entry).unwrap();
+        let params = rt.init_params("mlp").unwrap();
+        assert_eq!(params.len(), spec.param_count);
+        let b = spec.train_batch;
+        let x = vec![0.5f32; b * spec.input_dim];
+        let y: Vec<f32> = (0..b).map(|i| (i % 10) as f32).collect();
+        let out = exe.run(&[&params, &x, &y]).unwrap();
+        assert_eq!(out.len(), 2);
+        let loss = out[0][0];
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        assert_eq!(out[1].len(), spec.param_count);
+    }
+
+    #[test]
+    #[ignore = "requires AOT artifacts and linked PJRT runtime"]
+    fn pjrt_training_reduces_loss() {
+        let backend = PjrtBackend::open(artifacts_dir()).unwrap();
+        let mut cfg = pjrt_cfg("mlp", Scheme::Dsgd);
+        cfg.rounds = 25;
+        let mut coord = Coordinator::new(cfg, &backend).unwrap();
+        let first = coord.step().unwrap().train_loss;
+        let mut last = first;
+        for _ in 0..24 {
+            last = coord.step().unwrap().train_loss;
+        }
+        assert!(last < first, "loss should fall: {first} -> {last}");
+    }
+
+    #[test]
+    #[ignore = "requires AOT artifacts and linked PJRT runtime"]
+    fn pallas_uniform_parity_bitexact() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let q = QuantExec::new(&rt, "quant_uniform_b3").unwrap();
+        let mut rng = Rng::new(5);
+        let g: Vec<f32> =
+            (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
+        let alpha = 0.04f32;
+        let (deq, idx) = q.run_uniform(&g, &u, alpha).unwrap();
+        let mut rust_idx = Vec::new();
+        quantize_uniform_slice(&g, &u, alpha, 7, &mut rust_idx);
+        assert_eq!(idx, rust_idx, "pallas and rust indices must agree exactly");
+        for (i, (&d, &k)) in deq.iter().zip(&rust_idx).enumerate() {
+            let expect = -alpha + k as f32 * (2.0 * alpha / 7.0);
+            assert!((d - expect).abs() < 1e-6, "i={i}: {d} vs {expect}");
         }
     }
-}
 
-#[test]
-fn pallas_tail_stats_matches_rust() {
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let q = QuantExec::new(&rt, "tail_stats").unwrap();
-    let mut rng = Rng::new(8);
-    let g: Vec<f32> =
-        (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
-    let g_min = 0.01f32;
-    let stats = q.run_stats(&g, g_min).unwrap();
-    // Rust-side reference.
-    let mut n = 0f64;
-    let mut slog = 0f64;
-    let mut sabs = 0f64;
-    let mut ssq = 0f64;
-    let mut amax = 0f32;
-    for &x in &g {
-        let a = x.abs();
-        if a > g_min {
-            n += 1.0;
-            slog += (a as f64 / g_min as f64).ln();
+    #[test]
+    #[ignore = "requires AOT artifacts and linked PJRT runtime"]
+    fn pallas_codebook_parity_bitexact() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let q = QuantExec::new(&rt, "quant_nonuniform_b3").unwrap();
+        let mut rng = Rng::new(6);
+        let g: Vec<f32> =
+            (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let u: Vec<f32> = (0..q.tile).map(|_| rng.f32()).collect();
+        let m = tqsgd::tail::PowerLawModel::new(4.0, 0.01, 0.1);
+        let alpha = tqsgd::solver::optimal_alpha_nonuniform(&m, 7);
+        let cb = tqsgd::solver::nonuniform_codebook(&m, alpha, 7);
+        let (_deq, idx) = q.run_codebook(&g, &u, &cb).unwrap();
+        let mut rust_idx = Vec::new();
+        quantize_codebook_slice(&g, &u, &cb, &mut rust_idx);
+        let mismatches = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
+        assert_eq!(mismatches, 0, "{mismatches} codebook index mismatches");
+    }
+
+    #[test]
+    #[ignore = "requires AOT artifacts and linked PJRT runtime"]
+    fn pallas_tail_stats_matches_rust() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let q = QuantExec::new(&rt, "tail_stats").unwrap();
+        let mut rng = Rng::new(8);
+        let g: Vec<f32> =
+            (0..q.tile).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let g_min = 0.01f32;
+        let stats = q.run_stats(&g, g_min).unwrap();
+        // Rust-side reference is the native kernel — same contract.
+        let native = super::native();
+        let want = native.quant_kernel("tail_stats").unwrap().run_stats(&g, g_min).unwrap();
+        assert_eq!(stats.len(), want.len());
+        for (i, (&a, &b)) in stats.iter().zip(&want).enumerate() {
+            let denom = (b.abs()).max(1.0);
+            assert!(((a - b) / denom).abs() < 1e-3, "stat {i}: {a} vs {b}");
         }
-        sabs += a as f64;
-        ssq += (x as f64) * (x as f64);
-        amax = amax.max(a);
     }
-    assert_eq!(stats.len(), 5);
-    assert!((stats[0] as f64 - n).abs() < 0.5, "n: {} vs {n}", stats[0]);
-    assert!((stats[1] as f64 - slog).abs() / slog < 1e-3);
-    assert!((stats[2] as f64 - sabs).abs() / sabs < 1e-3);
-    assert!((stats[3] as f64 - ssq).abs() / ssq < 1e-2);
-    assert!((stats[4] - amax).abs() < 1e-6);
-    // MLE from kernel stats recovers gamma ≈ 4.
-    let gamma_hat = 1.0 + stats[0] as f64 / stats[1] as f64;
-    assert!((gamma_hat - 4.0).abs() < 0.3, "gamma_hat {gamma_hat}");
-}
 
-#[test]
-fn cnn_gradients_are_heavy_tailed() {
-    // The paper's empirical premise (Fig. 1), as a regression test: after a
-    // few rounds the fc-group gradient's power-law fit beats Gaussian by a
-    // wide KS margin.
-    let rt = Runtime::open(artifacts_dir()).unwrap();
-    let mut cfg = small_cfg("cnn", Scheme::Dsgd);
-    cfg.rounds = 8;
-    cfg.clients = 4;
-    let mut coord = Coordinator::new(cfg, &rt).unwrap();
-    for _ in 0..8 {
-        coord.step().unwrap();
+    #[test]
+    #[ignore = "requires AOT artifacts and linked PJRT runtime"]
+    fn cnn_gradients_are_heavy_tailed() {
+        let backend = PjrtBackend::open(artifacts_dir()).unwrap();
+        let mut cfg = pjrt_cfg("cnn", Scheme::Dsgd);
+        cfg.rounds = 8;
+        cfg.clients = 4;
+        let mut coord = Coordinator::new(cfg, &backend).unwrap();
+        for _ in 0..8 {
+            coord.step().unwrap();
+        }
+        let spec = coord.model_spec().clone();
+        let grads = coord.last_aggregate();
+        let fc = spec.groups.iter().find(|g| g.group == "fc").unwrap();
+        let xs = &grads[fc.start..fc.end];
+        let pl = tqsgd::tail::fit_power_law(xs).expect("fit");
+        let ga = tqsgd::tail::fit_gaussian(xs);
+        assert!(
+            pl.ks < 0.1 && ga.ks > 2.0 * pl.ks,
+            "power-law KS {} vs gaussian KS {}",
+            pl.ks,
+            ga.ks
+        );
     }
-    let spec = coord.model_spec().clone();
-    let grads = coord.last_aggregate();
-    let fc = spec.groups.iter().find(|g| g.group == "fc").unwrap();
-    let xs = &grads[fc.start..fc.end];
-    let pl = tqsgd::tail::fit_power_law(xs).expect("fit");
-    let ga = tqsgd::tail::fit_gaussian(xs);
-    assert!(
-        pl.ks < 0.1 && ga.ks > 2.0 * pl.ks,
-        "power-law KS {} vs gaussian KS {}",
-        pl.ks,
-        ga.ks
-    );
 }
