@@ -108,6 +108,177 @@ impl Default for QuantConfig {
     }
 }
 
+/// Deterministic perturbations layered onto each training round by the
+/// coordinator's scenario engine: compute stragglers, lossy uplinks with
+/// retransmits, client churn, bounded-staleness aggregation, and non-IID
+/// sharding. All fields compose freely; the named presets
+/// (`clean | straggler | lossy | churn | stale | noniid`) are starting
+/// points, not modes. Every perturbation draws from a dedicated per-scenario
+/// RNG stream keyed on the experiment seed, so runs are bit-reproducible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    /// Preset label this config started from (for logs / run ids).
+    pub name: String,
+    /// Fraction of clients that are compute stragglers (rounded to a count).
+    pub straggler_frac: f64,
+    /// Uplink-time multiplier applied to straggler clients (>= 1).
+    pub straggler_mult: f64,
+    /// Per-attempt probability an uplink frame is lost and must be resent.
+    pub loss_prob: f64,
+    /// Retransmits allowed per frame per round before it counts as lost.
+    pub max_retries: u32,
+    /// Per-round probability an active client drops out.
+    pub dropout_prob: f64,
+    /// Per-round probability a dropped client rejoins.
+    pub rejoin_prob: f64,
+    /// Bounded staleness: the server steps after the first K uplinks of the
+    /// round; later frames apply next round with decayed weight. 0 = fully
+    /// synchronous (K = N); values above the surviving-client count clamp.
+    pub stale_k: usize,
+    /// Aggregation-weight decay per round of staleness, in (0, 1].
+    pub stale_decay: f64,
+    /// Dirichlet concentration for label-skew (non-IID) sharding of the
+    /// vision dataset; 0 = IID contiguous shards. Smaller = more skew.
+    pub noniid_alpha: f64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            name: "clean".into(),
+            straggler_frac: 0.0,
+            straggler_mult: 1.0,
+            loss_prob: 0.0,
+            max_retries: 3,
+            dropout_prob: 0.0,
+            rejoin_prob: 0.0,
+            stale_k: 0,
+            stale_decay: 1.0,
+            noniid_alpha: 0.0,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// All preset names, in presentation order.
+    pub fn preset_names() -> [&'static str; 6] {
+        ["clean", "straggler", "lossy", "churn", "stale", "noniid"]
+    }
+
+    /// Named scenario presets (see README §Scenarios).
+    pub fn preset(name: &str) -> Result<ScenarioConfig> {
+        let mut s = ScenarioConfig { name: name.to_string(), ..Default::default() };
+        match name {
+            "clean" => {}
+            "straggler" => {
+                s.straggler_frac = 0.25;
+                s.straggler_mult = 8.0;
+            }
+            "lossy" => {
+                s.loss_prob = 0.2;
+                s.max_retries = 5;
+            }
+            "churn" => {
+                s.dropout_prob = 0.15;
+                s.rejoin_prob = 0.5;
+            }
+            "stale" => {
+                s.stale_k = 3;
+                s.stale_decay = 0.5;
+            }
+            "noniid" => {
+                s.noniid_alpha = 0.3;
+            }
+            other => bail!(
+                "unknown scenario {other:?}; presets: {}",
+                Self::preset_names().join(" ")
+            ),
+        }
+        Ok(s)
+    }
+
+    /// Is every perturbation switched off (behaviourally identical to the
+    /// synchronous happy path)?
+    pub fn is_clean(&self) -> bool {
+        self.straggler_frac == 0.0
+            && self.loss_prob == 0.0
+            && self.dropout_prob == 0.0
+            && self.rejoin_prob == 0.0
+            && self.stale_k == 0
+            && self.noniid_alpha == 0.0
+    }
+
+    /// Validate field ranges.
+    pub fn validate(&self) -> Result<()> {
+        for (label, p) in [
+            ("straggler_frac", self.straggler_frac),
+            ("loss_prob", self.loss_prob),
+            ("dropout_prob", self.dropout_prob),
+            ("rejoin_prob", self.rejoin_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("scenario {label} must be in [0, 1], got {p}");
+            }
+        }
+        if self.loss_prob >= 1.0 {
+            bail!("scenario loss_prob must be < 1");
+        }
+        if self.straggler_mult < 1.0 || !self.straggler_mult.is_finite() {
+            bail!("scenario straggler_mult must be >= 1, got {}", self.straggler_mult);
+        }
+        if !(self.stale_decay > 0.0 && self.stale_decay <= 1.0) {
+            bail!("scenario stale_decay must be in (0, 1], got {}", self.stale_decay);
+        }
+        if self.noniid_alpha < 0.0 || !self.noniid_alpha.is_finite() {
+            bail!("scenario noniid_alpha must be >= 0, got {}", self.noniid_alpha);
+        }
+        Ok(())
+    }
+
+    /// JSON object for the `scenario` block of a config file.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("straggler_frac", json::num(self.straggler_frac)),
+            ("straggler_mult", json::num(self.straggler_mult)),
+            ("loss_prob", json::num(self.loss_prob)),
+            ("max_retries", json::num(self.max_retries as f64)),
+            ("dropout_prob", json::num(self.dropout_prob)),
+            ("rejoin_prob", json::num(self.rejoin_prob)),
+            ("stale_k", json::num(self.stale_k as f64)),
+            ("stale_decay", json::num(self.stale_decay)),
+            ("noniid_alpha", json::num(self.noniid_alpha)),
+        ])
+    }
+
+    /// Parse a `scenario` block (missing fields keep their defaults).
+    pub fn from_json(v: &Value) -> Result<ScenarioConfig> {
+        let mut s = ScenarioConfig::default();
+        if let Some(n) = v.get("name").and_then(Value::as_str) {
+            s.name = n.to_string();
+        }
+        let getf = |key: &str, dflt: f64| v.get(key).and_then(Value::as_f64).unwrap_or(dflt);
+        s.straggler_frac = getf("straggler_frac", s.straggler_frac);
+        s.straggler_mult = getf("straggler_mult", s.straggler_mult);
+        s.loss_prob = getf("loss_prob", s.loss_prob);
+        // Counts must fail loudly on negatives rather than saturate to 0
+        // (`-3 as usize` would silently mean "synchronous").
+        let max_retries = getf("max_retries", s.max_retries as f64);
+        let stale_k = getf("stale_k", s.stale_k as f64);
+        if max_retries < 0.0 || stale_k < 0.0 {
+            bail!("scenario max_retries/stale_k must be >= 0");
+        }
+        s.max_retries = max_retries as u32;
+        s.stale_k = stale_k as usize;
+        s.dropout_prob = getf("dropout_prob", s.dropout_prob);
+        s.rejoin_prob = getf("rejoin_prob", s.rejoin_prob);
+        s.stale_decay = getf("stale_decay", s.stale_decay);
+        s.noniid_alpha = getf("noniid_alpha", s.noniid_alpha);
+        s.validate()?;
+        Ok(s)
+    }
+}
+
 /// Simulated-network model for the wire between clients and server.
 #[derive(Clone, Copy, Debug)]
 pub struct NetConfig {
@@ -149,6 +320,9 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub quant: QuantConfig,
     pub net: NetConfig,
+    /// Round-perturbation scenario (stragglers, loss, churn, staleness,
+    /// non-IID sharding). Defaults to the clean synchronous path.
+    pub scenario: ScenarioConfig,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
     /// Compute backend: "auto" (pjrt when built + artifacts exist, else
@@ -174,6 +348,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             quant: QuantConfig::default(),
             net: NetConfig::default(),
+            scenario: ScenarioConfig::default(),
             artifacts_dir: "artifacts".into(),
             backend: "auto".into(),
             drop_client: usize::MAX,
@@ -242,6 +417,7 @@ impl ExperimentConfig {
         if !matches!(self.backend.as_str(), "auto" | "native" | "pjrt") {
             bail!("backend must be auto | native | pjrt, got {:?}", self.backend);
         }
+        self.scenario.validate()?;
         Ok(())
     }
 
@@ -275,6 +451,21 @@ impl ExperimentConfig {
             self.backend = b.to_string();
         }
         self.drop_client = args.usize_or("drop-client", self.drop_client)?;
+        // Scenario: `--scenario <preset>` selects a base, then freeform
+        // flags override individual fields on top of it.
+        if let Some(name) = args.get("scenario") {
+            self.scenario = ScenarioConfig::preset(name)?;
+        }
+        let sc = &mut self.scenario;
+        sc.straggler_frac = args.f64_or("straggler-frac", sc.straggler_frac)?;
+        sc.straggler_mult = args.f64_or("straggler-mult", sc.straggler_mult)?;
+        sc.loss_prob = args.f64_or("loss-prob", sc.loss_prob)?;
+        sc.max_retries = args.usize_or("max-retries", sc.max_retries as usize)? as u32;
+        sc.dropout_prob = args.f64_or("dropout-prob", sc.dropout_prob)?;
+        sc.rejoin_prob = args.f64_or("rejoin-prob", sc.rejoin_prob)?;
+        sc.stale_k = args.usize_or("stale-k", sc.stale_k)?;
+        sc.stale_decay = args.f64_or("stale-decay", sc.stale_decay)?;
+        sc.noniid_alpha = args.f64_or("noniid-alpha", sc.noniid_alpha)?;
         self.validate()
     }
 
@@ -316,6 +507,7 @@ impl ExperimentConfig {
                     ("latency_sec", json::num(self.net.latency_sec)),
                 ]),
             ),
+            ("scenario", self.scenario.to_json()),
         ])
     }
 
@@ -366,6 +558,9 @@ impl ExperimentConfig {
                 .unwrap_or(0.0);
             cfg.net.latency_sec = n.get("latency_sec").and_then(Value::as_f64).unwrap_or(0.0);
         }
+        if let Some(sc) = v.get("scenario") {
+            cfg.scenario = ScenarioConfig::from_json(sc)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -381,15 +576,21 @@ impl ExperimentConfig {
             .with_context(|| format!("writing config {path:?}"))
     }
 
-    /// Short human id used in logs: `cnn/tnqsgd/b3/N8`.
+    /// Short human id used in logs: `cnn/tnqsgd/b3/N8`, with an `@scenario`
+    /// suffix whenever the run is perturbed.
     pub fn id(&self) -> String {
-        format!(
+        let base = format!(
             "{}/{}/b{}/N{}",
             self.model,
             self.quant.scheme.name(),
             self.quant.bits,
             self.clients
-        )
+        );
+        if self.scenario.is_clean() {
+            base
+        } else {
+            format!("{base}@{}", self.scenario.name)
+        }
     }
 }
 
@@ -470,6 +671,68 @@ mod tests {
         c.clients = 2;
         c.quant.topk_frac = 2.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_presets_parse_and_validate() {
+        for name in ScenarioConfig::preset_names() {
+            let s = ScenarioConfig::preset(name).unwrap();
+            assert_eq!(s.name, name);
+            s.validate().unwrap();
+        }
+        assert!(ScenarioConfig::preset("mars-attack").is_err());
+        assert!(ScenarioConfig::preset("clean").unwrap().is_clean());
+        assert!(!ScenarioConfig::preset("lossy").unwrap().is_clean());
+    }
+
+    #[test]
+    fn scenario_validation_rejects_nonsense() {
+        let s = ScenarioConfig { loss_prob: 1.5, ..Default::default() };
+        assert!(s.validate().is_err());
+        let s = ScenarioConfig { straggler_mult: 0.5, ..Default::default() };
+        assert!(s.validate().is_err());
+        let s = ScenarioConfig { stale_decay: 0.0, ..Default::default() };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_json_roundtrip() {
+        let scenario = ScenarioConfig {
+            stale_k: 5,
+            noniid_alpha: 0.25,
+            ..ScenarioConfig::preset("lossy").unwrap()
+        };
+        let c = ExperimentConfig { scenario, ..Default::default() };
+        let j = c.to_json().to_json();
+        let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.scenario, c.scenario);
+    }
+
+    #[test]
+    fn scenario_json_rejects_negative_counts() {
+        for j in [
+            r#"{"scenario": {"stale_k": -3}}"#,
+            r#"{"scenario": {"max_retries": -1}}"#,
+        ] {
+            let v = Value::parse(j).unwrap();
+            assert!(ExperimentConfig::from_json(&v).is_err(), "{j} must not saturate to 0");
+        }
+    }
+
+    #[test]
+    fn scenario_cli_flags() {
+        let mut c = ExperimentConfig::default();
+        let args = crate::cli::Args::parse(
+            ["x", "--scenario", "stale", "--stale-k", "2", "--loss-prob", "0.1"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.scenario.name, "stale");
+        assert_eq!(c.scenario.stale_k, 2, "freeform flag overrides the preset");
+        assert_eq!(c.scenario.loss_prob, 0.1, "fields compose across presets");
+        assert!(c.id().ends_with("@stale"), "{}", c.id());
     }
 
     #[test]

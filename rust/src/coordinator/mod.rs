@@ -18,10 +18,17 @@
 //! work fans out over `std::thread::scope`. Each (client, layer-group) pair
 //! owns an independent quantizer state whose tail model is re-fitted every
 //! `estimate_every` rounds — exactly the paper's per-layer γ estimation (§V).
+//!
+//! Degraded-mode rounds (stragglers, lossy uplinks, churn, bounded
+//! staleness, non-IID shards) are injected by the [`scenario`] engine from
+//! the experiment's `ScenarioConfig`; the clean preset reproduces the
+//! synchronous loop above bit-for-bit.
 
 pub mod network;
+pub mod scenario;
 
-pub use network::{Message, SimNet};
+pub use network::{LinkCondition, Message, SimNet, UplinkReport};
+pub use scenario::ScenarioEngine;
 
 use anyhow::{anyhow, Result};
 
@@ -51,6 +58,14 @@ impl GroupCodec {
         match self {
             GroupCodec::Plain(c) => c.compress(grads, rng),
             GroupCodec::Ef(c) => c.compress_with_feedback(grads, rng),
+        }
+    }
+
+    /// The network lost this frame for good: EF codecs fold it back into the
+    /// residual (plain codecs have no state to repair).
+    fn restore_lost(&mut self, frame: &[u8]) {
+        if let GroupCodec::Ef(c) = self {
+            c.restore_lost(frame);
         }
     }
 
@@ -131,6 +146,14 @@ impl Client {
         Message { client: self.id, round, frames, loss }
     }
 
+    /// Re-fold an undeliverable message into this client's error-feedback
+    /// residuals so its gradient mass survives to the next round.
+    fn restore_lost(&mut self, msg: &Message) {
+        for (gi, frame) in &msg.frames {
+            self.codecs[*gi].restore_lost(frame);
+        }
+    }
+
     /// One-line description of each layer group's codec state.
     pub fn describe_codecs(&self) -> Vec<String> {
         self.codecs.iter().map(|c| c.describe()).collect()
@@ -150,6 +173,8 @@ pub struct Coordinator<'b> {
     opt: MomentumSgd,
     /// Simulated uplink network (accounts real wire bytes).
     pub net: SimNet,
+    /// Scenario engine: per-round churn/straggler/loss/staleness decisions.
+    pub scenario: ScenarioEngine,
     groups: Vec<GroupRange>,
     test: Option<Dataset>,
     lm_eval_corpus: Option<MarkovCorpus>,
@@ -175,8 +200,19 @@ impl<'b> Coordinator<'b> {
             let train = crate::data::mnist_like_split(cfg.train_size, cfg.seed, 0);
             test = Some(crate::data::mnist_like_split(cfg.test_size, cfg.seed, 1));
             let total = train.len() as f64;
-            for i in 0..cfg.clients {
-                let shard = train.shard(i, cfg.clients);
+            // IID contiguous shards, or Dirichlet label-skew under the
+            // non-IID scenario.
+            let shards: Vec<Dataset> = if cfg.scenario.noniid_alpha > 0.0 {
+                crate::data::dirichlet_shards(
+                    &train,
+                    cfg.clients,
+                    cfg.scenario.noniid_alpha,
+                    cfg.seed,
+                )
+            } else {
+                (0..cfg.clients).map(|i| train.shard(i, cfg.clients)).collect()
+            };
+            for (i, shard) in shards.into_iter().enumerate() {
                 let weight = shard.len() as f64 / total;
                 clients.push(Client {
                     id: i,
@@ -187,7 +223,15 @@ impl<'b> Coordinator<'b> {
                 });
             }
         } else {
-            // LM task: every client samples from the same chain (IID).
+            // LM task: every client samples from the same chain (IID) —
+            // label-skew sharding has no meaning here, so reject it rather
+            // than silently logging an "@noniid" run that never skewed.
+            if cfg.scenario.noniid_alpha > 0.0 {
+                return Err(anyhow!(
+                    "noniid scenario requires a classifier task; \
+                     LM clients sample a shared corpus"
+                ));
+            }
             let alphabet = spec.vocab.min(64).max(2);
             for i in 0..cfg.clients {
                 clients.push(Client {
@@ -207,6 +251,7 @@ impl<'b> Coordinator<'b> {
         let dim = params.len();
         Ok(Coordinator {
             net: SimNet::new(cfg.net),
+            scenario: ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed),
             groups: spec.groups.clone(),
             spec,
             cfg,
@@ -244,11 +289,20 @@ impl<'b> Coordinator<'b> {
         let round = self.round;
         let train_batch = self.spec.train_batch;
 
-        // 1. Local gradients (backend on this thread; PJRT/XLA parallelizes
-        //    inside, the native path is cheap scalar math).
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.clients.len());
-        let mut losses: Vec<f32> = Vec::with_capacity(self.clients.len());
-        for c in self.clients.iter_mut() {
+        // 0. Scenario: churn decides who participates this round.
+        let active = self.scenario.begin_round(round as u64);
+        let mut active_set = vec![false; self.clients.len()];
+        for &i in &active {
+            active_set[i] = true;
+        }
+
+        // 1. Local gradients for participating clients (backend on this
+        //    thread; PJRT/XLA parallelizes inside, the native path is cheap
+        //    scalar math).
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(active.len());
+        let mut losses: Vec<f32> = Vec::with_capacity(active.len());
+        for &ci in &active {
+            let c = &mut self.clients[ci];
             let (x, y) = c.next_batch(train_batch, self.cfg.seed, round as u64);
             let out = self.backend.grad(&self.cfg.model, &self.params, &x, &y)?;
             losses.push(out.loss);
@@ -260,54 +314,105 @@ impl<'b> Coordinator<'b> {
         let seed = self.cfg.seed;
         let groups = &self.groups;
         let msgs: Vec<Message> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(self.clients.len());
-            for (c, (g, l)) in self
-                .clients
-                .iter_mut()
-                .zip(grads.iter().zip(losses.iter()))
-            {
+            let mut handles = Vec::with_capacity(active.len());
+            let mut k = 0usize;
+            for (i, c) in self.clients.iter_mut().enumerate() {
+                if !active_set[i] {
+                    continue;
+                }
+                let g = &grads[k];
+                let loss = losses[k];
+                k += 1;
                 handles.push(scope.spawn(move || {
-                    c.compress(g, groups, round, seed, refit_now, *l)
+                    c.compress(g, groups, round, seed, refit_now, loss)
                 }));
             }
             handles.into_iter().map(|h| h.join().expect("codec thread")).collect()
         });
 
-        // 3. Uplink through the simulated network (fault injection drops a
-        //    client's message entirely — a crashed/straggling node).
-        let delivered: Vec<&Message> = msgs
-            .iter()
-            .filter(|m| m.client != self.cfg.drop_client)
-            .collect();
-        if delivered.is_empty() {
-            return Err(anyhow!("all clients dropped; nothing to aggregate"));
-        }
-        let owned: Vec<Message> = delivered.iter().map(|m| (*m).clone()).collect();
-        let (bytes_up, net_secs) = self.net.round_uplink(&owned);
-
-        // 4. Server: decode + weighted aggregate + optimizer step.
-        self.agg.iter_mut().for_each(|a| *a = 0.0);
-        let w_total: f64 = delivered.iter().map(|m| self.clients[m.client].weight).sum();
-        for m in &delivered {
-            let w = (self.clients[m.client].weight / w_total) as f32;
-            for (gi, frame) in &m.frames {
-                let g = &self.groups[*gi];
-                let decoded = crate::quant::wire::decode_dequantize(frame)?;
-                if decoded.len() != g.end - g.start {
-                    return Err(anyhow!(
-                        "frame length {} != group size {}",
-                        decoded.len(),
-                        g.end - g.start
-                    ));
+        // 3. Uplink through the simulated network. The legacy `drop_client`
+        //    fault kills one client's message outright; the scenario engine
+        //    injects packet loss (retransmits, possibly total loss) and
+        //    straggler latency multipliers per surviving message.
+        let mut delivered: Vec<Message> = Vec::with_capacity(msgs.len());
+        let mut conds: Vec<LinkCondition> = Vec::with_capacity(msgs.len());
+        let mut lost_bytes = 0u64;
+        for m in msgs {
+            if m.client == self.cfg.drop_client {
+                continue;
+            }
+            match self.scenario.link(m.client, round as u64) {
+                Some(cond) => {
+                    delivered.push(m);
+                    conds.push(cond);
                 }
-                for (a, &d) in self.agg[g.start..g.end].iter_mut().zip(&decoded) {
-                    *a += w * d;
+                // Fully lost: every attempt still burned wire bytes, and an
+                // EF client keeps the undelivered mass in its residual.
+                None => {
+                    lost_bytes += self.net.account_lost(&m, self.scenario.lost_attempts());
+                    self.clients[m.client].restore_lost(&m);
                 }
             }
         }
-        let agg = std::mem::take(&mut self.agg);
-        self.opt.step(&mut self.params, &agg);
-        self.agg = agg;
+        let dropped_clients = self.clients.len() - delivered.len();
+        let report = self.net.round_uplink_conditioned(&delivered, &conds);
+
+        // 3b. Bounded-staleness schedule: which frames apply now vs next
+        //     round (with decayed weight).
+        let arrivals: Vec<(Message, f64)> = delivered
+            .into_iter()
+            .zip(report.per_client.iter().map(|&(_, t)| t))
+            .collect();
+        // The server steps at the K-th arrival, so that — not the slowest
+        // client — is the round's communication time.
+        let (apply, net_secs) = self.scenario.schedule(arrivals);
+        // An empty apply set under packet loss is a transient wipeout: skip
+        // the update (θ unchanged) and keep training. Without loss in play
+        // it is structural (drop_client killed the whole federation) — fail.
+        if apply.is_empty() && self.cfg.scenario.loss_prob == 0.0 {
+            return Err(anyhow!("all clients dropped; nothing to aggregate"));
+        }
+        let mut staleness_hist: Vec<u32> = Vec::new();
+        for &(_, s) in &apply {
+            let s = s as usize;
+            if staleness_hist.len() <= s {
+                staleness_hist.resize(s + 1, 0);
+            }
+            staleness_hist[s] += 1;
+        }
+
+        // 4. Server: decode + weighted aggregate + optimizer step. Late
+        //    frames count with weight w_i * decay^staleness; for the
+        //    synchronous case every staleness is 0 and decay^0 = 1 exactly,
+        //    so this reduces bit-for-bit to the plain weighted mean.
+        if !apply.is_empty() {
+            self.agg.iter_mut().for_each(|a| *a = 0.0);
+            let w_total: f64 = apply
+                .iter()
+                .map(|(m, s)| self.clients[m.client].weight * self.scenario.stale_weight(*s))
+                .sum();
+            for (m, s) in &apply {
+                let w = ((self.clients[m.client].weight * self.scenario.stale_weight(*s))
+                    / w_total) as f32;
+                for (gi, frame) in &m.frames {
+                    let g = &self.groups[*gi];
+                    let decoded = crate::quant::wire::decode_dequantize(frame)?;
+                    if decoded.len() != g.end - g.start {
+                        return Err(anyhow!(
+                            "frame length {} != group size {}",
+                            decoded.len(),
+                            g.end - g.start
+                        ));
+                    }
+                    for (a, &d) in self.agg[g.start..g.end].iter_mut().zip(&decoded) {
+                        *a += w * d;
+                    }
+                }
+            }
+            let agg = std::mem::take(&mut self.agg);
+            self.opt.step(&mut self.params, &agg);
+            self.agg = agg;
+        }
 
         let train_loss =
             losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64;
@@ -315,11 +420,14 @@ impl<'b> Coordinator<'b> {
         Ok(RoundRecord {
             round,
             train_loss,
-            bytes_up,
+            bytes_up: report.bytes,
             test_loss: None,
             test_accuracy: None,
             secs: timer.secs(),
             net_secs,
+            dropped_clients,
+            retransmitted_bytes: report.retransmitted_bytes + lost_bytes,
+            staleness_hist,
         })
     }
 

@@ -4,6 +4,12 @@
 //! for them and models transfer time under a bandwidth/latency model.  The
 //! paper's communication budget is bits-per-element-per-round; the benches
 //! read `bytes_up` directly from here.
+//!
+//! Scenario support: each uplink can carry a [`LinkCondition`] — a latency
+//! multiplier (compute/network straggler) and an attempt count (packet loss
+//! with retransmits). The per-round [`UplinkReport`] surfaces *per-client*
+//! communication time (not just the max), so straggler scenarios can report
+//! tail latency, plus the bytes burned on retransmissions.
 
 use crate::config::NetConfig;
 
@@ -32,36 +38,100 @@ impl Message {
     }
 }
 
+/// Per-uplink transmission conditions injected by the scenario engine.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkCondition {
+    /// Multiplier on this client's transfer time (stragglers > 1).
+    pub latency_mult: f64,
+    /// Transmissions needed for delivery (1 = first try; n > 1 means n − 1
+    /// lost attempts were re-sent and accounted as retransmitted bytes).
+    pub attempts: u32,
+}
+
+impl Default for LinkCondition {
+    fn default() -> Self {
+        LinkCondition { latency_mult: 1.0, attempts: 1 }
+    }
+}
+
+/// What one round of uplinks cost.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UplinkReport {
+    /// Goodput: bytes of frames that arrived (excludes retransmissions).
+    pub bytes: u64,
+    /// Extra bytes burned re-sending lost attempts.
+    pub retransmitted_bytes: u64,
+    /// Simulated wall-clock seconds for the round (slowest client).
+    pub secs: f64,
+    /// Per-client simulated seconds, in message order: (client id, secs).
+    pub per_client: Vec<(usize, f64)>,
+}
+
 /// Accounting + latency model for one round of uplinks.
 pub struct SimNet {
     cfg: NetConfig,
     pub total_bytes_up: u64,
+    /// Cumulative retransmitted bytes across the run.
+    pub total_retransmitted: u64,
 }
 
 impl SimNet {
     pub fn new(cfg: NetConfig) -> Self {
-        SimNet { cfg, total_bytes_up: 0 }
+        SimNet { cfg, total_bytes_up: 0, total_retransmitted: 0 }
     }
 
-    /// Register a round's uplink messages; returns the simulated wall-clock
-    /// seconds the round spends in communication. Clients upload in
-    /// parallel, so round time = max over clients (latency + bytes / bw).
-    pub fn round_uplink(&mut self, msgs: &[Message]) -> (u64, f64) {
-        let mut round_bytes = 0u64;
-        let mut slowest = 0.0f64;
-        for m in msgs {
+    /// Seconds for ONE transmission attempt of `bytes` on a clean link:
+    /// `latency + bytes / bandwidth`. Clients upload in parallel, so the
+    /// round's communication time is the max of this over clients.
+    pub fn attempt_secs(&self, bytes: u64) -> f64 {
+        self.cfg.latency_sec
+            + if self.cfg.bandwidth_bytes_per_sec > 0.0 {
+                bytes as f64 / self.cfg.bandwidth_bytes_per_sec
+            } else {
+                0.0
+            }
+    }
+
+    /// Register a round's uplinks under ideal conditions (no stragglers, no
+    /// loss). Equivalent to [`Self::round_uplink_conditioned`] with default
+    /// [`LinkCondition`]s.
+    pub fn round_uplink(&mut self, msgs: &[Message]) -> UplinkReport {
+        self.round_uplink_conditioned(msgs, &vec![LinkCondition::default(); msgs.len()])
+    }
+
+    /// Register a round's uplink messages under per-client conditions.
+    /// `conds` must be parallel to `msgs`. Each client's time is
+    /// `attempts * latency_mult * (latency + bytes / bw)`; the round spends
+    /// the max over clients in communication (parallel uplinks).
+    pub fn round_uplink_conditioned(
+        &mut self,
+        msgs: &[Message],
+        conds: &[LinkCondition],
+    ) -> UplinkReport {
+        assert_eq!(msgs.len(), conds.len(), "one LinkCondition per message");
+        let mut rep = UplinkReport::default();
+        for (m, c) in msgs.iter().zip(conds) {
             let b = m.wire_bytes();
-            round_bytes += b;
-            let t = self.cfg.latency_sec
-                + if self.cfg.bandwidth_bytes_per_sec > 0.0 {
-                    b as f64 / self.cfg.bandwidth_bytes_per_sec
-                } else {
-                    0.0
-                };
-            slowest = slowest.max(t);
+            let resent = b * (c.attempts.max(1) as u64 - 1);
+            let t = c.attempts.max(1) as f64 * c.latency_mult * self.attempt_secs(b);
+            rep.bytes += b;
+            rep.retransmitted_bytes += resent;
+            rep.secs = rep.secs.max(t);
+            rep.per_client.push((m.client, t));
         }
-        self.total_bytes_up += round_bytes;
-        (round_bytes, slowest)
+        self.total_bytes_up += rep.bytes + rep.retransmitted_bytes;
+        self.total_retransmitted += rep.retransmitted_bytes;
+        rep
+    }
+
+    /// Account a frame that never arrived: all `attempts` transmissions hit
+    /// the wire and were wasted. Returns the wasted bytes so the caller can
+    /// fold them into the round's retransmission column.
+    pub fn account_lost(&mut self, msg: &Message, attempts: u32) -> u64 {
+        let wasted = msg.wire_bytes() * attempts as u64;
+        self.total_bytes_up += wasted;
+        self.total_retransmitted += wasted;
+        wasted
     }
 }
 
@@ -69,34 +139,76 @@ impl SimNet {
 mod tests {
     use super::*;
 
-    fn msg(bytes: usize) -> Message {
-        Message { client: 0, round: 0, frames: vec![(0, vec![0u8; bytes])], loss: 0.0 }
+    fn msg(client: usize, bytes: usize) -> Message {
+        Message { client, round: 0, frames: vec![(0, vec![0u8; bytes])], loss: 0.0 }
     }
 
     #[test]
     fn wire_bytes_counts_everything() {
-        let m = msg(100);
+        let m = msg(0, 100);
         assert_eq!(m.wire_bytes(), 16 + 4 + 100);
     }
 
     #[test]
     fn accounting_accumulates() {
         let mut net = SimNet::new(NetConfig::default());
-        let (b, t) = net.round_uplink(&[msg(100), msg(50)]);
-        assert_eq!(b, (16 + 4 + 100) + (16 + 4 + 50));
-        assert_eq!(t, 0.0);
-        net.round_uplink(&[msg(10)]);
-        assert_eq!(net.total_bytes_up, b + 16 + 4 + 10);
+        let rep = net.round_uplink(&[msg(0, 100), msg(1, 50)]);
+        assert_eq!(rep.bytes, (16 + 4 + 100) + (16 + 4 + 50));
+        assert_eq!(rep.secs, 0.0);
+        assert_eq!(rep.retransmitted_bytes, 0);
+        net.round_uplink(&[msg(0, 10)]);
+        assert_eq!(net.total_bytes_up, rep.bytes + 16 + 4 + 10);
+        assert_eq!(net.total_retransmitted, 0);
     }
 
     #[test]
-    fn latency_model_takes_slowest() {
+    fn latency_model_takes_slowest_and_reports_per_client() {
+        // Pin the parallel-uplink formula: t_i = latency + bytes_i / bw,
+        // round time = max_i t_i.
         let mut net = SimNet::new(NetConfig {
             bandwidth_bytes_per_sec: 1000.0,
             latency_sec: 0.01,
         });
-        let (_, t) = net.round_uplink(&[msg(1000), msg(10)]);
-        // slowest message: (16 + 4 + 1000) bytes at 1000 B/s + 10ms latency.
-        assert!((t - (0.01 + 1020.0 / 1000.0)).abs() < 1e-9);
+        let rep = net.round_uplink(&[msg(3, 1000), msg(7, 10)]);
+        let t_big = 0.01 + 1020.0 / 1000.0;
+        let t_small = 0.01 + 30.0 / 1000.0;
+        assert!((rep.secs - t_big).abs() < 1e-9);
+        assert_eq!(rep.per_client.len(), 2);
+        assert_eq!(rep.per_client[0].0, 3);
+        assert!((rep.per_client[0].1 - t_big).abs() < 1e-9);
+        assert_eq!(rep.per_client[1].0, 7);
+        assert!(
+            (rep.per_client[1].1 - t_small).abs() < 1e-9,
+            "per-client time must be the client's own, not the max"
+        );
+    }
+
+    #[test]
+    fn conditions_scale_time_and_account_retransmits() {
+        let mut net = SimNet::new(NetConfig {
+            bandwidth_bytes_per_sec: 1000.0,
+            latency_sec: 0.01,
+        });
+        let conds = [
+            LinkCondition { latency_mult: 4.0, attempts: 1 }, // straggler
+            LinkCondition { latency_mult: 1.0, attempts: 3 }, // two lost attempts
+        ];
+        let rep = net.round_uplink_conditioned(&[msg(0, 100), msg(1, 100)], &conds);
+        let one = 0.01 + 120.0 / 1000.0;
+        assert!((rep.per_client[0].1 - 4.0 * one).abs() < 1e-9);
+        assert!((rep.per_client[1].1 - 3.0 * one).abs() < 1e-9);
+        assert_eq!(rep.bytes, 2 * 120);
+        assert_eq!(rep.retransmitted_bytes, 2 * 120, "two re-sent copies of one frame");
+        assert_eq!(net.total_bytes_up, 4 * 120, "wire total includes retransmits");
+        assert_eq!(net.total_retransmitted, 240);
+    }
+
+    #[test]
+    fn lost_frames_account_every_attempt() {
+        let mut net = SimNet::new(NetConfig::default());
+        let wasted = net.account_lost(&msg(0, 100), 4);
+        assert_eq!(wasted, 4 * (16 + 4 + 100));
+        assert_eq!(net.total_bytes_up, wasted);
+        assert_eq!(net.total_retransmitted, wasted);
     }
 }

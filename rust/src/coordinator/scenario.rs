@@ -1,0 +1,313 @@
+//! Scenario engine: deterministic, seeded perturbations composed onto each
+//! training round.
+//!
+//! The happy-path loop of Algorithm 1 assumes N well-behaved synchronous
+//! clients; production federations have none of that. This module turns one
+//! [`ScenarioConfig`] into per-round decisions:
+//!
+//! * **churn** — clients drop out / rejoin round to round (the server
+//!   reweights surviving frames),
+//! * **stragglers** — a fixed subset of clients uploads slower by a
+//!   multiplier (tail latency visible via `SimNet`'s per-client times),
+//! * **packet loss** — each uplink frame needs a geometric number of
+//!   attempts; past `max_retries` the frame is lost for the round,
+//! * **bounded staleness** — the server steps after the first K arrivals;
+//!   late frames apply next round with weight decayed by `stale_decay`.
+//!
+//! Every decision draws from its own `Rng::for_stream(seed, ROLE, client,
+//! round)` stream, so (a) runs are bit-reproducible and (b) toggling one
+//! perturbation never shifts another's draws. With `stale_k >= N` the
+//! schedule degenerates to the synchronous path *bit-for-bit*: the apply
+//! set, weights (decay^0 = 1 exactly) and f32 aggregation order all match
+//! the clean run — asserted by the integration suite.
+
+use crate::config::ScenarioConfig;
+use crate::util::Rng;
+
+use super::network::{LinkCondition, Message};
+
+/// Stream roles (see `util::rng` docs): one per perturbation kind so the
+/// draws are independent.
+const ROLE_STRAGGLER: u64 = 0x5C_E1;
+const ROLE_CHURN: u64 = 0x5C_E2;
+const ROLE_LOSS: u64 = 0x5C_E3;
+
+/// A frame held back by the bounded-staleness scheduler.
+#[derive(Clone, Debug)]
+struct LateFrame {
+    msg: Message,
+    /// Rounds the frame has been delayed so far (>= 1 once pending).
+    staleness: u32,
+}
+
+/// Per-run scenario state: churn membership, straggler assignment and the
+/// late-frame queue.
+pub struct ScenarioEngine {
+    cfg: ScenarioConfig,
+    seed: u64,
+    /// Churn state per client (true = participating).
+    active: Vec<bool>,
+    /// Fixed straggler assignment per client.
+    slow: Vec<bool>,
+    pending: Vec<LateFrame>,
+}
+
+impl ScenarioEngine {
+    /// Build the engine for `n` clients. The straggler subset is chosen by a
+    /// dedicated seeded shuffle, so it is stable for a (seed, n) pair.
+    pub fn new(cfg: ScenarioConfig, n: usize, seed: u64) -> Self {
+        assert!(n >= 1);
+        let slow_count = ((cfg.straggler_frac * n as f64).round() as usize).min(n);
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::for_stream(seed, ROLE_STRAGGLER, 0, 0).shuffle(&mut order);
+        let mut slow = vec![false; n];
+        for &i in &order[..slow_count] {
+            slow[i] = true;
+        }
+        ScenarioEngine { cfg, seed, active: vec![true; n], slow, pending: Vec::new() }
+    }
+
+    /// The scenario this engine runs.
+    pub fn config(&self) -> &ScenarioConfig {
+        &self.cfg
+    }
+
+    /// Advance churn state for `round` and return the participating client
+    /// ids (ascending). At least one client always participates.
+    pub fn begin_round(&mut self, round: u64) -> Vec<usize> {
+        let n = self.active.len();
+        if self.cfg.dropout_prob > 0.0 || self.cfg.rejoin_prob > 0.0 {
+            for (i, a) in self.active.iter_mut().enumerate() {
+                let u = Rng::for_stream(self.seed, ROLE_CHURN, i as u64, round).f64();
+                if *a {
+                    if u < self.cfg.dropout_prob {
+                        *a = false;
+                    }
+                } else if u < self.cfg.rejoin_prob {
+                    *a = true;
+                }
+            }
+            if !self.active.iter().any(|&a| a) {
+                // Never let the federation go dark: deterministically revive
+                // one client.
+                self.active[(round as usize) % n] = true;
+            }
+        }
+        (0..n).filter(|&i| self.active[i]).collect()
+    }
+
+    /// Clients currently dropped out.
+    pub fn dropped_count(&self) -> usize {
+        self.active.iter().filter(|&&a| !a).count()
+    }
+
+    /// Is this client a designated straggler?
+    pub fn is_straggler(&self, client: usize) -> bool {
+        self.slow[client]
+    }
+
+    /// Wire transmissions a fully-lost frame burned before the client gave
+    /// up: the initial attempt plus every retransmit.
+    pub fn lost_attempts(&self) -> u32 {
+        self.cfg.max_retries + 1
+    }
+
+    /// Uplink conditions for `client` this round, or `None` when the frame
+    /// is lost even after `max_retries` retransmits.
+    pub fn link(&self, client: usize, round: u64) -> Option<LinkCondition> {
+        let latency_mult = if self.slow[client] { self.cfg.straggler_mult } else { 1.0 };
+        if self.cfg.loss_prob <= 0.0 {
+            return Some(LinkCondition { latency_mult, attempts: 1 });
+        }
+        let mut rng = Rng::for_stream(self.seed, ROLE_LOSS, client as u64, round);
+        for attempt in 1..=self.cfg.max_retries + 1 {
+            if rng.f64() >= self.cfg.loss_prob {
+                return Some(LinkCondition { latency_mult, attempts: attempt });
+            }
+        }
+        None
+    }
+
+    /// Bounded-staleness scheduler. Input: this round's delivered messages
+    /// with their simulated uplink seconds. The first K arrivals (by time,
+    /// ties broken by client id) apply now; the rest join the pending queue
+    /// and apply next round with staleness 1. All previously pending frames
+    /// are drained into the apply set.
+    ///
+    /// The returned `(message, staleness)` list is sorted by (origin round,
+    /// client id) so the server's f32 aggregation order is deterministic —
+    /// and identical to the synchronous order when nothing is late.
+    ///
+    /// The second return value is the round's communication time: the K-th
+    /// arrival's seconds (the server steps then, not when the slowest frame
+    /// lands), which equals the plain max when nothing is deferred.
+    pub fn schedule(&mut self, arrived: Vec<(Message, f64)>) -> (Vec<(Message, u32)>, f64) {
+        let k = if self.cfg.stale_k == 0 {
+            arrived.len()
+        } else {
+            self.cfg.stale_k.min(arrived.len())
+        };
+        let mut order: Vec<usize> = (0..arrived.len()).collect();
+        order.sort_by(|&a, &b| {
+            arrived[a]
+                .1
+                .partial_cmp(&arrived[b].1)
+                .expect("uplink times are finite")
+                .then(arrived[a].0.client.cmp(&arrived[b].0.client))
+        });
+        let round_secs = if k > 0 { arrived[order[k - 1]].1 } else { 0.0 };
+        let late: Vec<bool> = {
+            let mut l = vec![false; arrived.len()];
+            for &i in order.iter().skip(k) {
+                l[i] = true;
+            }
+            l
+        };
+        let mut apply: Vec<(Message, u32)> =
+            self.pending.drain(..).map(|lf| (lf.msg, lf.staleness)).collect();
+        for (i, (m, _)) in arrived.into_iter().enumerate() {
+            if late[i] {
+                self.pending.push(LateFrame { msg: m, staleness: 1 });
+            } else {
+                apply.push((m, 0));
+            }
+        }
+        apply.sort_by(|a, b| a.0.round.cmp(&b.0.round).then(a.0.client.cmp(&b.0.client)));
+        (apply, round_secs)
+    }
+
+    /// Aggregation-weight multiplier for a frame `staleness` rounds old.
+    /// Exactly 1.0 for fresh frames, so the synchronous path is untouched.
+    pub fn stale_weight(&self, staleness: u32) -> f64 {
+        self.cfg.stale_decay.powi(staleness as i32)
+    }
+
+    /// Frames currently waiting in the late queue.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(client: usize, round: usize) -> Message {
+        Message { client, round, frames: vec![(0, vec![0u8; 8])], loss: 0.0 }
+    }
+
+    #[test]
+    fn clean_engine_is_inert() {
+        let mut e = ScenarioEngine::new(ScenarioConfig::default(), 4, 1);
+        for round in 0..5 {
+            assert_eq!(e.begin_round(round), vec![0, 1, 2, 3]);
+            for c in 0..4 {
+                let l = e.link(c, round).unwrap();
+                assert_eq!(l.attempts, 1);
+                assert_eq!(l.latency_mult, 1.0);
+            }
+        }
+        assert_eq!(e.dropped_count(), 0);
+    }
+
+    #[test]
+    fn straggler_assignment_is_sized_and_deterministic() {
+        let cfg = ScenarioConfig::preset("straggler").unwrap();
+        let a = ScenarioEngine::new(cfg.clone(), 8, 7);
+        let b = ScenarioEngine::new(cfg, 8, 7);
+        let slow_a: Vec<bool> = (0..8).map(|i| a.is_straggler(i)).collect();
+        let slow_b: Vec<bool> = (0..8).map(|i| b.is_straggler(i)).collect();
+        assert_eq!(slow_a, slow_b);
+        assert_eq!(slow_a.iter().filter(|&&s| s).count(), 2, "25% of 8");
+        let slow = slow_a.iter().position(|&s| s).unwrap();
+        assert_eq!(a.link(slow, 0).unwrap().latency_mult, 8.0);
+    }
+
+    #[test]
+    fn churn_keeps_at_least_one_client() {
+        let cfg = ScenarioConfig {
+            dropout_prob: 1.0, // everyone tries to leave every round
+            rejoin_prob: 0.0,
+            ..ScenarioConfig::preset("churn").unwrap()
+        };
+        let mut e = ScenarioEngine::new(cfg, 4, 3);
+        for round in 0..10 {
+            let active = e.begin_round(round);
+            assert!(!active.is_empty(), "round {round} went dark");
+        }
+    }
+
+    #[test]
+    fn churn_is_deterministic_and_actually_churns() {
+        let cfg = ScenarioConfig::preset("churn").unwrap();
+        let mut a = ScenarioEngine::new(cfg.clone(), 8, 5);
+        let mut b = ScenarioEngine::new(cfg, 8, 5);
+        let mut ever_dropped = false;
+        for round in 0..30 {
+            let xa = a.begin_round(round);
+            assert_eq!(xa, b.begin_round(round));
+            ever_dropped |= xa.len() < 8;
+        }
+        assert!(ever_dropped, "dropout_prob=0.15 over 30 rounds must drop someone");
+    }
+
+    #[test]
+    fn loss_draws_are_per_round_streams() {
+        let cfg = ScenarioConfig::preset("lossy").unwrap();
+        let e = ScenarioEngine::new(cfg, 4, 9);
+        // Deterministic: same (client, round) twice gives the same answer.
+        let first = e.link(0, 3).map(|l| l.attempts);
+        let again = e.link(0, 3).map(|l| l.attempts);
+        assert_eq!(first, again);
+        // With loss 0.2 and 5 retries, retransmits must occur somewhere over
+        // many draws, and most frames still get through.
+        let mut retransmitted = 0usize;
+        let mut delivered = 0usize;
+        for round in 0..200 {
+            for c in 0..4 {
+                if let Some(l) = e.link(c, round) {
+                    delivered += 1;
+                    if l.attempts > 1 {
+                        retransmitted += 1;
+                    }
+                }
+            }
+        }
+        assert!(retransmitted > 50, "~20% of 800 frames should need retries");
+        assert!(delivered > 780, "loss^6 wipeouts should be vanishingly rare");
+    }
+
+    #[test]
+    fn schedule_k_of_n_delays_slowest_and_applies_next_round() {
+        let cfg = ScenarioConfig { stale_k: 2, stale_decay: 0.5, ..Default::default() };
+        let mut e = ScenarioEngine::new(cfg, 3, 1);
+        let arrived = vec![(msg(0, 0), 0.1), (msg(1, 0), 0.9), (msg(2, 0), 0.2)];
+        let (apply, secs) = e.schedule(arrived);
+        let ids: Vec<usize> = apply.iter().map(|(m, _)| m.client).collect();
+        assert_eq!(ids, vec![0, 2], "client 1 (slowest) is late");
+        assert_eq!(secs, 0.2, "server steps at the K-th arrival, not the slowest");
+        assert_eq!(e.pending_len(), 1);
+        // Next round: the late frame applies first (older round), staleness 1.
+        let (apply2, _) = e.schedule(vec![(msg(0, 1), 0.1), (msg(1, 1), 0.2), (msg(2, 1), 0.3)]);
+        assert_eq!(apply2[0].0.client, 1);
+        assert_eq!(apply2[0].0.round, 0);
+        assert_eq!(apply2[0].1, 1);
+        assert_eq!(e.stale_weight(apply2[0].1), 0.5);
+        assert_eq!(e.stale_weight(0), 1.0);
+    }
+
+    #[test]
+    fn schedule_with_k_geq_n_is_synchronous() {
+        for stale_k in [0usize, 3, 99] {
+            let cfg = ScenarioConfig { stale_k, ..Default::default() };
+            let mut e = ScenarioEngine::new(cfg, 3, 1);
+            let (apply, secs) =
+                e.schedule(vec![(msg(2, 0), 0.3), (msg(0, 0), 0.5), (msg(1, 0), 0.1)]);
+            let ids: Vec<usize> = apply.iter().map(|(m, _)| m.client).collect();
+            assert_eq!(ids, vec![0, 1, 2], "client order, all staleness 0");
+            assert_eq!(secs, 0.5, "synchronous round time is the slowest arrival");
+            assert!(apply.iter().all(|(_, s)| *s == 0));
+            assert_eq!(e.pending_len(), 0);
+        }
+    }
+}

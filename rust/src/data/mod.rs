@@ -141,6 +141,68 @@ pub fn mnist_like(n: usize, seed: u64) -> Dataset {
     mnist_like_split(n, seed, 0)
 }
 
+/// Label-skew (non-IID) partition of `ds` into `n` client shards via
+/// Dirichlet(`alpha`) proportions per class — the standard federated-learning
+/// heterogeneity model. Small `alpha` concentrates each class on few
+/// clients; large `alpha` approaches the IID balanced split.
+///
+/// Deterministic in (`seed`, `n`, `alpha`); every sample lands in exactly one
+/// shard and every shard is non-empty (requires `ds.len() >= n`).
+pub fn dirichlet_shards(ds: &Dataset, n: usize, alpha: f64, seed: u64) -> Vec<Dataset> {
+    assert!(n >= 1 && alpha > 0.0, "need n >= 1 and alpha > 0");
+    assert!(ds.len() >= n, "need at least one sample per client");
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); NUM_CLASSES];
+    for (i, &l) in ds.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    let mut assign: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (c, idxs) in by_class.iter().enumerate() {
+        if idxs.is_empty() {
+            continue;
+        }
+        let mut rng = Rng::for_stream(seed, 0xD141, c as u64, 0);
+        let props: Vec<f64> = (0..n).map(|_| rng.gamma(alpha).max(1e-12)).collect();
+        let total: f64 = props.iter().sum();
+        // Contiguous proportional split of this class's sample list.
+        let mut acc = 0.0f64;
+        let mut start = 0usize;
+        for (j, p) in props.iter().enumerate() {
+            acc += p / total;
+            let end = if j + 1 == n {
+                idxs.len()
+            } else {
+                ((acc * idxs.len() as f64).round() as usize).clamp(start, idxs.len())
+            };
+            assign[j].extend_from_slice(&idxs[start..end]);
+            start = end;
+        }
+    }
+    // Guarantee non-empty shards: steal one sample from the largest donor.
+    for j in 0..n {
+        if assign[j].is_empty() {
+            let donor = (0..n)
+                .filter(|&k| k != j)
+                .max_by_key(|&k| assign[k].len())
+                .expect("n >= 2 when a shard can be empty");
+            let steal = assign[donor].pop().expect("donor has samples");
+            assign[j].push(steal);
+        }
+    }
+    assign
+        .into_iter()
+        .map(|mut idxs| {
+            idxs.sort_unstable();
+            let mut images = Vec::with_capacity(idxs.len() * IMG_PIXELS);
+            let mut labels = Vec::with_capacity(idxs.len());
+            for &i in &idxs {
+                images.extend_from_slice(ds.image(i));
+                labels.push(ds.labels[i]);
+            }
+            Dataset { images, labels }
+        })
+        .collect()
+}
+
 /// Deterministic batch sampler over a shard: reshuffles every epoch.
 pub struct BatchSampler {
     order: Vec<usize>,
@@ -325,6 +387,45 @@ mod tests {
         assert_eq!(total, 103);
         let sizes: Vec<usize> = (0..n).map(|i| ds.shard(i, n).len()).collect();
         assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn dirichlet_shards_partition_and_are_deterministic() {
+        let ds = mnist_like(500, 4);
+        let shards = dirichlet_shards(&ds, 8, 0.3, 4);
+        assert_eq!(shards.len(), 8);
+        let total: usize = shards.iter().map(Dataset::len).sum();
+        assert_eq!(total, 500, "every sample lands in exactly one shard");
+        assert!(shards.iter().all(|s| !s.is_empty()));
+        let again = dirichlet_shards(&ds, 8, 0.3, 4);
+        for (a, b) in shards.iter().zip(&again) {
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.images, b.images);
+        }
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_label_skew() {
+        // Mean (over shards) max-class share: near 1/NUM_CLASSES for huge
+        // alpha (IID-ish), well above it for small alpha (concentrated).
+        let ds = mnist_like(2000, 5);
+        let max_share = |alpha: f64| -> f64 {
+            let shards = dirichlet_shards(&ds, 8, alpha, 5);
+            let mut acc = 0.0;
+            for s in &shards {
+                let mut counts = [0usize; NUM_CLASSES];
+                for &l in &s.labels {
+                    counts[l as usize] += 1;
+                }
+                acc += *counts.iter().max().unwrap() as f64 / s.len() as f64;
+            }
+            acc / shards.len() as f64
+        };
+        let skewed = max_share(0.1);
+        let iidish = max_share(100.0);
+        assert!(iidish < 0.2, "alpha=100 should be near-balanced: {iidish}");
+        assert!(skewed > 0.3, "alpha=0.1 should concentrate labels: {skewed}");
+        assert!(skewed > iidish + 0.1, "{skewed} vs {iidish}");
     }
 
     #[test]

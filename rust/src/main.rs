@@ -38,7 +38,11 @@ fn main() -> Result<()> {
                  \x20 info      show the selected backend and its models\n\n\
                  common flags: --model --scheme --bits --clients --rounds --lr --seed\n\
                  \x20             --backend (auto|native|pjrt) --error-feedback\n\
-                 \x20             --drop-client --artifacts --preset"
+                 \x20             --drop-client --artifacts --preset\n\
+                 scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid)\n\
+                 \x20             --straggler-frac --straggler-mult --loss-prob --max-retries\n\
+                 \x20             --dropout-prob --rejoin-prob --stale-k --stale-decay\n\
+                 \x20             --noniid-alpha"
             );
             Ok(())
         }
@@ -60,6 +64,9 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     println!("config: {}", cfg.id());
+    if !cfg.scenario.is_clean() {
+        println!("scenario: {} (seeded, bit-reproducible)", cfg.scenario.name);
+    }
     let report = run_experiment(cfg.clone(), true)?;
     println!(
         "\nfinal: acc {:.4} (best {:.4}) train_loss {:.4} bytes_up {} ({:.2} bits/param/round)",
@@ -69,6 +76,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.total_bytes_up,
         report.bits_per_param
     );
+    let retrans: u64 = report.log.records.iter().map(|r| r.retransmitted_bytes).sum();
+    let max_dropped =
+        report.log.records.iter().map(|r| r.dropped_clients).max().unwrap_or(0);
+    if retrans > 0 || max_dropped > 0 {
+        println!(
+            "scenario: {retrans} retransmitted bytes, \
+             max {max_dropped} clients dropped in a round"
+        );
+    }
     if let Some(out) = args.get("out") {
         report.log.save_csv(std::path::Path::new(out))?;
         println!("wrote {out}");

@@ -16,7 +16,7 @@ use crate::json::{self, Value};
 pub struct RoundRecord {
     pub round: usize,
     pub train_loss: f64,
-    /// Bytes shipped client→server this round (all clients).
+    /// Bytes shipped client→server this round (all clients, goodput).
     pub bytes_up: u64,
     /// Evaluation (if run this round).
     pub test_loss: Option<f64>,
@@ -25,6 +25,17 @@ pub struct RoundRecord {
     pub secs: f64,
     /// Simulated network seconds (bandwidth/latency model), if enabled.
     pub net_secs: f64,
+    /// Scenario: clients that did not contribute a frame this round
+    /// (churned out or lost after retransmit budget).
+    pub dropped_clients: usize,
+    /// Scenario: extra bytes burned on lost uplink attempts — retransmitted
+    /// copies of delivered frames plus every attempt of frames that never
+    /// arrived at all.
+    pub retransmitted_bytes: u64,
+    /// Scenario: histogram of applied-frame staleness — index s holds the
+    /// number of frames applied this round that were s rounds old. Empty
+    /// and `vec![k]` both mean "k fresh frames, nothing late".
+    pub staleness_hist: Vec<u32>,
 }
 
 /// Full run log.
@@ -67,10 +78,13 @@ impl RunLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,train_loss,bytes_up,test_loss,test_accuracy,secs,net_secs\n");
+        let mut s = String::from(
+            "round,train_loss,bytes_up,test_loss,test_accuracy,secs,net_secs,\
+             dropped_clients,retransmitted_bytes,staleness_hist\n",
+        );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.bytes_up,
@@ -78,6 +92,9 @@ impl RunLog {
                 r.test_accuracy.map_or(String::new(), |v| v.to_string()),
                 r.secs,
                 r.net_secs,
+                r.dropped_clients,
+                r.retransmitted_bytes,
+                fmt_staleness_hist(&r.staleness_hist),
             ));
         }
         s
@@ -92,6 +109,14 @@ impl RunLog {
                 ("bytes_up", json::num(r.bytes_up as f64)),
                 ("secs", json::num(r.secs)),
                 ("net_secs", json::num(r.net_secs)),
+                ("dropped_clients", json::num(r.dropped_clients as f64)),
+                ("retransmitted_bytes", json::num(r.retransmitted_bytes as f64)),
+                (
+                    "staleness_hist",
+                    json::arr(
+                        r.staleness_hist.iter().map(|&c| json::num(c as f64)).collect(),
+                    ),
+                ),
                 ("config", json::s(&self.config_id)),
             ];
             if let Some(l) = r.test_loss {
@@ -106,11 +131,49 @@ impl RunLog {
         s
     }
 
+    /// Exact digest of every deterministic per-round quantity (losses,
+    /// bytes, drop/retransmit counts, simulated network time, staleness).
+    /// Two runs of the same seed + scenario must produce identical digests;
+    /// wall-clock `secs` is deliberately excluded. Floats are folded in by
+    /// bit pattern, so this is bit-for-bit, not approximately-equal.
+    pub fn replay_digest(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            s.push_str(&format!(
+                "{}:{:016x}:{}:{}:{}:{:016x}:{};",
+                r.round,
+                r.train_loss.to_bits(),
+                r.bytes_up,
+                r.dropped_clients,
+                r.retransmitted_bytes,
+                r.net_secs.to_bits(),
+                fmt_staleness_hist(&r.staleness_hist),
+            ));
+        }
+        s
+    }
+
     pub fn save_csv(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {path:?}"))?;
         f.write_all(self.to_csv().as_bytes())?;
         Ok(())
+    }
+}
+
+/// Render a staleness histogram as compact `s:count` pairs (`0:6|1:2`);
+/// empty histogram renders as `-`.
+pub fn fmt_staleness_hist(hist: &[u32]) -> String {
+    let parts: Vec<String> = hist
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(s, &c)| format!("{s}:{c}"))
+        .collect();
+    if parts.is_empty() {
+        "-".into()
+    } else {
+        parts.join("|")
     }
 }
 
@@ -146,6 +209,9 @@ mod tests {
             test_accuracy: None,
             secs: 0.1,
             net_secs: 0.0,
+            dropped_clients: 0,
+            retransmitted_bytes: 0,
+            staleness_hist: Vec::new(),
         });
         log.push(RoundRecord {
             round: 1,
@@ -155,6 +221,9 @@ mod tests {
             test_accuracy: Some(0.55),
             secs: 0.1,
             net_secs: 0.0,
+            dropped_clients: 2,
+            retransmitted_bytes: 333,
+            staleness_hist: vec![6, 2],
         });
         log
     }
@@ -174,6 +243,30 @@ mod tests {
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.starts_with("round,"));
         assert!(csv.contains("0.55"));
+        assert!(csv.lines().next().unwrap().contains("staleness_hist"));
+        assert!(csv.contains(",333,"), "retransmitted bytes column");
+        assert!(csv.contains("0:6|1:2"), "staleness histogram column");
+    }
+
+    #[test]
+    fn staleness_hist_formatting() {
+        assert_eq!(fmt_staleness_hist(&[]), "-");
+        assert_eq!(fmt_staleness_hist(&[4]), "0:4");
+        assert_eq!(fmt_staleness_hist(&[6, 0, 1]), "0:6|2:1");
+    }
+
+    #[test]
+    fn replay_digest_is_exact_and_ignores_wall_clock() {
+        let a = sample_log();
+        let mut b = sample_log();
+        b.records[0].secs = 99.0; // wall clock may differ between runs
+        assert_eq!(a.replay_digest(), b.replay_digest());
+        let mut c = sample_log();
+        c.records[1].retransmitted_bytes += 1;
+        assert_ne!(a.replay_digest(), c.replay_digest());
+        let mut d = sample_log();
+        d.records[0].train_loss += 1e-12; // even ULP-level drift must show
+        assert_ne!(a.replay_digest(), d.replay_digest());
     }
 
     #[test]

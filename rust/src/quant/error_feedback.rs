@@ -40,6 +40,21 @@ impl ErrorFeedback {
         bytes
     }
 
+    /// Undo a transmission the network ultimately lost: fold the frame's
+    /// decoded values back into the residual so the gradient mass is carried
+    /// into the next round instead of silently vanishing. Restores the
+    /// conservation invariant `Σ delivered + residual == Σ g` under packet
+    /// loss.
+    pub fn restore_lost(&mut self, frame: &[u8]) {
+        let decoded = Payload::decode(frame).expect("own frame decodes").dequantize();
+        if self.residual.len() != decoded.len() {
+            self.residual = vec![0.0; decoded.len()];
+        }
+        for (r, &d) in self.residual.iter_mut().zip(&decoded) {
+            *r += d;
+        }
+    }
+
     pub fn refit(&mut self, grads: &[f32]) {
         self.inner.refit(grads);
     }
@@ -50,6 +65,14 @@ impl ErrorFeedback {
 
     pub fn describe(&self) -> String {
         format!("ef[{}]", self.inner.describe())
+    }
+
+    /// The current residual vector (empty until the first compression).
+    /// Invariant: after T rounds, `residual == Σ_t g_t − Σ_t decoded_t` up
+    /// to f32 accumulation error — the conservation law the property suite
+    /// pins down.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
     }
 
     /// L2 norm of the residual (observability for tests/benches).
@@ -89,6 +112,28 @@ mod tests {
         let late: f64 = norms[280..].iter().sum::<f64>() / 20.0;
         assert!(late < 1.5 * mid + 1.0, "no plateau: mid {mid} late {late}");
         assert!(late.is_finite() && late > 0.0);
+    }
+
+    #[test]
+    fn restore_lost_refolds_frame_into_residual() {
+        // compress (residual := a − d) then restore (residual += d) must
+        // leave residual == a = g + r0, i.e. the lost round transmitted
+        // nothing on net.
+        let mut rng = Rng::new(3);
+        let mut ef = ErrorFeedback::new(make_compressor(&QuantConfig {
+            scheme: Scheme::Qsgd,
+            bits: 3,
+            ..Default::default()
+        }));
+        let g: Vec<f32> = (0..256).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+        let frame = ef.compress_with_feedback(&g, &mut rng);
+        ef.restore_lost(&frame);
+        for (i, (&r, &gi)) in ef.residual().iter().zip(&g).enumerate() {
+            assert!(
+                (r - gi).abs() < 1e-5,
+                "elem {i}: residual {r} should equal the undelivered gradient {gi}"
+            );
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! `make artifacts` output and real xla-rs bindings linked in place of the
 //! in-tree stub.
 
-use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::config::{ExperimentConfig, ScenarioConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
 use tqsgd::quant::kernels::{quantize_codebook_slice, quantize_uniform_slice};
 use tqsgd::runtime::{backend_for, Backend};
@@ -249,6 +249,186 @@ fn lm_coordinator_trains_bigram() {
     let (nll, acc) = coord.evaluate().unwrap();
     assert!(nll.is_finite() && nll > 0.0);
     assert!(acc.is_none(), "LM eval reports NLL only");
+}
+
+// ---------------------------------------------------------------------------
+// Scenario engine: heterogeneous / faulty rounds, reproducibly
+// ---------------------------------------------------------------------------
+
+/// Run a short experiment under `scenario`; returns the deterministic
+/// replay digest of its RunLog and the final parameter vector.
+fn run_scenario(scenario: ScenarioConfig, rounds: usize) -> (String, Vec<f32>) {
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tnqsgd);
+    cfg.rounds = rounds;
+    cfg.eval_every = rounds;
+    cfg.net.bandwidth_bytes_per_sec = 1e6;
+    cfg.net.latency_sec = 0.01;
+    cfg.scenario = scenario;
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    let log = coord.run(false).unwrap();
+    (log.replay_digest(), coord.params.clone())
+}
+
+#[test]
+fn scenario_runs_are_bit_reproducible() {
+    // Acceptance: same seed + same scenario config ⇒ identical RunLog
+    // (bytes, losses, drop/retransmit counts) across two runs.
+    for name in ["clean", "lossy", "stale"] {
+        let sc = ScenarioConfig::preset(name).unwrap();
+        let (digest_a, params_a) = run_scenario(sc.clone(), 4);
+        let (digest_b, params_b) = run_scenario(sc, 4);
+        assert_eq!(digest_a, digest_b, "{name}: RunLog digests must match");
+        assert_eq!(params_a, params_b, "{name}: final θ must match bit-for-bit");
+    }
+}
+
+#[test]
+fn stale_with_k_equal_n_degenerates_to_synchronous() {
+    // Acceptance: K = N bounded staleness IS the synchronous path — final θ
+    // (and the whole deterministic log) match the clean run bit-for-bit.
+    let clean = ScenarioConfig::preset("clean").unwrap();
+    let stale_kn = ScenarioConfig {
+        stale_k: 4, // == cfg.clients in small_cfg
+        ..ScenarioConfig::preset("stale").unwrap()
+    };
+    let (digest_clean, params_clean) = run_scenario(clean, 5);
+    let (digest_kn, params_kn) = run_scenario(stale_kn, 5);
+    assert_eq!(params_clean, params_kn, "final θ must be bit-identical");
+    assert_eq!(digest_clean, digest_kn, "whole RunLog must be bit-identical");
+}
+
+#[test]
+fn stale_k_of_n_delays_frames_and_still_trains() {
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
+    cfg.scenario = ScenarioConfig { stale_k: 2, stale_decay: 0.5, ..Default::default() };
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    let r0 = coord.step().unwrap();
+    assert_eq!(r0.staleness_hist, vec![2], "round 0: first K=2 of 4 apply fresh");
+    assert_eq!(coord.scenario.pending_len(), 2);
+    let r1 = coord.step().unwrap();
+    assert_eq!(
+        r1.staleness_hist,
+        vec![2, 2],
+        "round 1: two fresh frames plus two late (staleness 1) frames apply"
+    );
+    assert!(r1.train_loss.is_finite());
+}
+
+#[test]
+fn lossy_scenario_retransmits_and_accounts_bytes() {
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
+    cfg.rounds = 10;
+    cfg.scenario = ScenarioConfig::preset("lossy").unwrap();
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    let mut retrans = 0u64;
+    for _ in 0..10 {
+        let rec = coord.step().unwrap();
+        assert!(rec.train_loss.is_finite());
+        retrans += rec.retransmitted_bytes;
+    }
+    assert!(retrans > 0, "20% loss over 40 uplinks must retransmit something");
+    assert_eq!(coord.net.total_retransmitted, retrans);
+}
+
+#[test]
+fn churn_scenario_drops_and_rejoins_clients() {
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
+    cfg.clients = 6;
+    cfg.scenario = ScenarioConfig {
+        dropout_prob: 0.4,
+        rejoin_prob: 0.5,
+        ..ScenarioConfig::preset("churn").unwrap()
+    };
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    let mut drops = Vec::new();
+    for _ in 0..12 {
+        let rec = coord.step().unwrap();
+        assert!(rec.train_loss.is_finite());
+        assert!(rec.dropped_clients < 6, "at least one client always survives");
+        drops.push(rec.dropped_clients);
+    }
+    assert!(drops.iter().any(|&d| d > 0), "dropout must drop someone: {drops:?}");
+    assert!(
+        drops.iter().min() != drops.iter().max(),
+        "churn must vary the federation membership over rounds: {drops:?}"
+    );
+}
+
+#[test]
+fn straggler_scenario_inflates_tail_latency() {
+    let run_net_secs = |scenario: ScenarioConfig| -> f64 {
+        let backend = native();
+        let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
+        cfg.rounds = 3;
+        cfg.net.bandwidth_bytes_per_sec = 1e6;
+        cfg.net.latency_sec = 0.01;
+        cfg.scenario = scenario;
+        let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+        (0..3).map(|_| coord.step().unwrap().net_secs).sum()
+    };
+    let clean = run_net_secs(ScenarioConfig::default());
+    let straggler = run_net_secs(ScenarioConfig::preset("straggler").unwrap());
+    assert!(
+        straggler > 4.0 * clean,
+        "an 8x straggler must dominate round time: {straggler} vs {clean}"
+    );
+}
+
+#[test]
+fn noniid_scenario_shards_by_dirichlet_and_trains() {
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tnqsgd);
+    cfg.scenario = ScenarioConfig::preset("noniid").unwrap();
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    let weights: Vec<f64> = coord.clients.iter().map(|c| c.weight).collect();
+    let total: f64 = weights.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9, "weights partition the data: {total}");
+    assert!(
+        weights.iter().any(|&w| (w - weights[0]).abs() > 1e-12),
+        "Dirichlet(0.3) shards should not be perfectly balanced: {weights:?}"
+    );
+    let rec = coord.step().unwrap();
+    assert!(rec.train_loss.is_finite());
+}
+
+#[test]
+fn noniid_scenario_rejected_for_lm_task() {
+    // LM clients all sample a shared corpus; silently ignoring the skew and
+    // logging an "@noniid" run would be a lie, so construction must fail.
+    let backend = native();
+    let mut cfg = small_cfg("tfm_small", Scheme::Tnqsgd);
+    cfg.quant.bits = 4;
+    cfg.scenario = ScenarioConfig::preset("noniid").unwrap();
+    assert!(Coordinator::new(cfg, backend.as_ref()).is_err());
+}
+
+#[test]
+fn total_frame_wipeout_skips_round_instead_of_aborting() {
+    // Under extreme loss a round can deliver nothing; the server must skip
+    // the update and keep going, not kill the run.
+    let backend = native();
+    let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
+    cfg.clients = 2;
+    cfg.scenario = ScenarioConfig {
+        loss_prob: 0.95,
+        max_retries: 0,
+        ..ScenarioConfig::preset("lossy").unwrap()
+    };
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    let mut wipeouts = 0;
+    for _ in 0..5 {
+        let rec = coord.step().unwrap();
+        assert!(rec.train_loss.is_finite());
+        if rec.staleness_hist.is_empty() {
+            wipeouts += 1;
+            assert!(rec.retransmitted_bytes > 0, "lost attempts still hit the wire");
+        }
+    }
+    assert!(wipeouts > 0, "95% loss on 2 clients must wipe out some round");
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,270 @@
+//! Property-test hardening of the quantization stack (via `prop::check`),
+//! plus golden wire-format fixtures and the error-feedback conservation
+//! invariant.
+//!
+//! These guarantees exist so that scenario-engine failures point at the
+//! scenario, not at a quantizer bug: the codecs are unbiased in expectation
+//! and bounded-error per element, bit-packing is exact at every width the
+//! wire format can carry, and the frame bytes themselves are pinned against
+//! committed fixtures so refactors cannot silently break on-the-wire
+//! compatibility.
+
+use tqsgd::config::{QuantConfig, Scheme};
+use tqsgd::prop;
+use tqsgd::quant::bitpack;
+use tqsgd::quant::error_feedback::ErrorFeedback;
+use tqsgd::quant::kernels::{quantize_codebook_elem, quantize_uniform_elem};
+use tqsgd::quant::make_compressor;
+use tqsgd::quant::wire::Payload;
+use tqsgd::solver;
+use tqsgd::tail::PowerLawModel;
+use tqsgd::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Codec round-trip: unbiased in expectation, bounded error per element
+// ---------------------------------------------------------------------------
+
+/// TQSGD's uniform quantizer over random (alpha, s, group size): averaging
+/// many independent round-trips recovers the in-range gradient (unbiased),
+/// and every single round-trip lands within one step of the truncated value
+/// (bounded error).
+#[test]
+fn tqsgd_roundtrip_unbiased_and_bounded_error() {
+    prop::check(25, |rng| {
+        let bits = 2 + rng.below(4) as u32; // 2..=5
+        let s = solver::levels_for_bits(bits) as u32;
+        let alpha = (0.02 + rng.f64() * 0.98) as f32;
+        let n = 8 + rng.below(120) as usize; // random group size
+        let scale = alpha as f64;
+        let step = 2.0 * scale / s as f64;
+        // Mix of in-range and out-of-range (truncated) elements.
+        let g: Vec<f32> = (0..n).map(|_| ((rng.f64() * 3.0 - 1.5) * scale) as f32).collect();
+        let reps = 300u64;
+        let mut mean = vec![0.0f64; n];
+        for r in 0..reps {
+            let mut rr = Rng::for_stream(0xABCD, 1, r, 0);
+            for (i, (&gi, m)) in g.iter().zip(mean.iter_mut()).enumerate() {
+                let idx = quantize_uniform_elem(gi, rr.f32(), alpha, s);
+                if idx > s {
+                    return Err(format!("index {idx} > s={s} at elem {i}"));
+                }
+                let deq = (-alpha + idx as f32 * (2.0 * alpha / s as f32)) as f64;
+                // Bounded error per element vs the truncated gradient.
+                let trunc = gi.clamp(-alpha, alpha) as f64;
+                if (deq - trunc).abs() > step + 1e-6 {
+                    return Err(format!(
+                        "elem {i}: |{deq} - {trunc}| > step {step} (alpha={alpha}, s={s})"
+                    ));
+                }
+                *m += deq;
+            }
+        }
+        // Unbiasedness (for the truncated value; truncation itself is the
+        // paper's analysed bias, not the quantizer's).
+        let tol = 4.0 * step / (reps as f64).sqrt();
+        for (i, (&gi, &m)) in g.iter().zip(&mean).enumerate() {
+            let trunc = gi.clamp(-alpha, alpha) as f64;
+            let err = (m / reps as f64 - trunc).abs();
+            if err > tol {
+                return Err(format!("elem {i}: bias {err} > tol {tol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// TNQSGD's codebook quantizer over random tail models (gamma, g_min, rho):
+/// same two guarantees, with the per-element bound being the widest adjacent
+/// codebook gap.
+#[test]
+fn tnqsgd_roundtrip_unbiased_and_bounded_error() {
+    prop::check(25, |rng| {
+        let bits = 2 + rng.below(3) as u32; // 2..=4
+        let s = solver::levels_for_bits(bits);
+        let gamma = 3.1 + rng.f64() * 1.8; // admissible (3, 5]
+        let g_min = 0.005 + rng.f64() * 0.02;
+        let rho = 0.05 + rng.f64() * 0.3;
+        let model = PowerLawModel::new(gamma, g_min, rho);
+        let alpha = solver::optimal_alpha_nonuniform(&model, s);
+        let cb = solver::nonuniform_codebook(&model, alpha, s);
+        if cb.len() != s + 1 {
+            return Err(format!("codebook len {} != s+1={}", cb.len(), s + 1));
+        }
+        let lo = cb[0] as f64;
+        let hi = cb[s] as f64;
+        let max_gap = cb.windows(2).map(|w| (w[1] - w[0]) as f64).fold(0.0f64, f64::max);
+        let n = 8 + rng.below(64) as usize;
+        let draw = |rng: &mut Rng| rng.power_law_gradient(g_min, gamma, rho) as f32;
+        let g: Vec<f32> = (0..n).map(|_| draw(rng)).collect();
+        let reps = 300u64;
+        let mut mean = vec![0.0f64; n];
+        for r in 0..reps {
+            let mut rr = Rng::for_stream(0xBEEF, 2, r, 0);
+            for (i, (&gi, m)) in g.iter().zip(mean.iter_mut()).enumerate() {
+                let idx = quantize_codebook_elem(gi, rr.f32(), &cb) as usize;
+                if idx > s {
+                    return Err(format!("index {idx} out of codebook at elem {i}"));
+                }
+                let deq = cb[idx] as f64;
+                let trunc = (gi as f64).clamp(lo, hi);
+                if (deq - trunc).abs() > max_gap + 1e-6 {
+                    return Err(format!("elem {i}: |{deq} - {trunc}| > max gap {max_gap}"));
+                }
+                *m += deq;
+            }
+        }
+        let tol = 4.0 * max_gap / (reps as f64).sqrt();
+        for (i, (&gi, &m)) in g.iter().zip(&mean).enumerate() {
+            let trunc = (gi as f64).clamp(lo, hi);
+            let err = (m / reps as f64 - trunc).abs();
+            if err > tol {
+                return Err(format!("elem {i}: bias {err} > tol {tol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Bitpack: exact round-trip at every width the wire can carry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bitpack_roundtrip_exact_for_widths_1_to_16() {
+    for bits in 1..=16u32 {
+        prop::check(25, |rng| {
+            let n = rng.below(1500) as usize;
+            let max = 1u64 << bits;
+            let vals: Vec<u32> = (0..n).map(|_| rng.below(max) as u32).collect();
+            let packed = bitpack::pack(&vals, bits);
+            if packed.len() != bitpack::packed_len(n, bits) {
+                return Err(format!("bits={bits}: packed size off"));
+            }
+            prop::assert_prop(
+                bitpack::unpack(&packed, bits, n) == vals,
+                format!("bits={bits}: pack→unpack not exact"),
+            )
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden wire-format fixtures: the exact bytes are a compatibility contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_raw_frame_bytes() {
+    let p = Payload::Raw(vec![1.0, -2.0]);
+    let want: Vec<u8> = vec![
+        0x54, 0x51, // magic "TQ"
+        0x00, // kind: raw
+        0x00, // bits
+        0x02, 0x00, 0x00, 0x00, // d = 2
+        0x00, 0x00, 0x80, 0x3F, // 1.0f32
+        0x00, 0x00, 0x00, 0xC0, // -2.0f32
+    ];
+    assert_eq!(p.encode(0), want);
+    assert_eq!(Payload::decode(&want).unwrap(), p);
+}
+
+#[test]
+fn golden_uniform_frame_bytes() {
+    let p = Payload::Uniform { alpha: 1.0, s: 7, idx: vec![0, 3, 7, 5] };
+    let want: Vec<u8> = vec![
+        0x54, 0x51, // magic
+        0x01, // kind: uniform
+        0x03, // 3 bits per index
+        0x04, 0x00, 0x00, 0x00, // d = 4
+        0x00, 0x00, 0x80, 0x3F, // alpha = 1.0
+        0x07, 0x00, // s = 7
+        0xD8, 0x0B, // indices 0,3,7,5 packed LSB-first
+    ];
+    assert_eq!(p.encode(3), want);
+    assert_eq!(Payload::decode(&want).unwrap(), p);
+}
+
+#[test]
+fn golden_codebook_frame_bytes() {
+    let p = Payload::Codebook { levels: vec![-0.5, 0.0, 0.5], idx: vec![2, 0, 1] };
+    let want: Vec<u8> = vec![
+        0x54, 0x51, // magic
+        0x02, // kind: codebook
+        0x02, // 2 bits per index
+        0x03, 0x00, 0x00, 0x00, // d = 3
+        0x03, 0x00, // 3 levels
+        0x00, 0x00, 0x00, 0xBF, // -0.5f32
+        0x00, 0x00, 0x00, 0x00, // 0.0f32
+        0x00, 0x00, 0x00, 0x3F, // 0.5f32
+        0x12, // indices 2,0,1 packed LSB-first
+    ];
+    assert_eq!(p.encode(2), want);
+    assert_eq!(Payload::decode(&want).unwrap(), p);
+}
+
+#[test]
+fn golden_sparse_frame_bytes() {
+    let p = Payload::Sparse { d: 6, pairs: vec![(1, 1.5), (4, -0.25)] };
+    let want: Vec<u8> = vec![
+        0x54, 0x51, // magic
+        0x03, // kind: sparse
+        0x00, // bits
+        0x06, 0x00, 0x00, 0x00, // d = 6
+        0x02, 0x00, 0x00, 0x00, // k = 2
+        0x01, 0x00, 0x00, 0x00, // index 1
+        0x04, 0x00, 0x00, 0x00, // index 4
+        0x00, 0x00, 0xC0, 0x3F, // 1.5f32
+        0x00, 0x00, 0x80, 0xBE, // -0.25f32
+    ];
+    assert_eq!(p.encode(0), want);
+    assert_eq!(Payload::decode(&want).unwrap(), p);
+}
+
+// ---------------------------------------------------------------------------
+// Error feedback: (transmitted + residual) conserves the true gradient
+// ---------------------------------------------------------------------------
+
+/// Heavy-tailed gradient draw shared by the EF test.
+fn heavy(rng: &mut Rng) -> f32 {
+    rng.power_law_gradient(0.01, 4.0, 0.2) as f32
+}
+
+#[test]
+fn error_feedback_conserves_gradient_mass_over_50_rounds() {
+    let mut rng = Rng::new(0x5EED);
+    let mut ef = ErrorFeedback::new(make_compressor(&QuantConfig {
+        scheme: Scheme::Tqsgd,
+        bits: 3,
+        ..Default::default()
+    }));
+    let fit: Vec<f32> = (0..30_000).map(|_| heavy(&mut rng)).collect();
+    ef.refit(&fit);
+
+    let d = 512usize;
+    let mut sum_g = vec![0.0f64; d];
+    let mut sum_dec = vec![0.0f64; d];
+    let mut max_abs_g = 0.0f64;
+    for _ in 0..50 {
+        let g: Vec<f32> = (0..d).map(|_| heavy(&mut rng)).collect();
+        let bytes = ef.compress_with_feedback(&g, &mut rng);
+        let dec = Payload::decode(&bytes).unwrap().dequantize();
+        assert_eq!(dec.len(), d);
+        for i in 0..d {
+            sum_g[i] += g[i] as f64;
+            sum_dec[i] += dec[i] as f64;
+            max_abs_g = max_abs_g.max((g[i] as f64).abs());
+        }
+    }
+    // Invariant: residual == Σ g − Σ decoded, elementwise, to f32 rounding
+    // accumulated over 50 rounds.
+    let residual = ef.residual();
+    assert_eq!(residual.len(), d);
+    let tol = 50.0 * 1e-5 * max_abs_g.max(1.0);
+    for i in 0..d {
+        let want = sum_g[i] - sum_dec[i];
+        let got = residual[i] as f64;
+        assert!(
+            (got - want).abs() <= tol,
+            "elem {i}: residual {got} vs Σg−Σdec {want} (tol {tol})"
+        );
+    }
+}
