@@ -9,7 +9,7 @@
 //! factor.  Regenerate with `cargo bench --bench fig1_density`
 //! (`TQSGD_BENCH_ROUNDS` to harvest later-training gradients).
 
-use tqsgd::benchkit::{env_usize, section, Table};
+use tqsgd::benchkit::{section, BenchOpts, Report, Table};
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
 use tqsgd::runtime::make_backend;
@@ -17,7 +17,9 @@ use tqsgd::tail::{fit::report_to_model, fit_gaussian, fit_laplace, fit_power_law
 use tqsgd::util::math::{laplace_cdf, normal_cdf};
 
 fn main() -> anyhow::Result<()> {
-    let rounds = env_usize("TQSGD_BENCH_ROUNDS", 15);
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("fig1_density", &opts);
+    let rounds = opts.size("TQSGD_BENCH_ROUNDS", 15, 3);
     let mut cfg = ExperimentConfig::default();
     cfg.model = "cnn".into();
     cfg.quant.scheme = Scheme::Dsgd;
@@ -52,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         fits.row(&["gaussian".into(), format!("σ={sigma:.3e}"), format!("{:.4}", ga.ks)]);
         fits.row(&["laplace".into(), format!("b={:.3e}", la.params[1]), format!("{:.4}", la.ks)]);
         fits.print();
+        report.table(&format!("fits — {}", group.group), &fits);
 
         let mut hist = LogHistogram::new(sigma * 0.2, sigma * 40.0, 10);
         hist.extend(xs);
@@ -76,6 +79,7 @@ fn main() -> anyhow::Result<()> {
             ]);
         }
         dens.print();
+        report.table(&format!("density — {}", group.group), &dens);
 
         // The paper's headline comparison, as tail-mass ratios.
         let t = 6.0 * sigma;
@@ -93,5 +97,6 @@ fn main() -> anyhow::Result<()> {
             (emp / p_pl.max(1e-300)).max(p_pl / emp.max(1e-300))
         );
     }
+    report.finish(&opts)?;
     Ok(())
 }

@@ -5,14 +5,14 @@
 //!
 //! Regenerate with `cargo bench --bench fig2_codebook`.
 
-use tqsgd::benchkit::{section, Table};
+use tqsgd::benchkit::{section, BenchOpts, Report, Table};
 use tqsgd::solver::{
     levels_for_bits, nonuniform_codebook, optimal_alpha_nonuniform, optimal_alpha_uniform,
     solve_biscaled, uniform_codebook,
 };
 use tqsgd::tail::PowerLawModel;
 
-fn print_codebook(name: &str, cb: &[f32]) {
+fn print_codebook(report: &mut Report, name: &str, cb: &[f32]) {
     let s = cb.len() - 1;
     let mut t = Table::new(&["k", "l_k", "|Δ_k| = l_k − l_{k−1}"]);
     for k in 0..=s {
@@ -24,9 +24,12 @@ fn print_codebook(name: &str, cb: &[f32]) {
     }
     println!("\n{name}:");
     t.print();
+    report.table(name, &t);
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("fig2_codebook", &opts);
     let m = PowerLawModel::new(4.0, 0.01, 0.1);
     let b = 3;
     let s = levels_for_bits(b);
@@ -37,15 +40,16 @@ fn main() {
 
     let a_u = optimal_alpha_uniform(&m, s);
     let cb_u = uniform_codebook(a_u, s);
-    print_codebook(&format!("TQSGD uniform codebook (α*={a_u:.5})"), &cb_u);
+    print_codebook(&mut report, &format!("TQSGD uniform codebook (α*={a_u:.5})"), &cb_u);
 
     let a_n = optimal_alpha_nonuniform(&m, s);
     let cb_n = nonuniform_codebook(&m, a_n, s);
-    print_codebook(&format!("TNQSGD non-uniform codebook (α*={a_n:.5})"), &cb_n);
+    print_codebook(&mut report, &format!("TNQSGD non-uniform codebook (α*={a_n:.5})"), &cb_n);
 
     let d = solve_biscaled(&m, s);
     let cb_b = d.codebook();
     print_codebook(
+        &mut report,
         &format!(
             "TBQSGD BiScaled codebook (α*={:.5}, β*={:.5}, k*={:.3}, s_β={}, s_α={})",
             d.alpha, d.beta, d.k, d.s_beta, d.s_alpha
@@ -65,4 +69,8 @@ fn main() {
         "truncation thresholds: α*(TNQSGD) {a_n:.5} ≥ α*(TQSGD) {a_u:.5} (Hölder corollary) → {}",
         if a_n >= a_u { "HOLDS" } else { "VIOLATED" }
     );
+    report.metric("tnqsgd_alpha_star", a_n);
+    report.metric("tqsgd_alpha_star", a_u);
+    report.finish(&opts)?;
+    Ok(())
 }

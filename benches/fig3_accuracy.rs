@@ -11,12 +11,14 @@
 //! Regenerate with `cargo bench --bench fig3_accuracy`
 //! (`TQSGD_BENCH_ROUNDS=800` for the full curves).
 
-use tqsgd::benchkit::{env_usize, section, Table};
+use tqsgd::benchkit::{section, BenchOpts, Report, Table};
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::train::Sweep;
 
 fn main() -> anyhow::Result<()> {
-    let rounds = env_usize("TQSGD_BENCH_ROUNDS", 300);
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("fig3_accuracy", &opts);
+    let rounds = opts.size("TQSGD_BENCH_ROUNDS", 300, 30);
     let mut cfg = ExperimentConfig::default();
     cfg.model = "mlp".into();
     cfg.lr = 0.05; // operating point where 3-bit noise separates schemes (see EXPERIMENTS.md)
@@ -66,6 +68,10 @@ fn main() -> anyhow::Result<()> {
         table.row(&row);
     }
     table.print();
+    report.table("accuracy curves (b=3, N=8)", &table);
+    for (scheme, rep) in &curves {
+        report.metric(&format!("{}_final_acc", scheme.name()), rep.final_accuracy);
+    }
 
     section("paper-shape checks");
     let get = |s: Scheme| curves.iter().find(|(c, _)| *c == s).unwrap().1.final_accuracy;
@@ -100,5 +106,6 @@ fn main() -> anyhow::Result<()> {
     for (msg, ok) in checks {
         println!("[{}] {msg}", if ok { "PASS" } else { "FAIL" });
     }
+    report.finish(&opts)?;
     Ok(())
 }

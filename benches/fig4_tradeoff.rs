@@ -9,12 +9,14 @@
 //! Regenerate with `cargo bench --bench fig4_tradeoff`
 //! (`TQSGD_BENCH_ROUNDS=600` for tighter curves).
 
-use tqsgd::benchkit::{env_usize, section, Table};
+use tqsgd::benchkit::{section, BenchOpts, Report, Table};
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::train::Sweep;
 
 fn main() -> anyhow::Result<()> {
-    let rounds = env_usize("TQSGD_BENCH_ROUNDS", 250);
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("fig4_tradeoff", &opts);
+    let rounds = opts.size("TQSGD_BENCH_ROUNDS", 250, 25);
     let mut cfg = ExperimentConfig::default();
     cfg.model = "mlp".into();
     cfg.lr = 0.05; // operating point where low-bit noise separates schemes
@@ -55,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    report.table("accuracy vs bits", &table);
 
     section("paper-shape checks");
     for scheme in ["tqsgd", "tnqsgd"] {
@@ -85,5 +88,7 @@ fn main() -> anyhow::Result<()> {
         "tqsgd b=2: plain {:.4} vs +error-feedback {:.4}",
         r_plain.final_accuracy, r_ef.final_accuracy
     );
+    report.metric("tqsgd_b2_ef_final_acc", r_ef.final_accuracy);
+    report.finish(&opts)?;
     Ok(())
 }

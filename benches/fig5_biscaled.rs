@@ -7,7 +7,7 @@
 //!
 //! Regenerate with `cargo bench --bench fig5_biscaled`.
 
-use tqsgd::benchkit::{env_usize, section, Table};
+use tqsgd::benchkit::{section, BenchOpts, Report, Table};
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::solver::{self, levels_for_bits};
 use tqsgd::tail::PowerLawModel;
@@ -15,6 +15,8 @@ use tqsgd::theory;
 use tqsgd::train::Sweep;
 
 fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("fig5_biscaled", &opts);
     section("Fig. 5 — BiScaled design across tail indices (b=3)");
     let s = levels_for_bits(3);
     let mut t = Table::new(&[
@@ -40,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    report.table("BiScaled design across tail indices", &t);
 
     section("Theorem 3 bound vs Theorems 1/2 (d=37610, N=8)");
     let mut tb = Table::new(&["s", "Thm1 (TQSGD)", "Thm2 (TNQSGD)", "Thm3 (TBQSGD)", "ordering"]);
@@ -60,8 +63,9 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     tb.print();
+    report.table("Theorem 3 bound vs Theorems 1/2", &tb);
 
-    let rounds = env_usize("TQSGD_BENCH_ROUNDS", 250);
+    let rounds = opts.size("TQSGD_BENCH_ROUNDS", 250, 25);
     section(&format!("training comparison at b=3 ({rounds} rounds)"));
     let mut cfg = ExperimentConfig::default();
     cfg.model = "mlp".into();
@@ -82,5 +86,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     res.print();
+    report.table("training comparison at b=3", &res);
+    report.finish(&opts)?;
     Ok(())
 }

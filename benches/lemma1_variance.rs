@@ -4,21 +4,22 @@
 //!
 //! Regenerate with `cargo bench --bench lemma1_variance`.
 
-use tqsgd::benchkit::{section, Table};
+use tqsgd::benchkit::{section, BenchOpts, Report, Table};
 use tqsgd::quant::kernels::{dequantize_uniform_elem, quantize_codebook_elem, quantize_uniform_elem};
 use tqsgd::solver::{nonuniform_codebook, optimal_alpha_nonuniform, optimal_alpha_uniform, uniform_codebook};
 use tqsgd::tail::PowerLawModel;
 use tqsgd::theory::lemma1_variance_bound;
 use tqsgd::util::Rng;
 
-const N: usize = 250_000;
-
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("lemma1_variance", &opts);
+    let n = opts.size("TQSGD_BENCH_SAMPLES", 250_000, 25_000);
     let m = PowerLawModel::new(4.0, 0.01, 0.1);
     let mut rng = Rng::new(42);
     // Draw heavy-tailed gradients from the paper's model.
     let grads: Vec<f32> =
-        (0..N).map(|_| rng.power_law_gradient(m.g_min, m.gamma, 2.0 * m.rho) as f32).collect();
+        (0..n).map(|_| rng.power_law_gradient(m.g_min, m.gamma, 2.0 * m.rho) as f32).collect();
 
     section("Lemma 1 — uniform codebook (TQSGD)");
     let mut t = Table::new(&["s", "α*", "bias |E[Q−g]| (in-range)", "measured var", "Σ P_k Δ_k²/4 bound", "within"]);
@@ -50,6 +51,7 @@ fn main() {
         ]);
     }
     t.print();
+    report.table("Lemma 1 — uniform codebook (TQSGD)", &t);
 
     section("Lemma 1 — optimal non-uniform codebook (TNQSGD, Eq. 18)");
     let mut t2 = Table::new(&["s", "α*", "measured var", "Σ P_k Δ_k²/4 bound", "within", "vs uniform var"]);
@@ -85,5 +87,8 @@ fn main() {
         ]);
     }
     t2.print();
+    report.table("Lemma 1 — non-uniform codebook (TNQSGD)", &t2);
     println!("\n(unbiasedness holds for truncated values; variance within the Lemma 1 bound)");
+    report.finish(&opts)?;
+    Ok(())
 }

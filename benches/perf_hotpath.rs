@@ -1,31 +1,85 @@
 //! §Perf — hot-path performance of the whole stack:
 //!
-//! * L3 codec throughput (encode+pack GB/s per scheme/bits; target ≥1 GB/s
-//!   for 4-bit uniform on one core),
-//! * bit-packing substrate throughput,
+//! * L3 codec throughput per scheme/bits, with before/after columns for the
+//!   allocating `compress` wrapper vs the arena-reuse `compress_into` path,
+//! * the pre-PR encode reference (fused-but-allocating with per-byte RMW
+//!   bit-packing) vs the streaming-accumulator kernel — the ≥2× claim the
+//!   committed `BENCH_baseline.json` records,
+//! * decode + aggregate throughput (`decode_dequantize` vs the `_into`
+//!   scratch-reuse variant),
 //! * L1↔L3 parity + relative cost of running the quantizer kernel through
-//!   the backend's `QuantKernel` interface (native scalar kernels by
-//!   default; the Pallas/PJRT artifact when built with `--features pjrt`),
-//! * end-to-end round breakdown (grad exec vs codec vs aggregate) for the
-//!   CNN config, showing the coordinator is not the bottleneck.
+//!   the backend's `QuantKernel` interface,
+//! * end-to-end round breakdown for the CNN config, including the
+//!   steady-state frame-allocation counter (must stay flat).
 //!
-//! Regenerate with `cargo bench --bench perf_hotpath`.
+//! Regenerate with `cargo bench --bench perf_hotpath`; CI runs
+//! `-- --quick` with `TQSGD_BENCH_JSON=BENCH_perf.json` and gates the
+//! `tqsgd_b4_encode_into_melems_per_s` metric against
+//! `BENCH_baseline.json` (`tqsgd perf-check`). Refresh the baseline with
+//! `TQSGD_BENCH_JSON=BENCH_baseline.json cargo bench --bench perf_hotpath -- --quick`.
 
-use tqsgd::benchkit::{bench, fmt_ns, section, Table};
+use tqsgd::benchkit::{bench, fmt_ns, section, BenchOpts, Report, Table};
 use tqsgd::config::{ExperimentConfig, QuantConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
-use tqsgd::quant::{make_compressor, Payload};
+use tqsgd::quant::{bitpack, make_compressor, wire};
 use tqsgd::runtime::backend_for;
 use tqsgd::util::Rng;
 
+/// The pre-PR uniform encode path, kept verbatim as the regression
+/// reference: fused quantize+pack into a freshly allocated, pre-zeroed
+/// packed buffer with per-byte read-modify-write stores and a `floor()`
+/// call per element, then a second allocation + copy to assemble the frame.
+fn legacy_compress_uniform(
+    grads: &[f32],
+    rng: &mut Rng,
+    alpha: f32,
+    s: u32,
+    bits: u32,
+) -> Vec<u8> {
+    let mut packed = vec![0u8; bitpack::packed_len(grads.len(), bits)];
+    let step = 2.0f32 * alpha / s as f32;
+    let inv_step = 1.0f32 / step;
+    let s_m1 = (s - 1) as f32;
+    let s_f = s as f32;
+    let mut bitpos = 0usize;
+    for &g in grads {
+        let u = rng.f32();
+        let gc = g.clamp(-alpha, alpha);
+        let x = (gc + alpha) * inv_step;
+        let lo = x.floor().min(s_m1).max(0.0);
+        let idx = (lo + f32::from(u < x - lo)).min(s_f) as u32;
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u32;
+        let wide = (idx as u16) << off;
+        packed[byte] |= (wide & 0xFF) as u8;
+        if wide > 0xFF {
+            packed[byte + 1] |= (wide >> 8) as u8;
+        }
+        bitpos += bits as usize;
+    }
+    wire::encode_uniform_packed(alpha, s as u16, grads.len() as u32, bits, &packed)
+}
+
 fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("perf_hotpath", &opts);
+    let (warmup, runs) = if opts.quick { (1, 4) } else { (2, 8) };
     let mut rng = Rng::new(99);
-    let d = 1 << 20; // 1M elements, CNN-to-MLP scale
+    let d = 1 << 20; // 1M elements, CNN-to-MLP scale (also in quick mode)
     let grads: Vec<f32> =
         (0..d).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
 
     section("L3 codec throughput (1M elements, single core)");
-    let mut t = Table::new(&["codec", "bits", "encode", "GB/s in", "bytes out"]);
+    println!("(compress = allocating wrapper; compress_into = recycled arena buffer)");
+    let mut t = Table::new(&[
+        "codec",
+        "bits",
+        "compress",
+        "compress_into",
+        "speedup",
+        "GB/s in",
+        "bytes out",
+    ]);
     for (scheme, bits) in [
         (Scheme::Dsgd, 32u32),
         (Scheme::Qsgd, 3),
@@ -46,39 +100,92 @@ fn main() -> anyhow::Result<()> {
         });
         c.refit(&grads);
         let mut out_len = 0usize;
-        let timing = bench(2, 8, || {
+        let t_alloc = bench(warmup, runs, || {
             let mut r = Rng::new(1);
             let frame = c.compress(&grads, &mut r);
             out_len = frame.len();
             std::hint::black_box(&frame);
         });
+        let mut buf = Vec::new();
+        let t_into = bench(warmup, runs, || {
+            let mut r = Rng::new(1);
+            c.compress_into(&grads, &mut r, &mut buf);
+            std::hint::black_box(&buf);
+        });
         t.row(&[
             c.describe(),
             bits.to_string(),
-            timing.pretty(),
-            format!("{:.2}", timing.gbps(d * 4)),
+            t_alloc.pretty(),
+            t_into.pretty(),
+            format!("{:.2}x", t_alloc.median_ns / t_into.median_ns),
+            format!("{:.2}", t_into.gbps(d * 4)),
             out_len.to_string(),
         ]);
+        if scheme == Scheme::Tqsgd && bits == 4 {
+            report.metric("tqsgd_b4_encode_melems_per_s", t_alloc.melems_per_s(d));
+            report.metric("tqsgd_b4_encode_into_melems_per_s", t_into.melems_per_s(d));
+        }
     }
     t.print();
+    report.table("L3 codec throughput (1M elements)", &t);
+
+    section("pre-PR reference vs compress_into (4-bit TQSGD, 1M elements)");
+    // Identical alpha for both paths so the comparison is pure code-path:
+    // pre-PR = floor() + RMW pack + zeroed packed buffer + frame copy.
+    let alpha = 0.05f32;
+    let t_legacy = bench(warmup, runs, || {
+        let mut r = Rng::new(1);
+        std::hint::black_box(legacy_compress_uniform(&grads, &mut r, alpha, 15, 4));
+    });
+    let mut buf = Vec::new();
+    let t_new = bench(warmup, runs, || {
+        let mut r = Rng::new(1);
+        wire::begin_uniform_frame(&mut buf, alpha, 15, grads.len() as u32, 4);
+        tqsgd::quant::kernels::quantize_uniform_pack_into(&grads, &mut r, alpha, 15, 4, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    // Sanity: the two paths are byte-identical given the same RNG stream
+    // (`buf` holds the last measured run, which used Rng::new(1) too).
+    let mut r1 = Rng::new(1);
+    let legacy_frame = legacy_compress_uniform(&grads, &mut r1, alpha, 15, 4);
+    assert_eq!(legacy_frame, buf, "legacy and fused frames must agree");
+    let speedup = t_legacy.median_ns / t_new.median_ns;
+    println!(
+        "pre-PR {} vs compress_into {} → {:.2}x single-core encode speedup",
+        t_legacy.pretty(),
+        t_new.pretty(),
+        speedup
+    );
+    report.metric("tqsgd_b4_legacy_melems_per_s", t_legacy.melems_per_s(d));
+    report.metric("tqsgd_b4_speedup_vs_legacy", speedup);
 
     section("decode + aggregate throughput");
-    let mut t = Table::new(&["codec", "decode+dequant", "GB/s out"]);
+    let mut t = Table::new(&["codec", "decode+dequant", "decode_into (reused)", "GB/s out"]);
     for scheme in [Scheme::Tqsgd, Scheme::Tnqsgd] {
         let mut c = make_compressor(&QuantConfig { scheme, bits: 3, ..Default::default() });
         c.refit(&grads);
         let frame = c.compress(&grads, &mut rng);
-        let timing = bench(2, 8, || {
-            let v = Payload::decode(&frame).unwrap().dequantize();
+        let t_alloc = bench(warmup, runs, || {
+            let v = wire::decode_dequantize(&frame).unwrap();
             std::hint::black_box(&v);
+        });
+        let mut dense = Vec::new();
+        let t_into = bench(warmup, runs, || {
+            wire::decode_dequantize_into(&frame, &mut dense).unwrap();
+            std::hint::black_box(&dense);
         });
         t.row(&[
             c.describe(),
-            timing.pretty(),
-            format!("{:.2}", timing.gbps(d * 4)),
+            t_alloc.pretty(),
+            t_into.pretty(),
+            format!("{:.2}", t_into.gbps(d * 4)),
         ]);
+        if scheme == Scheme::Tqsgd {
+            report.metric("tqsgd_b3_decode_into_melems_per_s", t_into.melems_per_s(d));
+        }
     }
     t.print();
+    report.table("decode + aggregate throughput", &t);
 
     section("L1 quantizer kernel via Backend::quant_kernel (parity + cost)");
     // Auto-select, but degrade gracefully (e.g. pjrt feature + artifacts
@@ -92,19 +199,21 @@ fn main() -> anyhow::Result<()> {
     let tile = q.tile().min(grads.len());
     let g = &grads[..tile];
     let u: Vec<f32> = (0..tile).map(|_| rng.f32()).collect();
-    let alpha = 0.05f32;
-    let (_deq, idx) = q.run_uniform(g, &u, alpha)?;
+    let kalpha = 0.05f32;
+    let (_deq, idx) = q.run_uniform(g, &u, kalpha)?;
     // Parity: rust codec must produce identical indices.
     let mut rust_idx = Vec::new();
-    tqsgd::quant::kernels::quantize_uniform_slice(g, &u, alpha, 7, &mut rust_idx);
+    tqsgd::quant::kernels::quantize_uniform_slice(g, &u, kalpha, 7, &mut rust_idx);
     let mismatches = idx.iter().zip(&rust_idx).filter(|(a, b)| a != b).count();
     println!("parity quant_uniform_b3 vs rust codec: {mismatches}/{tile} index mismatches");
-    let timing = bench(1, 5, || {
-        let r = q.run_uniform(g, &u, alpha).unwrap();
-        std::hint::black_box(&r);
+    let mut deq_buf = Vec::new();
+    let mut idx_buf = Vec::new();
+    let timing = bench(1, if opts.quick { 3 } else { 5 }, || {
+        q.run_uniform_into(g, &u, kalpha, &mut deq_buf, &mut idx_buf).unwrap();
+        std::hint::black_box((&deq_buf, &idx_buf));
     });
     println!(
-        "kernel tile ({tile} elems): {} ({:.3} GB/s)",
+        "kernel tile ({tile} elems, run_uniform_into): {} ({:.3} GB/s)",
         timing.pretty(),
         timing.gbps(tile * 4)
     );
@@ -113,15 +222,27 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::default();
     cfg.model = "cnn".into();
     cfg.rounds = 4;
-    cfg.train_size = 2048;
+    cfg.train_size = if opts.quick { 1024 } else { 2048 };
     cfg.test_size = 512;
     cfg.quant.scheme = Scheme::Tnqsgd;
     let mut coord = Coordinator::new(cfg, backend.as_ref())?;
-    coord.step()?; // warm caches (executables on PJRT, allocators on native)
-    let timing = bench(1, 6, || {
+    coord.step()?; // warm caches (executables on PJRT, arenas on native)
+    coord.step()?;
+    let allocs_before = coord.frame_allocs();
+    let timing = bench(0, if opts.quick { 2 } else { 6 }, || {
         coord.step().unwrap();
     });
+    let allocs_after = coord.frame_allocs();
     println!("full round: {}", fmt_ns(timing.median_ns));
+    println!(
+        "frame allocations during measured rounds: {} (steady state must be 0; warm-up total {})",
+        allocs_after - allocs_before,
+        allocs_before
+    );
+    report.metric(
+        "steady_state_frame_allocs",
+        (allocs_after - allocs_before) as f64,
+    );
 
     // Isolate codec share: same gradient size, 8 clients, 2 groups.
     let spec = coord.model_spec().clone();
@@ -132,10 +253,12 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     });
     c.refit(&per_client);
-    let codec_t = bench(1, 6, || {
+    let mut cbuf = Vec::new();
+    let codec_t = bench(1, if opts.quick { 3 } else { 6 }, || {
         for cl in 0..8 {
             let mut r = Rng::new(cl);
-            std::hint::black_box(c.compress(&per_client, &mut r));
+            c.compress_into(&per_client, &mut r, &mut cbuf);
+            std::hint::black_box(&cbuf);
         }
     });
     println!(
@@ -143,5 +266,7 @@ fn main() -> anyhow::Result<()> {
         fmt_ns(codec_t.median_ns),
         100.0 * codec_t.median_ns / timing.median_ns
     );
+
+    report.finish(&opts)?;
     Ok(())
 }

@@ -11,39 +11,40 @@
 //!
 //! Regenerate with `cargo bench --bench thm_bounds`.
 
-use tqsgd::benchkit::{section, Table};
+use tqsgd::benchkit::{section, BenchOpts, Report, Table};
 use tqsgd::quant::kernels::{dequantize_uniform_elem, quantize_codebook_elem, quantize_uniform_elem};
 use tqsgd::solver::{self, levels_for_bits};
 use tqsgd::tail::PowerLawModel;
 use tqsgd::theory;
 use tqsgd::util::Rng;
 
-const N: usize = 150_000;
-
-fn measured_e_tq_uniform(m: &PowerLawModel, s: usize, rng: &mut Rng) -> f64 {
+fn measured_e_tq_uniform(m: &PowerLawModel, s: usize, rng: &mut Rng, n: usize) -> f64 {
     let alpha = solver::optimal_alpha_uniform(m, s) as f32;
     let mut mse = 0.0;
-    for _ in 0..N {
+    for _ in 0..n {
         let g = rng.power_law_gradient(m.g_min, m.gamma, 2.0 * m.rho) as f32;
         let idx = quantize_uniform_elem(g, rng.f32(), alpha, s as u32);
         mse += ((dequantize_uniform_elem(idx, alpha, s as u32) - g) as f64).powi(2);
     }
-    mse / N as f64
+    mse / n as f64
 }
 
-fn measured_e_tq_nonuniform(m: &PowerLawModel, s: usize, rng: &mut Rng) -> f64 {
+fn measured_e_tq_nonuniform(m: &PowerLawModel, s: usize, rng: &mut Rng, n: usize) -> f64 {
     let alpha = solver::optimal_alpha_nonuniform(m, s);
     let cb = solver::nonuniform_codebook(m, alpha, s);
     let mut mse = 0.0;
-    for _ in 0..N {
+    for _ in 0..n {
         let g = rng.power_law_gradient(m.g_min, m.gamma, 2.0 * m.rho) as f32;
         let idx = quantize_codebook_elem(g, rng.f32(), &cb);
         mse += ((cb[idx as usize] - g) as f64).powi(2);
     }
-    mse / N as f64
+    mse / n as f64
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("thm_bounds", &opts);
+    let n = opts.size("TQSGD_BENCH_SAMPLES", 150_000, 15_000);
     let mut rng = Rng::new(2024);
 
     for &gamma in &[3.5f64, 4.0, 4.5] {
@@ -56,8 +57,8 @@ fn main() {
             let s = levels_for_bits(b);
             let t1 = theory::theorem1_bound(&m, 1, 1, s);
             let t2 = theory::theorem2_bound(&m, 1, 1, s);
-            let m1 = measured_e_tq_uniform(&m, s, &mut rng);
-            let m2 = measured_e_tq_nonuniform(&m, s, &mut rng);
+            let m1 = measured_e_tq_uniform(&m, s, &mut rng, n);
+            let m2 = measured_e_tq_nonuniform(&m, s, &mut rng, n);
             t.row(&[
                 b.to_string(),
                 s.to_string(),
@@ -69,14 +70,15 @@ fn main() {
             ]);
         }
         t.print();
+        report.table(&format!("Theorems 1/2 — γ = {gamma}"), &t);
 
         // Communication-scaling slope.
         let t_a = theory::theorem1_bound(&m, 1, 1, 7);
         let t_b = theory::theorem1_bound(&m, 1, 1, 31);
         let slope = (t_b / t_a).ln() / (31.0f64 / 7.0).ln();
         let expect = (6.0 - 2.0 * gamma) / (gamma - 1.0);
-        let m_a = measured_e_tq_uniform(&m, 7, &mut rng);
-        let m_b = measured_e_tq_uniform(&m, 31, &mut rng);
+        let m_a = measured_e_tq_uniform(&m, 7, &mut rng, n);
+        let m_b = measured_e_tq_uniform(&m, 31, &mut rng, n);
         let slope_meas = (m_b / m_a).ln() / (31.0f64 / 7.0).ln();
         println!(
             "scaling E_TQ ∝ s^x: theory x = {expect:.3}, bound slope = {slope:.3}, measured slope = {slope_meas:.3}"
@@ -88,4 +90,6 @@ fn main() {
             if eps <= bound + 1e-9 { "HOLDS" } else { "VIOLATED" }
         );
     }
+    report.finish(&opts)?;
+    Ok(())
 }

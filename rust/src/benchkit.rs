@@ -1,10 +1,23 @@
 //! Bench harness substrate (criterion is not in the build image).
 //!
 //! Provides warmup + repeated timed runs with median/mean/stddev reporting,
-//! throughput helpers, and an aligned table printer used by every
-//! `benches/*.rs` target to render the paper's figures as text series.
+//! throughput helpers, an aligned table printer used by every `benches/*.rs`
+//! target to render the paper's figures as text series — and the
+//! machine-readable side of the harness:
+//!
+//! * [`BenchOpts`] — the shared `--quick` / `TQSGD_BENCH_QUICK=1` sizing
+//!   switch and the `--json <path>` / `TQSGD_BENCH_JSON` report destination
+//!   every bench target honors (no per-target `env_usize` drift),
+//! * [`Report`] — captures every printed table plus named numeric metrics
+//!   and serializes them to JSON (the `BENCH_*.json` perf trajectory),
+//! * [`check_regression`] — the CI gate comparing a fresh report against
+//!   the committed `BENCH_baseline.json` (see `tqsgd perf-check`).
 
 use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json::{self, Value};
 
 /// Timing statistics over the measured runs.
 #[derive(Clone, Copy, Debug)]
@@ -16,6 +29,18 @@ pub struct Timing {
 }
 
 impl Timing {
+    /// Build the statistics from raw per-run samples (nanoseconds).
+    pub fn from_samples(mut samples: Vec<f64>) -> Timing {
+        assert!(!samples.is_empty(), "need at least one sample");
+        let runs = samples.len();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / samples.len() as f64;
+        Timing { median_ns: median, mean_ns: mean, stddev_ns: var.sqrt(), runs }
+    }
+
     pub fn per_elem_ns(&self, elems: usize) -> f64 {
         self.median_ns / elems as f64
     }
@@ -23,6 +48,11 @@ impl Timing {
     /// Throughput in GB/s given bytes touched per run.
     pub fn gbps(&self, bytes: usize) -> f64 {
         bytes as f64 / self.median_ns
+    }
+
+    /// Throughput in millions of elements per second for `elems` per run.
+    pub fn melems_per_s(&self, elems: usize) -> f64 {
+        elems as f64 * 1e3 / self.median_ns
     }
 
     pub fn pretty(&self) -> String {
@@ -53,12 +83,7 @@ pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = samples[samples.len() / 2];
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    let var =
-        samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / samples.len() as f64;
-    Timing { median_ns: median, mean_ns: mean, stddev_ns: var.sqrt(), runs }
+    Timing::from_samples(samples)
 }
 
 /// Auto-sizing: pick an iteration count so one measurement takes ≥ `min_ms`.
@@ -77,6 +102,76 @@ pub fn calibrate<F: FnMut()>(mut f: F, min_ms: f64) -> usize {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared bench invocation options
+// ---------------------------------------------------------------------------
+
+/// Options every bench target parses the same way: the CI-sized `--quick`
+/// switch (or `TQSGD_BENCH_QUICK=1`) and the JSON report destination
+/// (`--json <path>`, `--json=<path>`, or `TQSGD_BENCH_JSON=<path>`).
+/// Unrecognized arguments (e.g. cargo's `--bench`) are ignored.
+#[derive(Clone, Debug, Default)]
+pub struct BenchOpts {
+    /// CI-sized run: small defaults for every [`BenchOpts::size`] knob.
+    pub quick: bool,
+    /// Where [`Report::finish`] writes the JSON report (None = print only).
+    pub json_path: Option<String>,
+}
+
+impl BenchOpts {
+    /// Parse from the process arguments and environment.
+    pub fn from_env_and_args() -> BenchOpts {
+        Self::parse(std::env::args().skip(1), |k| std::env::var(k).ok())
+    }
+
+    /// Testable core of [`Self::from_env_and_args`]: explicit flags win over
+    /// the environment.
+    pub fn parse<I, F>(args: I, env: F) -> BenchOpts
+    where
+        I: IntoIterator<Item = String>,
+        F: Fn(&str) -> Option<String>,
+    {
+        let mut o = BenchOpts::default();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            if a == "--quick" {
+                o.quick = true;
+            } else if a == "--json" {
+                if let Some(p) = it.next() {
+                    o.json_path = Some(p);
+                }
+            } else if let Some(p) = a.strip_prefix("--json=") {
+                o.json_path = Some(p.to_string());
+            }
+        }
+        if !o.quick {
+            o.quick = matches!(
+                env("TQSGD_BENCH_QUICK").as_deref(),
+                Some("1") | Some("true") | Some("yes")
+            );
+        }
+        if o.json_path.is_none() {
+            o.json_path = env("TQSGD_BENCH_JSON").filter(|p| !p.is_empty());
+        }
+        o
+    }
+
+    /// Bench sizing with one convention for every target: an explicit
+    /// `env_var` override (e.g. `TQSGD_BENCH_ROUNDS=800`) wins; otherwise
+    /// the `quick` or `full` default, by [`Self::quick`].
+    pub fn size(&self, env_var: &str, full: usize, quick: usize) -> usize {
+        match std::env::var(env_var).ok().and_then(|v| v.parse().ok()) {
+            Some(n) => n,
+            None if self.quick => quick,
+            None => full,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tables + machine-readable report
+// ---------------------------------------------------------------------------
+
 /// Aligned text table (markdown-ish) for bench reports.
 pub struct Table {
     headers: Vec<String>,
@@ -91,6 +186,16 @@ impl Table {
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
+    }
+
+    /// Column headers (for [`Report::table`] capture).
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    /// Row cells (for [`Report::table`] capture).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
     }
 
     pub fn print(&self) {
@@ -119,14 +224,202 @@ impl Table {
     }
 }
 
+struct ReportTable {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+/// Machine-readable bench report: every table the target printed plus named
+/// numeric metrics, serialized as JSON. The committed `BENCH_baseline.json`
+/// is one of these; the CI perf gate compares metric-to-metric (see
+/// [`check_regression`]).
+///
+/// Schema:
+///
+/// ```json
+/// {"bench": "perf_hotpath", "mode": "quick" | "full",
+///  "metrics": {"tqsgd_b4_encode_into_melems_per_s": 312.4, ...},
+///  "tables": [{"title": "...", "headers": ["..."], "rows": [["..."]]}]}
+/// ```
+pub struct Report {
+    name: String,
+    quick: bool,
+    metrics: Vec<(String, f64)>,
+    tables: Vec<ReportTable>,
+}
+
+impl Report {
+    /// Start a report for the named bench target.
+    pub fn new(name: &str, opts: &BenchOpts) -> Report {
+        Report { name: name.to_string(), quick: opts.quick, metrics: vec![], tables: vec![] }
+    }
+
+    /// The bench target this report belongs to.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Capture a printed table under `title`.
+    pub fn table(&mut self, title: &str, t: &Table) {
+        self.tables.push(ReportTable {
+            title: title.to_string(),
+            headers: t.headers().to_vec(),
+            rows: t.rows().to_vec(),
+        });
+    }
+
+    /// Record a named numeric metric (later entries with the same name win
+    /// in [`Self::metric_value`] lookups — last write is authoritative).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Look up a recorded metric by name.
+    pub fn metric_value(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().rev().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Serialize to the JSON schema above.
+    pub fn to_value(&self) -> Value {
+        let metrics = Value::Obj(
+            self.metrics.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+        );
+        let tables = Value::Arr(
+            self.tables
+                .iter()
+                .map(|t| {
+                    json::obj(vec![
+                        ("title", json::s(&t.title)),
+                        (
+                            "headers",
+                            Value::Arr(t.headers.iter().map(|h| json::s(h)).collect()),
+                        ),
+                        (
+                            "rows",
+                            Value::Arr(
+                                t.rows
+                                    .iter()
+                                    .map(|r| {
+                                        Value::Arr(r.iter().map(|c| json::s(c)).collect())
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("bench", json::s(&self.name)),
+            ("mode", json::s(if self.quick { "quick" } else { "full" })),
+            ("metrics", metrics),
+            ("tables", tables),
+        ])
+    }
+
+    /// Parse a report back from its JSON form.
+    pub fn from_value(v: &Value) -> Result<Report> {
+        let name = v.req("bench")?.as_str().ok_or_else(|| anyhow!("bench must be a string"))?;
+        let quick = v.req("mode")?.as_str() == Some("quick");
+        let mut metrics = Vec::new();
+        if let Some(m) = v.get("metrics").and_then(|m| m.as_obj()) {
+            for (k, val) in m {
+                metrics.push((
+                    k.clone(),
+                    val.as_f64().ok_or_else(|| anyhow!("metric {k:?} must be numeric"))?,
+                ));
+            }
+        }
+        let mut tables = Vec::new();
+        if let Some(ts) = v.get("tables").and_then(|t| t.as_arr()) {
+            for t in ts {
+                let title = t.req("title")?.as_str().unwrap_or_default().to_string();
+                let headers = t
+                    .req("headers")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("table headers must be an array"))?
+                    .iter()
+                    .map(|h| h.as_str().unwrap_or_default().to_string())
+                    .collect();
+                let rows = t
+                    .req("rows")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("table rows must be an array"))?
+                    .iter()
+                    .map(|r| {
+                        r.as_arr()
+                            .map(|cells| {
+                                cells
+                                    .iter()
+                                    .map(|c| c.as_str().unwrap_or_default().to_string())
+                                    .collect()
+                            })
+                            .ok_or_else(|| anyhow!("table row must be an array"))
+                    })
+                    .collect::<Result<Vec<Vec<String>>>>()?;
+                tables.push(ReportTable { title, headers, rows });
+            }
+        }
+        Ok(Report { name: name.to_string(), quick, metrics, tables })
+    }
+
+    /// Load a report from a JSON file.
+    pub fn load(path: &std::path::Path) -> Result<Report> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Report::from_value(&Value::parse(&text)?)
+    }
+
+    /// Write the report to `opts.json_path` if one was requested.
+    pub fn finish(&self, opts: &BenchOpts) -> Result<()> {
+        if let Some(p) = &opts.json_path {
+            std::fs::write(p, self.to_value().to_json() + "\n")
+                .map_err(|e| anyhow!("writing {p}: {e}"))?;
+            println!("\nbench report: {p}");
+        }
+        Ok(())
+    }
+}
+
+/// CI perf gate: `metric` (higher is better) in `current` may not drop more
+/// than `max_drop` (fraction in `[0, 1)`) below `baseline`. Returns a
+/// one-line summary on pass, an error describing the regression on fail.
+pub fn check_regression(
+    current: &Report,
+    baseline: &Report,
+    metric: &str,
+    max_drop: f64,
+) -> Result<String> {
+    if !(0.0..1.0).contains(&max_drop) {
+        bail!("max_drop must be in [0, 1), got {max_drop}");
+    }
+    let cur = current
+        .metric_value(metric)
+        .ok_or_else(|| anyhow!("current report has no metric {metric:?}"))?;
+    let base = baseline
+        .metric_value(metric)
+        .ok_or_else(|| anyhow!("baseline report has no metric {metric:?}"))?;
+    if base <= 0.0 || base.is_nan() || !cur.is_finite() {
+        bail!("non-positive baseline ({base}) or non-finite current ({cur}) for {metric:?}");
+    }
+    let floor = base * (1.0 - max_drop);
+    if cur < floor {
+        bail!(
+            "perf regression: {metric} = {cur:.2} is below the floor {floor:.2} \
+             ({:.0}% of baseline {base:.2})",
+            100.0 * (1.0 - max_drop)
+        );
+    }
+    Ok(format!(
+        "{metric}: {cur:.2} vs baseline {base:.2} (floor {floor:.2}, {:+.1}%) — OK",
+        100.0 * (cur / base - 1.0)
+    ))
+}
+
 /// Section header used by the bench binaries.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
-}
-
-/// Env-var override for bench sizing (e.g. `TQSGD_BENCH_ROUNDS=800`).
-pub fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
 #[cfg(test)]
@@ -143,11 +436,35 @@ mod tests {
     }
 
     #[test]
+    fn from_samples_median_mean_stddev() {
+        // Median of an odd-length sorted list is the middle element even
+        // when samples arrive shuffled; mean and stddev are exact.
+        let t = Timing::from_samples(vec![30.0, 10.0, 20.0, 50.0, 40.0]);
+        assert_eq!(t.median_ns, 30.0);
+        assert_eq!(t.mean_ns, 30.0);
+        assert!((t.stddev_ns - 200.0f64.sqrt()).abs() < 1e-9);
+        assert_eq!(t.runs, 5);
+        // Even length: upper-middle element (len/2 after sort).
+        let t = Timing::from_samples(vec![4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.median_ns, 3.0);
+        // Throughput helpers.
+        let t = Timing::from_samples(vec![1000.0]);
+        assert_eq!(t.per_elem_ns(100), 10.0);
+        assert_eq!(t.gbps(4000), 4.0);
+        assert_eq!(t.melems_per_s(1000), 1000.0);
+    }
+
+    #[test]
     fn fmt_ns_units() {
         assert!(fmt_ns(500.0).contains("ns"));
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+        // Boundaries: 999.4 rounds within ns; exactly 1e3/1e6/1e9 promote.
+        assert_eq!(fmt_ns(999.0), "999 ns");
+        assert_eq!(fmt_ns(1e3), "1.00 µs");
+        assert_eq!(fmt_ns(1e6), "1.00 ms");
+        assert_eq!(fmt_ns(1e9), "1.00 s");
     }
 
     #[test]
@@ -166,5 +483,90 @@ mod tests {
     fn table_checks_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".to_string()]);
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn opts_parse_flags_and_env() {
+        let none = |_: &str| None;
+        let o = BenchOpts::parse(args(&["--quick", "--json", "out.json"]), none);
+        assert!(o.quick);
+        assert_eq!(o.json_path.as_deref(), Some("out.json"));
+        let o = BenchOpts::parse(args(&["--json=x.json", "--bench"]), none);
+        assert!(!o.quick);
+        assert_eq!(o.json_path.as_deref(), Some("x.json"));
+        // Env fallbacks.
+        let env = |k: &str| match k {
+            "TQSGD_BENCH_QUICK" => Some("1".to_string()),
+            "TQSGD_BENCH_JSON" => Some("env.json".to_string()),
+            _ => None,
+        };
+        let o = BenchOpts::parse(args(&[]), env);
+        assert!(o.quick);
+        assert_eq!(o.json_path.as_deref(), Some("env.json"));
+        // Explicit flag beats env.
+        let o = BenchOpts::parse(args(&["--json", "flag.json"]), env);
+        assert_eq!(o.json_path.as_deref(), Some("flag.json"));
+    }
+
+    #[test]
+    fn size_env_override_beats_quick_default() {
+        let var = "TQSGD_BENCH_TEST_SIZE_OVERRIDE";
+        std::env::remove_var(var);
+        let quick = BenchOpts { quick: true, json_path: None };
+        let full = BenchOpts::default();
+        assert_eq!(quick.size(var, 300, 20), 20);
+        assert_eq!(full.size(var, 300, 20), 300);
+        std::env::set_var(var, "77");
+        assert_eq!(quick.size(var, 300, 20), 77, "env override wins over quick");
+        assert_eq!(full.size(var, 300, 20), 77);
+        std::env::remove_var(var);
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let opts = BenchOpts { quick: true, json_path: None };
+        let mut r = Report::new("unit_bench", &opts);
+        let mut t = Table::new(&["codec", "ns"]);
+        t.row(&["tqsgd".to_string(), "123".to_string()]);
+        t.row(&["qsgd".to_string(), "456".to_string()]);
+        r.table("encode", &t);
+        r.metric("throughput_melems_per_s", 312.5);
+        r.metric("bytes_out", 500006.0);
+        let v = r.to_json_roundtrip();
+        assert_eq!(v.metric_value("throughput_melems_per_s"), Some(312.5));
+        assert_eq!(v.name(), "unit_bench");
+        assert!(v.quick);
+        assert_eq!(v.tables.len(), 1);
+        assert_eq!(v.tables[0].title, "encode");
+        assert_eq!(v.tables[0].headers, vec!["codec", "ns"]);
+        assert_eq!(v.tables[0].rows[1][1], "456");
+        // The serialized forms agree exactly.
+        assert_eq!(v.to_value().to_json(), r.to_value().to_json());
+    }
+
+    impl Report {
+        fn to_json_roundtrip(&self) -> Report {
+            let text = self.to_value().to_json();
+            Report::from_value(&Value::parse(&text).unwrap()).unwrap()
+        }
+    }
+
+    #[test]
+    fn regression_gate_passes_and_fails() {
+        let opts = BenchOpts::default();
+        let mut base = Report::new("perf_hotpath", &opts);
+        base.metric("enc", 100.0);
+        let mut ok = Report::new("perf_hotpath", &opts);
+        ok.metric("enc", 71.0);
+        assert!(check_regression(&ok, &base, "enc", 0.30).is_ok());
+        let mut slow = Report::new("perf_hotpath", &opts);
+        slow.metric("enc", 69.0);
+        let err = check_regression(&slow, &base, "enc", 0.30).unwrap_err();
+        assert!(err.to_string().contains("regression"), "{err}");
+        assert!(check_regression(&ok, &base, "missing", 0.30).is_err());
     }
 }

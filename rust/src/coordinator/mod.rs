@@ -36,7 +36,7 @@ use crate::config::ExperimentConfig;
 use crate::data::{gather_batch, BatchSampler, Dataset, MarkovCorpus};
 use crate::metrics::{RoundRecord, RunLog, Timer};
 use crate::optim::MomentumSgd;
-use crate::quant::{make_compressor, Compressor, ErrorFeedback};
+use crate::quant::{make_compressor, Compressor, ErrorFeedback, FrameArena};
 use crate::runtime::{Backend, GroupRange, ModelSpec};
 use crate::util::Rng;
 
@@ -54,10 +54,10 @@ impl GroupCodec {
         }
     }
 
-    fn compress(&mut self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
         match self {
-            GroupCodec::Plain(c) => c.compress(grads, rng),
-            GroupCodec::Ef(c) => c.compress_with_feedback(grads, rng),
+            GroupCodec::Plain(c) => c.compress_into(grads, rng, out),
+            GroupCodec::Ef(c) => c.compress_with_feedback_into(grads, rng, out),
         }
     }
 
@@ -100,6 +100,9 @@ pub struct Client {
     data: TaskData,
     sampler: BatchSampler,
     codecs: Vec<GroupCodec>,
+    /// Recycled frame buffers: survives across rounds, one arena per client
+    /// so the codec worker threads never share a pool.
+    arena: FrameArena,
     /// Fraction of the global data this client holds (aggregation weight).
     pub weight: f64,
 }
@@ -124,7 +127,8 @@ impl Client {
     }
 
     /// Compress a gradient per layer group into a message (runs on a worker
-    /// thread; pure rust).
+    /// thread; pure rust). Frame buffers come from this client's arena, so
+    /// in steady state the encode path performs zero heap allocation.
     fn compress(
         &mut self,
         grads: &[f32],
@@ -141,9 +145,18 @@ impl Client {
                 self.codecs[gi].refit(slice);
             }
             let mut rng = Rng::for_stream(seed, 0x9A7E, (self.id * 1031 + gi) as u64, round as u64);
-            frames.push((gi, self.codecs[gi].compress(slice, &mut rng)));
+            let mut buf = self.arena.take();
+            self.codecs[gi].compress_into(slice, &mut rng, &mut buf);
+            frames.push((gi, buf));
         }
         Message { client: self.id, round, frames, loss }
+    }
+
+    /// Recycle a consumed message's frame buffers back into the arena.
+    fn recycle(&mut self, msg: Message) {
+        for (_, frame) in msg.frames {
+            self.arena.put(frame);
+        }
     }
 
     /// Re-fold an undeliverable message into this client's error-feedback
@@ -182,6 +195,9 @@ pub struct Coordinator<'b> {
     pub round: usize,
     /// Scratch: aggregated gradient buffer.
     agg: Vec<f32>,
+    /// Scratch: per-frame dequantize target, reused across uplinks so the
+    /// server side never reallocates the dense buffer.
+    decode_buf: Vec<f32>,
 }
 
 impl<'b> Coordinator<'b> {
@@ -219,6 +235,7 @@ impl<'b> Coordinator<'b> {
                     sampler: BatchSampler::new(shard.len(), cfg.seed, i as u64),
                     data: TaskData::Vision { shard },
                     codecs: make_codecs(&cfg, &spec.groups),
+                    arena: FrameArena::new(),
                     weight,
                 });
             }
@@ -242,6 +259,7 @@ impl<'b> Coordinator<'b> {
                         seq_len: spec.seq_len,
                     },
                     codecs: make_codecs(&cfg, &spec.groups),
+                    arena: FrameArena::new(),
                     weight: 1.0 / cfg.clients as f64,
                 });
             }
@@ -263,6 +281,7 @@ impl<'b> Coordinator<'b> {
             lm_eval_corpus,
             round: 0,
             agg: vec![0.0; dim],
+            decode_buf: Vec::new(),
         })
     }
 
@@ -281,6 +300,15 @@ impl<'b> Coordinator<'b> {
     /// and the Fig. 1 bench to harvest realistic gradients.
     pub fn last_aggregate(&self) -> &[f32] {
         &self.agg
+    }
+
+    /// Total fresh frame-buffer allocations across all client arenas since
+    /// construction — the debug counter behind the steady-state
+    /// zero-allocation invariant: after warm-up rounds this number must
+    /// stop moving (asserted by the integration suite and surfaced by the
+    /// `perf_hotpath` bench).
+    pub fn frame_allocs(&self) -> u64 {
+        self.clients.iter().map(|c| c.arena.fresh_allocs()).sum()
     }
 
     /// Execute one communication round; returns the round record.
@@ -339,6 +367,8 @@ impl<'b> Coordinator<'b> {
         let mut lost_bytes = 0u64;
         for m in msgs {
             if m.client == self.cfg.drop_client {
+                let ci = m.client;
+                self.clients[ci].recycle(m);
                 continue;
             }
             match self.scenario.link(m.client, round as u64) {
@@ -350,7 +380,9 @@ impl<'b> Coordinator<'b> {
                 // EF client keeps the undelivered mass in its residual.
                 None => {
                     lost_bytes += self.net.account_lost(&m, self.scenario.lost_attempts());
-                    self.clients[m.client].restore_lost(&m);
+                    let ci = m.client;
+                    self.clients[ci].restore_lost(&m);
+                    self.clients[ci].recycle(m);
                 }
             }
         }
@@ -396,15 +428,17 @@ impl<'b> Coordinator<'b> {
                     / w_total) as f32;
                 for (gi, frame) in &m.frames {
                     let g = &self.groups[*gi];
-                    let decoded = crate::quant::wire::decode_dequantize(frame)?;
-                    if decoded.len() != g.end - g.start {
+                    // Dequantize into the reused scratch: no dense-buffer
+                    // allocation per uplink.
+                    crate::quant::wire::decode_dequantize_into(frame, &mut self.decode_buf)?;
+                    if self.decode_buf.len() != g.end - g.start {
                         return Err(anyhow!(
                             "frame length {} != group size {}",
-                            decoded.len(),
+                            self.decode_buf.len(),
                             g.end - g.start
                         ));
                     }
-                    for (a, &d) in self.agg[g.start..g.end].iter_mut().zip(&decoded) {
+                    for (a, &d) in self.agg[g.start..g.end].iter_mut().zip(&self.decode_buf) {
                         *a += w * d;
                     }
                 }
@@ -412,6 +446,12 @@ impl<'b> Coordinator<'b> {
             let agg = std::mem::take(&mut self.agg);
             self.opt.step(&mut self.params, &agg);
             self.agg = agg;
+        }
+        // Aggregation is done with these frames: hand the buffers back to
+        // their owners' arenas so next round's encode allocates nothing.
+        for (m, _) in apply {
+            let ci = m.client;
+            self.clients[ci].recycle(m);
         }
 
         let train_loss =

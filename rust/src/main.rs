@@ -6,10 +6,11 @@
 //! tqsgd fit-tail [--model cnn --rounds 5]
 //! tqsgd solve   --gamma 4.0 --gmin 0.01 --rho 0.1 --bits 3
 //! tqsgd info
+//! tqsgd perf-check --current BENCH_perf.json [--baseline BENCH_baseline.json]
 //! ```
 
 use anyhow::{bail, Result};
-use tqsgd::benchkit::Table;
+use tqsgd::benchkit::{check_regression, Report, Table};
 use tqsgd::cli::Args;
 use tqsgd::config::{ExperimentConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
@@ -26,7 +27,10 @@ fn main() -> Result<()> {
         Some("fit-tail") => cmd_fit_tail(&args),
         Some("solve") => cmd_solve(&args),
         Some("info") => cmd_info(&args),
-        Some(other) => bail!("unknown subcommand {other:?}; try: train sweep fit-tail solve info"),
+        Some("perf-check") => cmd_perf_check(&args),
+        Some(other) => {
+            bail!("unknown subcommand {other:?}; try: train sweep fit-tail solve info perf-check")
+        }
         None => {
             println!(
                 "tqsgd — truncated quantization for heavy-tailed gradients in distributed SGD\n\n\
@@ -35,7 +39,8 @@ fn main() -> Result<()> {
                  \x20 sweep     scheme x bits sweep (communication-learning tradeoff)\n\
                  \x20 fit-tail  fit power-law/gaussian/laplace to real model gradients\n\
                  \x20 solve     print optimal quantizer parameters for a tail model\n\
-                 \x20 info      show the selected backend and its models\n\n\
+                 \x20 info      show the selected backend and its models\n\
+                 \x20 perf-check  gate a bench JSON report against the committed baseline\n\n\
                  common flags: --model --scheme --bits --clients --rounds --lr --seed\n\
                  \x20             --backend (auto|native|pjrt) --error-feedback\n\
                  \x20             --drop-client --artifacts --preset\n\
@@ -199,6 +204,24 @@ fn cmd_solve(args: &Args) -> Result<()> {
     );
     println!("\nTNQSGD codebook: {:?}", solver::nonuniform_codebook(&m, an, s));
     println!("TBQSGD codebook: {:?}", d.codebook());
+    Ok(())
+}
+
+/// CI perf gate: compare a fresh `perf_hotpath` JSON report against the
+/// committed `BENCH_baseline.json` and fail (non-zero exit) when the gated
+/// throughput metric dropped more than `--max-drop` below the baseline.
+fn cmd_perf_check(args: &Args) -> Result<()> {
+    let current = args.str_or("current", "BENCH_perf.json");
+    let baseline = args.str_or("baseline", "BENCH_baseline.json");
+    let metric = args.str_or("metric", "tqsgd_b4_encode_into_melems_per_s");
+    let max_drop = args.f64_or("max-drop", 0.30)?;
+    let cur = Report::load(std::path::Path::new(&current))?;
+    let base = Report::load(std::path::Path::new(&baseline))?;
+    println!(
+        "{}",
+        check_regression(&cur, &base, &metric, max_drop)
+            .map_err(|e| e.context(format!("{current} vs {baseline}")))?
+    );
     Ok(())
 }
 

@@ -1,0 +1,100 @@
+//! Frame-buffer arena: the allocation-recycling substrate of the
+//! zero-allocation hot path.
+//!
+//! Every round each client emits one wire frame per layer group. Allocating
+//! those `Vec<u8>`s fresh costs an mmap + page-fault + zero per ~0.5 MB
+//! frame at CNN scale — comparable to the quantization work itself. The
+//! [`FrameArena`] instead pools returned buffers: [`FrameArena::take`]
+//! hands back a cleared buffer whose capacity survived the previous round,
+//! and [`FrameArena::put`] recycles it once the server has aggregated the
+//! frame (or the network lost it).
+//!
+//! Each [`Client`](crate::coordinator::Client) owns one arena, so the
+//! per-client codec threads spawned by `Coordinator::step`'s
+//! `std::thread::scope` fan-out never contend on a shared pool. The arena
+//! counts how many `take` calls had to heap-allocate — the debug counter
+//! behind `Coordinator::frame_allocs` and the steady-state
+//! zero-allocation test in the integration suite.
+
+/// Recycling pool of wire-frame byte buffers (LIFO: the most recently
+/// returned buffer — warmest in cache, largest capacity — is reused first).
+#[derive(Debug, Default)]
+pub struct FrameArena {
+    free: Vec<Vec<u8>>,
+    fresh: u64,
+}
+
+impl FrameArena {
+    /// An empty arena; the first `groups`-many takes per client allocate,
+    /// everything after reuses.
+    pub fn new() -> FrameArena {
+        FrameArena::default()
+    }
+
+    /// Take a cleared buffer, reusing a recycled one when available.
+    /// A pool miss allocates fresh and bumps the [`Self::fresh_allocs`]
+    /// counter — in steady state this never happens.
+    pub fn take(&mut self) -> Vec<u8> {
+        match self.free.pop() {
+            Some(buf) => buf,
+            None => {
+                self.fresh += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer for reuse; contents are cleared, capacity is kept.
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        buf.clear();
+        self.free.push(buf);
+    }
+
+    /// How many [`Self::take`] calls had to heap-allocate a fresh buffer
+    /// (the steady-state zero-allocation invariant's debug counter).
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh
+    }
+
+    /// Buffers currently sitting in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_capacity_and_counts_fresh() {
+        let mut a = FrameArena::new();
+        let mut b = a.take();
+        assert_eq!(a.fresh_allocs(), 1);
+        b.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = b.capacity();
+        a.put(b);
+        assert_eq!(a.pooled(), 1);
+        let b2 = a.take();
+        assert_eq!(a.fresh_allocs(), 1, "reuse must not count as fresh");
+        assert!(b2.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(b2.capacity(), cap, "capacity survives the round trip");
+    }
+
+    #[test]
+    fn lifo_order_and_pool_accounting() {
+        let mut a = FrameArena::new();
+        let mut x = a.take();
+        let y = a.take();
+        assert_eq!(a.fresh_allocs(), 2);
+        x.push(7);
+        let x_cap = x.capacity();
+        a.put(y);
+        a.put(x);
+        assert_eq!(a.pooled(), 2);
+        // Most recently returned (x, with capacity) comes out first.
+        let first = a.take();
+        assert_eq!(first.capacity(), x_cap);
+        assert_eq!(a.pooled(), 1);
+    }
+}

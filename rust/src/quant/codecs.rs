@@ -23,8 +23,8 @@ use crate::solver;
 use crate::tail::{fit_power_law, fit::report_to_model, PowerLawModel};
 use crate::util::Rng;
 
-use super::kernels::{quantize_codebook_packed, quantize_uniform_packed};
-use super::wire::{self, Payload};
+use super::kernels::{quantize_codebook_pack_into, quantize_uniform_pack_into};
+use super::wire;
 
 /// A gradient compressor: stateful (distribution estimates), one per
 /// (client, layer-group).
@@ -34,8 +34,21 @@ pub trait Compressor: Send {
     /// Update distribution state from a fresh local gradient.
     fn refit(&mut self, grads: &[f32]);
 
-    /// Compress into wire bytes. `rng` drives the stochastic rounding.
-    fn compress(&self, grads: &[f32], rng: &mut Rng) -> Vec<u8>;
+    /// Compress into a caller-provided frame buffer (cleared first). `rng`
+    /// drives the stochastic rounding. This is the steady-state hot path:
+    /// with a recycled `out` of sufficient capacity (see
+    /// [`FrameArena`](super::FrameArena)) it performs zero heap allocation.
+    /// `&mut self` lets codecs keep internal scratch (e.g. Top-k's
+    /// selection buffers); distribution state only changes via `refit`.
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>);
+
+    /// Convenience wrapper over [`Compressor::compress_into`] that allocates
+    /// a fresh frame — byte- and RNG-stream-identical to the in-place path.
+    fn compress(&mut self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.compress_into(grads, rng, &mut out);
+        out
+    }
 
     /// One-line description of current state (for logs).
     fn describe(&self) -> String;
@@ -52,7 +65,7 @@ pub fn make_compressor(cfg: &QuantConfig) -> Box<dyn Compressor> {
         Scheme::Tnqsgd => Box::new(TnqsgdCodec { s, state: None }),
         Scheme::Tbqsgd => Box::new(TbqsgdCodec { s, state: None }),
         Scheme::Terngrad => Box::new(TerngradCodec),
-        Scheme::Topk => Box::new(TopkCodec { frac: cfg.topk_frac }),
+        Scheme::Topk => Box::new(TopkCodec::new(cfg.topk_frac)),
     }
 }
 
@@ -79,8 +92,9 @@ impl Compressor for DsgdCodec {
 
     fn refit(&mut self, _grads: &[f32]) {}
 
-    fn compress(&self, grads: &[f32], _rng: &mut Rng) -> Vec<u8> {
-        Payload::Raw(grads.to_vec()).encode(0)
+    fn compress_into(&mut self, grads: &[f32], _rng: &mut Rng, out: &mut Vec<u8>) {
+        // Straight from the borrowed slice — no `grads.to_vec()` staging copy.
+        wire::encode_raw_into(grads, out);
     }
 
     fn describe(&self) -> String {
@@ -106,11 +120,11 @@ impl Compressor for QsgdCodec {
 
     fn refit(&mut self, _grads: &[f32]) {}
 
-    fn compress(&self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
         let alpha = max_abs(grads).max(f32::MIN_POSITIVE);
         let bits = bits_for(self.s);
-        let packed = quantize_uniform_packed(grads, rng, alpha, self.s, bits);
-        wire::encode_uniform_packed(alpha, self.s as u16, grads.len() as u32, bits, &packed)
+        wire::begin_uniform_frame(out, alpha, self.s as u16, grads.len() as u32, bits);
+        quantize_uniform_pack_into(grads, rng, alpha, self.s, bits, out);
     }
 
     fn describe(&self) -> String {
@@ -137,20 +151,24 @@ impl Compressor for NqsgdCodec {
         }
     }
 
-    fn compress(&self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
         let range = max_abs(grads).max(f32::MIN_POSITIVE) as f64;
         let bits = bits_for(self.s);
         match &self.model {
             Some(m) if range > m.g_min => {
                 let cb = solver::nonuniform_codebook(m, range, self.s as usize);
-                let packed = quantize_codebook_packed(grads, rng, &cb, bits);
-                wire::encode_codebook_packed(&cb, grads.len() as u32, bits, &packed)
+                wire::begin_codebook_frame(out, &cb, grads.len() as u32, bits);
+                quantize_codebook_pack_into(grads, rng, &cb, bits, out);
             }
             _ => {
-                let packed = quantize_uniform_packed(grads, rng, range as f32, self.s, bits);
-                wire::encode_uniform_packed(
-                    range as f32, self.s as u16, grads.len() as u32, bits, &packed,
-                )
+                wire::begin_uniform_frame(
+                    out,
+                    range as f32,
+                    self.s as u16,
+                    grads.len() as u32,
+                    bits,
+                );
+                quantize_uniform_pack_into(grads, rng, range as f32, self.s, bits, out);
             }
         }
     }
@@ -202,14 +220,14 @@ impl Compressor for TqsgdCodec {
         }
     }
 
-    fn compress(&self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
         let alpha = match &self.state {
             Some(st) => st.alpha as f32,
             None => max_abs(grads).max(f32::MIN_POSITIVE), // pre-fit fallback
         };
         let bits = bits_for(self.s);
-        let packed = quantize_uniform_packed(grads, rng, alpha, self.s, bits);
-        wire::encode_uniform_packed(alpha, self.s as u16, grads.len() as u32, bits, &packed)
+        wire::begin_uniform_frame(out, alpha, self.s as u16, grads.len() as u32, bits);
+        quantize_uniform_pack_into(grads, rng, alpha, self.s, bits, out);
     }
 
     fn describe(&self) -> String {
@@ -242,20 +260,18 @@ impl Compressor for TnqsgdCodec {
         }
     }
 
-    fn compress(&self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
         let bits = bits_for(self.s);
         match &self.state {
             Some(st) => {
                 let cb = st.codebook.as_ref().unwrap();
-                let packed = quantize_codebook_packed(grads, rng, cb, bits);
-                wire::encode_codebook_packed(cb, grads.len() as u32, bits, &packed)
+                wire::begin_codebook_frame(out, cb, grads.len() as u32, bits);
+                quantize_codebook_pack_into(grads, rng, cb, bits, out);
             }
             None => {
                 let alpha = max_abs(grads).max(f32::MIN_POSITIVE);
-                let packed = quantize_uniform_packed(grads, rng, alpha, self.s, bits);
-                wire::encode_uniform_packed(
-                    alpha, self.s as u16, grads.len() as u32, bits, &packed,
-                )
+                wire::begin_uniform_frame(out, alpha, self.s as u16, grads.len() as u32, bits);
+                quantize_uniform_pack_into(grads, rng, alpha, self.s, bits, out);
             }
         }
     }
@@ -291,20 +307,18 @@ impl Compressor for TbqsgdCodec {
         }
     }
 
-    fn compress(&self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
         let bits = bits_for(self.s);
         match &self.state {
             Some(st) => {
                 let cb = st.codebook.as_ref().unwrap();
-                let packed = quantize_codebook_packed(grads, rng, cb, bits);
-                wire::encode_codebook_packed(cb, grads.len() as u32, bits, &packed)
+                wire::begin_codebook_frame(out, cb, grads.len() as u32, bits);
+                quantize_codebook_pack_into(grads, rng, cb, bits, out);
             }
             None => {
                 let alpha = max_abs(grads).max(f32::MIN_POSITIVE);
-                let packed = quantize_uniform_packed(grads, rng, alpha, self.s, bits);
-                wire::encode_uniform_packed(
-                    alpha, self.s as u16, grads.len() as u32, bits, &packed,
-                )
+                wire::begin_uniform_frame(out, alpha, self.s as u16, grads.len() as u32, bits);
+                quantize_uniform_pack_into(grads, rng, alpha, self.s, bits, out);
             }
         }
     }
@@ -335,10 +349,10 @@ impl Compressor for TerngradCodec {
 
     fn refit(&mut self, _grads: &[f32]) {}
 
-    fn compress(&self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
         let alpha = max_abs(grads).max(f32::MIN_POSITIVE);
-        let packed = quantize_uniform_packed(grads, rng, alpha, 2, 2);
-        wire::encode_uniform_packed(alpha, 2, grads.len() as u32, 2, &packed)
+        wire::begin_uniform_frame(out, alpha, 2, grads.len() as u32, 2);
+        quantize_uniform_pack_into(grads, rng, alpha, 2, 2, out);
     }
 
     fn describe(&self) -> String {
@@ -349,6 +363,17 @@ impl Compressor for TerngradCodec {
 /// Top-k sparsification: keep the `frac` largest-|g| entries exactly.
 pub struct TopkCodec {
     frac: f64,
+    /// Selection scratch, reused across rounds (zero steady-state allocs).
+    order: Vec<u32>,
+    /// (index, value) scratch, reused across rounds.
+    pairs: Vec<(u32, f32)>,
+}
+
+impl TopkCodec {
+    /// Codec keeping the `frac` largest-|g| entries.
+    pub fn new(frac: f64) -> TopkCodec {
+        TopkCodec { frac, order: Vec::new(), pairs: Vec::new() }
+    }
 }
 
 impl Compressor for TopkCodec {
@@ -358,20 +383,21 @@ impl Compressor for TopkCodec {
 
     fn refit(&mut self, _grads: &[f32]) {}
 
-    fn compress(&self, grads: &[f32], _rng: &mut Rng) -> Vec<u8> {
+    fn compress_into(&mut self, grads: &[f32], _rng: &mut Rng, out: &mut Vec<u8>) {
         let k = ((grads.len() as f64 * self.frac).ceil() as usize)
             .clamp(1, grads.len());
-        let mut order: Vec<u32> = (0..grads.len() as u32).collect();
-        order.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        self.order.clear();
+        self.order.extend(0..grads.len() as u32);
+        self.order.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
             grads[b as usize]
                 .abs()
                 .partial_cmp(&grads[a as usize].abs())
                 .unwrap()
         });
-        let mut pairs: Vec<(u32, f32)> =
-            order[..k].iter().map(|&i| (i, grads[i as usize])).collect();
-        pairs.sort_unstable_by_key(|&(i, _)| i);
-        Payload::Sparse { d: grads.len() as u32, pairs }.encode(0)
+        self.pairs.clear();
+        self.pairs.extend(self.order[..k].iter().map(|&i| (i, grads[i as usize])));
+        self.pairs.sort_unstable_by_key(|&(i, _)| i);
+        wire::encode_sparse_into(grads.len() as u32, &self.pairs, out);
     }
 
     fn describe(&self) -> String {
@@ -383,12 +409,13 @@ impl Compressor for TopkCodec {
 mod tests {
     use super::*;
     use crate::prop;
+    use crate::quant::wire::Payload;
 
     fn heavy(rng: &mut Rng, n: usize) -> Vec<f32> {
         (0..n).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect()
     }
 
-    fn roundtrip(c: &dyn Compressor, g: &[f32], rng: &mut Rng) -> Vec<f32> {
+    fn roundtrip(c: &mut dyn Compressor, g: &[f32], rng: &mut Rng) -> Vec<f32> {
         Payload::decode(&c.compress(g, rng)).unwrap().dequantize()
     }
 
@@ -396,7 +423,7 @@ mod tests {
     fn dsgd_is_lossless() {
         let mut rng = Rng::new(1);
         let g = heavy(&mut rng, 1000);
-        let out = roundtrip(&DsgdCodec, &g, &mut rng);
+        let out = roundtrip(&mut DsgdCodec, &g, &mut rng);
         assert_eq!(out, g);
     }
 
@@ -411,7 +438,7 @@ mod tests {
         for cfg in &cfgs {
             let mut c = make_compressor(cfg);
             c.refit(&g);
-            let out = roundtrip(c.as_ref(), &g, &mut rng);
+            let out = roundtrip(c.as_mut(), &g, &mut rng);
             assert_eq!(out.len(), g.len(), "{}", c.describe());
             assert!(out.iter().all(|x| x.is_finite()), "{}", c.describe());
         }
@@ -428,7 +455,7 @@ mod tests {
             let mut c = make_compressor(&QuantConfig { scheme, bits: 3, ..Default::default() });
             c.refit(&g);
             let mut r = Rng::new(99);
-            let out = roundtrip(c.as_ref(), &g, &mut r);
+            let out = roundtrip(c.as_mut(), &g, &mut r);
             g.iter().zip(&out).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>()
                 / g.len() as f64
         };
@@ -458,7 +485,7 @@ mod tests {
         let mut acc = vec![0.0f64; g.len()];
         for r in 0..reps {
             let mut rr = Rng::new(1000 + r);
-            let out = roundtrip(&c, &g, &mut rr);
+            let out = roundtrip(&mut c, &g, &mut rr);
             for (a, &b) in acc.iter_mut().zip(&out) {
                 *a += b as f64;
             }
@@ -476,9 +503,9 @@ mod tests {
     #[test]
     fn topk_keeps_largest() {
         let g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
-        let c = TopkCodec { frac: 0.4 };
+        let mut c = TopkCodec::new(0.4);
         let mut rng = Rng::new(5);
-        let out = roundtrip(&c, &g, &mut rng);
+        let out = roundtrip(&mut c, &g, &mut rng);
         assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
     }
 
@@ -487,7 +514,7 @@ mod tests {
         let mut rng = Rng::new(6);
         let g = heavy(&mut rng, 2000);
         let m = max_abs(&g);
-        let out = roundtrip(&TerngradCodec, &g, &mut rng);
+        let out = roundtrip(&mut TerngradCodec, &g, &mut rng);
         for &v in &out {
             assert!(
                 v == 0.0 || (v.abs() - m).abs() < 1e-6,
@@ -513,6 +540,51 @@ mod tests {
             let header = 8 + 2 + 4 * (s + 1); // frame hdr + cb len + levels
             assert_eq!(frame.len(), header + payload, "bits={bits}");
         }
+    }
+
+    #[test]
+    fn property_compress_into_is_byte_identical() {
+        // The in-place hot path must be indistinguishable on the wire from
+        // the allocating wrapper: same bytes, same RNG stream consumption,
+        // for every scheme at every bit width the frame format carries.
+        // The reused `buf` stays dirty between iterations to prove
+        // `compress_into` fully overwrites it.
+        prop::check(10, |rng| {
+            let mut buf = vec![0xAAu8; 13];
+            let n = 64 + rng.below(2000) as usize;
+            let g = prop::gen_gradient(rng, n);
+            let salt = rng.next_u64();
+            for scheme in Scheme::all() {
+                for bits in 1..=8u32 {
+                    if scheme == Scheme::Tbqsgd && bits < 2 {
+                        continue; // BiScaled needs s >= 3 intervals
+                    }
+                    let mut c = make_compressor(&QuantConfig {
+                        scheme,
+                        bits,
+                        ..Default::default()
+                    });
+                    c.refit(&g);
+                    let mut r1 = Rng::new(salt);
+                    let frame = c.compress(&g, &mut r1);
+                    let mut r2 = Rng::new(salt);
+                    c.compress_into(&g, &mut r2, &mut buf);
+                    if frame != buf {
+                        return Err(format!(
+                            "{scheme:?} bits={bits}: compress ({} B) != compress_into ({} B)",
+                            frame.len(),
+                            buf.len()
+                        ));
+                    }
+                    if r1.next_u64() != r2.next_u64() {
+                        return Err(format!(
+                            "{scheme:?} bits={bits}: RNG streams diverged"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

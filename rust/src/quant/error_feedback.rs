@@ -10,34 +10,56 @@ use crate::config::Scheme;
 use crate::util::Rng;
 
 use super::codecs::Compressor;
-use super::wire::Payload;
+use super::wire;
 
 /// Wraps any codec with an error-feedback residual buffer.
 pub struct ErrorFeedback {
     inner: Box<dyn Compressor>,
     residual: Vec<f32>,
+    /// Scratch: `g + residual`, reused across rounds (zero steady-state
+    /// allocations on the encode path).
+    adjusted: Vec<f32>,
+    /// Scratch: own-frame decode target, reused across rounds.
+    decoded: Vec<f32>,
 }
 
 impl ErrorFeedback {
     pub fn new(inner: Box<dyn Compressor>) -> Self {
-        ErrorFeedback { inner, residual: Vec::new() }
+        ErrorFeedback {
+            inner,
+            residual: Vec::new(),
+            adjusted: Vec::new(),
+            decoded: Vec::new(),
+        }
     }
 
-    /// Compress with feedback; needs `&mut self` for the residual, so this
-    /// sits outside the `Compressor` trait and the coordinator calls it
-    /// directly when `error_feedback` is enabled.
-    pub fn compress_with_feedback(&mut self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+    /// Compress with feedback into a caller-provided frame buffer — the
+    /// EF mirror of [`Compressor::compress_into`]. Needs `&mut self` for
+    /// the residual, so this sits outside the `Compressor` trait and the
+    /// coordinator calls it directly when `error_feedback` is enabled.
+    pub fn compress_with_feedback_into(
+        &mut self,
+        grads: &[f32],
+        rng: &mut Rng,
+        out: &mut Vec<u8>,
+    ) {
         if self.residual.len() != grads.len() {
             self.residual = vec![0.0; grads.len()];
         }
-        let adjusted: Vec<f32> =
-            grads.iter().zip(&self.residual).map(|(&g, &r)| g + r).collect();
-        let bytes = self.inner.compress(&adjusted, rng);
-        let decoded = Payload::decode(&bytes).expect("own frame decodes").dequantize();
-        for ((r, &a), &d) in self.residual.iter_mut().zip(&adjusted).zip(&decoded) {
+        self.adjusted.clear();
+        self.adjusted.extend(grads.iter().zip(&self.residual).map(|(&g, &r)| g + r));
+        self.inner.compress_into(&self.adjusted, rng, out);
+        wire::decode_dequantize_into(out, &mut self.decoded).expect("own frame decodes");
+        for ((r, &a), &d) in self.residual.iter_mut().zip(&self.adjusted).zip(&self.decoded) {
             *r = a - d;
         }
-        bytes
+    }
+
+    /// Allocating wrapper over [`Self::compress_with_feedback_into`].
+    pub fn compress_with_feedback(&mut self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.compress_with_feedback_into(grads, rng, &mut out);
+        out
     }
 
     /// Undo a transmission the network ultimately lost: fold the frame's
@@ -46,11 +68,11 @@ impl ErrorFeedback {
     /// conservation invariant `Σ delivered + residual == Σ g` under packet
     /// loss.
     pub fn restore_lost(&mut self, frame: &[u8]) {
-        let decoded = Payload::decode(frame).expect("own frame decodes").dequantize();
-        if self.residual.len() != decoded.len() {
-            self.residual = vec![0.0; decoded.len()];
+        wire::decode_dequantize_into(frame, &mut self.decoded).expect("own frame decodes");
+        if self.residual.len() != self.decoded.len() {
+            self.residual = vec![0.0; self.decoded.len()];
         }
-        for (r, &d) in self.residual.iter_mut().zip(&decoded) {
+        for (r, &d) in self.residual.iter_mut().zip(&self.decoded) {
             *r += d;
         }
     }
@@ -86,6 +108,7 @@ mod tests {
     use super::*;
     use crate::config::QuantConfig;
     use crate::quant::codecs::make_compressor;
+    use crate::quant::wire::Payload;
 
     #[test]
     fn residual_reaches_plateau_under_truncation() {

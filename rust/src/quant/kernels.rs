@@ -71,13 +71,95 @@ pub fn quantize_uniform_slice(
     }
 }
 
-/// Fused quantize + bit-pack for the uniform quantizer: consumes uniforms
-/// straight from `rng` (one `f32` per element, same stream order as the
-/// unfused path) and writes `bits`-wide indices directly into the packed
-/// output — no intermediate 4 B/elem index or uniform buffers.
+/// Streaming LSB-first bit writer: accumulates ≤ 8-bit indices in a u64 and
+/// flushes whole bytes, so the fused pack loops share one copy of the flush
+/// arithmetic. Output is bit-identical to `bitpack::pack`.
+struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitWriter<'a> {
+    #[inline(always)]
+    fn new(out: &'a mut Vec<u8>) -> Self {
+        BitWriter { out, acc: 0, nbits: 0 }
+    }
+
+    /// Append the low `bits` (≤ 8) of `idx`.
+    #[inline(always)]
+    fn push(&mut self, idx: u64, bits: u32) {
+        self.acc |= idx << self.nbits;
+        self.nbits += bits;
+        if self.nbits >= 56 {
+            // Flush 7 whole bytes; ≤ 7 bits stay in the accumulator, so the
+            // next `idx << nbits` (bits ≤ 8) can never overflow 64 bits.
+            self.out.extend_from_slice(&self.acc.to_le_bytes()[..7]);
+            self.acc >>= 56;
+            self.nbits -= 56;
+        }
+    }
+
+    /// Drain the remaining bits, zero-padded to whole bytes.
+    fn finish(mut self) {
+        while self.nbits > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits = self.nbits.saturating_sub(8);
+        }
+    }
+}
+
+/// Fused quantize + bit-pack for the uniform quantizer, appending the
+/// packed indices to `out`: consumes uniforms straight from `rng` (one
+/// `f32` per element, same stream order as the unfused path) and streams
+/// `bits`-wide indices through a u64 bit-accumulator — no intermediate
+/// 4 B/elem index or uniform buffers, no pre-zeroed packed buffer, and no
+/// per-byte read-modify-write.
 ///
-/// This is the production hot path (see EXPERIMENTS.md §Perf); the unfused
-/// slice functions remain the reference and the Pallas-parity surface.
+/// With a recycled `out` of sufficient capacity this performs zero heap
+/// allocation; it is the production hot path behind
+/// [`Compressor::compress_into`](super::Compressor::compress_into). The
+/// unfused slice functions remain the reference and the Pallas-parity
+/// surface, and the packed bytes are bit-identical to
+/// `bitpack::pack(&indices, bits)`.
+pub fn quantize_uniform_pack_into(
+    grads: &[f32],
+    rng: &mut crate::util::Rng,
+    alpha: f32,
+    s: u32,
+    bits: u32,
+    out: &mut Vec<u8>,
+) {
+    debug_assert!((1..=8).contains(&bits));
+    debug_assert!(s < (1 << bits));
+    out.reserve(super::bitpack::packed_len(grads.len(), bits));
+    let step = 2.0f32 * alpha / s as f32;
+    let inv_step = 1.0f32 / step;
+    let s_m1 = (s - 1) as f32;
+    // NOTE(perf): a two-uniforms-per-u64 variant (Rng::f32_pair) was tried
+    // and measured <1% faster — the RNG is not the bottleneck — so the
+    // simple one-f32-per-element stream (identical to the unfused reference
+    // path) is kept. See EXPERIMENTS.md §Perf iteration log.
+    let mut w = BitWriter::new(out);
+    for &g in grads {
+        let u = rng.f32();
+        let gc = g.clamp(-alpha, alpha);
+        let x = (gc + alpha) * inv_step;
+        // x >= 0 for finite inputs, so after the f32 clamp integer
+        // truncation == floor without the libm call — and `f32::min`
+        // returns the other operand on NaN, exactly like the reference's
+        // `floor().min(s_m1).max(0.0)` chain, so indices match the unfused
+        // path for EVERY input including NaN.
+        let lo = x.min(s_m1) as u32;
+        let idx = (lo + u32::from(u < x - lo as f32)).min(s);
+        w.push(idx as u64, bits);
+    }
+    w.finish();
+}
+
+/// Allocating wrapper over [`quantize_uniform_pack_into`] (kept for tests
+/// and one-shot callers; byte-identical output).
 pub fn quantize_uniform_packed(
     grads: &[f32],
     rng: &mut crate::util::Rng,
@@ -85,67 +167,49 @@ pub fn quantize_uniform_packed(
     s: u32,
     bits: u32,
 ) -> Vec<u8> {
-    debug_assert!(s < (1 << bits));
-    let mut out = vec![0u8; super::bitpack::packed_len(grads.len(), bits)];
-    let step = 2.0f32 * alpha / s as f32;
-    let inv_step = 1.0f32 / step;
-    let s_m1 = (s - 1) as f32;
-    let s_f = s as f32;
-    let mut bitpos = 0usize;
-    // NOTE(perf): a two-uniforms-per-u64 variant (Rng::f32_pair) was tried
-    // and measured <1% faster — the RNG is not the bottleneck — so the
-    // simple one-f32-per-element stream (identical to the unfused reference
-    // path) is kept. See EXPERIMENTS.md §Perf iteration log.
-    for &g in grads {
-        let u = rng.f32();
-        let gc = g.clamp(-alpha, alpha);
-        let x = (gc + alpha) * inv_step;
-        let lo = x.floor().min(s_m1).max(0.0);
-        let idx = (lo + f32::from(u < x - lo)).min(s_f) as u32;
-        // Inline LSB-first pack (span ≤ 2 bytes for bits ≤ 8).
-        let byte = bitpos >> 3;
-        let off = (bitpos & 7) as u32;
-        let wide = (idx as u16) << off;
-        out[byte] |= (wide & 0xFF) as u8;
-        if wide > 0xFF {
-            out[byte + 1] |= (wide >> 8) as u8;
-        }
-        bitpos += bits as usize;
-    }
+    let mut out = Vec::with_capacity(super::bitpack::packed_len(grads.len(), bits));
+    quantize_uniform_pack_into(grads, rng, alpha, s, bits, &mut out);
     out
 }
 
-/// Fused quantize + bit-pack for a codebook quantizer (same contract as
-/// [`quantize_uniform_packed`]).
-pub fn quantize_codebook_packed(
+/// Fused quantize + bit-pack for a codebook quantizer (same contract and
+/// accumulator scheme as [`quantize_uniform_pack_into`]).
+pub fn quantize_codebook_pack_into(
     grads: &[f32],
     rng: &mut crate::util::Rng,
     codebook: &[f32],
     bits: u32,
-) -> Vec<u8> {
+    out: &mut Vec<u8>,
+) {
     let s = codebook.len() - 1;
+    debug_assert!((1..=8).contains(&bits));
     debug_assert!(s < (1 << bits));
-    let mut out = vec![0u8; super::bitpack::packed_len(grads.len(), bits)];
+    out.reserve(super::bitpack::packed_len(grads.len(), bits));
     let lo_bound = codebook[0];
     let hi_bound = codebook[s];
     let interior = &codebook[1..s];
-    let mut bitpos = 0usize;
+    let mut w = BitWriter::new(out);
     for &g in grads {
         let gc = g.clamp(lo_bound, hi_bound);
         let k = interior.partition_point(|&b| b <= gc);
         let lower = codebook[k];
         let width = codebook[k + 1] - lower;
         let frac = if width > 0.0 { (gc - lower) / width } else { 0.0 };
-        let idx = (k + usize::from(rng.f32() < frac)) as u32;
-        let byte = bitpos >> 3;
-        let off = (bitpos & 7) as u32;
-        let wide = (idx as u16) << off;
-        out[byte] |= (wide & 0xFF) as u8;
-        if wide > 0xFF {
-            out[byte + 1] |= (wide >> 8) as u8;
-        }
-        bitpos += bits as usize;
+        let idx = (k + usize::from(rng.f32() < frac)) as u64;
+        w.push(idx, bits);
     }
+    w.finish();
+}
+
+/// Allocating wrapper over [`quantize_codebook_pack_into`].
+pub fn quantize_codebook_packed(
+    grads: &[f32],
+    rng: &mut crate::util::Rng,
+    codebook: &[f32],
+    bits: u32,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(super::bitpack::packed_len(grads.len(), bits));
+    quantize_codebook_pack_into(grads, rng, codebook, bits, &mut out);
     out
 }
 

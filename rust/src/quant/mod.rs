@@ -2,17 +2,21 @@
 //! the wire format they serialize to.
 //!
 //! * [`kernels`] — scalar/slice quantization primitives (mirror ref.py),
+//!   plus the fused quantize→pack streaming kernels of the encode hot path,
 //! * [`bitpack`] — tight n-bit index packing,
 //! * [`wire`] — self-describing frames (the bytes on the simulated network),
 //! * [`codecs`] — TQSGD / TNQSGD / TBQSGD + QSGD / NQSGD / TernGrad / Top-k,
+//! * [`arena`] — recycled frame buffers (zero-allocation steady state),
 //! * [`error_feedback`] — optional EF wrapper (extension).
 
+pub mod arena;
 pub mod bitpack;
 pub mod codecs;
 pub mod error_feedback;
 pub mod kernels;
 pub mod wire;
 
+pub use arena::FrameArena;
 pub use codecs::{make_compressor, Compressor};
 pub use error_feedback::ErrorFeedback;
 pub use wire::Payload;
@@ -20,7 +24,7 @@ pub use wire::Payload;
 /// Convenience: compress → decode → dequantize (used by tests/benches to
 /// measure pure quantization error without a network in the loop).
 pub fn roundtrip(
-    c: &dyn Compressor,
+    c: &mut dyn Compressor,
     grads: &[f32],
     rng: &mut crate::util::Rng,
 ) -> crate::Result<Vec<f32>> {
@@ -50,8 +54,8 @@ mod tests {
     fn roundtrip_helper_works() {
         let mut rng = Rng::new(1);
         let g: Vec<f32> = (0..100).map(|_| rng.f32() - 0.5).collect();
-        let c = make_compressor(&QuantConfig { scheme: Scheme::Dsgd, ..Default::default() });
-        let out = roundtrip(c.as_ref(), &g, &mut rng).unwrap();
+        let mut c = make_compressor(&QuantConfig { scheme: Scheme::Dsgd, ..Default::default() });
+        let out = roundtrip(c.as_mut(), &g, &mut rng).unwrap();
         assert_eq!(out, g);
     }
 

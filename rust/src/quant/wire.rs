@@ -168,25 +168,26 @@ impl Payload {
     }
 }
 
-/// Build a uniform frame directly from pre-packed indices (the fused hot
-/// path — byte-identical to `Payload::Uniform{..}.encode(bits)`).
-pub fn encode_uniform_packed(alpha: f32, s: u16, d: u32, bits: u32, packed: &[u8]) -> Vec<u8> {
-    debug_assert_eq!(packed.len(), super::bitpack::packed_len(d as usize, bits));
-    let mut out = Vec::with_capacity(14 + packed.len());
+/// Start a uniform frame in a caller-provided buffer: clears `out`, reserves
+/// the full frame size and writes the header; the packed indices follow via
+/// [`super::kernels::quantize_uniform_pack_into`]. Byte-identical to
+/// `Payload::Uniform{..}.encode(bits)` once the payload is appended.
+pub fn begin_uniform_frame(out: &mut Vec<u8>, alpha: f32, s: u16, d: u32, bits: u32) {
+    out.clear();
+    out.reserve(14 + super::bitpack::packed_len(d as usize, bits));
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(1u8);
     out.push(bits as u8);
     out.extend_from_slice(&d.to_le_bytes());
     out.extend_from_slice(&alpha.to_le_bytes());
     out.extend_from_slice(&s.to_le_bytes());
-    out.extend_from_slice(packed);
-    out
 }
 
-/// Build a codebook frame directly from pre-packed indices.
-pub fn encode_codebook_packed(levels: &[f32], d: u32, bits: u32, packed: &[u8]) -> Vec<u8> {
-    debug_assert_eq!(packed.len(), super::bitpack::packed_len(d as usize, bits));
-    let mut out = Vec::with_capacity(10 + 4 * levels.len() + packed.len());
+/// Start a codebook frame in a caller-provided buffer (see
+/// [`begin_uniform_frame`] for the contract).
+pub fn begin_codebook_frame(out: &mut Vec<u8>, levels: &[f32], d: u32, bits: u32) {
+    out.clear();
+    out.reserve(10 + 4 * levels.len() + super::bitpack::packed_len(d as usize, bits));
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(2u8);
     out.push(bits as u8);
@@ -195,13 +196,66 @@ pub fn encode_codebook_packed(levels: &[f32], d: u32, bits: u32, packed: &[u8]) 
     for l in levels {
         out.extend_from_slice(&l.to_le_bytes());
     }
+}
+
+/// Encode a raw (DSGD) frame straight from the borrowed gradient slice into
+/// `out` — byte-identical to `Payload::Raw(grads.to_vec()).encode(0)` with
+/// neither the dense copy nor the frame allocation.
+pub fn encode_raw_into(grads: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(8 + 4 * grads.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(0u8);
+    out.push(0u8);
+    out.extend_from_slice(&(grads.len() as u32).to_le_bytes());
+    for x in grads {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a sparse (Top-k) frame into `out` — byte-identical to
+/// `Payload::Sparse{..}.encode(0)`.
+pub fn encode_sparse_into(d: u32, pairs: &[(u32, f32)], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(12 + 8 * pairs.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(3u8);
+    out.push(0u8);
+    out.extend_from_slice(&d.to_le_bytes());
+    out.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+    for (i, _) in pairs {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for (_, v) in pairs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Build a uniform frame directly from pre-packed indices (allocating
+/// wrapper kept for tests and one-shot callers).
+pub fn encode_uniform_packed(alpha: f32, s: u16, d: u32, bits: u32, packed: &[u8]) -> Vec<u8> {
+    debug_assert_eq!(packed.len(), super::bitpack::packed_len(d as usize, bits));
+    let mut out = Vec::new();
+    begin_uniform_frame(&mut out, alpha, s, d, bits);
     out.extend_from_slice(packed);
     out
 }
 
-/// Fused decode → dense gradient (skips the intermediate index vector for
-/// uniform/codebook frames; the server-side hot path).
-pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
+/// Build a codebook frame directly from pre-packed indices.
+pub fn encode_codebook_packed(levels: &[f32], d: u32, bits: u32, packed: &[u8]) -> Vec<u8> {
+    debug_assert_eq!(packed.len(), super::bitpack::packed_len(d as usize, bits));
+    let mut out = Vec::new();
+    begin_codebook_frame(&mut out, levels, d, bits);
+    out.extend_from_slice(packed);
+    out
+}
+
+/// Fused decode → dense gradient into a caller-provided buffer (cleared
+/// first): skips the intermediate index vector for uniform/codebook frames
+/// AND, with a recycled `out`, the dense-buffer allocation — the server-side
+/// hot path the coordinator aggregates through every uplink.
+pub fn decode_dequantize_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    out.clear();
     let mut r = Reader { b: bytes, i: 0 };
     if r.u16()? != MAGIC {
         bail!("bad frame magic");
@@ -218,7 +272,7 @@ pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
             if packed.len() < super::bitpack::packed_len(d, bits) {
                 bail!("truncated uniform payload");
             }
-            let mut out = Vec::with_capacity(d);
+            out.reserve(d);
             let mask = (1u32 << bits) - 1;
             let mut bitpos = 0usize;
             for _ in 0..d {
@@ -232,7 +286,7 @@ pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
                 out.push(-alpha + idx as f32 * step);
                 bitpos += bits as usize;
             }
-            Ok(out)
+            Ok(())
         }
         2 => {
             let n = r.u16()? as usize;
@@ -244,7 +298,7 @@ pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
             if packed.len() < super::bitpack::packed_len(d, bits) {
                 bail!("truncated codebook payload");
             }
-            let mut out = Vec::with_capacity(d);
+            out.reserve(d);
             let mask = (1u32 << bits) - 1;
             let mut bitpos = 0usize;
             for _ in 0..d {
@@ -258,11 +312,39 @@ pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
                 out.push(*levels.get(idx).ok_or_else(|| anyhow!("index {idx} out of codebook"))?);
                 bitpos += bits as usize;
             }
-            Ok(out)
+            Ok(())
         }
-        // Raw/sparse: no fusion to be had; fall through to the general path.
-        _ => Ok(Payload::decode(bytes)?.dequantize()),
+        // Raw: read the f32s straight into the reused dense buffer (the
+        // decode mirror of `encode_raw_into` — no staging Vec, no clone).
+        0 => {
+            out.reserve(d);
+            for _ in 0..d {
+                out.push(r.f32()?);
+            }
+            Ok(())
+        }
+        // Sparse: zero-fill then scatter, walking the index and value
+        // arrays with two cursors instead of materializing (idx, val) pairs.
+        3 => {
+            let k = r.u32()? as usize;
+            let mut vals = Reader { b: r.b, i: r.i + 4 * k };
+            out.resize(d, 0.0);
+            for _ in 0..k {
+                let i = r.u32()? as usize;
+                let v = vals.f32()?;
+                *out.get_mut(i).ok_or_else(|| anyhow!("sparse index {i} out of range"))? = v;
+            }
+            Ok(())
+        }
+        k => bail!("unknown payload kind {k}"),
     }
+}
+
+/// Allocating wrapper over [`decode_dequantize_into`].
+pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    decode_dequantize_into(bytes, &mut out)?;
+    Ok(out)
 }
 
 struct Reader<'a> {

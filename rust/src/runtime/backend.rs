@@ -83,9 +83,47 @@ pub trait QuantKernel {
     /// Truncated uniform quantizer: returns (dequantized values, indices).
     fn run_uniform(&self, g: &[f32], u: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<u32>)>;
 
+    /// [`Self::run_uniform`] writing into caller-provided buffers (cleared
+    /// first) — the L1 mirror of the codec layer's `*_into` discipline.
+    /// Backends that compute natively override this to skip the staging
+    /// allocations; the default delegates to the allocating path.
+    fn run_uniform_into(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        alpha: f32,
+        deq: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) -> Result<()> {
+        let (d, i) = self.run_uniform(g, u, alpha)?;
+        deq.clear();
+        deq.extend_from_slice(&d);
+        idx.clear();
+        idx.extend_from_slice(&i);
+        Ok(())
+    }
+
     /// Codebook quantizer: `codebook` is strictly increasing with s+1 levels.
     fn run_codebook(&self, g: &[f32], u: &[f32], codebook: &[f32])
         -> Result<(Vec<f32>, Vec<u32>)>;
+
+    /// [`Self::run_codebook`] writing into caller-provided buffers (cleared
+    /// first); same contract as [`Self::run_uniform_into`].
+    fn run_codebook_into(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        codebook: &[f32],
+        deq: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) -> Result<()> {
+        let (d, i) = self.run_codebook(g, u, codebook)?;
+        deq.clear();
+        deq.extend_from_slice(&d);
+        idx.clear();
+        idx.extend_from_slice(&i);
+        Ok(())
+    }
 
     /// BiScaled quantizer with outer threshold `alpha`, inner `beta`.
     fn run_biscaled(

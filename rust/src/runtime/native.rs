@@ -527,14 +527,28 @@ impl QuantKernel for NativeQuantKernel {
     }
 
     fn run_uniform(&self, g: &[f32], u: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<u32>)> {
+        let mut deq = Vec::new();
+        let mut idx = Vec::new();
+        self.run_uniform_into(g, u, alpha, &mut deq, &mut idx)?;
+        Ok((deq, idx))
+    }
+
+    fn run_uniform_into(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        alpha: f32,
+        deq: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) -> Result<()> {
         let KernelOp::Uniform { s } = self.op else {
             bail!("{}: not a uniform kernel", self.entry);
         };
         self.check_pair(g, u)?;
-        let mut idx = Vec::new();
-        kernels::quantize_uniform_slice(g, u, alpha, s, &mut idx);
-        let deq = idx.iter().map(|&k| kernels::dequantize_uniform_elem(k, alpha, s)).collect();
-        Ok((deq, idx))
+        kernels::quantize_uniform_slice(g, u, alpha, s, idx);
+        deq.clear();
+        deq.extend(idx.iter().map(|&k| kernels::dequantize_uniform_elem(k, alpha, s)));
+        Ok(())
     }
 
     fn run_codebook(
@@ -543,6 +557,20 @@ impl QuantKernel for NativeQuantKernel {
         u: &[f32],
         codebook: &[f32],
     ) -> Result<(Vec<f32>, Vec<u32>)> {
+        let mut deq = Vec::new();
+        let mut idx = Vec::new();
+        self.run_codebook_into(g, u, codebook, &mut deq, &mut idx)?;
+        Ok((deq, idx))
+    }
+
+    fn run_codebook_into(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        codebook: &[f32],
+        deq: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) -> Result<()> {
         let KernelOp::Codebook { s } = self.op else {
             bail!("{}: not a codebook kernel", self.entry);
         };
@@ -554,10 +582,10 @@ impl QuantKernel for NativeQuantKernel {
             codebook.len(),
             s + 1
         );
-        let mut idx = Vec::new();
-        kernels::quantize_codebook_slice(g, u, codebook, &mut idx);
-        let deq = idx.iter().map(|&k| codebook[k as usize]).collect();
-        Ok((deq, idx))
+        kernels::quantize_codebook_slice(g, u, codebook, idx);
+        deq.clear();
+        deq.extend(idx.iter().map(|&k| codebook[k as usize]));
+        Ok(())
     }
 
     fn run_biscaled(

@@ -37,23 +37,26 @@ impl QuantExec {
     }
 
     /// Uniform kernel: returns (dequantized, indices) for one tile.
+    /// Allocating wrapper over the trait's `run_uniform_into`.
     pub fn run_uniform(&self, g: &[f32], u: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<u32>)> {
-        self.check(g, u)?;
-        let out = self.exe.run(&[g, u, &[alpha]])?;
-        Ok((out[0].clone(), out[1].iter().map(|&x| x as u32).collect()))
+        let mut deq = Vec::new();
+        let mut idx = Vec::new();
+        QuantKernel::run_uniform_into(self, g, u, alpha, &mut deq, &mut idx)?;
+        Ok((deq, idx))
     }
 
     /// Codebook kernel (`quant_nonuniform_b3`): codebook length must match
-    /// the artifact (s+1).
+    /// the artifact (s+1). Allocating wrapper over `run_codebook_into`.
     pub fn run_codebook(
         &self,
         g: &[f32],
         u: &[f32],
         codebook: &[f32],
     ) -> Result<(Vec<f32>, Vec<u32>)> {
-        self.check(g, u)?;
-        let out = self.exe.run(&[g, u, codebook])?;
-        Ok((out[0].clone(), out[1].iter().map(|&x| x as u32).collect()))
+        let mut deq = Vec::new();
+        let mut idx = Vec::new();
+        QuantKernel::run_codebook_into(self, g, u, codebook, &mut deq, &mut idx)?;
+        Ok((deq, idx))
     }
 
     /// BiScaled kernel (`quant_biscaled_b3`).
@@ -99,6 +102,25 @@ impl QuantKernel for QuantExec {
         QuantExec::run_uniform(self, g, u, alpha)
     }
 
+    fn run_uniform_into(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        alpha: f32,
+        deq: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) -> Result<()> {
+        // Mirror of the codec layer's `*_into` discipline: reuse the
+        // caller's buffers instead of cloning the PJRT outputs.
+        self.check(g, u)?;
+        let out = self.exe.run(&[g, u, &[alpha]])?;
+        deq.clear();
+        deq.extend_from_slice(&out[0]);
+        idx.clear();
+        idx.extend(out[1].iter().map(|&x| x as u32));
+        Ok(())
+    }
+
     fn run_codebook(
         &self,
         g: &[f32],
@@ -106,6 +128,23 @@ impl QuantKernel for QuantExec {
         codebook: &[f32],
     ) -> Result<(Vec<f32>, Vec<u32>)> {
         QuantExec::run_codebook(self, g, u, codebook)
+    }
+
+    fn run_codebook_into(
+        &self,
+        g: &[f32],
+        u: &[f32],
+        codebook: &[f32],
+        deq: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) -> Result<()> {
+        self.check(g, u)?;
+        let out = self.exe.run(&[g, u, codebook])?;
+        deq.clear();
+        deq.extend_from_slice(&out[0]);
+        idx.clear();
+        idx.extend(out[1].iter().map(|&x| x as u32));
+        Ok(())
     }
 
     fn run_biscaled(

@@ -252,6 +252,53 @@ fn lm_coordinator_trains_bigram() {
 }
 
 // ---------------------------------------------------------------------------
+// ---------------------------------------------------------------------------
+// Zero-allocation steady state
+// ---------------------------------------------------------------------------
+
+/// After warm-up rounds every frame buffer comes from a client arena:
+/// `Coordinator::step` performs zero per-round frame allocations. This is
+/// the acceptance gate behind the `compress_into` hot path; the counter is
+/// `quant::arena::FrameArena::fresh_allocs` summed over clients.
+fn assert_steady_state_zero_frame_allocs(mut cfg: ExperimentConfig, warmup: usize) {
+    let label = format!("{} ef={}", cfg.scenario.name, cfg.quant.error_feedback);
+    cfg.rounds = warmup + 5;
+    let backend = native();
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    for _ in 0..warmup {
+        coord.step().unwrap();
+    }
+    let warm = coord.frame_allocs();
+    assert!(warm > 0, "{label}: warm-up must have allocated some frames");
+    for _ in 0..5 {
+        coord.step().unwrap();
+    }
+    assert_eq!(
+        coord.frame_allocs(),
+        warm,
+        "{label}: steady-state rounds must reuse arena frame buffers"
+    );
+}
+
+#[test]
+fn steady_state_rounds_do_not_allocate_frames() {
+    // Clean synchronous path, plain codecs.
+    assert_steady_state_zero_frame_allocs(small_cfg("mlp_tiny", Scheme::Tqsgd), 2);
+    // Error-feedback wrapping (residual + scratch buffers settle round 1).
+    let mut ef = small_cfg("mlp_tiny", Scheme::Tqsgd);
+    ef.quant.error_feedback = true;
+    assert_steady_state_zero_frame_allocs(ef, 2);
+    // Bounded staleness: late frames return to their arena one round later,
+    // so the pool needs an extra warm-up round to reach its high-water mark.
+    // TQSGD keeps every frame the same size whether or not the tail fit
+    // succeeded, so uplink times tie and the late-client set is stable.
+    let mut stale = small_cfg("mlp_tiny", Scheme::Tqsgd);
+    stale.net.bandwidth_bytes_per_sec = 1e6;
+    stale.net.latency_sec = 0.01;
+    stale.scenario = ScenarioConfig::preset("stale").unwrap();
+    assert_steady_state_zero_frame_allocs(stale, 4);
+}
+
 // Scenario engine: heterogeneous / faulty rounds, reproducibly
 // ---------------------------------------------------------------------------
 
