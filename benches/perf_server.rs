@@ -1,0 +1,212 @@
+//! §Perf — server-side aggregation throughput (the stage-4 hot path):
+//!
+//! * fused decode-accumulate ([`aggregate_serial`]) vs the pre-PR two-pass
+//!   reference (decode into a dense scratch, then re-read it into the
+//!   weighted accumulate) per payload kind — the win the committed
+//!   `server_agg_fused_melems_per_s` baseline floor records,
+//! * sharded aggregation scaling: Melems/s decoded+accumulated vs client
+//!   count × shard count, with bit-identity to the serial result asserted
+//!   on every configuration.
+//!
+//! Regenerate with `cargo bench --bench perf_server`; CI runs `-- --quick`
+//! with `TQSGD_BENCH_JSON=BENCH_perf_server.json` and gates
+//! `server_agg_fused_melems_per_s` against `BENCH_baseline.json`
+//! (`tqsgd perf-check`). Refresh the baseline with
+//! `TQSGD_BENCH_JSON=BENCH_baseline.json cargo bench --bench perf_server -- --quick`
+//! (merge the metrics into the committed file; it also carries the encode
+//! floor from `perf_hotpath`).
+
+use tqsgd::benchkit::{bench, section, BenchOpts, Report, Table};
+use tqsgd::config::{QuantConfig, Scheme};
+use tqsgd::coordinator::aggregate::{aggregate_serial, aggregate_sharded, WeightedUplink};
+use tqsgd::quant::{make_compressor, wire};
+use tqsgd::runtime::GroupRange;
+use tqsgd::util::Rng;
+
+/// The pre-PR stage-4 server loop, kept verbatim as the regression
+/// reference: dequantize every uplink frame into a reused dense scratch,
+/// then a second pass re-reads the scratch into the weighted accumulate.
+fn legacy_aggregate(
+    groups: &[GroupRange],
+    uplinks: &[WeightedUplink<'_>],
+    agg: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    agg.fill(0.0);
+    for u in uplinks {
+        for (gi, frame) in u.frames {
+            let g = &groups[*gi];
+            wire::decode_dequantize_into(frame, scratch).unwrap();
+            assert_eq!(scratch.len(), g.end - g.start, "frame length != group size");
+            for (a, &d) in agg[g.start..g.end].iter_mut().zip(scratch.iter()) {
+                *a += u.w * d;
+            }
+        }
+    }
+}
+
+/// Per-client frame sets: one codec per layer group (refit on that group's
+/// heavy-tailed draw), one compressed frame per (client, group).
+fn make_frames(
+    groups: &[GroupRange],
+    clients: usize,
+    scheme: Scheme,
+    bits: u32,
+    rng: &mut Rng,
+) -> Vec<Vec<(usize, Vec<u8>)>> {
+    let grads: Vec<Vec<f32>> = groups
+        .iter()
+        .map(|g| {
+            (0..g.end - g.start)
+                .map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32)
+                .collect()
+        })
+        .collect();
+    let mut codecs: Vec<_> = groups
+        .iter()
+        .map(|_| make_compressor(&QuantConfig { scheme, bits, ..Default::default() }))
+        .collect();
+    for (c, g) in codecs.iter_mut().zip(&grads) {
+        c.refit(g);
+    }
+    (0..clients)
+        .map(|ci| {
+            codecs
+                .iter_mut()
+                .enumerate()
+                .map(|(gi, c)| {
+                    let mut r = Rng::new(0xC0DE + ci as u64 * 131 + gi as u64);
+                    (gi, c.compress(&grads[gi], &mut r))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Normalized aggregation weights with one stale-decayed straggler, so the
+/// weighted (non-uniform w) path is what gets measured.
+fn weights(n: usize) -> Vec<f32> {
+    let mut raw: Vec<f64> = vec![1.0 / n as f64; n];
+    raw[n - 1] *= 0.5;
+    let total: f64 = raw.iter().sum();
+    raw.iter().map(|w| (w / total) as f32).collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().map(|x| x.to_bits()).eq(b.iter().map(|x| x.to_bits()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("perf_server", &opts);
+    let (warmup, runs) = if opts.quick { (1, 4) } else { (2, 8) };
+    let n_groups = 8usize;
+    let group_elems = opts.size("TQSGD_BENCH_GROUP_ELEMS", 131_072, 32_768);
+    let d_total = n_groups * group_elems;
+    let groups: Vec<GroupRange> = (0..n_groups)
+        .map(|i| GroupRange {
+            group: format!("g{i}"),
+            start: i * group_elems,
+            end: (i + 1) * group_elems,
+        })
+        .collect();
+    let mut rng = Rng::new(7);
+
+    section(&format!(
+        "fused decode-accumulate vs pre-PR two-pass (serial, N=8, {d_total} elems/client)"
+    ));
+    let mut t = Table::new(&["codec", "two-pass (scratch)", "fused", "speedup", "Melems/s fused"]);
+    for (scheme, bits, label) in [
+        (Scheme::Tqsgd, 4u32, "tqsgd b4 (uniform)"),
+        (Scheme::Tnqsgd, 3, "tnqsgd b3 (codebook)"),
+        (Scheme::Dsgd, 32, "dsgd (raw fp32)"),
+    ] {
+        let frames = make_frames(&groups, 8, scheme, bits.min(8), &mut rng);
+        let ws = weights(8);
+        let uplinks: Vec<WeightedUplink<'_>> = frames
+            .iter()
+            .zip(&ws)
+            .map(|(f, &w)| WeightedUplink { frames: f, w })
+            .collect();
+        let mut agg_legacy = vec![0.0f32; d_total];
+        let mut scratch = Vec::new();
+        let t_legacy = bench(warmup, runs, || {
+            legacy_aggregate(&groups, &uplinks, &mut agg_legacy, &mut scratch);
+            std::hint::black_box(&agg_legacy);
+        });
+        let mut agg_fused = vec![0.0f32; d_total];
+        let t_fused = bench(warmup, runs, || {
+            aggregate_serial(&groups, &uplinks, &mut agg_fused).unwrap();
+            std::hint::black_box(&agg_fused);
+        });
+        assert!(
+            bits_eq(&agg_legacy, &agg_fused),
+            "{label}: fused aggregate diverged from the two-pass reference"
+        );
+        let decoded = 8 * d_total;
+        t.row(&[
+            label.to_string(),
+            t_legacy.pretty(),
+            t_fused.pretty(),
+            format!("{:.2}x", t_legacy.median_ns / t_fused.median_ns),
+            format!("{:.1}", t_fused.melems_per_s(decoded)),
+        ]);
+        if scheme == Scheme::Tnqsgd {
+            report.metric("server_agg_legacy_melems_per_s", t_legacy.melems_per_s(decoded));
+            report.metric("server_agg_fused_melems_per_s", t_fused.melems_per_s(decoded));
+            report.metric(
+                "server_agg_fused_speedup_vs_legacy",
+                t_legacy.median_ns / t_fused.median_ns,
+            );
+        }
+    }
+    t.print();
+    report.table("fused vs two-pass serial aggregation", &t);
+
+    section("sharded aggregation scaling (tnqsgd b3, bit-identity asserted per config)");
+    let client_counts: Vec<usize> = if opts.quick { vec![8] } else { vec![4, 8, 32] };
+    let shard_counts: Vec<usize> = vec![1, 2, 4, 8];
+    let mut t = Table::new(&["clients", "shards", "time", "Melems/s", "speedup vs 1 shard"]);
+    let mut best = 0.0f64;
+    for &n in &client_counts {
+        let frames = make_frames(&groups, n, Scheme::Tnqsgd, 3, &mut rng);
+        let ws = weights(n);
+        let uplinks: Vec<WeightedUplink<'_>> = frames
+            .iter()
+            .zip(&ws)
+            .map(|(f, &w)| WeightedUplink { frames: f, w })
+            .collect();
+        let mut agg_ref = vec![0.0f32; d_total];
+        aggregate_serial(&groups, &uplinks, &mut agg_ref)?;
+        let mut base_ns = 0.0f64;
+        for &shards in &shard_counts {
+            let mut agg = vec![0.0f32; d_total];
+            let timing = bench(warmup, runs, || {
+                aggregate_sharded(&groups, &uplinks, &mut agg, shards).unwrap();
+                std::hint::black_box(&agg);
+            });
+            assert!(
+                bits_eq(&agg, &agg_ref),
+                "N={n} shards={shards}: sharded aggregate is not bit-identical to serial"
+            );
+            if shards == 1 {
+                base_ns = timing.median_ns;
+            }
+            let mel = timing.melems_per_s(n * d_total);
+            best = best.max(mel);
+            t.row(&[
+                n.to_string(),
+                shards.to_string(),
+                timing.pretty(),
+                format!("{mel:.1}"),
+                format!("{:.2}x", base_ns / timing.median_ns),
+            ]);
+        }
+    }
+    t.print();
+    report.table("sharded aggregation scaling", &t);
+    report.metric("server_agg_sharded_best_melems_per_s", best);
+
+    report.finish(&opts)?;
+    Ok(())
+}

@@ -331,6 +331,11 @@ pub struct ExperimentConfig {
     /// Fail-injection: drop this client's update every round (usize::MAX =
     /// none) — exercises the coordinator's straggler/fault path.
     pub drop_client: usize,
+    /// Server aggregation fan-out width (layer-group granularity): 0 = auto
+    /// (one shard per available core, capped by the model's group count).
+    /// A pure performance knob — sharded aggregation is bit-identical to
+    /// the serial path at every width.
+    pub agg_shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -352,6 +357,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             backend: "auto".into(),
             drop_client: usize::MAX,
+            agg_shards: 0,
         }
     }
 }
@@ -451,6 +457,7 @@ impl ExperimentConfig {
             self.backend = b.to_string();
         }
         self.drop_client = args.usize_or("drop-client", self.drop_client)?;
+        self.agg_shards = args.usize_or("agg-shards", self.agg_shards)?;
         // Scenario: `--scenario <preset>` selects a base, then freeform
         // flags override individual fields on top of it.
         if let Some(name) = args.get("scenario") {
@@ -490,6 +497,7 @@ impl ExperimentConfig {
             } else {
                 self.drop_client as f64
             })),
+            ("agg_shards", json::num(self.agg_shards as f64)),
             (
                 "quant",
                 json::obj(vec![
@@ -534,6 +542,8 @@ impl ExperimentConfig {
         }
         let dc = getf("drop_client", -1.0);
         cfg.drop_client = if dc < 0.0 { usize::MAX } else { dc as usize };
+        // Negative values saturate to 0 = auto (float → usize casts clamp).
+        cfg.agg_shards = getf("agg_shards", cfg.agg_shards as f64) as usize;
         if let Some(q) = v.get("quant") {
             if let Some(s) = q.get("scheme").and_then(Value::as_str) {
                 cfg.quant.scheme = Scheme::parse(s)?;
@@ -649,6 +659,7 @@ mod tests {
         c.net.latency_sec = 0.01;
         c.drop_client = 3;
         c.backend = "native".into();
+        c.agg_shards = 4;
         let j = c.to_json().to_json();
         let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.model, "mlp");
@@ -657,7 +668,11 @@ mod tests {
         assert!(c2.quant.error_feedback);
         assert_eq!(c2.drop_client, 3);
         assert_eq!(c2.backend, "native");
+        assert_eq!(c2.agg_shards, 4);
         assert!((c2.net.latency_sec - 0.01).abs() < 1e-12);
+        // Older configs without the field default to auto.
+        let legacy = ExperimentConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
+        assert_eq!(legacy.agg_shards, 0);
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Server-side aggregation: the stage-4 hot path of [`Coordinator::step`]
+//! (decode → dequantize → weighted accumulate), parallel and single-pass.
+//!
+//! The aggregate buffer is **sharded by layer-group ranges**: every model's
+//! groups tile the flat parameter vector ([`ModelSpec::validate`] enforces
+//! it), so each shard can own a disjoint `&mut` slice of the buffer and the
+//! fan-out needs no locks, no atomics and no unsafe — just
+//! [`std::thread::scope`], mirroring the client-side codec fan-out.
+//!
+//! **Determinism argument.** Floating-point addition is not associative, so
+//! "parallel" usually means "different bits". Here it does not:
+//!
+//! 1. every aggregate element belongs to exactly one layer group, and every
+//!    group is owned by exactly one shard — no element is written by two
+//!    threads;
+//! 2. within its groups, a shard walks the applied uplinks in the **fixed
+//!    apply order** (origin round, then client id — the order
+//!    `ScenarioEngine::schedule` already sorts by), so each element receives
+//!    its `+= w_i * d_i` contributions in exactly the serial sequence;
+//! 3. the fused kernel ([`wire::decode_dequantize_accumulate_into`])
+//!    performs per element exactly the f32 operations of the old two-pass
+//!    path (dequantize, one `w * d` product, one add).
+//!
+//! Hence [`aggregate_sharded`] is bit-identical to [`aggregate_serial`] for
+//! EVERY shard count — property-tested across schemes × bits × shard counts
+//! in `rust/tests/quant_props.rs` — and the shard count is a pure
+//! performance knob (config `agg_shards`, 0 = one per available core).
+//!
+//! [`Coordinator::step`]: super::Coordinator::step
+//! [`ModelSpec::validate`]: crate::runtime::ModelSpec::validate
+
+use std::cmp::Reverse;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::quant::wire;
+use crate::runtime::GroupRange;
+
+/// One applied uplink in the fixed apply order: a message's per-group
+/// frames (exactly as carried by [`Message`](super::Message)) and its
+/// normalized aggregation weight `w_i = weight_i * decay^staleness / Σw`.
+pub struct WeightedUplink<'a> {
+    /// `(group index, frame bytes)` pairs for this client's round.
+    pub frames: &'a [(usize, Vec<u8>)],
+    /// Normalized weight applied to every dequantized element.
+    pub w: f32,
+}
+
+/// Deterministically assign layer groups to `shards` workers, balancing by
+/// element count (longest-processing-time greedy: biggest group first onto
+/// the least-loaded shard, ties by lowest index). Returns one ascending
+/// group-index list per shard; trailing shards are empty when there are
+/// fewer groups than shards. The plan depends only on `(groups, shards)`,
+/// never on the frames, so a run's shard layout is reproducible.
+pub fn plan_shards(groups: &[GroupRange], shards: usize) -> Vec<Vec<usize>> {
+    let shards = shards.max(1);
+    let mut order: Vec<usize> = (0..groups.len()).collect();
+    order.sort_by_key(|&gi| (Reverse(groups[gi].end - groups[gi].start), gi));
+    let mut plan: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    let mut load = vec![0usize; shards];
+    for gi in order {
+        let s = (0..shards).min_by_key(|&s| (load[s], s)).expect("shards >= 1");
+        load[s] += groups[gi].end - groups[gi].start;
+        plan[s].push(gi);
+    }
+    for p in &mut plan {
+        p.sort_unstable();
+    }
+    plan
+}
+
+/// Zero `agg` and accumulate every uplink's frames into it on the calling
+/// thread — one fused decode-accumulate walk per (uplink, group) frame, no
+/// dense scratch pass. This is the single-shard reference the sharded path
+/// must reproduce bit-for-bit, and the pre-sharding serial server loop
+/// (uplinks outer, groups inner) reordered to groups outer — per element
+/// the contribution sequence is identical, since each element sees only its
+/// own group's frames, in uplink order either way.
+pub fn aggregate_serial(
+    groups: &[GroupRange],
+    uplinks: &[WeightedUplink<'_>],
+    agg: &mut [f32],
+) -> Result<()> {
+    agg.fill(0.0);
+    for u in uplinks {
+        for (gi, frame) in u.frames {
+            let g = groups
+                .get(*gi)
+                .ok_or_else(|| anyhow!("frame references unknown group {gi}"))?;
+            if g.end > agg.len() || g.start > g.end {
+                bail!("group {gi} range {}..{} outside aggregate buffer", g.start, g.end);
+            }
+            wire::decode_dequantize_accumulate_into(frame, u.w, &mut agg[g.start..g.end])?;
+        }
+    }
+    Ok(())
+}
+
+/// Sharded aggregation: split `agg` into per-group slices, assign groups to
+/// at most `shards` workers ([`plan_shards`]) and fan the per-shard work
+/// over [`std::thread::scope`]. Bit-identical to [`aggregate_serial`] for
+/// every shard count (see the module docs for the argument); `shards <= 1`
+/// short-circuits to the serial path with no thread spawn.
+///
+/// `groups` must be ascending and non-overlapping (the coordinator's always
+/// tile the parameter vector); a frame for a group the uplink order never
+/// references is simply never decoded, and a frame whose length disagrees
+/// with its group range fails the round exactly like the serial path.
+pub fn aggregate_sharded(
+    groups: &[GroupRange],
+    uplinks: &[WeightedUplink<'_>],
+    agg: &mut [f32],
+    shards: usize,
+) -> Result<()> {
+    let shards = shards.clamp(1, groups.len().max(1));
+    if shards <= 1 {
+        return aggregate_serial(groups, uplinks, agg);
+    }
+    // A frame tagged with a group no shard owns would otherwise be silently
+    // skipped (no `*fgi == gi` match ever fires) — reject it up front so
+    // malformed input fails the round exactly like the serial path.
+    for u in uplinks {
+        for (gi, _) in u.frames {
+            if *gi >= groups.len() {
+                bail!("frame references unknown group {gi}");
+            }
+        }
+    }
+    // Zero everything up front (gaps between groups — none in practice —
+    // stay zero, exactly like the serial path), then carve the buffer into
+    // disjoint per-group &mut slices.
+    agg.fill(0.0);
+    let total = agg.len();
+    let mut rest: &mut [f32] = agg;
+    let mut pos = 0usize;
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(groups.len());
+    for (gi, g) in groups.iter().enumerate() {
+        if g.start < pos || g.end < g.start || g.end > total {
+            bail!(
+                "group {gi} range {}..{} is not ascending/disjoint within {total}",
+                g.start,
+                g.end
+            );
+        }
+        let (_gap, tail) = rest.split_at_mut(g.start - pos);
+        let (mine, tail) = tail.split_at_mut(g.end - g.start);
+        slices.push(mine);
+        rest = tail;
+        pos = g.end;
+    }
+
+    let plan = plan_shards(groups, shards);
+    let mut owner = vec![0usize; groups.len()];
+    for (si, p) in plan.iter().enumerate() {
+        for &gi in p {
+            owner[gi] = si;
+        }
+    }
+    let mut shard_work: Vec<Vec<(usize, &mut [f32])>> =
+        plan.iter().map(|p| Vec::with_capacity(p.len())).collect();
+    for (gi, slice) in slices.into_iter().enumerate() {
+        shard_work[owner[gi]].push((gi, slice));
+    }
+
+    let results: Vec<Result<()>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shard_work.len());
+        for work in shard_work {
+            if work.is_empty() {
+                continue;
+            }
+            handles.push(scope.spawn(move || -> Result<()> {
+                for (gi, acc) in work {
+                    // Fixed apply order per group: the serial contribution
+                    // sequence for every element this shard owns.
+                    for u in uplinks {
+                        for (fgi, frame) in u.frames {
+                            if *fgi == gi {
+                                wire::decode_dequantize_accumulate_into(frame, u.w, &mut acc[..])?;
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("aggregation shard thread")).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups_of(sizes: &[usize]) -> Vec<GroupRange> {
+        let mut start = 0usize;
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                let g = GroupRange { group: format!("g{i}"), start, end: start + n };
+                start += n;
+                g
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_is_deterministic_balanced_and_complete() {
+        let groups = groups_of(&[100, 700, 300, 200, 50]);
+        for shards in [1usize, 2, 3, 7] {
+            let plan = plan_shards(&groups, shards);
+            assert_eq!(plan.len(), shards);
+            assert_eq!(plan, plan_shards(&groups, shards), "plan must be deterministic");
+            let mut seen: Vec<usize> = plan.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "every group exactly once");
+        }
+        // LPT: with 2 shards the 700 group sits alone against 100+300+200+50.
+        let plan = plan_shards(&groups, 2);
+        let load = |p: &[usize]| -> usize {
+            p.iter().map(|&gi| groups[gi].end - groups[gi].start).sum()
+        };
+        let (a, b) = (load(&plan[0]), load(&plan[1]));
+        assert_eq!(a.max(b), 700, "{plan:?}");
+    }
+
+    #[test]
+    fn serial_aggregate_matches_two_pass_reference() {
+        use crate::quant::wire::Payload;
+        let groups = groups_of(&[40, 25]);
+        let mut rng = crate::util::Rng::new(9);
+        let mk = |rng: &mut crate::util::Rng, d: usize| -> Vec<u8> {
+            Payload::Raw((0..d).map(|_| rng.f32() - 0.5).collect()).encode(0)
+        };
+        let frames_a = vec![(0usize, mk(&mut rng, 40)), (1usize, mk(&mut rng, 25))];
+        let frames_b = vec![(0usize, mk(&mut rng, 40)), (1usize, mk(&mut rng, 25))];
+        let ups = vec![
+            WeightedUplink { frames: &frames_a, w: 0.75 },
+            WeightedUplink { frames: &frames_b, w: 0.25 },
+        ];
+        // Reference: the old scratch-buffer loop, uplinks outer.
+        let mut want = vec![0.0f32; 65];
+        let mut scratch = Vec::new();
+        for u in &ups {
+            for (gi, frame) in u.frames {
+                let g = &groups[*gi];
+                wire::decode_dequantize_into(frame, &mut scratch).unwrap();
+                for (a, &d) in want[g.start..g.end].iter_mut().zip(&scratch) {
+                    *a += u.w * d;
+                }
+            }
+        }
+        let mut got = vec![7.0f32; 65]; // dirty: aggregate must zero first
+        aggregate_serial(&groups, &ups, &mut got).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sharded_rejects_overlapping_groups_and_bad_frames() {
+        let mut groups = groups_of(&[30, 30]);
+        groups[1].start = 20; // overlap
+        let frames = vec![(0usize, crate::quant::wire::Payload::Raw(vec![0.0; 30]).encode(0))];
+        let ups = vec![WeightedUplink { frames: &frames, w: 1.0 }];
+        let mut agg = vec![0.0f32; 60];
+        assert!(aggregate_sharded(&groups, &ups, &mut agg, 2).is_err());
+        // Frame length != group size errors through the shard threads too.
+        let groups = groups_of(&[30, 30]);
+        let short = vec![(0usize, crate::quant::wire::Payload::Raw(vec![0.0; 10]).encode(0))];
+        let ups = vec![WeightedUplink { frames: &short, w: 1.0 }];
+        assert!(aggregate_sharded(&groups, &ups, &mut agg, 2).is_err());
+        assert!(aggregate_serial(&groups, &ups, &mut agg).is_err());
+        // A frame referencing a group that does not exist must fail on BOTH
+        // paths — never be silently skipped by the shard match.
+        let orphan = vec![(5usize, crate::quant::wire::Payload::Raw(vec![0.0; 30]).encode(0))];
+        let ups = vec![WeightedUplink { frames: &orphan, w: 1.0 }];
+        assert!(aggregate_sharded(&groups, &ups, &mut agg, 2).is_err());
+        assert!(aggregate_serial(&groups, &ups, &mut agg).is_err());
+    }
+}

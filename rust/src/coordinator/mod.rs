@@ -19,11 +19,20 @@
 //! owns an independent quantizer state whose tail model is re-fitted every
 //! `estimate_every` rounds — exactly the paper's per-layer γ estimation (§V).
 //!
+//! The server side mirrors the client fan-out: stage 4 (decode → dequantize
+//! → weighted accumulate) runs through [`aggregate`], which shards the
+//! aggregate buffer by layer-group ranges across `std::thread::scope`
+//! workers and folds the `w * d` accumulate directly into the bitstream
+//! walk (fused decode-accumulate kernels, no dense scratch pass). The
+//! sharded result is bit-identical to the serial path at every shard count
+//! — see the [`aggregate`] module docs for the determinism argument.
+//!
 //! Degraded-mode rounds (stragglers, lossy uplinks, churn, bounded
 //! staleness, non-IID shards) are injected by the [`scenario`] engine from
 //! the experiment's `ScenarioConfig`; the clean preset reproduces the
 //! synchronous loop above bit-for-bit.
 
+pub mod aggregate;
 pub mod network;
 pub mod scenario;
 
@@ -195,9 +204,19 @@ pub struct Coordinator<'b> {
     pub round: usize,
     /// Scratch: aggregated gradient buffer.
     agg: Vec<f32>,
-    /// Scratch: per-frame dequantize target, reused across uplinks so the
-    /// server side never reallocates the dense buffer.
-    decode_buf: Vec<f32>,
+    /// Server aggregation fan-out width (resolved from config at build:
+    /// explicit `agg_shards`, or one per available core, capped by the
+    /// number of layer groups). A pure performance knob — the sharded
+    /// aggregation is bit-identical at every width.
+    agg_shards: usize,
+    /// Scratch: per-round staleness histogram, built in place each round so
+    /// the working buffer never regrows in steady state. The round record
+    /// still receives one sized-to-fit copy (it owns its data for the run
+    /// log) — the invariant is about the scratch, not the record.
+    staleness_scratch: Vec<u32>,
+    /// Debug counter: times `staleness_scratch` had to grow. Must go flat
+    /// after warm-up (asserted next to the frame-alloc invariant).
+    hist_reallocs: u64,
 }
 
 impl<'b> Coordinator<'b> {
@@ -267,6 +286,12 @@ impl<'b> Coordinator<'b> {
         }
 
         let dim = params.len();
+        let agg_shards = if cfg.agg_shards > 0 {
+            cfg.agg_shards
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+        .min(spec.groups.len().max(1));
         Ok(Coordinator {
             net: SimNet::new(cfg.net),
             scenario: ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed),
@@ -281,7 +306,9 @@ impl<'b> Coordinator<'b> {
             lm_eval_corpus,
             round: 0,
             agg: vec![0.0; dim],
-            decode_buf: Vec::new(),
+            agg_shards,
+            staleness_scratch: Vec::new(),
+            hist_reallocs: 0,
         })
     }
 
@@ -309,6 +336,22 @@ impl<'b> Coordinator<'b> {
     /// `perf_hotpath` bench).
     pub fn frame_allocs(&self) -> u64 {
         self.clients.iter().map(|c| c.arena.fresh_allocs()).sum()
+    }
+
+    /// Times the reused staleness-histogram scratch had to grow its
+    /// capacity: after the deepest staleness a scenario produces has been
+    /// seen once, this counter must stop moving (asserted by the
+    /// integration suite next to the frame-arena invariant). The record's
+    /// own sized-to-fit copy of the histogram is log data, not scratch,
+    /// and is deliberately outside this counter.
+    pub fn hist_reallocs(&self) -> u64 {
+        self.hist_reallocs
+    }
+
+    /// Resolved server-aggregation shard count (config `agg_shards`, or one
+    /// per available core, capped by the layer-group count).
+    pub fn agg_shards(&self) -> usize {
+        self.agg_shards
     }
 
     /// Execute one communication round; returns the round record.
@@ -404,45 +447,42 @@ impl<'b> Coordinator<'b> {
         if apply.is_empty() && self.cfg.scenario.loss_prob == 0.0 {
             return Err(anyhow!("all clients dropped; nothing to aggregate"));
         }
-        let mut staleness_hist: Vec<u32> = Vec::new();
+        // Staleness histogram into the reused scratch (capacity survives
+        // rounds; the record below gets a sized-to-fit copy).
+        self.staleness_scratch.clear();
         for &(_, s) in &apply {
             let s = s as usize;
-            if staleness_hist.len() <= s {
-                staleness_hist.resize(s + 1, 0);
+            if self.staleness_scratch.len() <= s {
+                if s + 1 > self.staleness_scratch.capacity() {
+                    self.hist_reallocs += 1;
+                }
+                self.staleness_scratch.resize(s + 1, 0);
             }
-            staleness_hist[s] += 1;
+            self.staleness_scratch[s] += 1;
         }
+        let staleness_hist = self.staleness_scratch.clone();
 
-        // 4. Server: decode + weighted aggregate + optimizer step. Late
-        //    frames count with weight w_i * decay^staleness; for the
-        //    synchronous case every staleness is 0 and decay^0 = 1 exactly,
-        //    so this reduces bit-for-bit to the plain weighted mean.
+        // 4. Server: decode + weighted aggregate + optimizer step, sharded
+        //    by layer-group ranges over worker threads with the fused
+        //    decode-accumulate kernels (see [`aggregate`]) — bit-identical
+        //    to the serial scratch-buffer loop it replaced. Late frames
+        //    count with weight w_i * decay^staleness; for the synchronous
+        //    case every staleness is 0 and decay^0 = 1 exactly, so this
+        //    reduces bit-for-bit to the plain weighted mean.
         if !apply.is_empty() {
-            self.agg.iter_mut().for_each(|a| *a = 0.0);
             let w_total: f64 = apply
                 .iter()
                 .map(|(m, s)| self.clients[m.client].weight * self.scenario.stale_weight(*s))
                 .sum();
-            for (m, s) in &apply {
-                let w = ((self.clients[m.client].weight * self.scenario.stale_weight(*s))
-                    / w_total) as f32;
-                for (gi, frame) in &m.frames {
-                    let g = &self.groups[*gi];
-                    // Dequantize into the reused scratch: no dense-buffer
-                    // allocation per uplink.
-                    crate::quant::wire::decode_dequantize_into(frame, &mut self.decode_buf)?;
-                    if self.decode_buf.len() != g.end - g.start {
-                        return Err(anyhow!(
-                            "frame length {} != group size {}",
-                            self.decode_buf.len(),
-                            g.end - g.start
-                        ));
-                    }
-                    for (a, &d) in self.agg[g.start..g.end].iter_mut().zip(&self.decode_buf) {
-                        *a += w * d;
-                    }
-                }
-            }
+            let uplinks: Vec<aggregate::WeightedUplink<'_>> = apply
+                .iter()
+                .map(|(m, s)| aggregate::WeightedUplink {
+                    frames: &m.frames,
+                    w: ((self.clients[m.client].weight * self.scenario.stale_weight(*s))
+                        / w_total) as f32,
+                })
+                .collect();
+            aggregate::aggregate_sharded(&self.groups, &uplinks, &mut self.agg, self.agg_shards)?;
             let agg = std::mem::take(&mut self.agg);
             self.opt.step(&mut self.params, &agg);
             self.agg = agg;

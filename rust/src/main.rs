@@ -44,6 +44,7 @@ fn main() -> Result<()> {
                  common flags: --model --scheme --bits --clients --rounds --lr --seed\n\
                  \x20             --backend (auto|native|pjrt) --error-feedback\n\
                  \x20             --drop-client --artifacts --preset\n\
+                 \x20             --agg-shards (server aggregation fan-out; 0 = auto)\n\
                  scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid)\n\
                  \x20             --straggler-frac --straggler-mult --loss-prob --max-retries\n\
                  \x20             --dropout-prob --rejoin-prob --stale-k --stale-decay\n\
@@ -207,21 +208,31 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// CI perf gate: compare a fresh `perf_hotpath` JSON report against the
-/// committed `BENCH_baseline.json` and fail (non-zero exit) when the gated
-/// throughput metric dropped more than `--max-drop` below the baseline.
+/// CI perf gate: compare a fresh bench JSON report (`perf_hotpath` or
+/// `perf_server`) against the committed `BENCH_baseline.json` and fail
+/// (non-zero exit) when any gated throughput metric dropped more than
+/// `--max-drop` below the baseline. `--metric` takes a comma-separated
+/// list; every listed metric must hold its floor.
 fn cmd_perf_check(args: &Args) -> Result<()> {
     let current = args.str_or("current", "BENCH_perf.json");
     let baseline = args.str_or("baseline", "BENCH_baseline.json");
-    let metric = args.str_or("metric", "tqsgd_b4_encode_into_melems_per_s");
+    let metrics = args.str_or("metric", "tqsgd_b4_encode_into_melems_per_s");
     let max_drop = args.f64_or("max-drop", 0.30)?;
     let cur = Report::load(std::path::Path::new(&current))?;
     let base = Report::load(std::path::Path::new(&baseline))?;
-    println!(
-        "{}",
-        check_regression(&cur, &base, &metric, max_drop)
-            .map_err(|e| e.context(format!("{current} vs {baseline}")))?
-    );
+    let mut checked = 0usize;
+    for metric in metrics.split(',').map(str::trim).filter(|m| !m.is_empty()) {
+        println!(
+            "{}",
+            check_regression(&cur, &base, metric, max_drop)
+                .map_err(|e| e.context(format!("{current} vs {baseline}")))?
+        );
+        checked += 1;
+    }
+    // An empty --metric list must be a loud failure, not a green no-op gate.
+    if checked == 0 {
+        bail!("--metric {metrics:?} names no metrics; nothing was gated");
+    }
     Ok(())
 }
 

@@ -20,10 +20,10 @@
 
 use crate::config::{QuantConfig, Scheme};
 use crate::solver;
-use crate::tail::{fit_power_law, fit::report_to_model, PowerLawModel};
+use crate::tail::{fit::report_to_model, fit_power_law_sampled, PowerLawModel, REFIT_SAMPLE_CAP};
 use crate::util::Rng;
 
-use super::kernels::{quantize_codebook_pack_into, quantize_uniform_pack_into};
+use super::kernels::{max_abs, quantize_codebook_pack_into, quantize_uniform_pack_into};
 use super::wire;
 
 /// A gradient compressor: stateful (distribution estimates), one per
@@ -67,10 +67,6 @@ pub fn make_compressor(cfg: &QuantConfig) -> Box<dyn Compressor> {
         Scheme::Terngrad => Box::new(TerngradCodec),
         Scheme::Topk => Box::new(TopkCodec::new(cfg.topk_frac)),
     }
-}
-
-fn max_abs(grads: &[f32]) -> f32 {
-    grads.iter().fold(0.0f32, |m, &g| m.max(g.abs()))
 }
 
 /// Smallest index bit-width that can hold levels 0..=s.
@@ -146,7 +142,7 @@ impl Compressor for NqsgdCodec {
     }
 
     fn refit(&mut self, grads: &[f32]) {
-        if let Some(rep) = fit_power_law(grads) {
+        if let Some(rep) = fit_power_law_sampled(grads, REFIT_SAMPLE_CAP) {
             self.model = Some(report_to_model(&rep));
         }
     }
@@ -194,9 +190,11 @@ struct TruncState {
 
 /// Fit the tail model, clamping γ into the paper's admissible (3, 5] range —
 /// the Eq. (11) error terms are only finite for γ > 3, and empirical fits of
-/// conv-layer gradients occasionally stray below.
+/// conv-layer gradients occasionally stray below. Uses the deterministic
+/// sampled fit (capped at [`REFIT_SAMPLE_CAP`] points), so a per-round refit
+/// costs ~O(d) instead of the full-sort O(d log d).
 fn fit_clamped(grads: &[f32]) -> Option<PowerLawModel> {
-    let rep = fit_power_law(grads)?;
+    let rep = fit_power_law_sampled(grads, REFIT_SAMPLE_CAP)?;
     let mut m = report_to_model(&rep);
     m.gamma = m.gamma.clamp(3.05, 5.0);
     Some(m)

@@ -5,6 +5,68 @@
 //! and the Pallas kernel produce IDENTICAL indices (verified by the parity
 //! integration test through PJRT).
 
+/// Largest |g| over a gradient slice, with 4 independent accumulator lanes
+/// so the reduction has no loop-carried dependency chain and autovectorizes
+/// (a sequential `fold` forces one `max` per element in order). `max` is
+/// commutative/associative and ignores NaN operands on either side, so the
+/// result is identical to the sequential fold for every input.
+pub fn max_abs(grads: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 4];
+    let mut chunks = grads.chunks_exact(4);
+    for c in &mut chunks {
+        lanes[0] = lanes[0].max(c[0].abs());
+        lanes[1] = lanes[1].max(c[1].abs());
+        lanes[2] = lanes[2].max(c[2].abs());
+        lanes[3] = lanes[3].max(c[3].abs());
+    }
+    let mut m = lanes[0].max(lanes[1]).max(lanes[2].max(lanes[3]));
+    for &g in chunks.remainder() {
+        m = m.max(g.abs());
+    }
+    m
+}
+
+/// Fused unpack → LUT dequantize → weighted accumulate over a packed index
+/// payload: `acc[i] += wlut[idx_i]`, where `wlut[k]` is the caller's
+/// precomputed `w * level_k` table (identical f32 product to the unfused
+/// `acc += w * levels[idx]`, computed once per level instead of once per
+/// element). This is the server-side decode hot path: one bitstream walk,
+/// no dense scratch buffer between decode and accumulate.
+///
+/// `packed` must hold at least `bitpack::packed_len(acc.len(), bits)` bytes
+/// (the wire-layer caller checks before dispatching) and `bits` must be in
+/// 1..=8 so each index fits one LUT byte. Indices `>= n_levels` abort with
+/// `Err(idx)` so corrupt codebook frames are rejected exactly like the
+/// unfused decoder; uniform callers pass `n_levels = 256` (every index the
+/// mask can produce is representable).
+pub fn accumulate_packed_wlut(
+    packed: &[u8],
+    bits: u32,
+    n_levels: usize,
+    wlut: &[f32; 256],
+    acc: &mut [f32],
+) -> Result<(), u32> {
+    debug_assert!((1..=8).contains(&bits));
+    debug_assert!(packed.len() >= super::bitpack::packed_len(acc.len(), bits));
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = 0usize;
+    for a in acc.iter_mut() {
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u32;
+        let mut wide = packed[byte] as u32;
+        if let Some(&b1) = packed.get(byte + 1) {
+            wide |= (b1 as u32) << 8;
+        }
+        let idx = (wide >> off) & mask;
+        if idx as usize >= n_levels {
+            return Err(idx);
+        }
+        *a += wlut[idx as usize];
+        bitpos += bits as usize;
+    }
+    Ok(())
+}
+
 /// Truncated uniform stochastic quantization of one element.
 /// Returns the level index in [0, s].
 #[inline(always)]
@@ -233,6 +295,53 @@ mod tests {
     use super::*;
     use crate::prop;
     use crate::util::Rng;
+
+    #[test]
+    fn max_abs_matches_sequential_fold() {
+        // The 4-lane reduction must agree with the reference fold for every
+        // length (remainder handling) and ignore NaNs the same way.
+        let mut rng = Rng::new(41);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 1023, 4096] {
+            let g: Vec<f32> = (0..n).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+            let want = g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert_eq!(max_abs(&g), want, "n={n}");
+        }
+        let mut g = vec![0.5f32, f32::NAN, -3.0, 1.0, f32::NAN];
+        assert_eq!(max_abs(&g), 3.0);
+        g.truncate(2);
+        assert_eq!(max_abs(&g), 0.5);
+    }
+
+    #[test]
+    fn accumulate_packed_wlut_matches_unpack_then_add() {
+        let mut rng = Rng::new(42);
+        for bits in 1..=8u32 {
+            let n_levels = 1usize << bits;
+            let n = 1 + rng.below(500) as usize;
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(n_levels as u64) as u32).collect();
+            let packed = crate::quant::bitpack::pack(&idx, bits);
+            let mut wlut = [0.0f32; 256];
+            for (k, slot) in wlut.iter_mut().enumerate().take(n_levels) {
+                *slot = 0.25 * (k as f32 - 2.0);
+            }
+            let mut acc: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let mut want = acc.clone();
+            for (a, &k) in want.iter_mut().zip(&idx) {
+                *a += wlut[k as usize];
+            }
+            accumulate_packed_wlut(&packed, bits, n_levels, &wlut, &mut acc).unwrap();
+            assert_eq!(acc, want, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn accumulate_packed_wlut_rejects_out_of_codebook_indices() {
+        // 3-bit indices but only 5 codebook levels: index 7 must error.
+        let packed = crate::quant::bitpack::pack(&[0, 4, 7, 1], 3);
+        let wlut = [0.0f32; 256];
+        let mut acc = vec![0.0f32; 4];
+        assert_eq!(accumulate_packed_wlut(&packed, 3, 5, &wlut, &mut acc), Err(7));
+    }
 
     #[test]
     fn uniform_elem_exact_cases() {

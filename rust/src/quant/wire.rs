@@ -252,8 +252,10 @@ pub fn encode_codebook_packed(levels: &[f32], d: u32, bits: u32, packed: &[u8]) 
 
 /// Fused decode → dense gradient into a caller-provided buffer (cleared
 /// first): skips the intermediate index vector for uniform/codebook frames
-/// AND, with a recycled `out`, the dense-buffer allocation — the server-side
-/// hot path the coordinator aggregates through every uplink.
+/// AND, with a recycled `out`, the dense-buffer allocation. Error feedback
+/// and the benches still decode through here; the coordinator's server path
+/// now goes one step further and folds the weighted accumulate into the
+/// same walk — see [`decode_dequantize_accumulate_into`].
 pub fn decode_dequantize_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
     out.clear();
     let mut r = Reader { b: bytes, i: 0 };
@@ -345,6 +347,107 @@ pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
     let mut out = Vec::new();
     decode_dequantize_into(bytes, &mut out)?;
     Ok(out)
+}
+
+/// Fused decode → dequantize → weighted accumulate: `acc[i] += w * d_i`
+/// where `d` is the frame's dense reconstruction, in ONE walk over the
+/// bitstream — the dense scratch write + re-read pass of
+/// `decode_dequantize_into` followed by a `zip` accumulate disappears
+/// entirely. For uniform/codebook frames (bits ≤ 8, all the encoders emit)
+/// the per-level products `w * level_k` are precomputed into a 256-entry
+/// LUT, so the inner loop is an unpack, a table load and an add.
+///
+/// Bit-identity contract (the server's sharded aggregation relies on it,
+/// property-tested across schemes × bits): every element receives exactly
+/// the f32 operations of the two-pass path — `d_k` computed per level as
+/// before, one `w * d_k` product, one `+=` — in the same element order.
+/// Sparse frames scatter-add only their stored pairs; skipped elements
+/// would have received `+= w * 0.0`, which is the identity on every value
+/// the accumulator can hold (a chain of f32 adds seeded from +0.0 never
+/// produces −0.0). Sparse indices must be unique, as the Top-k encoder
+/// guarantees: a duplicate would accumulate where the dense path overwrote.
+///
+/// `acc` must be exactly the frame's element count (the coordinator's
+/// per-layer-group slice) — a mismatch is the old "frame length != group
+/// size" error, now caught inside the kernel.
+pub fn decode_dequantize_accumulate_into(bytes: &[u8], w: f32, acc: &mut [f32]) -> Result<()> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.u16()? != MAGIC {
+        bail!("bad frame magic");
+    }
+    let kind = r.u8()?;
+    let bits = r.u8()? as u32;
+    let d = r.u32()? as usize;
+    if d != acc.len() {
+        bail!("frame length {} != accumulator size {}", d, acc.len());
+    }
+    match kind {
+        1 => {
+            let alpha = r.f32()?;
+            let s = r.u16()?;
+            if !(1..=8).contains(&bits) {
+                bail!("uniform frame bits {bits} outside the packed range 1..=8");
+            }
+            let packed = r.rest();
+            if packed.len() < super::bitpack::packed_len(d, bits) {
+                bail!("truncated uniform payload");
+            }
+            let step = 2.0f32 * alpha / s as f32;
+            let mask = (1usize << bits) - 1;
+            let mut wlut = [0.0f32; 256];
+            for (k, slot) in wlut.iter_mut().enumerate().take(mask + 1) {
+                // Same f32 dequantize expression as the two-pass path, then
+                // the same single `w * d` product — per level, not per elem.
+                let dk = -alpha + k as f32 * step;
+                *slot = w * dk;
+            }
+            // n_levels = 256: every index the mask can produce dequantizes,
+            // exactly like the unfused uniform decoder.
+            super::kernels::accumulate_packed_wlut(packed, bits, 256, &wlut, acc)
+                .map_err(|idx| anyhow!("uniform index {idx} unrepresentable"))?;
+            Ok(())
+        }
+        2 => {
+            let n = r.u16()? as usize;
+            if n > 256 {
+                bail!("codebook with {n} levels exceeds the 8-bit index space");
+            }
+            if !(1..=8).contains(&bits) {
+                bail!("codebook frame bits {bits} outside the packed range 1..=8");
+            }
+            let mut wlut = [0.0f32; 256];
+            for slot in wlut.iter_mut().take(n) {
+                *slot = w * r.f32()?;
+            }
+            let packed = r.rest();
+            if packed.len() < super::bitpack::packed_len(d, bits) {
+                bail!("truncated codebook payload");
+            }
+            super::kernels::accumulate_packed_wlut(packed, bits, n, &wlut, acc)
+                .map_err(|idx| anyhow!("index {idx} out of codebook"))?;
+            Ok(())
+        }
+        // Raw: accumulate straight from the byte stream.
+        0 => {
+            for a in acc.iter_mut() {
+                *a += w * r.f32()?;
+            }
+            Ok(())
+        }
+        // Sparse: scatter-add the stored pairs (see the contract above).
+        3 => {
+            let k = r.u32()? as usize;
+            let mut vals = Reader { b: r.b, i: r.i + 4 * k };
+            for _ in 0..k {
+                let i = r.u32()? as usize;
+                let v = vals.f32()?;
+                *acc.get_mut(i).ok_or_else(|| anyhow!("sparse index {i} out of range"))? +=
+                    w * v;
+            }
+            Ok(())
+        }
+        k => bail!("unknown payload kind {k}"),
+    }
 }
 
 struct Reader<'a> {
@@ -469,6 +572,69 @@ mod tests {
             let general = Payload::decode(&bytes).map_err(|e| e.to_string())?.dequantize();
             crate::prop::assert_prop(fused == general, format!("kind {kind} mismatch"))
         });
+    }
+
+    #[test]
+    fn fused_accumulate_is_bit_identical_to_two_pass() {
+        // decode_dequantize_accumulate_into must reproduce EXACTLY the bits
+        // of decode_dequantize_into + `acc += w * d` for every payload kind,
+        // bit width and weight — including on a dirty accumulator.
+        crate::prop::check(100, |rng| {
+            let d = 1 + rng.below(2000) as usize;
+            let bits = 1 + rng.below(8) as u32;
+            let s = (1u32 << bits) - 1;
+            let w = (rng.f64() * 1.5) as f32;
+            let kind = rng.below(4);
+            let bytes = match kind {
+                0 => Payload::Raw((0..d).map(|_| rng.f32() - 0.5).collect()).encode(0),
+                1 => {
+                    let idx: Vec<u32> = (0..d).map(|_| rng.below(s as u64 + 1) as u32).collect();
+                    Payload::Uniform { alpha: 0.1, s: s as u16, idx }.encode(bits)
+                }
+                2 => {
+                    let cb = crate::prop::gen_codebook(rng, 5);
+                    let n = cb.len() as u64;
+                    let idx: Vec<u32> = (0..d).map(|_| rng.below(n) as u32).collect();
+                    let b = 32 - (cb.len() as u32 - 1).leading_zeros();
+                    Payload::Codebook { levels: cb, idx }.encode(b)
+                }
+                _ => {
+                    let k = 1 + rng.below(d as u64) as usize;
+                    let mut pairs: Vec<(u32, f32)> =
+                        (0..k).map(|i| (i as u32, rng.f32())).collect();
+                    pairs.dedup_by_key(|p| p.0);
+                    Payload::Sparse { d: d as u32, pairs }.encode(0)
+                }
+            };
+            let base: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+            let mut want = base.clone();
+            let mut scratch = Vec::new();
+            decode_dequantize_into(&bytes, &mut scratch).map_err(|e| e.to_string())?;
+            for (a, &dv) in want.iter_mut().zip(&scratch) {
+                *a += w * dv;
+            }
+            let mut got = base;
+            decode_dequantize_accumulate_into(&bytes, w, &mut got)
+                .map_err(|e| e.to_string())?;
+            let same = got.iter().map(|x| x.to_bits()).eq(want.iter().map(|x| x.to_bits()));
+            crate::prop::assert_prop(same, format!("kind {kind} bits {bits}: bit mismatch"))
+        });
+    }
+
+    #[test]
+    fn fused_accumulate_rejects_bad_frames() {
+        let idx: Vec<u32> = (0..100).map(|i| i % 8).collect();
+        let bytes = Payload::Uniform { alpha: 0.1, s: 7, idx }.encode(3);
+        let mut acc = vec![0.0f32; 100];
+        // Truncated payload and wrong accumulator length both error.
+        assert!(decode_dequantize_accumulate_into(&bytes[..bytes.len() - 5], 1.0, &mut acc)
+            .is_err());
+        let mut short = vec![0.0f32; 99];
+        assert!(decode_dequantize_accumulate_into(&bytes, 1.0, &mut short).is_err());
+        // Codebook index beyond the level table errors (idx 2 of 2 levels).
+        let cb = Payload::Codebook { levels: vec![-1.0, 1.0], idx: vec![0, 1, 2] }.encode(2);
+        let mut acc3 = vec![0.0f32; 3];
+        assert!(decode_dequantize_accumulate_into(&cb, 1.0, &mut acc3).is_err());
     }
 
     #[test]

@@ -48,6 +48,13 @@ pub fn ks_distance(sorted: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
     worst
 }
 
+/// Deterministic sample cap the codecs use for per-round refits (see
+/// [`fit_power_law_sampled`]): large enough that γ̂'s sampling error is a
+/// few hundredths at the widest tail, small enough that a refit of a
+/// million-element layer group touches the quantile machinery on ~16k
+/// points instead of all of them.
+pub const REFIT_SAMPLE_CAP: usize = 16_384;
+
 /// Clauset-style power-law fit of the |g| tail: scan g_min candidates over
 /// quantiles of |g|, take the MLE γ̂ at each, keep the candidate minimizing
 /// the KS distance of the tail above g_min against the fitted Pareto.
@@ -55,16 +62,60 @@ pub fn ks_distance(sorted: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
 /// Returns the fit plus a KS report. The scan range is bounded so at least
 /// `min_tail_frac` of the sample stays in the tail (the estimator needs
 /// enough tail points) and at most `max_tail_frac` (the power law only holds
-/// in the tail).
+/// in the tail). Equivalent to `fit_power_law_sampled(values, usize::MAX)` —
+/// every point participates; this is the reference the sampled refit path is
+/// regression-tested against.
 pub fn fit_power_law(values: &[f32]) -> Option<FitReport> {
+    fit_power_law_sampled(values, usize::MAX)
+}
+
+/// [`fit_power_law`] over a deterministic subsample of at most `max_sample`
+/// nonzero |g| points — the codec refit path (see [`REFIT_SAMPLE_CAP`]).
+///
+/// Two things keep the per-refit cost ~O(d) instead of the former full-sort
+/// O(d log d):
+///
+/// * **Deterministic stride subsample.** When more than `max_sample` points
+///   survive the zero filter, every `ceil(n / max_sample)`-th one (in
+///   arrival order, fixed phase 0) is kept — no RNG, so refits stay
+///   bit-reproducible for a given gradient.
+/// * **Select-nth quantiles.** All g_min candidates live in the top
+///   `max_tail_frac` of the sample, so one `select_nth_unstable` partition
+///   at that boundary followed by a sort of ONLY the tail half replaces the
+///   full sort; the body below the widest candidate is never ordered.
+///
+/// With `max_sample >= n` the result is bit-identical to the pre-sampling
+/// full-sort fit: the partition point and everything above it order exactly
+/// as they would in the fully sorted array, and ρ falls back to the
+/// original full-count expression.
+pub fn fit_power_law_sampled(values: &[f32], max_sample: usize) -> Option<FitReport> {
     let mut abs: Vec<f64> = values.iter().map(|v| (*v as f64).abs()).filter(|a| *a > 0.0).collect();
-    if abs.len() < 100 {
+    let nonzero = abs.len();
+    if nonzero < 100 {
         return None;
     }
-    abs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let max_sample = max_sample.max(100);
+    if nonzero > max_sample {
+        let stride = nonzero.div_ceil(max_sample);
+        let mut kept = 0usize;
+        let mut i = 0usize;
+        while i < nonzero {
+            abs[kept] = abs[i];
+            kept += 1;
+            i += stride;
+        }
+        abs.truncate(kept);
+    }
     let n = abs.len();
     let min_tail_frac = 0.005;
     let max_tail_frac = 0.5;
+
+    // Partition at the widest-tail boundary and sort only the tail: every
+    // candidate index below is >= idx0, so sorted order above idx0 is all
+    // the scan needs.
+    let idx0 = (((1.0 - max_tail_frac) * n as f64) as usize).min(n - 2);
+    abs.select_nth_unstable_by(idx0, |a, b| a.partial_cmp(b).unwrap());
+    abs[idx0..].sort_by(|a, b| a.partial_cmp(b).unwrap());
 
     let mut best: Option<(f64, f64, f64)> = None; // (ks, gamma, g_min)
     // Candidate g_min values at 40 quantiles of the allowed range.
@@ -96,8 +147,15 @@ pub fn fit_power_law(values: &[f32]) -> Option<FitReport> {
         }
     }
     let (ks, gamma, g_min) = best?;
-    let rho = abs.iter().filter(|&&a| a > g_min).count() as f64 / (values.len() as f64) / 2.0;
     // rho is ONE-SIDED tail mass: |g|>g_min counts both tails, halve it.
+    // On the sampled path, scale the in-sample tail fraction by the overall
+    // nonzero fraction; unsampled, keep the original expression bit-for-bit.
+    let count = abs.iter().filter(|&&a| a > g_min).count() as f64;
+    let rho = if n == nonzero {
+        count / (values.len() as f64) / 2.0
+    } else {
+        (count / n as f64) * (nonzero as f64 / values.len() as f64) / 2.0
+    };
     Some(FitReport { family: "power-law", params: vec![gamma, g_min, rho], ks })
 }
 
@@ -171,6 +229,115 @@ mod tests {
         let ghat = fit.params[0];
         assert!((ghat - gamma).abs() < 0.5, "gamma {ghat}");
         assert!(fit.ks < 0.05, "ks {}", fit.ks);
+    }
+
+    /// The pre-select-nth fit, kept verbatim as an independent reference:
+    /// full sort of |g|, then the identical 40-candidate scan. The shipped
+    /// fit must reproduce it bit-for-bit when no sampling kicks in.
+    fn full_sort_reference(values: &[f32]) -> Option<(Vec<f64>, f64)> {
+        let mut abs: Vec<f64> =
+            values.iter().map(|v| (*v as f64).abs()).filter(|a| *a > 0.0).collect();
+        if abs.len() < 100 {
+            return None;
+        }
+        abs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = abs.len();
+        let min_tail_frac = 0.005;
+        let max_tail_frac = 0.5;
+        let mut best: Option<(f64, f64, f64)> = None;
+        for qi in 0..40 {
+            let frac = max_tail_frac - (max_tail_frac - min_tail_frac) * qi as f64 / 39.0;
+            let idx = ((1.0 - frac) * n as f64) as usize;
+            let g_min = abs[idx.min(n - 2)];
+            if g_min <= 0.0 {
+                continue;
+            }
+            let tail = &abs[idx..];
+            let Some((gamma, _)) =
+                gamma_mle(&tail.iter().map(|&x| x as f32).collect::<Vec<_>>(), g_min)
+            else {
+                continue;
+            };
+            if gamma <= 1.5 {
+                continue;
+            }
+            let ks = ks_distance(
+                &tail.iter().copied().filter(|&x| x > g_min).collect::<Vec<_>>(),
+                |x| 1.0 - (x / g_min).powf(1.0 - gamma),
+            );
+            if best.map_or(true, |(bks, _, _)| ks < bks) {
+                best = Some((ks, gamma, g_min));
+            }
+        }
+        let (ks, gamma, g_min) = best?;
+        let rho =
+            abs.iter().filter(|&&a| a > g_min).count() as f64 / (values.len() as f64) / 2.0;
+        Some((vec![gamma, g_min, rho], ks))
+    }
+
+    #[test]
+    fn select_nth_fit_is_bit_identical_to_full_sort_reference() {
+        // With no sampling in play the shipped select-nth fit must land on
+        // EXACTLY the old full-sort fit's (γ, g_min, ρ, KS): the partition
+        // point and everything above it order as in the fully sorted array.
+        let mut rng = Rng::new(21);
+        for &(gamma, rho2, n) in &[(4.0, 0.2, 20_000usize), (3.4, 0.1, 5_000), (4.8, 0.35, 997)]
+        {
+            let xs: Vec<f32> =
+                (0..n).map(|_| rng.power_law_gradient(0.01, gamma, rho2) as f32).collect();
+            let (ref_params, ref_ks) = full_sort_reference(&xs).unwrap();
+            let fit = fit_power_law(&xs).unwrap();
+            assert_eq!(fit.params, ref_params, "γ={gamma} n={n}");
+            assert_eq!(fit.ks, ref_ks, "γ={gamma} n={n}");
+            let capped = fit_power_law_sampled(&xs, xs.len()).unwrap();
+            assert_eq!(capped.params, ref_params, "γ={gamma} n={n} (cap == n)");
+        }
+    }
+
+    #[test]
+    fn sampled_fit_selects_same_design_as_full_fit() {
+        // The codec-selection regression gate: on seeded power-law draws the
+        // sampled refit must land on the same (γ, α) quantizer design as the
+        // full-sort fit within tolerance, for both the uniform (Eq. 12) and
+        // non-uniform (Eq. 19) truncation solvers.
+        let mut rng = Rng::new(22);
+        for &(gamma, rho2) in &[(3.6, 0.15), (4.0, 0.2), (4.6, 0.3)] {
+            let xs: Vec<f32> = (0..60_000)
+                .map(|_| rng.power_law_gradient(0.01, gamma, rho2) as f32)
+                .collect();
+            let full = fit_power_law(&xs).unwrap();
+            let samp = fit_power_law_sampled(&xs, super::REFIT_SAMPLE_CAP).unwrap();
+            let (gf, gs) = (full.params[0], samp.params[0]);
+            assert!((gf - gs).abs() < 0.45, "γ={gamma}: full γ̂ {gf} vs sampled {gs}");
+            let mf = report_to_model(&full);
+            let ms = report_to_model(&samp);
+            for s in [3usize, 7, 15] {
+                let af = crate::solver::optimal_alpha_uniform(&mf, s);
+                let a_s = crate::solver::optimal_alpha_uniform(&ms, s);
+                assert!(
+                    (af - a_s).abs() <= 0.25 * af.max(a_s),
+                    "γ={gamma} s={s}: uniform α {af} vs {a_s}"
+                );
+                let nf = crate::solver::optimal_alpha_nonuniform(&mf, s);
+                let ns = crate::solver::optimal_alpha_nonuniform(&ms, s);
+                assert!(
+                    (nf - ns).abs() <= 0.25 * nf.max(ns),
+                    "γ={gamma} s={s}: non-uniform α {nf} vs {ns}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_fit_still_recovers_gamma_under_the_cap() {
+        let mut rng = Rng::new(23);
+        let xs: Vec<f32> =
+            (0..120_000).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let fit = fit_power_law_sampled(&xs, 8192).unwrap();
+        assert!((fit.params[0] - 4.0).abs() < 0.6, "γ̂ {}", fit.params[0]);
+        assert!(fit.ks < 0.08, "ks {}", fit.ks);
+        // ρ scaling: roughly half the two-sided tail mass at the cutoff.
+        assert!(fit.params[2] > 0.0 && fit.params[2] <= 0.5);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 pub mod fit;
 pub mod model;
 
-pub use fit::{fit_gaussian, fit_laplace, fit_power_law, ks_distance, FitReport};
+pub use fit::{
+    fit_gaussian, fit_laplace, fit_power_law, fit_power_law_sampled, ks_distance, FitReport,
+    REFIT_SAMPLE_CAP,
+};
 pub use model::PowerLawModel;
 
 /// Log-spaced histogram of |g| — the Fig. 1 density plot substrate.

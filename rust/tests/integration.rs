@@ -193,6 +193,27 @@ fn training_is_deterministic_given_seed() {
 }
 
 #[test]
+fn agg_shards_setting_does_not_change_training_bits() {
+    // The sharded server aggregation is a pure performance knob: the same
+    // experiment at shard widths 1 / 2 / 7 (capped by the model's group
+    // count) must land on bit-identical parameters.
+    let backend = native();
+    let run = |shards: usize| {
+        let mut cfg = small_cfg("mlp_tiny", Scheme::Tnqsgd);
+        cfg.agg_shards = shards;
+        cfg.rounds = 3;
+        let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+        for _ in 0..3 {
+            coord.step().unwrap();
+        }
+        coord.params.clone()
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(2), "2-shard aggregation changed the training bits");
+    assert_eq!(serial, run(7), "7-shard aggregation changed the training bits");
+}
+
+#[test]
 fn fault_injection_drops_client_and_still_trains() {
     let backend = native();
     let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
@@ -259,7 +280,11 @@ fn lm_coordinator_trains_bigram() {
 /// After warm-up rounds every frame buffer comes from a client arena:
 /// `Coordinator::step` performs zero per-round frame allocations. This is
 /// the acceptance gate behind the `compress_into` hot path; the counter is
-/// `quant::arena::FrameArena::fresh_allocs` summed over clients.
+/// `quant::arena::FrameArena::fresh_allocs` summed over clients. The
+/// staleness-histogram working buffer has the analogous scratch invariant:
+/// once the deepest staleness a scenario produces has been seen, its
+/// capacity (the `hist_reallocs` growth counter) must stop moving too —
+/// the record's sized-to-fit histogram copy is log data, outside it.
 fn assert_steady_state_zero_frame_allocs(mut cfg: ExperimentConfig, warmup: usize) {
     let label = format!("{} ef={}", cfg.scenario.name, cfg.quant.error_feedback);
     cfg.rounds = warmup + 5;
@@ -269,7 +294,9 @@ fn assert_steady_state_zero_frame_allocs(mut cfg: ExperimentConfig, warmup: usiz
         coord.step().unwrap();
     }
     let warm = coord.frame_allocs();
+    let warm_hist = coord.hist_reallocs();
     assert!(warm > 0, "{label}: warm-up must have allocated some frames");
+    assert!(warm_hist > 0, "{label}: warm-up must have sized the hist scratch");
     for _ in 0..5 {
         coord.step().unwrap();
     }
@@ -277,6 +304,11 @@ fn assert_steady_state_zero_frame_allocs(mut cfg: ExperimentConfig, warmup: usiz
         coord.frame_allocs(),
         warm,
         "{label}: steady-state rounds must reuse arena frame buffers"
+    );
+    assert_eq!(
+        coord.hist_reallocs(),
+        warm_hist,
+        "{label}: steady-state rounds must reuse the staleness-hist scratch"
     );
 }
 

@@ -10,12 +10,14 @@
 //! compatibility.
 
 use tqsgd::config::{QuantConfig, Scheme};
+use tqsgd::coordinator::aggregate::{aggregate_serial, aggregate_sharded, WeightedUplink};
 use tqsgd::prop;
 use tqsgd::quant::bitpack;
 use tqsgd::quant::error_feedback::ErrorFeedback;
 use tqsgd::quant::kernels::{quantize_codebook_elem, quantize_uniform_elem};
 use tqsgd::quant::make_compressor;
-use tqsgd::quant::wire::Payload;
+use tqsgd::quant::wire::{self, Payload};
+use tqsgd::runtime::GroupRange;
 use tqsgd::solver;
 use tqsgd::tail::PowerLawModel;
 use tqsgd::util::Rng;
@@ -217,6 +219,127 @@ fn golden_sparse_frame_bytes() {
     ];
     assert_eq!(p.encode(0), want);
     assert_eq!(Payload::decode(&want).unwrap(), p);
+}
+
+// ---------------------------------------------------------------------------
+// Server aggregation: sharded == serial, bit for bit, for every scheme ×
+// bit width × shard count — the determinism contract behind the parallel
+// stage-4 server path (disjoint layer-group shards, fixed client order)
+// ---------------------------------------------------------------------------
+
+/// Serial vs sharded aggregation over real codec frames, including
+/// stale-decayed weights. The reference is the pre-sharding two-pass loop
+/// (decode into a dense scratch, then weighted accumulate) written out
+/// verbatim, so this pins BOTH the fused decode-accumulate kernel and the
+/// shard fan-out to the historical server bits.
+#[test]
+fn sharded_aggregation_is_bit_identical_to_serial() {
+    prop::check(5, |rng| {
+        // Random layer-group geometry: 2-4 groups, uneven sizes.
+        let n_groups = 2 + rng.below(3) as usize;
+        let groups: Vec<GroupRange> = {
+            let mut start = 0usize;
+            (0..n_groups)
+                .map(|i| {
+                    let len = 120 + rng.below(500) as usize;
+                    let g = GroupRange { group: format!("g{i}"), start, end: start + len };
+                    start = g.end;
+                    g
+                })
+                .collect()
+        };
+        let d_total = groups.last().unwrap().end;
+        let n_clients = 3 + rng.below(3) as usize;
+        // Client weights with stale decay on the tail clients, normalized —
+        // exactly the coordinator's w_i = weight_i * decay^s / Σw shape.
+        let raw: Vec<f64> = (0..n_clients)
+            .map(|ci| {
+                let staleness = if ci >= n_clients - 2 { (ci % 3) as i32 } else { 0 };
+                (0.5 + rng.f64()) * 0.5f64.powi(staleness)
+            })
+            .collect();
+        let w_total: f64 = raw.iter().sum();
+        let ws: Vec<f32> = raw.iter().map(|w| (w / w_total) as f32).collect();
+
+        for scheme in Scheme::all() {
+            for bits in 1..=8u32 {
+                if scheme == Scheme::Tbqsgd && bits < 2 {
+                    continue; // BiScaled needs s >= 3 intervals
+                }
+                // Per-client frames: every (client, group) its own codec
+                // state and RNG stream, like the real federation.
+                let frames: Vec<Vec<(usize, Vec<u8>)>> = (0..n_clients)
+                    .map(|ci| {
+                        groups
+                            .iter()
+                            .enumerate()
+                            .map(|(gi, g)| {
+                                // Exactly group-sized heavy-tailed draws —
+                                // frame length must equal the group range.
+                                let grads: Vec<f32> = (0..g.end - g.start)
+                                    .map(|_| (rng.student_t(3.0) * 0.01) as f32)
+                                    .collect();
+                                let mut c = make_compressor(&QuantConfig {
+                                    scheme,
+                                    bits,
+                                    ..Default::default()
+                                });
+                                c.refit(&grads);
+                                let mut r = Rng::new(0xA6 + ci as u64 * 977 + gi as u64);
+                                (gi, c.compress(&grads, &mut r))
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let uplinks: Vec<WeightedUplink<'_>> = frames
+                    .iter()
+                    .zip(&ws)
+                    .map(|(f, &w)| WeightedUplink { frames: f, w })
+                    .collect();
+
+                // Historical reference: two-pass scratch loop.
+                let mut want = vec![0.0f32; d_total];
+                let mut scratch = Vec::new();
+                for u in &uplinks {
+                    for (gi, frame) in u.frames {
+                        let g = &groups[*gi];
+                        wire::decode_dequantize_into(frame, &mut scratch)
+                            .map_err(|e| format!("{scheme:?} b{bits}: {e}"))?;
+                        if scratch.len() != g.end - g.start {
+                            return Err(format!("{scheme:?} b{bits}: bad frame length"));
+                        }
+                        for (a, &d) in want[g.start..g.end].iter_mut().zip(&scratch) {
+                            *a += u.w * d;
+                        }
+                    }
+                }
+
+                let mut fused = vec![0.5f32; d_total]; // dirty on purpose
+                aggregate_serial(&groups, &uplinks, &mut fused)
+                    .map_err(|e| format!("{scheme:?} b{bits} serial: {e}"))?;
+                if !bits_eq(&fused, &want) {
+                    return Err(format!(
+                        "{scheme:?} b{bits}: fused serial != two-pass reference"
+                    ));
+                }
+                for shards in [1usize, 2, 7] {
+                    let mut agg = vec![-1.0f32; d_total]; // dirty on purpose
+                    aggregate_sharded(&groups, &uplinks, &mut agg, shards)
+                        .map_err(|e| format!("{scheme:?} b{bits} x{shards}: {e}"))?;
+                    if !bits_eq(&agg, &want) {
+                        return Err(format!(
+                            "{scheme:?} b{bits}: {shards}-shard aggregate != serial bits"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().map(|x| x.to_bits()).eq(b.iter().map(|x| x.to_bits()))
 }
 
 // ---------------------------------------------------------------------------
