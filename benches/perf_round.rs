@@ -1,0 +1,151 @@
+//! §Perf — end-to-end round throughput through the coordinator's round
+//! engine: the strict-barrier reference vs the streaming pipeline that
+//! overlaps client encode with server decode (`coordinator/pipeline.rs`).
+//!
+//! * barrier vs streaming Melems/s over full rounds (compute + encode +
+//!   uplink + schedule + weighted apply) with **bit-identity asserted per
+//!   configuration** — the two timed runs must land on identical parameters
+//!   and `replay_digest()`s, and short stale/churn runs re-check the
+//!   degraded-mode paths;
+//! * the per-stage wall-clock breakdown (`compute/encode/agg` columns of
+//!   `RoundRecord`) so the encode↔decode overlap is visible, not inferred.
+//!
+//! Regenerate with `cargo bench --bench perf_round`; CI runs `-- --quick`
+//! with `TQSGD_BENCH_JSON=BENCH_perf_round.json` and gates
+//! `round_streaming_melems_per_s` against `BENCH_baseline.json`
+//! (`tqsgd perf-check`). Refresh the baseline on real hardware with
+//! `TQSGD_BENCH_JSON=BENCH_perf_round.json cargo bench --bench perf_round -- --quick`
+//! and merge the metric into the committed file.
+
+use tqsgd::benchkit::{bench, section, BenchOpts, Report, Table};
+use tqsgd::config::{ExperimentConfig, PipelineMode, ScenarioConfig, Scheme};
+use tqsgd::coordinator::Coordinator;
+use tqsgd::metrics::{RoundRecord, RunLog};
+use tqsgd::runtime::{backend_for, Backend};
+
+fn base_cfg(scheme: Scheme, bits: u32, pipeline: PipelineMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = scheme;
+    cfg.quant.bits = bits;
+    cfg.clients = 8;
+    cfg.train_size = 2048;
+    cfg.test_size = 256;
+    cfg.seed = 7;
+    cfg.pipeline = pipeline;
+    cfg
+}
+
+/// f32 bit patterns, so the identity asserts are bitwise (`==` on f32 would
+/// let a +0.0/−0.0 sign flip through — the exact hazard the dense
+/// contribution path's determinism argument rules out).
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn digest_of(records: Vec<RoundRecord>) -> String {
+    let mut log = RunLog::default();
+    for r in records {
+        log.push(r);
+    }
+    log.replay_digest()
+}
+
+/// Run `rounds` rounds on a fresh coordinator; returns (params, digest).
+fn run_rounds(
+    backend: &dyn Backend,
+    cfg: &ExperimentConfig,
+    rounds: usize,
+) -> anyhow::Result<(Vec<f32>, String)> {
+    let mut coord = Coordinator::new(cfg.clone(), backend)?;
+    let mut records = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        records.push(coord.step()?);
+    }
+    Ok((coord.params.clone(), digest_of(records)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("perf_round", &opts);
+    let backend = backend_for("native", "unused")?;
+    let (warmup, runs) = if opts.quick { (2, 8) } else { (4, 24) };
+
+    // -- Degraded-mode bit-identity spot checks (cheap, always run) --------
+    section("streaming vs barrier bit-identity (stale + churn spot checks)");
+    for preset in ["stale", "churn"] {
+        let mut cfg = base_cfg(Scheme::Tnqsgd, 3, PipelineMode::Barrier);
+        cfg.clients = 4;
+        cfg.net.bandwidth_bytes_per_sec = 1e6;
+        cfg.net.latency_sec = 0.01;
+        cfg.scenario = ScenarioConfig::preset(preset)?;
+        let (p_barrier, d_barrier) = run_rounds(backend.as_ref(), &cfg, 4)?;
+        cfg.pipeline = PipelineMode::Streaming;
+        let (p_streaming, d_streaming) = run_rounds(backend.as_ref(), &cfg, 4)?;
+        assert_eq!(d_barrier, d_streaming, "{preset}: replay digests diverged");
+        assert_eq!(bits_of(&p_barrier), bits_of(&p_streaming), "{preset}: parameters diverged");
+        println!("  {preset}: params + digest bit-identical over 4 rounds");
+    }
+
+    // -- Timed end-to-end rounds, identity asserted on the timed runs too --
+    section(&format!(
+        "end-to-end round throughput, barrier vs streaming (mlp, N=8, {} timed rounds)",
+        runs
+    ));
+    let mut t = Table::new(&[
+        "codec",
+        "pipeline",
+        "round",
+        "Melems/s",
+        "compute",
+        "encode(+decode)",
+        "agg",
+    ]);
+    let codecs = [(Scheme::Tnqsgd, 3u32, "tnqsgd b3"), (Scheme::Tqsgd, 4, "tqsgd b4")];
+    for (scheme, bits, label) in codecs {
+        let mut outcomes: Vec<(Vec<f32>, String, f64)> = Vec::new();
+        for pipeline in [PipelineMode::Barrier, PipelineMode::Streaming] {
+            let cfg = base_cfg(scheme, bits, pipeline);
+            let mut coord = Coordinator::new(cfg.clone(), backend.as_ref())?;
+            let elems = coord.params.len() * cfg.clients;
+            let mut records: Vec<RoundRecord> = Vec::with_capacity(warmup + runs);
+            let timing = bench(warmup, runs, || {
+                records.push(coord.step().expect("round"));
+            });
+            // Stage breakdown over the TIMED rounds only — the warmup
+            // rounds (contrib sizing, cold caches) also ran the closure.
+            let mean = |f: fn(&RoundRecord) -> f64| -> f64 {
+                records.iter().skip(warmup).map(f).sum::<f64>() / runs as f64
+            };
+            t.row(&[
+                label.to_string(),
+                pipeline.name().to_string(),
+                timing.pretty(),
+                format!("{:.1}", timing.melems_per_s(elems)),
+                format!("{:.1}ms", mean(|r| r.compute_secs) * 1e3),
+                format!("{:.1}ms", mean(|r| r.encode_secs) * 1e3),
+                format!("{:.1}ms", mean(|r| r.agg_secs) * 1e3),
+            ]);
+            if scheme == Scheme::Tnqsgd {
+                report.metric(
+                    &format!("round_{}_melems_per_s", pipeline.name()),
+                    timing.melems_per_s(elems),
+                );
+            }
+            outcomes.push((coord.params.clone(), digest_of(records), timing.median_ns));
+        }
+        let (p_barrier, d_barrier, ns_barrier) = &outcomes[0];
+        let (p_streaming, d_streaming, ns_streaming) = &outcomes[1];
+        assert_eq!(d_barrier, d_streaming, "{label}: timed runs' digests diverged");
+        assert_eq!(bits_of(p_barrier), bits_of(p_streaming), "{label}: timed params diverged");
+        if scheme == Scheme::Tnqsgd {
+            report.metric("round_streaming_speedup_vs_barrier", ns_barrier / ns_streaming);
+        }
+    }
+    t.print();
+    report.table("end-to-end round throughput (barrier vs streaming)", &t);
+
+    report.finish(&opts)?;
+    Ok(())
+}

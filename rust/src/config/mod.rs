@@ -80,6 +80,40 @@ impl Scheme {
     }
 }
 
+/// How the coordinator executes one communication round (see
+/// `coordinator::pipeline` for the engine and the bit-identity argument).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PipelineMode {
+    /// Strict stage barriers: grad → encode (join all) → uplink →
+    /// aggregate. The reference semantics.
+    #[default]
+    Barrier,
+    /// Per-client frame hand-off: finished encodes flow through the
+    /// scenario-conditioned network straight into buffered server decode
+    /// while slower clients still encode; the weighted apply runs in the
+    /// fixed (round, client) order. Bit-identical to `Barrier`.
+    Streaming,
+}
+
+impl PipelineMode {
+    /// Parse a mode name (`barrier` | `streaming`).
+    pub fn parse(s: &str) -> Result<PipelineMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "barrier" => PipelineMode::Barrier,
+            "streaming" => PipelineMode::Streaming,
+            other => bail!("unknown pipeline mode {other:?}; expected barrier | streaming"),
+        })
+    }
+
+    /// Canonical name (the `--pipeline` / JSON value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Barrier => "barrier",
+            PipelineMode::Streaming => "streaming",
+        }
+    }
+}
+
 /// Compression configuration.
 #[derive(Clone, Debug)]
 pub struct QuantConfig {
@@ -336,6 +370,10 @@ pub struct ExperimentConfig {
     /// A pure performance knob — sharded aggregation is bit-identical to
     /// the serial path at every width.
     pub agg_shards: usize,
+    /// Round execution mode: strict stage barriers, or the streaming
+    /// pipeline that overlaps client encode with server decode. A pure
+    /// performance knob — the two modes are bit-identical.
+    pub pipeline: PipelineMode,
 }
 
 impl Default for ExperimentConfig {
@@ -358,6 +396,7 @@ impl Default for ExperimentConfig {
             backend: "auto".into(),
             drop_client: usize::MAX,
             agg_shards: 0,
+            pipeline: PipelineMode::default(),
         }
     }
 }
@@ -458,6 +497,9 @@ impl ExperimentConfig {
         }
         self.drop_client = args.usize_or("drop-client", self.drop_client)?;
         self.agg_shards = args.usize_or("agg-shards", self.agg_shards)?;
+        if let Some(p) = args.get("pipeline") {
+            self.pipeline = PipelineMode::parse(p)?;
+        }
         // Scenario: `--scenario <preset>` selects a base, then freeform
         // flags override individual fields on top of it.
         if let Some(name) = args.get("scenario") {
@@ -498,6 +540,7 @@ impl ExperimentConfig {
                 self.drop_client as f64
             })),
             ("agg_shards", json::num(self.agg_shards as f64)),
+            ("pipeline", json::s(self.pipeline.name())),
             (
                 "quant",
                 json::obj(vec![
@@ -544,6 +587,10 @@ impl ExperimentConfig {
         cfg.drop_client = if dc < 0.0 { usize::MAX } else { dc as usize };
         // Negative values saturate to 0 = auto (float → usize casts clamp).
         cfg.agg_shards = getf("agg_shards", cfg.agg_shards as f64) as usize;
+        // Older configs without the field stay on the barrier reference.
+        if let Some(p) = v.get("pipeline").and_then(Value::as_str) {
+            cfg.pipeline = PipelineMode::parse(p)?;
+        }
         if let Some(q) = v.get("quant") {
             if let Some(s) = q.get("scheme").and_then(Value::as_str) {
                 cfg.quant.scheme = Scheme::parse(s)?;
@@ -660,6 +707,7 @@ mod tests {
         c.drop_client = 3;
         c.backend = "native".into();
         c.agg_shards = 4;
+        c.pipeline = PipelineMode::Streaming;
         let j = c.to_json().to_json();
         let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.model, "mlp");
@@ -669,10 +717,31 @@ mod tests {
         assert_eq!(c2.drop_client, 3);
         assert_eq!(c2.backend, "native");
         assert_eq!(c2.agg_shards, 4);
+        assert_eq!(c2.pipeline, PipelineMode::Streaming);
         assert!((c2.net.latency_sec - 0.01).abs() < 1e-12);
-        // Older configs without the field default to auto.
+        // Older configs without the fields default to auto / barrier.
         let legacy = ExperimentConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
         assert_eq!(legacy.agg_shards, 0);
+        assert_eq!(legacy.pipeline, PipelineMode::Barrier);
+    }
+
+    #[test]
+    fn pipeline_mode_parse_name_and_cli_flag() {
+        for m in [PipelineMode::Barrier, PipelineMode::Streaming] {
+            assert_eq!(PipelineMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(PipelineMode::parse("STREAMING").unwrap(), PipelineMode::Streaming);
+        assert!(PipelineMode::parse("overlapped").is_err());
+        assert_eq!(PipelineMode::default(), PipelineMode::Barrier);
+        let mut c = ExperimentConfig::default();
+        let args = crate::cli::Args::parse(
+            ["x", "--pipeline", "streaming"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.pipeline, PipelineMode::Streaming);
+        // The mode is a pure performance knob: the run id must not change.
+        assert_eq!(c.id(), ExperimentConfig::default().id());
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Server-side aggregation: the stage-4 hot path of [`Coordinator::step`]
-//! (decode → dequantize → weighted accumulate), parallel and single-pass.
+//! Server-side aggregation: the weighted-apply hot path of the round
+//! pipeline (decode → dequantize → weighted accumulate), parallel and
+//! single-pass.
 //!
 //! The aggregate buffer is **sharded by layer-group ranges**: every model's
 //! groups tile the flat parameter vector ([`ModelSpec::validate`] enforces
@@ -7,26 +8,41 @@
 //! fan-out needs no locks, no atomics and no unsafe — just
 //! [`std::thread::scope`], mirroring the client-side codec fan-out.
 //!
+//! Two kinds of contribution flow through the same machinery
+//! ([`ContributionData`]):
+//!
+//! * **Frames** — wire frames decoded at apply time through the fused
+//!   kernel ([`wire::decode_dequantize_accumulate_into`]), the barrier
+//!   pipeline's path (and the streaming pipeline's path for late/stale
+//!   frames);
+//! * **Dense** — a full-dimension, already-decoded contribution buffer
+//!   (`d_i`, decoded at weight 1.0 while other clients were still
+//!   encoding), the streaming pipeline's path for fresh frames. The apply
+//!   is then `agg[e] += w * d_i[e]` per owned group slice.
+//!
 //! **Determinism argument.** Floating-point addition is not associative, so
 //! "parallel" usually means "different bits". Here it does not:
 //!
 //! 1. every aggregate element belongs to exactly one layer group, and every
 //!    group is owned by exactly one shard — no element is written by two
 //!    threads;
-//! 2. within its groups, a shard walks the applied uplinks in the **fixed
-//!    apply order** (origin round, then client id — the order
+//! 2. within its groups, a shard walks the applied contributions in the
+//!    **fixed apply order** (origin round, then client id — the order
 //!    `ScenarioEngine::schedule` already sorts by), so each element receives
 //!    its `+= w_i * d_i` contributions in exactly the serial sequence;
 //! 3. the fused kernel ([`wire::decode_dequantize_accumulate_into`])
 //!    performs per element exactly the f32 operations of the old two-pass
-//!    path (dequantize, one `w * d` product, one add).
+//!    path (dequantize, one `w * d` product, one add) — and a Dense
+//!    contribution holds exactly the dequantized `d` values (decoding at
+//!    weight 1.0 is exact: `1.0 * d == d`), so its `+= w * d` apply issues
+//!    the same product and add.
 //!
-//! Hence [`aggregate_sharded`] is bit-identical to [`aggregate_serial`] for
-//! EVERY shard count — property-tested across schemes × bits × shard counts
-//! in `rust/tests/quant_props.rs` — and the shard count is a pure
-//! performance knob (config `agg_shards`, 0 = one per available core).
+//! Hence [`accumulate_sharded`] is bit-identical to [`accumulate_serial`]
+//! for EVERY shard count — property-tested across schemes × bits × shard
+//! counts in `rust/tests/quant_props.rs`, and across barrier vs streaming
+//! pipelines in `rust/tests/pipeline_props.rs` — and the shard count is a
+//! pure performance knob (config `agg_shards`, 0 = one per available core).
 //!
-//! [`Coordinator::step`]: super::Coordinator::step
 //! [`ModelSpec::validate`]: crate::runtime::ModelSpec::validate
 
 use std::cmp::Reverse;
@@ -43,6 +59,25 @@ pub struct WeightedUplink<'a> {
     /// `(group index, frame bytes)` pairs for this client's round.
     pub frames: &'a [(usize, Vec<u8>)],
     /// Normalized weight applied to every dequantized element.
+    pub w: f32,
+}
+
+/// Where one applied contribution's per-element values come from.
+pub enum ContributionData<'a> {
+    /// Wire frames, decoded through the fused kernel at apply time.
+    Frames(&'a [(usize, Vec<u8>)]),
+    /// A dense, already-decoded contribution spanning the FULL parameter
+    /// vector (the streaming pipeline's per-client buffer); the accumulate
+    /// reads the owned group slices out of it.
+    Dense(&'a [f32]),
+}
+
+/// One applied contribution in the fixed apply order, with its normalized
+/// aggregation weight.
+pub struct WeightedContribution<'a> {
+    /// The contribution's element source.
+    pub data: ContributionData<'a>,
+    /// Normalized weight applied to every element.
     pub w: f32,
 }
 
@@ -69,63 +104,110 @@ pub fn plan_shards(groups: &[GroupRange], shards: usize) -> Vec<Vec<usize>> {
     plan
 }
 
-/// Zero `agg` and accumulate every uplink's frames into it on the calling
-/// thread — one fused decode-accumulate walk per (uplink, group) frame, no
-/// dense scratch pass. This is the single-shard reference the sharded path
-/// must reproduce bit-for-bit, and the pre-sharding serial server loop
-/// (uplinks outer, groups inner) reordered to groups outer — per element
-/// the contribution sequence is identical, since each element sees only its
-/// own group's frames, in uplink order either way.
-pub fn aggregate_serial(
-    groups: &[GroupRange],
-    uplinks: &[WeightedUplink<'_>],
-    agg: &mut [f32],
+/// Accumulate one contribution's values for group `gi` into the group's
+/// aggregate slice: the fused decode-accumulate walk for frames, a
+/// `+= w * d` pass over the group slice for dense contributions. Both issue
+/// per element exactly one `w * d` product and one add, in element order —
+/// the bit-identity contract the pipelines rely on.
+fn accumulate_group(
+    item: &WeightedContribution<'_>,
+    gi: usize,
+    g: &GroupRange,
+    acc: &mut [f32],
 ) -> Result<()> {
-    agg.fill(0.0);
-    for u in uplinks {
-        for (gi, frame) in u.frames {
-            let g = groups
-                .get(*gi)
-                .ok_or_else(|| anyhow!("frame references unknown group {gi}"))?;
-            if g.end > agg.len() || g.start > g.end {
-                bail!("group {gi} range {}..{} outside aggregate buffer", g.start, g.end);
+    match &item.data {
+        ContributionData::Frames(frames) => {
+            for (fgi, frame) in *frames {
+                if *fgi == gi {
+                    wire::decode_dequantize_accumulate_into(frame, item.w, acc)?;
+                }
             }
-            wire::decode_dequantize_accumulate_into(frame, u.w, &mut agg[g.start..g.end])?;
+        }
+        ContributionData::Dense(d) => {
+            for (a, &v) in acc.iter_mut().zip(&d[g.start..g.end]) {
+                *a += item.w * v;
+            }
         }
     }
     Ok(())
 }
 
-/// Sharded aggregation: split `agg` into per-group slices, assign groups to
+/// Zero `agg` and accumulate every contribution into it on the calling
+/// thread — groups outer, contributions inner in the fixed apply order.
+/// This is the single-shard reference the sharded path must reproduce
+/// bit-for-bit; per element the contribution sequence equals the historical
+/// uplinks-outer loop, since each element sees only its own group's
+/// contributions, in apply order either way.
+pub fn accumulate_serial(
+    groups: &[GroupRange],
+    items: &[WeightedContribution<'_>],
+    agg: &mut [f32],
+) -> Result<()> {
+    check_items(groups, items, agg.len())?;
+    agg.fill(0.0);
+    for (gi, g) in groups.iter().enumerate() {
+        if g.end > agg.len() || g.start > g.end {
+            bail!("group {gi} range {}..{} outside aggregate buffer", g.start, g.end);
+        }
+        for item in items {
+            accumulate_group(item, gi, g, &mut agg[g.start..g.end])?;
+        }
+    }
+    Ok(())
+}
+
+/// Reject malformed input up front so serial and sharded paths fail alike:
+/// a frame tagged with a group no shard owns would otherwise be silently
+/// skipped (no `*fgi == gi` match ever fires), and a dense contribution
+/// must span the whole aggregate buffer.
+fn check_items(
+    groups: &[GroupRange],
+    items: &[WeightedContribution<'_>],
+    total: usize,
+) -> Result<()> {
+    for item in items {
+        match &item.data {
+            ContributionData::Frames(frames) => {
+                for (gi, _) in *frames {
+                    if *gi >= groups.len() {
+                        bail!("frame references unknown group {gi}");
+                    }
+                }
+            }
+            ContributionData::Dense(d) => {
+                if d.len() != total {
+                    bail!(
+                        "dense contribution length {} != aggregate buffer {total}",
+                        d.len()
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Sharded accumulate: split `agg` into per-group slices, assign groups to
 /// at most `shards` workers ([`plan_shards`]) and fan the per-shard work
-/// over [`std::thread::scope`]. Bit-identical to [`aggregate_serial`] for
+/// over [`std::thread::scope`]. Bit-identical to [`accumulate_serial`] for
 /// every shard count (see the module docs for the argument); `shards <= 1`
 /// short-circuits to the serial path with no thread spawn.
 ///
 /// `groups` must be ascending and non-overlapping (the coordinator's always
-/// tile the parameter vector); a frame for a group the uplink order never
+/// tile the parameter vector); a frame for a group the apply order never
 /// references is simply never decoded, and a frame whose length disagrees
 /// with its group range fails the round exactly like the serial path.
-pub fn aggregate_sharded(
+pub fn accumulate_sharded(
     groups: &[GroupRange],
-    uplinks: &[WeightedUplink<'_>],
+    items: &[WeightedContribution<'_>],
     agg: &mut [f32],
     shards: usize,
 ) -> Result<()> {
     let shards = shards.clamp(1, groups.len().max(1));
     if shards <= 1 {
-        return aggregate_serial(groups, uplinks, agg);
+        return accumulate_serial(groups, items, agg);
     }
-    // A frame tagged with a group no shard owns would otherwise be silently
-    // skipped (no `*fgi == gi` match ever fires) — reject it up front so
-    // malformed input fails the round exactly like the serial path.
-    for u in uplinks {
-        for (gi, _) in u.frames {
-            if *gi >= groups.len() {
-                bail!("frame references unknown group {gi}");
-            }
-        }
-    }
+    check_items(groups, items, agg.len())?;
     // Zero everything up front (gaps between groups — none in practice —
     // stay zero, exactly like the serial path), then carve the buffer into
     // disjoint per-group &mut slices.
@@ -172,12 +254,9 @@ pub fn aggregate_sharded(
                 for (gi, acc) in work {
                     // Fixed apply order per group: the serial contribution
                     // sequence for every element this shard owns.
-                    for u in uplinks {
-                        for (fgi, frame) in u.frames {
-                            if *fgi == gi {
-                                wire::decode_dequantize_accumulate_into(frame, u.w, &mut acc[..])?;
-                            }
-                        }
+                    let g = &groups[gi];
+                    for item in items {
+                        accumulate_group(item, gi, g, &mut acc[..])?;
                     }
                 }
                 Ok(())
@@ -189,6 +268,33 @@ pub fn aggregate_sharded(
         r?;
     }
     Ok(())
+}
+
+/// [`accumulate_serial`] over frame-only uplinks (the historical API; the
+/// perf_server bench and the wire-level property tests pin it).
+pub fn aggregate_serial(
+    groups: &[GroupRange],
+    uplinks: &[WeightedUplink<'_>],
+    agg: &mut [f32],
+) -> Result<()> {
+    accumulate_serial(groups, &frame_items(uplinks), agg)
+}
+
+/// [`accumulate_sharded`] over frame-only uplinks (the historical API).
+pub fn aggregate_sharded(
+    groups: &[GroupRange],
+    uplinks: &[WeightedUplink<'_>],
+    agg: &mut [f32],
+    shards: usize,
+) -> Result<()> {
+    accumulate_sharded(groups, &frame_items(uplinks), agg, shards)
+}
+
+fn frame_items<'a>(uplinks: &'a [WeightedUplink<'a>]) -> Vec<WeightedContribution<'a>> {
+    uplinks
+        .iter()
+        .map(|u| WeightedContribution { data: ContributionData::Frames(u.frames), w: u.w })
+        .collect()
 }
 
 #[cfg(test)]
@@ -257,6 +363,68 @@ mod tests {
         let mut got = vec![7.0f32; 65]; // dirty: aggregate must zero first
         aggregate_serial(&groups, &ups, &mut got).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dense_contributions_match_frames_bitwise() {
+        use crate::quant::wire::Payload;
+        let groups = groups_of(&[33, 47]);
+        let mut rng = crate::util::Rng::new(11);
+        let d_total = 80usize;
+        // Two clients' dense gradients + their raw wire frames.
+        let dense: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..d_total).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let frames: Vec<Vec<(usize, Vec<u8>)>> = dense
+            .iter()
+            .map(|d| {
+                groups
+                    .iter()
+                    .enumerate()
+                    .map(|(gi, g)| (gi, Payload::Raw(d[g.start..g.end].to_vec()).encode(0)))
+                    .collect()
+            })
+            .collect();
+        let ws = [0.75f32, 0.25f32];
+        let frame_items: Vec<WeightedContribution<'_>> = frames
+            .iter()
+            .zip(ws)
+            .map(|(f, w)| WeightedContribution { data: ContributionData::Frames(f), w })
+            .collect();
+        let dense_items: Vec<WeightedContribution<'_>> = dense
+            .iter()
+            .zip(ws)
+            .map(|(d, w)| WeightedContribution { data: ContributionData::Dense(d), w })
+            .collect();
+        // Mixed: first client by frames, second dense — the streaming
+        // pipeline's stale + fresh mix.
+        let mixed_items = vec![
+            WeightedContribution { data: ContributionData::Frames(&frames[0]), w: ws[0] },
+            WeightedContribution { data: ContributionData::Dense(&dense[1]), w: ws[1] },
+        ];
+        let mut want = vec![0.0f32; d_total];
+        accumulate_serial(&groups, &frame_items, &mut want).unwrap();
+        for items in [&dense_items, &mixed_items] {
+            let mut got = vec![3.0f32; d_total]; // dirty on purpose
+            accumulate_serial(&groups, items, &mut got).unwrap();
+            assert_eq!(got, want, "serial dense/mixed must match frames bitwise");
+            for shards in [2usize, 7] {
+                let mut got = vec![-1.0f32; d_total];
+                accumulate_sharded(&groups, items, &mut got, shards).unwrap();
+                assert_eq!(got, want, "{shards}-shard dense/mixed must match bitwise");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_length_mismatch_is_rejected_on_both_paths() {
+        let groups = groups_of(&[30, 30]);
+        let short = vec![0.0f32; 10];
+        let items =
+            vec![WeightedContribution { data: ContributionData::Dense(&short), w: 1.0 }];
+        let mut agg = vec![0.0f32; 60];
+        assert!(accumulate_serial(&groups, &items, &mut agg).is_err());
+        assert!(accumulate_sharded(&groups, &items, &mut agg, 2).is_err());
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! One logical client: its data shard, per-layer-group codec state and the
+//! recycled frame arena — split out of `coordinator/mod.rs` so the round
+//! pipeline (`coordinator/pipeline.rs`) and the coordinator construction
+//! code share one definition.
+//!
+//! Everything here runs on the codec worker threads spawned by the round
+//! pipeline: [`Client::compress`] is pure rust (no backend), writes into
+//! arena-recycled buffers, and owns all per-client mutable state, so the
+//! per-client fan-out needs no locks.
+
+use crate::config::ExperimentConfig;
+use crate::data::{gather_batch, BatchSampler, Dataset, MarkovCorpus};
+use crate::quant::{make_compressor, Compressor, ErrorFeedback, FrameArena};
+use crate::runtime::GroupRange;
+use crate::util::Rng;
+
+use super::network::Message;
+
+/// Per-(client, group) compression state: plain codec or EF-wrapped.
+pub(crate) enum GroupCodec {
+    Plain(Box<dyn Compressor>),
+    Ef(ErrorFeedback),
+}
+
+impl GroupCodec {
+    fn refit(&mut self, grads: &[f32]) {
+        match self {
+            GroupCodec::Plain(c) => c.refit(grads),
+            GroupCodec::Ef(c) => c.refit(grads),
+        }
+    }
+
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+        match self {
+            GroupCodec::Plain(c) => c.compress_into(grads, rng, out),
+            GroupCodec::Ef(c) => c.compress_with_feedback_into(grads, rng, out),
+        }
+    }
+
+    /// The network lost this frame for good: EF codecs fold it back into the
+    /// residual (plain codecs have no state to repair).
+    fn restore_lost(&mut self, frame: &[u8]) {
+        if let GroupCodec::Ef(c) = self {
+            c.restore_lost(frame);
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            GroupCodec::Plain(c) => c.describe(),
+            GroupCodec::Ef(c) => c.describe(),
+        }
+    }
+}
+
+/// The task a client trains on.
+pub enum TaskData {
+    /// Image classification over a contiguous shard of the dataset.
+    Vision {
+        /// This client's shard.
+        shard: Dataset,
+    },
+    /// Language modelling over a shared Markov corpus.
+    Lm {
+        /// Token source.
+        corpus: MarkovCorpus,
+        /// Context length per sample.
+        seq_len: usize,
+    },
+}
+
+/// One logical client.
+pub struct Client {
+    /// Client index in `0..N`.
+    pub id: usize,
+    pub(crate) data: TaskData,
+    pub(crate) sampler: BatchSampler,
+    pub(crate) codecs: Vec<GroupCodec>,
+    /// Recycled frame buffers: survives across rounds, one arena per client
+    /// so the codec worker threads never share a pool.
+    pub(crate) arena: FrameArena,
+    /// Fraction of the global data this client holds (aggregation weight).
+    pub weight: f64,
+}
+
+impl Client {
+    /// Produce this round's training batch as flat input buffers.
+    pub(crate) fn next_batch(
+        &mut self,
+        train_batch: usize,
+        seed: u64,
+        round: u64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        match &self.data {
+            TaskData::Vision { shard } => {
+                let idxs = self.sampler.next_batch(train_batch);
+                gather_batch(shard, &idxs)
+            }
+            TaskData::Lm { corpus, seq_len } => {
+                let mut rng = Rng::for_stream(seed, 0x70C5, self.id as u64, round);
+                let mut toks = Vec::with_capacity(train_batch * (seq_len + 1));
+                for _ in 0..train_batch {
+                    toks.extend(corpus.sample(seq_len + 1, &mut rng));
+                }
+                (toks, Vec::new())
+            }
+        }
+    }
+
+    /// Compress a gradient per layer group into a message (runs on a worker
+    /// thread; pure rust). Frame buffers come from this client's arena, so
+    /// in steady state the encode path performs zero heap allocation.
+    pub(crate) fn compress(
+        &mut self,
+        grads: &[f32],
+        groups: &[GroupRange],
+        round: usize,
+        seed: u64,
+        refit_now: bool,
+        loss: f32,
+    ) -> Message {
+        let mut frames = Vec::with_capacity(groups.len());
+        for (gi, g) in groups.iter().enumerate() {
+            let slice = &grads[g.start..g.end];
+            if refit_now {
+                self.codecs[gi].refit(slice);
+            }
+            let mut rng = Rng::for_stream(seed, 0x9A7E, (self.id * 1031 + gi) as u64, round as u64);
+            let mut buf = self.arena.take();
+            self.codecs[gi].compress_into(slice, &mut rng, &mut buf);
+            frames.push((gi, buf));
+        }
+        Message { client: self.id, round, frames, loss }
+    }
+
+    /// Recycle a consumed message's frame buffers back into the arena.
+    pub(crate) fn recycle(&mut self, msg: Message) {
+        for (_, frame) in msg.frames {
+            self.arena.put(frame);
+        }
+    }
+
+    /// Re-fold an undeliverable message into this client's error-feedback
+    /// residuals so its gradient mass survives to the next round.
+    pub(crate) fn restore_lost(&mut self, msg: &Message) {
+        for (gi, frame) in &msg.frames {
+            self.codecs[*gi].restore_lost(frame);
+        }
+    }
+
+    /// Fresh frame-buffer allocations in this client's arena since
+    /// construction (see [`FrameArena::fresh_allocs`]).
+    pub fn frame_allocs(&self) -> u64 {
+        self.arena.fresh_allocs()
+    }
+
+    /// One-line description of each layer group's codec state.
+    pub fn describe_codecs(&self) -> Vec<String> {
+        self.codecs.iter().map(|c| c.describe()).collect()
+    }
+}
+
+/// One codec per layer group, EF-wrapped when the experiment asks for it.
+pub(crate) fn make_codecs(cfg: &ExperimentConfig, groups: &[GroupRange]) -> Vec<GroupCodec> {
+    groups
+        .iter()
+        .map(|_| {
+            let inner = make_compressor(&cfg.quant);
+            if cfg.quant.error_feedback {
+                GroupCodec::Ef(ErrorFeedback::new(inner))
+            } else {
+                GroupCodec::Plain(inner)
+            }
+        })
+        .collect()
+}

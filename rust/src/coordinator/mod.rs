@@ -11,6 +11,14 @@
 //!   server: ḡ = Σ w_i dequantize(frame_i);  θ_{t+1} = θ_t − η·step(ḡ)
 //! ```
 //!
+//! The round itself is executed by the [`pipeline`] engine as six typed
+//! stages — `Compute → Encode → Uplink → Schedule → Accumulate → Apply` —
+//! in one of two modes ([`PipelineMode`], config field `pipeline`):
+//! the strict-barrier reference loop, or the streaming pipeline that
+//! overlaps client encode with server decode via per-client frame hand-off
+//! (bit-identical to the barrier path; see the [`pipeline`] docs for the
+//! argument).
+//!
 //! Compute (model fwd/bwd) goes through the pluggable [`Backend`] — pure
 //! Rust by default, PJRT behind the `pjrt` feature. Backends may be
 //! single-threaded (PJRT's client is `Rc`-based and not `Send`), so gradient
@@ -19,13 +27,13 @@
 //! owns an independent quantizer state whose tail model is re-fitted every
 //! `estimate_every` rounds — exactly the paper's per-layer γ estimation (§V).
 //!
-//! The server side mirrors the client fan-out: stage 4 (decode → dequantize
-//! → weighted accumulate) runs through [`aggregate`], which shards the
-//! aggregate buffer by layer-group ranges across `std::thread::scope`
-//! workers and folds the `w * d` accumulate directly into the bitstream
-//! walk (fused decode-accumulate kernels, no dense scratch pass). The
-//! sharded result is bit-identical to the serial path at every shard count
-//! — see the [`aggregate`] module docs for the determinism argument.
+//! The server side mirrors the client fan-out: the weighted accumulate runs
+//! through [`aggregate`], which shards the aggregate buffer by layer-group
+//! ranges across `std::thread::scope` workers and folds the `w * d`
+//! accumulate directly into the bitstream walk (fused decode-accumulate
+//! kernels, no dense scratch pass). The sharded result is bit-identical to
+//! the serial path at every shard count — see the [`aggregate`] module docs
+//! for the determinism argument.
 //!
 //! Degraded-mode rounds (stragglers, lossy uplinks, churn, bounded
 //! staleness, non-IID shards) are injected by the [`scenario`] engine from
@@ -33,190 +41,76 @@
 //! synchronous loop above bit-for-bit.
 
 pub mod aggregate;
+pub mod client;
 pub mod network;
+pub mod pipeline;
 pub mod scenario;
 
+pub use client::{Client, TaskData};
 pub use network::{LinkCondition, Message, SimNet, UplinkReport};
+pub use pipeline::PipelineMode;
 pub use scenario::ScenarioEngine;
 
 use anyhow::{anyhow, Result};
 
+use client::make_codecs;
+
 use crate::config::ExperimentConfig;
 use crate::data::{gather_batch, BatchSampler, Dataset, MarkovCorpus};
-use crate::metrics::{RoundRecord, RunLog, Timer};
+use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::MomentumSgd;
-use crate::quant::{make_compressor, Compressor, ErrorFeedback, FrameArena};
+use crate::quant::FrameArena;
 use crate::runtime::{Backend, GroupRange, ModelSpec};
 use crate::util::Rng;
-
-/// Per-(client, group) compression state: plain codec or EF-wrapped.
-enum GroupCodec {
-    Plain(Box<dyn Compressor>),
-    Ef(ErrorFeedback),
-}
-
-impl GroupCodec {
-    fn refit(&mut self, grads: &[f32]) {
-        match self {
-            GroupCodec::Plain(c) => c.refit(grads),
-            GroupCodec::Ef(c) => c.refit(grads),
-        }
-    }
-
-    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
-        match self {
-            GroupCodec::Plain(c) => c.compress_into(grads, rng, out),
-            GroupCodec::Ef(c) => c.compress_with_feedback_into(grads, rng, out),
-        }
-    }
-
-    /// The network lost this frame for good: EF codecs fold it back into the
-    /// residual (plain codecs have no state to repair).
-    fn restore_lost(&mut self, frame: &[u8]) {
-        if let GroupCodec::Ef(c) = self {
-            c.restore_lost(frame);
-        }
-    }
-
-    fn describe(&self) -> String {
-        match self {
-            GroupCodec::Plain(c) => c.describe(),
-            GroupCodec::Ef(c) => c.describe(),
-        }
-    }
-}
-
-/// The task a client trains on.
-pub enum TaskData {
-    /// Image classification over a contiguous shard of the dataset.
-    Vision {
-        /// This client's shard.
-        shard: Dataset,
-    },
-    /// Language modelling over a shared Markov corpus.
-    Lm {
-        /// Token source.
-        corpus: MarkovCorpus,
-        /// Context length per sample.
-        seq_len: usize,
-    },
-}
-
-/// One logical client.
-pub struct Client {
-    /// Client index in `0..N`.
-    pub id: usize,
-    data: TaskData,
-    sampler: BatchSampler,
-    codecs: Vec<GroupCodec>,
-    /// Recycled frame buffers: survives across rounds, one arena per client
-    /// so the codec worker threads never share a pool.
-    arena: FrameArena,
-    /// Fraction of the global data this client holds (aggregation weight).
-    pub weight: f64,
-}
-
-impl Client {
-    /// Produce this round's training batch as flat input buffers.
-    fn next_batch(&mut self, train_batch: usize, seed: u64, round: u64) -> (Vec<f32>, Vec<f32>) {
-        match &self.data {
-            TaskData::Vision { shard } => {
-                let idxs = self.sampler.next_batch(train_batch);
-                gather_batch(shard, &idxs)
-            }
-            TaskData::Lm { corpus, seq_len } => {
-                let mut rng = Rng::for_stream(seed, 0x70C5, self.id as u64, round);
-                let mut toks = Vec::with_capacity(train_batch * (seq_len + 1));
-                for _ in 0..train_batch {
-                    toks.extend(corpus.sample(seq_len + 1, &mut rng));
-                }
-                (toks, Vec::new())
-            }
-        }
-    }
-
-    /// Compress a gradient per layer group into a message (runs on a worker
-    /// thread; pure rust). Frame buffers come from this client's arena, so
-    /// in steady state the encode path performs zero heap allocation.
-    fn compress(
-        &mut self,
-        grads: &[f32],
-        groups: &[GroupRange],
-        round: usize,
-        seed: u64,
-        refit_now: bool,
-        loss: f32,
-    ) -> Message {
-        let mut frames = Vec::with_capacity(groups.len());
-        for (gi, g) in groups.iter().enumerate() {
-            let slice = &grads[g.start..g.end];
-            if refit_now {
-                self.codecs[gi].refit(slice);
-            }
-            let mut rng = Rng::for_stream(seed, 0x9A7E, (self.id * 1031 + gi) as u64, round as u64);
-            let mut buf = self.arena.take();
-            self.codecs[gi].compress_into(slice, &mut rng, &mut buf);
-            frames.push((gi, buf));
-        }
-        Message { client: self.id, round, frames, loss }
-    }
-
-    /// Recycle a consumed message's frame buffers back into the arena.
-    fn recycle(&mut self, msg: Message) {
-        for (_, frame) in msg.frames {
-            self.arena.put(frame);
-        }
-    }
-
-    /// Re-fold an undeliverable message into this client's error-feedback
-    /// residuals so its gradient mass survives to the next round.
-    fn restore_lost(&mut self, msg: &Message) {
-        for (gi, frame) in &msg.frames {
-            self.codecs[*gi].restore_lost(frame);
-        }
-    }
-
-    /// One-line description of each layer group's codec state.
-    pub fn describe_codecs(&self) -> Vec<String> {
-        self.codecs.iter().map(|c| c.describe()).collect()
-    }
-}
 
 /// Server + clients + network for one experiment.
 pub struct Coordinator<'b> {
     /// The experiment description this coordinator runs.
     pub cfg: ExperimentConfig,
-    backend: &'b dyn Backend,
-    spec: ModelSpec,
+    pub(crate) backend: &'b dyn Backend,
+    pub(crate) spec: ModelSpec,
     /// The logical clients.
     pub clients: Vec<Client>,
     /// The global flat parameter vector (server copy).
     pub params: Vec<f32>,
-    opt: MomentumSgd,
+    pub(crate) opt: MomentumSgd,
     /// Simulated uplink network (accounts real wire bytes).
     pub net: SimNet,
     /// Scenario engine: per-round churn/straggler/loss/staleness decisions.
     pub scenario: ScenarioEngine,
-    groups: Vec<GroupRange>,
+    pub(crate) groups: Vec<GroupRange>,
     test: Option<Dataset>,
     lm_eval_corpus: Option<MarkovCorpus>,
     /// Number of completed communication rounds.
     pub round: usize,
     /// Scratch: aggregated gradient buffer.
-    agg: Vec<f32>,
+    pub(crate) agg: Vec<f32>,
     /// Server aggregation fan-out width (resolved from config at build:
     /// explicit `agg_shards`, or one per available core, capped by the
     /// number of layer groups). A pure performance knob — the sharded
     /// aggregation is bit-identical at every width.
-    agg_shards: usize,
+    pub(crate) agg_shards: usize,
     /// Scratch: per-round staleness histogram, built in place each round so
     /// the working buffer never regrows in steady state. The round record
     /// still receives one sized-to-fit copy (it owns its data for the run
     /// log) — the invariant is about the scratch, not the record.
-    staleness_scratch: Vec<u32>,
+    pub(crate) staleness_scratch: Vec<u32>,
     /// Debug counter: times `staleness_scratch` had to grow. Must go flat
     /// after warm-up (asserted next to the frame-alloc invariant).
-    hist_reallocs: u64,
+    pub(crate) hist_reallocs: u64,
+    /// Scratch: per-client dense contribution buffers for the streaming
+    /// pipeline (decoded during the encode overlap, read by the weighted
+    /// apply). Empty until the first streaming round, then one full-dim
+    /// buffer per client, reused forever.
+    pub(crate) contrib: Vec<Vec<f32>>,
+    /// Debug counter: times a contribution buffer had to grow its capacity.
+    /// Flat after the first streaming round (asserted with the invariants
+    /// above).
+    pub(crate) contrib_reallocs: u64,
+    /// Last round's mean training loss — the defensive carry for a round
+    /// that computes no losses at all, so the loss column can never turn
+    /// `0/0` NaN (unreachable today: churn always revives one client).
+    pub(crate) last_train_loss: f64,
 }
 
 impl<'b> Coordinator<'b> {
@@ -309,6 +203,9 @@ impl<'b> Coordinator<'b> {
             agg_shards,
             staleness_scratch: Vec::new(),
             hist_reallocs: 0,
+            contrib: Vec::new(),
+            contrib_reallocs: 0,
+            last_train_loss: 0.0,
         })
     }
 
@@ -335,7 +232,7 @@ impl<'b> Coordinator<'b> {
     /// stop moving (asserted by the integration suite and surfaced by the
     /// `perf_hotpath` bench).
     pub fn frame_allocs(&self) -> u64 {
-        self.clients.iter().map(|c| c.arena.fresh_allocs()).sum()
+        self.clients.iter().map(|c| c.frame_allocs()).sum()
     }
 
     /// Times the reused staleness-histogram scratch had to grow its
@@ -348,167 +245,28 @@ impl<'b> Coordinator<'b> {
         self.hist_reallocs
     }
 
+    /// Times a streaming contribution buffer had to grow its capacity:
+    /// sized on the first streaming round, flat forever after (the
+    /// streaming pipeline's piece of the steady-state zero-allocation
+    /// invariant). Always 0 in barrier mode.
+    pub fn contrib_reallocs(&self) -> u64 {
+        self.contrib_reallocs
+    }
+
     /// Resolved server-aggregation shard count (config `agg_shards`, or one
     /// per available core, capped by the layer-group count).
     pub fn agg_shards(&self) -> usize {
         self.agg_shards
     }
 
-    /// Execute one communication round; returns the round record.
+    /// Execute one communication round through the configured pipeline;
+    /// returns the round record. The two modes are bit-identical — see the
+    /// [`pipeline`] module docs.
     pub fn step(&mut self) -> Result<RoundRecord> {
-        let timer = Timer::start();
-        let round = self.round;
-        let train_batch = self.spec.train_batch;
-
-        // 0. Scenario: churn decides who participates this round.
-        let active = self.scenario.begin_round(round as u64);
-        let mut active_set = vec![false; self.clients.len()];
-        for &i in &active {
-            active_set[i] = true;
+        match self.cfg.pipeline {
+            PipelineMode::Barrier => pipeline::step_barrier(self),
+            PipelineMode::Streaming => pipeline::step_streaming(self),
         }
-
-        // 1. Local gradients for participating clients (backend on this
-        //    thread; PJRT/XLA parallelizes inside, the native path is cheap
-        //    scalar math).
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(active.len());
-        let mut losses: Vec<f32> = Vec::with_capacity(active.len());
-        for &ci in &active {
-            let c = &mut self.clients[ci];
-            let (x, y) = c.next_batch(train_batch, self.cfg.seed, round as u64);
-            let out = self.backend.grad(&self.cfg.model, &self.params, &x, &y)?;
-            losses.push(out.loss);
-            grads.push(out.grads);
-        }
-
-        // 2. Per-client compression, fanned out across threads.
-        let refit_now = round % self.cfg.quant.estimate_every == 0;
-        let seed = self.cfg.seed;
-        let groups = &self.groups;
-        let msgs: Vec<Message> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(active.len());
-            let mut k = 0usize;
-            for (i, c) in self.clients.iter_mut().enumerate() {
-                if !active_set[i] {
-                    continue;
-                }
-                let g = &grads[k];
-                let loss = losses[k];
-                k += 1;
-                handles.push(scope.spawn(move || {
-                    c.compress(g, groups, round, seed, refit_now, loss)
-                }));
-            }
-            handles.into_iter().map(|h| h.join().expect("codec thread")).collect()
-        });
-
-        // 3. Uplink through the simulated network. The legacy `drop_client`
-        //    fault kills one client's message outright; the scenario engine
-        //    injects packet loss (retransmits, possibly total loss) and
-        //    straggler latency multipliers per surviving message.
-        let mut delivered: Vec<Message> = Vec::with_capacity(msgs.len());
-        let mut conds: Vec<LinkCondition> = Vec::with_capacity(msgs.len());
-        let mut lost_bytes = 0u64;
-        for m in msgs {
-            if m.client == self.cfg.drop_client {
-                let ci = m.client;
-                self.clients[ci].recycle(m);
-                continue;
-            }
-            match self.scenario.link(m.client, round as u64) {
-                Some(cond) => {
-                    delivered.push(m);
-                    conds.push(cond);
-                }
-                // Fully lost: every attempt still burned wire bytes, and an
-                // EF client keeps the undelivered mass in its residual.
-                None => {
-                    lost_bytes += self.net.account_lost(&m, self.scenario.lost_attempts());
-                    let ci = m.client;
-                    self.clients[ci].restore_lost(&m);
-                    self.clients[ci].recycle(m);
-                }
-            }
-        }
-        let dropped_clients = self.clients.len() - delivered.len();
-        let report = self.net.round_uplink_conditioned(&delivered, &conds);
-
-        // 3b. Bounded-staleness schedule: which frames apply now vs next
-        //     round (with decayed weight).
-        let arrivals: Vec<(Message, f64)> = delivered
-            .into_iter()
-            .zip(report.per_client.iter().map(|&(_, t)| t))
-            .collect();
-        // The server steps at the K-th arrival, so that — not the slowest
-        // client — is the round's communication time.
-        let (apply, net_secs) = self.scenario.schedule(arrivals);
-        // An empty apply set under packet loss is a transient wipeout: skip
-        // the update (θ unchanged) and keep training. Without loss in play
-        // it is structural (drop_client killed the whole federation) — fail.
-        if apply.is_empty() && self.cfg.scenario.loss_prob == 0.0 {
-            return Err(anyhow!("all clients dropped; nothing to aggregate"));
-        }
-        // Staleness histogram into the reused scratch (capacity survives
-        // rounds; the record below gets a sized-to-fit copy).
-        self.staleness_scratch.clear();
-        for &(_, s) in &apply {
-            let s = s as usize;
-            if self.staleness_scratch.len() <= s {
-                if s + 1 > self.staleness_scratch.capacity() {
-                    self.hist_reallocs += 1;
-                }
-                self.staleness_scratch.resize(s + 1, 0);
-            }
-            self.staleness_scratch[s] += 1;
-        }
-        let staleness_hist = self.staleness_scratch.clone();
-
-        // 4. Server: decode + weighted aggregate + optimizer step, sharded
-        //    by layer-group ranges over worker threads with the fused
-        //    decode-accumulate kernels (see [`aggregate`]) — bit-identical
-        //    to the serial scratch-buffer loop it replaced. Late frames
-        //    count with weight w_i * decay^staleness; for the synchronous
-        //    case every staleness is 0 and decay^0 = 1 exactly, so this
-        //    reduces bit-for-bit to the plain weighted mean.
-        if !apply.is_empty() {
-            let w_total: f64 = apply
-                .iter()
-                .map(|(m, s)| self.clients[m.client].weight * self.scenario.stale_weight(*s))
-                .sum();
-            let uplinks: Vec<aggregate::WeightedUplink<'_>> = apply
-                .iter()
-                .map(|(m, s)| aggregate::WeightedUplink {
-                    frames: &m.frames,
-                    w: ((self.clients[m.client].weight * self.scenario.stale_weight(*s))
-                        / w_total) as f32,
-                })
-                .collect();
-            aggregate::aggregate_sharded(&self.groups, &uplinks, &mut self.agg, self.agg_shards)?;
-            let agg = std::mem::take(&mut self.agg);
-            self.opt.step(&mut self.params, &agg);
-            self.agg = agg;
-        }
-        // Aggregation is done with these frames: hand the buffers back to
-        // their owners' arenas so next round's encode allocates nothing.
-        for (m, _) in apply {
-            let ci = m.client;
-            self.clients[ci].recycle(m);
-        }
-
-        let train_loss =
-            losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64;
-        self.round += 1;
-        Ok(RoundRecord {
-            round,
-            train_loss,
-            bytes_up: report.bytes,
-            test_loss: None,
-            test_accuracy: None,
-            secs: timer.secs(),
-            net_secs,
-            dropped_clients,
-            retransmitted_bytes: report.retransmitted_bytes + lost_bytes,
-            staleness_hist,
-        })
     }
 
     /// Evaluate the current global model on the held-out set.
@@ -578,18 +336,4 @@ impl<'b> Coordinator<'b> {
         }
         Ok(log)
     }
-}
-
-fn make_codecs(cfg: &ExperimentConfig, groups: &[GroupRange]) -> Vec<GroupCodec> {
-    groups
-        .iter()
-        .map(|_| {
-            let inner = make_compressor(&cfg.quant);
-            if cfg.quant.error_feedback {
-                GroupCodec::Ef(ErrorFeedback::new(inner))
-            } else {
-                GroupCodec::Plain(inner)
-            }
-        })
-        .collect()
 }

@@ -36,6 +36,14 @@ impl Message {
                 .map(|(_, f)| 4 + f.len() as u64)
                 .sum::<u64>()
     }
+
+    /// Wire bytes burned by this message when it never arrives: every one
+    /// of its `attempts` transmissions hit the wire and was wasted. The one
+    /// formula behind [`SimNet::account_lost`] and the round pipelines'
+    /// worker-side loss accounting.
+    pub fn lost_wire_bytes(&self, attempts: u32) -> u64 {
+        self.wire_bytes() * attempts as u64
+    }
 }
 
 /// Per-uplink transmission conditions injected by the scenario engine.
@@ -128,10 +136,18 @@ impl SimNet {
     /// the wire and were wasted. Returns the wasted bytes so the caller can
     /// fold them into the round's retransmission column.
     pub fn account_lost(&mut self, msg: &Message, attempts: u32) -> u64 {
-        let wasted = msg.wire_bytes() * attempts as u64;
+        let wasted = msg.lost_wire_bytes(attempts);
+        self.account_lost_bytes(wasted);
+        wasted
+    }
+
+    /// Account already-summed wasted bytes from lost frames (the streaming
+    /// pipeline computes `wire_bytes * attempts` on the encode workers and
+    /// hands the totals over; u64 addition is order-independent, so this is
+    /// byte-identical to per-message [`Self::account_lost`] calls).
+    pub fn account_lost_bytes(&mut self, wasted: u64) {
         self.total_bytes_up += wasted;
         self.total_retransmitted += wasted;
-        wasted
     }
 }
 

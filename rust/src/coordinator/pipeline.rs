@@ -1,0 +1,562 @@
+//! The round engine: Algorithm 1 as an explicit stage pipeline.
+//!
+//! One communication round is six typed stages:
+//!
+//! ```text
+//! Compute → Encode → Uplink → Schedule → Accumulate → Apply
+//! ```
+//!
+//! and the engine runs them in one of two modes ([`PipelineMode`], config
+//! field `pipeline` / CLI `--pipeline`):
+//!
+//! * **Barrier** — the historical strict-barrier loop: every stage waits for
+//!   the whole previous stage (all encoders join before the first frame is
+//!   decoded). Simple, and the reference semantics.
+//! * **Streaming** — per-client frame hand-off: the moment one client's
+//!   encode worker finishes, its [`Message`] flows through the
+//!   scenario-conditioned network checks and straight into a fused
+//!   decode on the driver thread ([`wire::decode_dequantize_accumulate_into`]
+//!   at weight 1.0, into that client's reused dense contribution buffer) —
+//!   while slower clients are still encoding. Encode and server decode
+//!   overlap within the round instead of serializing behind the slowest
+//!   encoder.
+//!
+//! **Why streaming is bit-identical to barrier.** Everything
+//! order-sensitive is deferred to fixed-order passes over buffered state:
+//!
+//! 1. per-client state (codec refit, EF residual repair, arena recycling)
+//!    mutates only on that client's own worker, in the same per-client
+//!    sequence as the barrier path;
+//! 2. network accounting sums are commutative integer adds, and the
+//!    delivered set is re-sorted to ascending client id before the
+//!    scheduler runs, so `schedule`'s inputs — and therefore the apply set,
+//!    the staleness bookkeeping and `net_secs` — match the barrier path
+//!    exactly;
+//! 3. the weighted accumulate runs AFTER the apply set and the normalized
+//!    weights are known, walking the fixed (origin round, client id) apply
+//!    order per layer group — the same order the barrier path uses. A
+//!    fresh frame's buffered contribution holds exactly its dense
+//!    reconstruction (decoding at weight 1.0 is exact), so its
+//!    `agg[e] += w * d[e]` apply issues per element the same single `w * d`
+//!    product and add as the fused barrier kernel (see [`aggregate`]).
+//!
+//! Hence the two modes produce bit-identical parameters and
+//! [`RunLog::replay_digest`](crate::metrics::RunLog::replay_digest)s at
+//! every worker/shard count — property-tested across schemes × bits ×
+//! scenario presets in `rust/tests/pipeline_props.rs`.
+//!
+//! The overlap is measurable: [`RoundRecord`] carries a per-stage
+//! wall-clock breakdown (`compute_secs`, `encode_secs`, `agg_secs` — in
+//! streaming mode `encode_secs` covers the overlapped encode+decode window
+//! and `agg_secs` the residual weighted apply), and `benches/perf_round.rs`
+//! gates end-to-end round throughput in CI.
+
+use anyhow::{anyhow, bail, Result};
+
+pub use crate::config::PipelineMode;
+use crate::metrics::{RoundRecord, Timer};
+use crate::quant::wire;
+use crate::runtime::GroupRange;
+
+use super::aggregate::{self, ContributionData, WeightedContribution};
+use super::network::{LinkCondition, Message};
+use super::Coordinator;
+
+/// Outcome of one message's uplink decisions.
+enum Produced {
+    /// The message survived the uplink.
+    Arrived(Message, LinkCondition),
+    /// Lost after every retransmit: the EF residual is already repaired and
+    /// the frames recycled; `wasted` wire bytes burned.
+    Lost { wasted: u64 },
+    /// Fault-injected drop (`drop_client`): frames recycled.
+    Skipped,
+}
+
+/// The per-message uplink decisions — `drop_client` fault, packet loss with
+/// EF residual repair, frame recycling — shared verbatim by the barrier
+/// driver loop and the streaming encode workers, so the two modes cannot
+/// drift apart. Touches only this client's own state.
+fn route_message(
+    c: &mut super::Client,
+    msg: Message,
+    scenario: &super::ScenarioEngine,
+    drop_client: usize,
+    round: u64,
+) -> Produced {
+    if msg.client == drop_client {
+        c.recycle(msg);
+        return Produced::Skipped;
+    }
+    match scenario.link(msg.client, round) {
+        Some(cond) => Produced::Arrived(msg, cond),
+        // Fully lost: every attempt still burned wire bytes, and an EF
+        // client keeps the undelivered mass in its residual.
+        None => {
+            let wasted = msg.lost_wire_bytes(scenario.lost_attempts());
+            c.restore_lost(&msg);
+            c.recycle(msg);
+            Produced::Lost { wasted }
+        }
+    }
+}
+
+/// The round prologue shared verbatim by both modes (any drift here would
+/// break the modes' bit-identity contract): overall round timer, churn
+/// decisions, and the compute stage with its clock.
+struct RoundStart {
+    timer: Timer,
+    /// Participation mask over all clients (churn decisions).
+    active_set: Vec<bool>,
+    /// Number of participating clients (the encode fan-out width).
+    active_len: usize,
+    grads: Vec<Vec<f32>>,
+    losses: Vec<f32>,
+    compute_secs: f64,
+}
+
+fn begin_round_stage(coord: &mut Coordinator<'_>) -> Result<RoundStart> {
+    let timer = Timer::start();
+    let round = coord.round;
+    // Scenario: churn decides who participates this round.
+    let active = coord.scenario.begin_round(round as u64);
+    let mut active_set = vec![false; coord.clients.len()];
+    for &i in &active {
+        active_set[i] = true;
+    }
+    // Compute: local gradients for participating clients (backend on this
+    // thread; PJRT/XLA parallelizes inside, the native path is cheap scalar
+    // math).
+    let t = Timer::start();
+    let (grads, losses) = compute_stage(coord, &active)?;
+    Ok(RoundStart {
+        timer,
+        active_set,
+        active_len: active.len(),
+        grads,
+        losses,
+        compute_secs: t.secs(),
+    })
+}
+
+/// One strict-barrier round (the historical `Coordinator::step` body, with
+/// the per-stage clock added).
+pub(crate) fn step_barrier(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
+    let start = begin_round_stage(coord)?;
+    let round = coord.round;
+
+    // Encode: per-client compression fanned out across threads. Strict
+    // barrier — the round proceeds only once every encoder has joined.
+    let t = Timer::start();
+    let refit_now = round % coord.cfg.quant.estimate_every == 0;
+    let seed = coord.cfg.seed;
+    let msgs: Vec<Message> = {
+        let groups: &[GroupRange] = &coord.groups;
+        let clients = &mut coord.clients;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(start.active_len);
+            let mut k = 0usize;
+            for (i, c) in clients.iter_mut().enumerate() {
+                if !start.active_set[i] {
+                    continue;
+                }
+                let g = &start.grads[k];
+                let loss = start.losses[k];
+                k += 1;
+                handles.push(scope.spawn(move || {
+                    c.compress(g, groups, round, seed, refit_now, loss)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("codec thread")).collect()
+        })
+    };
+    let encode_secs = t.secs();
+
+    // Uplink through the simulated network: the same per-message routing
+    // the streaming workers run, here on the driver after the barrier.
+    let mut delivered: Vec<Message> = Vec::with_capacity(msgs.len());
+    let mut conds: Vec<LinkCondition> = Vec::with_capacity(msgs.len());
+    let mut lost_bytes = 0u64;
+    let drop_client = coord.cfg.drop_client;
+    for m in msgs {
+        let ci = m.client;
+        let c = &mut coord.clients[ci];
+        match route_message(c, m, &coord.scenario, drop_client, round as u64) {
+            Produced::Arrived(m, cond) => {
+                delivered.push(m);
+                conds.push(cond);
+            }
+            Produced::Lost { wasted } => {
+                coord.net.account_lost_bytes(wasted);
+                lost_bytes += wasted;
+            }
+            Produced::Skipped => {}
+        }
+    }
+    finish_round(
+        coord,
+        start.timer,
+        delivered,
+        conds,
+        lost_bytes,
+        &start.losses,
+        start.compute_secs,
+        encode_secs,
+        None,
+    )
+}
+
+/// One streaming round: encode workers hand each finished message straight
+/// to the driver, which decodes it into the client's contribution buffer
+/// while the remaining encoders are still running.
+pub(crate) fn step_streaming(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
+    let start = begin_round_stage(coord)?;
+    let round = coord.round;
+
+    // Lazily size the per-client contribution buffers (one full-dimension
+    // f32 buffer per client, reused across rounds — the decode-side
+    // analogue of the frame arena; `contrib_reallocs` must go flat after
+    // warm-up, asserted next to the frame-alloc invariant).
+    let dim = coord.params.len();
+    if coord.contrib.len() < coord.clients.len() {
+        coord.contrib.resize_with(coord.clients.len(), Vec::new);
+    }
+
+    // Encode → Uplink → (overlapped) decode. Each worker encodes its
+    // client, runs the per-client uplink decisions itself (drop_client,
+    // packet loss — per-client state stays on the client's own thread,
+    // exactly the barrier sequence) and hands survivors to the driver,
+    // which decodes them on arrival.
+    let t = Timer::start();
+    let refit_now = round % coord.cfg.quant.estimate_every == 0;
+    let seed = coord.cfg.seed;
+    let drop_client = coord.cfg.drop_client;
+    let mut arrived: Vec<(Message, LinkCondition)> = Vec::with_capacity(start.active_len);
+    let mut dense_ok = vec![false; coord.clients.len()];
+    let mut lost_bytes = 0u64;
+    let mut decode_err: Option<anyhow::Error> = None;
+    {
+        let groups: &[GroupRange] = &coord.groups;
+        let scenario = &coord.scenario;
+        let clients = &mut coord.clients;
+        let contrib = &mut coord.contrib;
+        let contrib_reallocs = &mut coord.contrib_reallocs;
+        std::thread::scope(|scope| {
+            let (tx, rx) = std::sync::mpsc::channel::<Produced>();
+            let mut expected = 0usize;
+            let mut k = 0usize;
+            for (i, c) in clients.iter_mut().enumerate() {
+                if !start.active_set[i] {
+                    continue;
+                }
+                let g = &start.grads[k];
+                let loss = start.losses[k];
+                k += 1;
+                let tx = tx.clone();
+                expected += 1;
+                scope.spawn(move || {
+                    let msg = c.compress(g, groups, round, seed, refit_now, loss);
+                    let prod = route_message(c, msg, scenario, drop_client, round as u64);
+                    tx.send(prod).expect("pipeline hand-off");
+                });
+            }
+            drop(tx);
+            // Driver: decode each arrival the moment it lands — this is the
+            // overlap with the encoders still running above. The decode is
+            // speculative: a frame the staleness scheduler later defers is
+            // decoded again (fused, with its real weight) when it applies —
+            // wasted work only in stale scenarios, and hidden inside the
+            // overlap window. A decode error is remembered (not returned)
+            // so the channel drains and every worker joins cleanly.
+            for _ in 0..expected {
+                match rx.recv().expect("pipeline hand-off") {
+                    Produced::Arrived(msg, cond) => {
+                        if decode_err.is_none() {
+                            match decode_contribution(groups, &msg, contrib, contrib_reallocs, dim)
+                            {
+                                Ok(densified) => dense_ok[msg.client] = densified,
+                                Err(e) => decode_err = Some(e),
+                            }
+                        }
+                        arrived.push((msg, cond));
+                    }
+                    Produced::Lost { wasted } => lost_bytes += wasted,
+                    Produced::Skipped => {}
+                }
+            }
+        });
+    }
+    if let Some(e) = decode_err {
+        return Err(e);
+    }
+    let encode_secs = t.secs();
+
+    // Deterministic bookkeeping: re-sort arrivals to ascending client id —
+    // exactly the barrier path's message order (completion order above is
+    // timing-dependent and must not leak into any recorded quantity).
+    arrived.sort_by_key(|(m, _)| m.client);
+    let mut delivered: Vec<Message> = Vec::with_capacity(arrived.len());
+    let mut conds: Vec<LinkCondition> = Vec::with_capacity(arrived.len());
+    for (m, c) in arrived {
+        delivered.push(m);
+        conds.push(c);
+    }
+    coord.net.account_lost_bytes(lost_bytes);
+    finish_round(
+        coord,
+        start.timer,
+        delivered,
+        conds,
+        lost_bytes,
+        &start.losses,
+        start.compute_secs,
+        encode_secs,
+        Some((round, &dense_ok[..])),
+    )
+}
+
+/// Stages shared verbatim by both modes once the delivered set is known (in
+/// ascending client order): network accounting, the bounded-staleness
+/// schedule, the staleness histogram, the weighted apply + optimizer step,
+/// frame recycling, and the round record. `dense` is the streaming mode's
+/// `(round, per-client buffered?)` marker for contributions decoded during
+/// the overlap; `None` in barrier mode.
+#[allow(clippy::too_many_arguments)]
+fn finish_round(
+    coord: &mut Coordinator<'_>,
+    timer: Timer,
+    delivered: Vec<Message>,
+    conds: Vec<LinkCondition>,
+    lost_bytes: u64,
+    losses: &[f32],
+    compute_secs: f64,
+    encode_secs: f64,
+    dense: Option<(usize, &[bool])>,
+) -> Result<RoundRecord> {
+    let round = coord.round;
+    let dropped_clients = coord.clients.len() - delivered.len();
+    let report = coord.net.round_uplink_conditioned(&delivered, &conds);
+
+    // Bounded-staleness schedule: which frames apply now vs next round
+    // (with decayed weight). The server steps at the K-th arrival, so that
+    // — not the slowest client — is the round's communication time.
+    let arrivals: Vec<(Message, f64)> = delivered
+        .into_iter()
+        .zip(report.per_client.iter().map(|&(_, t)| t))
+        .collect();
+    let (apply, net_secs) = coord.scenario.schedule(arrivals);
+    // An empty apply set under packet loss is a transient wipeout: skip the
+    // update (θ unchanged) and keep training. Without loss in play it is
+    // structural (drop_client killed the whole federation) — fail.
+    if apply.is_empty() && coord.cfg.scenario.loss_prob == 0.0 {
+        return Err(anyhow!("all clients dropped; nothing to aggregate"));
+    }
+    let staleness_hist =
+        build_staleness_hist(&mut coord.staleness_scratch, &mut coord.hist_reallocs, &apply);
+
+    // Accumulate + Apply: decode + weighted aggregate + optimizer step,
+    // sharded by layer-group ranges in the fixed (round, client) order.
+    let t = Timer::start();
+    weighted_apply(coord, &apply, dense)?;
+    let agg_secs = t.secs();
+    // Aggregation is done with these frames: hand the buffers back to their
+    // owners' arenas so next round's encode allocates nothing.
+    for (m, _) in apply {
+        let ci = m.client;
+        coord.clients[ci].recycle(m);
+    }
+
+    let train_loss = round_train_loss(losses, coord.last_train_loss);
+    coord.last_train_loss = train_loss;
+    coord.round += 1;
+    Ok(RoundRecord {
+        round,
+        train_loss,
+        bytes_up: report.bytes,
+        test_loss: None,
+        test_accuracy: None,
+        secs: timer.secs(),
+        net_secs,
+        compute_secs,
+        encode_secs,
+        agg_secs,
+        dropped_clients,
+        retransmitted_bytes: report.retransmitted_bytes + lost_bytes,
+        staleness_hist,
+    })
+}
+
+/// Compute stage: local gradients + losses for the participating clients,
+/// on the driver thread (backends may be single-threaded).
+fn compute_stage(
+    coord: &mut Coordinator<'_>,
+    active: &[usize],
+) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+    let round = coord.round;
+    let train_batch = coord.spec.train_batch;
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(active.len());
+    let mut losses: Vec<f32> = Vec::with_capacity(active.len());
+    for &ci in active {
+        let c = &mut coord.clients[ci];
+        let (x, y) = c.next_batch(train_batch, coord.cfg.seed, round as u64);
+        let out = coord.backend.grad(&coord.cfg.model, &coord.params, &x, &y)?;
+        losses.push(out.loss);
+        grads.push(out.grads);
+    }
+    Ok((grads, losses))
+}
+
+/// Decode one arrived message into its client's dense contribution buffer:
+/// the fused kernel at weight 1.0 writes exactly the frame's reconstruction
+/// (`1.0 * d == d`), so the later `+= w * d` apply is bit-identical to
+/// fused-decoding with `w` directly. Returns whether the message was
+/// densified: sparse (Top-k) frames are left for the fused scatter at apply
+/// time (`Ok(false)`) — densifying them would turn their O(nnz) server work
+/// into an O(dim) fill + walk.
+fn decode_contribution(
+    groups: &[GroupRange],
+    msg: &Message,
+    contrib: &mut [Vec<f32>],
+    reallocs: &mut u64,
+    dim: usize,
+) -> Result<bool> {
+    if msg.frames.iter().any(|(_, f)| wire::frame_kind(f) == Some(wire::KIND_SPARSE)) {
+        return Ok(false);
+    }
+    let buf = &mut contrib[msg.client];
+    if buf.len() != dim {
+        if dim > buf.capacity() {
+            *reallocs += 1;
+        }
+        buf.resize(dim, 0.0);
+    }
+    buf.fill(0.0);
+    for (gi, frame) in &msg.frames {
+        let g = groups
+            .get(*gi)
+            .ok_or_else(|| anyhow!("frame references unknown group {gi}"))?;
+        if g.end > buf.len() || g.start > g.end {
+            bail!("group {gi} range {}..{} outside contribution buffer", g.start, g.end);
+        }
+        wire::decode_dequantize_accumulate_into(frame, 1.0, &mut buf[g.start..g.end])?;
+    }
+    Ok(true)
+}
+
+/// The weighted accumulate + optimizer step over the apply set, in the
+/// fixed (origin round, client id) order `schedule` returns. Messages the
+/// streaming pipeline densified during the overlap (`dense` marks the round
+/// and the clients) read their buffered contributions; everything else —
+/// barrier mode, late/stale frames, sparse frames — decodes through the
+/// fused kernel here. Late frames count with weight
+/// `w_i * decay^staleness`; for the synchronous case every staleness is 0
+/// and `decay^0 = 1` exactly, so this reduces bit-for-bit to the plain
+/// weighted mean.
+fn weighted_apply(
+    coord: &mut Coordinator<'_>,
+    apply: &[(Message, u32)],
+    dense: Option<(usize, &[bool])>,
+) -> Result<()> {
+    if apply.is_empty() {
+        return Ok(());
+    }
+    let clients = &coord.clients;
+    let scenario = &coord.scenario;
+    let contrib = &coord.contrib;
+    let w_total: f64 = apply
+        .iter()
+        .map(|(m, s)| clients[m.client].weight * scenario.stale_weight(*s))
+        .sum();
+    let items: Vec<WeightedContribution<'_>> = apply
+        .iter()
+        .map(|(m, s)| {
+            let w = ((clients[m.client].weight * scenario.stale_weight(*s)) / w_total) as f32;
+            let data = match dense {
+                Some((r, ok)) if m.round == r && ok[m.client] => {
+                    ContributionData::Dense(&contrib[m.client][..])
+                }
+                _ => ContributionData::Frames(&m.frames),
+            };
+            WeightedContribution { data, w }
+        })
+        .collect();
+    aggregate::accumulate_sharded(&coord.groups, &items, &mut coord.agg, coord.agg_shards)?;
+    drop(items);
+    let agg = std::mem::take(&mut coord.agg);
+    coord.opt.step(&mut coord.params, &agg);
+    coord.agg = agg;
+    Ok(())
+}
+
+/// Staleness histogram into the reused scratch (capacity survives rounds;
+/// the returned copy is sized-to-fit log data for the round record).
+fn build_staleness_hist(
+    scratch: &mut Vec<u32>,
+    reallocs: &mut u64,
+    apply: &[(Message, u32)],
+) -> Vec<u32> {
+    scratch.clear();
+    for &(_, s) in apply {
+        let s = s as usize;
+        if scratch.len() <= s {
+            if s + 1 > scratch.capacity() {
+                *reallocs += 1;
+            }
+            scratch.resize(s + 1, 0);
+        }
+        scratch[s] += 1;
+    }
+    scratch.clone()
+}
+
+/// Mean client training loss for the round's record. The empty branch is
+/// defensive: `ScenarioEngine::begin_round` currently revives one client
+/// whenever churn would empty the federation, but if that invariant ever
+/// changes (or a new scenario skips compute), the mean must carry the
+/// previous round's value rather than poison the column with `0/0` NaN.
+pub(crate) fn round_train_loss(losses: &[f32], prev: f64) -> f64 {
+    if losses.is_empty() {
+        return prev;
+    }
+    losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_train_loss_is_the_mean() {
+        assert_eq!(round_train_loss(&[1.0, 2.0, 3.0], 9.9), 2.0);
+        assert_eq!(round_train_loss(&[4.0], 9.9), 4.0);
+    }
+
+    #[test]
+    fn round_train_loss_carries_previous_value_for_an_empty_round() {
+        // The defensive `sum / len` NaN guard: a round that computes no
+        // losses must not poison the loss column.
+        let carried = round_train_loss(&[], 1.25);
+        assert_eq!(carried, 1.25);
+        assert!(round_train_loss(&[], 0.0).is_finite());
+    }
+
+    #[test]
+    fn staleness_hist_builds_in_place_and_counts_growth() {
+        let mut scratch = Vec::new();
+        let mut reallocs = 0u64;
+        let msg = |client: usize| Message {
+            client,
+            round: 0,
+            frames: vec![(0, vec![0u8; 4])],
+            loss: 0.0,
+        };
+        let apply = vec![(msg(0), 0u32), (msg(1), 2u32), (msg(2), 0u32)];
+        let hist = build_staleness_hist(&mut scratch, &mut reallocs, &apply);
+        assert_eq!(hist, vec![2, 0, 1]);
+        assert!(reallocs >= 1, "first build must size the scratch");
+        let before = reallocs;
+        let hist2 = build_staleness_hist(&mut scratch, &mut reallocs, &apply);
+        assert_eq!(hist2, hist);
+        assert_eq!(reallocs, before, "warm scratch must not regrow");
+    }
+}

@@ -45,6 +45,7 @@ fn main() -> Result<()> {
                  \x20             --backend (auto|native|pjrt) --error-feedback\n\
                  \x20             --drop-client --artifacts --preset\n\
                  \x20             --agg-shards (server aggregation fan-out; 0 = auto)\n\
+                 \x20             --pipeline (barrier|streaming round engine; bit-identical)\n\
                  scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid)\n\
                  \x20             --straggler-frac --straggler-mult --loss-prob --max-retries\n\
                  \x20             --dropout-prob --rejoin-prob --stale-k --stale-decay\n\

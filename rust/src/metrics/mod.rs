@@ -25,6 +25,15 @@ pub struct RoundRecord {
     pub secs: f64,
     /// Simulated network seconds (bandwidth/latency model), if enabled.
     pub net_secs: f64,
+    /// Wall-clock seconds in the gradient-compute stage.
+    pub compute_secs: f64,
+    /// Wall-clock seconds in the encode stage — under the streaming
+    /// pipeline this window also covers the overlapped server decode, so
+    /// `encode_secs + agg_secs` shrinking versus barrier mode IS the
+    /// measured overlap.
+    pub encode_secs: f64,
+    /// Wall-clock seconds in the weighted-apply + optimizer stage.
+    pub agg_secs: f64,
     /// Scenario: clients that did not contribute a frame this round
     /// (churned out or lost after retransmit budget).
     pub dropped_clients: usize,
@@ -80,11 +89,12 @@ impl RunLog {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "round,train_loss,bytes_up,test_loss,test_accuracy,secs,net_secs,\
+             compute_secs,encode_secs,agg_secs,\
              dropped_clients,retransmitted_bytes,staleness_hist\n",
         );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.bytes_up,
@@ -92,6 +102,9 @@ impl RunLog {
                 r.test_accuracy.map_or(String::new(), |v| v.to_string()),
                 r.secs,
                 r.net_secs,
+                r.compute_secs,
+                r.encode_secs,
+                r.agg_secs,
                 r.dropped_clients,
                 r.retransmitted_bytes,
                 fmt_staleness_hist(&r.staleness_hist),
@@ -109,6 +122,9 @@ impl RunLog {
                 ("bytes_up", json::num(r.bytes_up as f64)),
                 ("secs", json::num(r.secs)),
                 ("net_secs", json::num(r.net_secs)),
+                ("compute_secs", json::num(r.compute_secs)),
+                ("encode_secs", json::num(r.encode_secs)),
+                ("agg_secs", json::num(r.agg_secs)),
                 ("dropped_clients", json::num(r.dropped_clients as f64)),
                 ("retransmitted_bytes", json::num(r.retransmitted_bytes as f64)),
                 (
@@ -209,6 +225,9 @@ mod tests {
             test_accuracy: None,
             secs: 0.1,
             net_secs: 0.0,
+            compute_secs: 0.04,
+            encode_secs: 0.03,
+            agg_secs: 0.02,
             dropped_clients: 0,
             retransmitted_bytes: 0,
             staleness_hist: Vec::new(),
@@ -221,6 +240,9 @@ mod tests {
             test_accuracy: Some(0.55),
             secs: 0.1,
             net_secs: 0.0,
+            compute_secs: 0.05,
+            encode_secs: 0.0625,
+            agg_secs: 0.0125,
             dropped_clients: 2,
             retransmitted_bytes: 333,
             staleness_hist: vec![6, 2],
@@ -246,6 +268,20 @@ mod tests {
         assert!(csv.lines().next().unwrap().contains("staleness_hist"));
         assert!(csv.contains(",333,"), "retransmitted bytes column");
         assert!(csv.contains("0:6|1:2"), "staleness histogram column");
+        let header = csv.lines().next().unwrap();
+        for col in ["compute_secs", "encode_secs", "agg_secs"] {
+            assert!(header.contains(col), "missing stage column {col}");
+        }
+        assert!(csv.contains(",0.05,0.0625,0.0125,"), "stage columns in row order");
+    }
+
+    #[test]
+    fn jsonl_roundtrips_stage_timings() {
+        let jl = sample_log().to_jsonl();
+        let v = parse_jsonl_line(jl.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(v.get("compute_secs").unwrap().as_f64(), Some(0.05));
+        assert_eq!(v.get("encode_secs").unwrap().as_f64(), Some(0.0625));
+        assert_eq!(v.get("agg_secs").unwrap().as_f64(), Some(0.0125));
     }
 
     #[test]
@@ -260,6 +296,9 @@ mod tests {
         let a = sample_log();
         let mut b = sample_log();
         b.records[0].secs = 99.0; // wall clock may differ between runs
+        b.records[0].compute_secs = 1.0; // stage clocks are wall clock too
+        b.records[0].encode_secs = 2.0;
+        b.records[0].agg_secs = 3.0;
         assert_eq!(a.replay_digest(), b.replay_digest());
         let mut c = sample_log();
         c.records[1].retransmitted_bytes += 1;

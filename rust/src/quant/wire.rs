@@ -24,6 +24,17 @@ use super::bitpack;
 
 const MAGIC: u16 = 0x5154;
 
+/// On-the-wire kind byte of a sparse (Top-k) frame.
+pub const KIND_SPARSE: u8 = 3;
+
+/// Peek a frame's payload-kind byte (header offset 2) without decoding —
+/// used by the streaming pipeline to route sparse frames to the fused
+/// scatter path instead of densifying them. `None` when the bytes are
+/// shorter than a frame header.
+pub fn frame_kind(bytes: &[u8]) -> Option<u8> {
+    bytes.get(2).copied()
+}
+
 /// Decoded frame payload.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {

@@ -8,7 +8,7 @@
 //! `make artifacts` output and real xla-rs bindings linked in place of the
 //! in-tree stub.
 
-use tqsgd::config::{ExperimentConfig, ScenarioConfig, Scheme};
+use tqsgd::config::{ExperimentConfig, PipelineMode, ScenarioConfig, Scheme};
 use tqsgd::coordinator::Coordinator;
 use tqsgd::quant::kernels::{quantize_codebook_slice, quantize_uniform_slice};
 use tqsgd::runtime::{backend_for, Backend};
@@ -328,6 +328,14 @@ fn steady_state_rounds_do_not_allocate_frames() {
     stale.net.bandwidth_bytes_per_sec = 1e6;
     stale.net.latency_sec = 0.01;
     stale.scenario = ScenarioConfig::preset("stale").unwrap();
+    assert_steady_state_zero_frame_allocs(stale.clone(), 4);
+    // The streaming pipeline obeys the same invariants (its extra
+    // contribution buffers have their own counter, asserted in
+    // rust/tests/pipeline_props.rs).
+    let mut streaming = small_cfg("mlp_tiny", Scheme::Tqsgd);
+    streaming.pipeline = PipelineMode::Streaming;
+    assert_steady_state_zero_frame_allocs(streaming, 2);
+    stale.pipeline = PipelineMode::Streaming;
     assert_steady_state_zero_frame_allocs(stale, 4);
 }
 
@@ -347,6 +355,64 @@ fn run_scenario(scenario: ScenarioConfig, rounds: usize) -> (String, Vec<f32>) {
     let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
     let log = coord.run(false).unwrap();
     (log.replay_digest(), coord.params.clone())
+}
+
+#[test]
+fn streaming_pipeline_matches_barrier_end_to_end() {
+    // Acceptance: the streaming round engine is a pure performance knob —
+    // same digests, same final parameters, in clean and degraded rounds.
+    // (The full scheme × bits × preset grid lives in
+    // rust/tests/pipeline_props.rs; this is the end-to-end smoke.)
+    for name in ["clean", "lossy", "stale", "churn"] {
+        let sc = ScenarioConfig::preset(name).unwrap();
+        let run_mode = |pipeline: PipelineMode| {
+            let backend = native();
+            let mut cfg = small_cfg("mlp_tiny", Scheme::Tnqsgd);
+            cfg.rounds = 5;
+            cfg.eval_every = 5;
+            cfg.net.bandwidth_bytes_per_sec = 1e6;
+            cfg.net.latency_sec = 0.01;
+            cfg.scenario = sc.clone();
+            cfg.pipeline = pipeline;
+            let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+            let log = coord.run(false).unwrap();
+            (log.replay_digest(), coord.params.clone())
+        };
+        let (digest_b, params_b) = run_mode(PipelineMode::Barrier);
+        let (digest_s, params_s) = run_mode(PipelineMode::Streaming);
+        assert_eq!(digest_b, digest_s, "{name}: streaming digest diverged");
+        // Bitwise, not f32 ==: a +0.0/−0.0 sign flip must not slip through.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&params_b), bits(&params_s), "{name}: streaming θ diverged");
+    }
+}
+
+#[test]
+fn churn_rounds_never_poison_the_loss_column() {
+    // Regression for the `sum / losses.len()` NaN: a round whose active set
+    // computes no losses must carry the previous value, and heavy churn
+    // must never produce a non-finite loss in either pipeline mode.
+    for pipeline in [PipelineMode::Barrier, PipelineMode::Streaming] {
+        let backend = native();
+        let mut cfg = small_cfg("mlp_tiny", Scheme::Tqsgd);
+        cfg.clients = 5;
+        cfg.rounds = 25;
+        cfg.scenario = ScenarioConfig {
+            dropout_prob: 0.6,
+            rejoin_prob: 0.3,
+            ..ScenarioConfig::preset("churn").unwrap()
+        };
+        cfg.pipeline = pipeline;
+        let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+        for round in 0..25 {
+            let rec = coord.step().unwrap();
+            assert!(
+                rec.train_loss.is_finite(),
+                "{pipeline:?} round {round}: train_loss {} not finite",
+                rec.train_loss
+            );
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,157 @@
+//! Streaming-vs-barrier bit-identity for the round pipeline, across the
+//! full configuration grid: every compression scheme × every bit width the
+//! wire carries (1..=8) × the degraded-round scenario presets, plus shard
+//! widths and error feedback.
+//!
+//! The contract under test (see `coordinator/pipeline.rs` for the
+//! argument): `PipelineMode::Streaming` overlaps client encode with server
+//! decode, but buffers per-client contributions and applies them in the
+//! fixed (origin round, client id) order — so the parameters and the whole
+//! deterministic `RunLog::replay_digest()` must match `PipelineMode::Barrier`
+//! bit-for-bit, at every worker/shard count.
+
+use tqsgd::config::{ExperimentConfig, PipelineMode, ScenarioConfig, Scheme};
+use tqsgd::coordinator::Coordinator;
+use tqsgd::metrics::RunLog;
+use tqsgd::runtime::{backend_for, Backend};
+
+/// The scenario presets the grid sweeps: the synchronous happy path, lossy
+/// uplinks (retransmits + total losses + EF repair), bounded staleness
+/// (late frames cross rounds, decayed weights) and membership churn
+/// (reweighted survivors, possible empty-loss rounds).
+const PRESETS: [&str; 4] = ["clean", "lossy", "stale", "churn"];
+
+fn native() -> Box<dyn Backend> {
+    backend_for("native", "unused").unwrap()
+}
+
+fn grid_cfg(scheme: Scheme, bits: u32, preset: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = scheme;
+    cfg.quant.bits = bits;
+    // 4 clients > stale_k = 3, so the stale preset actually defers frames.
+    cfg.clients = 4;
+    cfg.train_size = 384;
+    cfg.test_size = 96;
+    cfg.seed = 11;
+    // Distinct simulated arrival times so the staleness schedule has a real
+    // ordering to cut.
+    cfg.net.bandwidth_bytes_per_sec = 1e6;
+    cfg.net.latency_sec = 0.01;
+    cfg.scenario = ScenarioConfig::preset(preset).unwrap();
+    cfg
+}
+
+/// Run `rounds` rounds; return (replay digest, final parameters).
+fn run(backend: &dyn Backend, cfg: &ExperimentConfig, rounds: usize) -> (String, Vec<f32>) {
+    let mut coord = Coordinator::new(cfg.clone(), backend).unwrap();
+    let mut log = RunLog::default();
+    for _ in 0..rounds {
+        log.push(coord.step().unwrap());
+    }
+    (log.replay_digest(), coord.params.clone())
+}
+
+fn assert_modes_match(backend: &dyn Backend, cfg: &ExperimentConfig, rounds: usize, label: &str) {
+    let mut barrier = cfg.clone();
+    barrier.pipeline = PipelineMode::Barrier;
+    let (d_barrier, p_barrier) = run(backend, &barrier, rounds);
+    let mut streaming = cfg.clone();
+    streaming.pipeline = PipelineMode::Streaming;
+    let (d_streaming, p_streaming) = run(backend, &streaming, rounds);
+    assert_eq!(d_barrier, d_streaming, "{label}: replay digests diverged");
+    assert_eq!(p_barrier.len(), p_streaming.len(), "{label}: parameter dim diverged");
+    for (i, (a, b)) in p_barrier.iter().zip(&p_streaming).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: param {i} diverged ({a} vs {b})");
+    }
+}
+
+/// The acceptance grid: every scheme × bits 1..=8 × scenario preset.
+/// (TBQSGD needs s >= 3 quantization intervals, so b = 1 is skipped for it,
+/// as everywhere else in the suite.)
+#[test]
+fn streaming_is_bit_identical_to_barrier_for_every_scheme_bits_preset() {
+    let backend = native();
+    for preset in PRESETS {
+        for scheme in Scheme::all() {
+            for bits in 1..=8u32 {
+                if scheme == Scheme::Tbqsgd && bits < 2 {
+                    continue;
+                }
+                let cfg = grid_cfg(scheme, bits, preset);
+                let label = format!("{}@{preset} b{bits}", scheme.name());
+                assert_modes_match(backend.as_ref(), &cfg, 3, &label);
+            }
+        }
+    }
+}
+
+/// Worker-count sweep: the streaming pipeline must agree with the
+/// single-shard barrier reference at every aggregation shard width, in
+/// every preset — the shard count is a pure performance knob in both modes.
+#[test]
+fn streaming_is_bit_identical_at_every_shard_width() {
+    let backend = native();
+    for preset in PRESETS {
+        let reference = {
+            let mut cfg = grid_cfg(Scheme::Tnqsgd, 3, preset);
+            cfg.agg_shards = 1;
+            cfg.pipeline = PipelineMode::Barrier;
+            run(backend.as_ref(), &cfg, 3)
+        };
+        for pipeline in [PipelineMode::Barrier, PipelineMode::Streaming] {
+            for shards in [1usize, 2, 7] {
+                let mut cfg = grid_cfg(Scheme::Tnqsgd, 3, preset);
+                cfg.agg_shards = shards;
+                cfg.pipeline = pipeline;
+                let got = run(backend.as_ref(), &cfg, 3);
+                assert_eq!(
+                    reference,
+                    got,
+                    "tnqsgd@{preset} {} x{shards} != barrier x1",
+                    pipeline.name()
+                );
+            }
+        }
+    }
+}
+
+/// Error feedback moves state repair (`restore_lost`) onto the encode
+/// workers in streaming mode; the per-client mutation sequence is unchanged
+/// so lossy EF runs must stay bit-identical too.
+#[test]
+fn streaming_is_bit_identical_with_error_feedback() {
+    let backend = native();
+    for preset in PRESETS {
+        let mut cfg = grid_cfg(Scheme::Tqsgd, 3, preset);
+        cfg.quant.error_feedback = true;
+        let label = format!("tqsgd+ef@{preset}");
+        assert_modes_match(backend.as_ref(), &cfg, 4, &label);
+    }
+}
+
+/// The streaming pipeline's contribution buffers are sized on the first
+/// round and reused forever: together with the frame arenas and the
+/// staleness-hist scratch, steady-state streaming rounds allocate nothing.
+#[test]
+fn streaming_pipeline_is_zero_alloc_in_steady_state() {
+    let backend = native();
+    let mut cfg = grid_cfg(Scheme::Tqsgd, 3, "stale");
+    cfg.pipeline = PipelineMode::Streaming;
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    for _ in 0..4 {
+        coord.step().unwrap();
+    }
+    let (frames, hist, contrib) =
+        (coord.frame_allocs(), coord.hist_reallocs(), coord.contrib_reallocs());
+    assert!(frames > 0, "warm-up must have allocated frames");
+    assert!(contrib > 0, "warm-up must have sized the contribution buffers");
+    for _ in 0..5 {
+        coord.step().unwrap();
+    }
+    assert_eq!(coord.frame_allocs(), frames, "steady-state frame allocs moved");
+    assert_eq!(coord.hist_reallocs(), hist, "steady-state hist scratch regrew");
+    assert_eq!(coord.contrib_reallocs(), contrib, "steady-state contrib buffers regrew");
+}

@@ -219,6 +219,17 @@ fn golden_sparse_frame_bytes() {
     ];
     assert_eq!(p.encode(0), want);
     assert_eq!(Payload::decode(&want).unwrap(), p);
+    // The kind byte sits at header offset 2 — the streaming pipeline peeks
+    // it to keep sparse frames on the fused scatter path.
+    assert_eq!(wire::frame_kind(&want), Some(wire::KIND_SPARSE));
+}
+
+#[test]
+fn frame_kind_peeks_the_header() {
+    let uniform = Payload::Uniform { alpha: 1.0, s: 3, idx: vec![0, 1] }.encode(2);
+    assert_eq!(wire::frame_kind(&uniform), Some(1));
+    assert_ne!(wire::frame_kind(&uniform), Some(wire::KIND_SPARSE));
+    assert_eq!(wire::frame_kind(&[0x54]), None, "short frames have no kind");
 }
 
 // ---------------------------------------------------------------------------
