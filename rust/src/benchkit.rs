@@ -22,9 +22,13 @@ use crate::json::{self, Value};
 /// Timing statistics over the measured runs.
 #[derive(Clone, Copy, Debug)]
 pub struct Timing {
+    /// Median time per run, in nanoseconds (the headline statistic).
     pub median_ns: f64,
+    /// Mean time per run, in nanoseconds.
     pub mean_ns: f64,
+    /// Standard deviation across runs, in nanoseconds.
     pub stddev_ns: f64,
+    /// Number of measured (post-warmup) runs.
     pub runs: usize,
 }
 
@@ -41,6 +45,7 @@ impl Timing {
         Timing { median_ns: median, mean_ns: mean, stddev_ns: var.sqrt(), runs }
     }
 
+    /// Median nanoseconds per element for `elems` elements per run.
     pub fn per_elem_ns(&self, elems: usize) -> f64 {
         self.median_ns / elems as f64
     }
@@ -55,11 +60,13 @@ impl Timing {
         elems as f64 * 1e3 / self.median_ns
     }
 
+    /// The median formatted with a human-readable unit (see [`fmt_ns`]).
     pub fn pretty(&self) -> String {
         fmt_ns(self.median_ns)
     }
 }
 
+/// Format a nanosecond count with the largest fitting unit (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -179,10 +186,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append one row; panics unless it has one cell per header.
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
@@ -198,6 +207,7 @@ impl Table {
         &self.rows
     }
 
+    /// Print the table with aligned columns.
     pub fn print(&self) {
         let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {

@@ -13,8 +13,11 @@ use anyhow::{anyhow, bail, Result};
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First free argument, e.g. `train` in `tqsgd train --rounds 5`.
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs; bare `--key` stores `"true"`.
     pub flags: BTreeMap<String, String>,
+    /// Free arguments after the subcommand (or after a `--` terminator).
     pub positional: Vec<String>,
 }
 
@@ -56,22 +59,27 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process's own command line (skipping the program name).
     pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--key` was given at all (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// The raw value of `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String flag with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `usize` flag with a default; parse failures name the flag.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -79,6 +87,7 @@ impl Args {
         }
     }
 
+    /// `u64` flag with a default; parse failures name the flag.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -86,6 +95,7 @@ impl Args {
         }
     }
 
+    /// `f64` flag with a default; parse failures name the flag.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -93,6 +103,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag with a default; accepts `true/false`, `1/0`, `yes/no`.
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),
@@ -105,8 +116,11 @@ impl Args {
 
 /// A registered flag, for usage text.
 pub struct FlagSpec {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
+    /// One-line description shown in the usage block.
     pub help: &'static str,
+    /// Default value rendered in the usage block.
     pub default: &'static str,
 }
 

@@ -34,6 +34,7 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Parse a scheme name as written on the CLI (case-insensitive).
     pub fn parse(s: &str) -> Result<Scheme> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "dsgd" => Scheme::Dsgd,
@@ -48,6 +49,7 @@ impl Scheme {
         })
     }
 
+    /// Canonical lowercase name (inverse of [`Scheme::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Scheme::Dsgd => "dsgd",
@@ -66,6 +68,7 @@ impl Scheme {
         matches!(self, Scheme::Tqsgd | Scheme::Tnqsgd | Scheme::Tbqsgd)
     }
 
+    /// Every scheme, in the order the sweeps and test grids iterate.
     pub fn all() -> [Scheme; 8] {
         [
             Scheme::Dsgd,
@@ -117,6 +120,7 @@ impl PipelineMode {
 /// Compression configuration.
 #[derive(Clone, Debug)]
 pub struct QuantConfig {
+    /// The gradient-compression scheme.
     pub scheme: Scheme,
     /// Bit budget b per element (s = 2^b − 1 levels). Ignored by DSGD and
     /// TernGrad (b = 2 effective).
@@ -352,7 +356,9 @@ pub struct ExperimentConfig {
     pub test_size: usize,
     /// RNG seed for everything.
     pub seed: u64,
+    /// Gradient-compression settings.
     pub quant: QuantConfig,
+    /// Simulated-network model (bandwidth + latency).
     pub net: NetConfig,
     /// Round-perturbation scenario (stragglers, loss, churn, staleness,
     /// non-IID sharding). Defaults to the clean synchronous path.
@@ -443,6 +449,8 @@ impl ExperimentConfig {
         bail!("unknown preset {name:?}")
     }
 
+    /// Reject configurations the runtime cannot execute (zero clients,
+    /// out-of-range bit widths, inconsistent scenario knobs, ...).
     pub fn validate(&self) -> Result<()> {
         if self.clients == 0 {
             bail!("clients must be >= 1");
@@ -520,6 +528,10 @@ impl ExperimentConfig {
 
     // -- JSON round trip ----------------------------------------------------
 
+    /// Serialize to the JSON document [`ExperimentConfig::from_json`]
+    /// accepts. Float fields survive the round trip bit-exactly (see
+    /// [`crate::json`]), which the TCP handshake relies on for
+    /// cross-process determinism.
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("model", json::s(&self.model)),
@@ -562,6 +574,7 @@ impl ExperimentConfig {
         ])
     }
 
+    /// Build a validated config from JSON; absent fields keep defaults.
     pub fn from_json(v: &Value) -> Result<ExperimentConfig> {
         let mut cfg = ExperimentConfig::default();
         let getf = |key: &str, dflt: f64| v.get(key).and_then(Value::as_f64).unwrap_or(dflt);
@@ -622,12 +635,14 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Load a config from a JSON file.
     pub fn load(path: &Path) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path:?}"))?;
         Self::from_json(&Value::parse(&text)?)
     }
 
+    /// Write the config as JSON to `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_json())
             .with_context(|| format!("writing config {path:?}"))

@@ -4,7 +4,7 @@
 //! code share one definition.
 //!
 //! Everything here runs on the codec worker threads spawned by the round
-//! pipeline: [`Client::compress`] is pure rust (no backend), writes into
+//! pipeline: `Client::compress` is pure rust (no backend), writes into
 //! arena-recycled buffers, and owns all per-client mutable state, so the
 //! per-client fan-out needs no locks.
 

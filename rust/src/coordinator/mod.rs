@@ -39,17 +39,31 @@
 //! staleness, non-IID shards) are injected by the [`scenario`] engine from
 //! the experiment's `ScenarioConfig`; the clean preset reproduces the
 //! synchronous loop above bit-for-bit.
+//!
+//! The client↔server byte exchange sits behind the [`Transport`] trait
+//! ([`network`]): the default [`SimNet`] keeps the N clients in-process as
+//! above, while [`transport`] runs them as real worker processes over TCP
+//! (`Coordinator::run_remote`, CLI `tqsgd serve | worker | launch`) — with
+//! bit-identical `replay_digest()`s on clean scenarios, and real
+//! connection faults (killed workers, dead sockets) folding into the same
+//! drop/reweight path the scenario engine exercises in-process.
 
 pub mod aggregate;
 pub mod client;
 pub mod network;
 pub mod pipeline;
 pub mod scenario;
+pub mod transport;
 
 pub use client::{Client, TaskData};
-pub use network::{LinkCondition, Message, SimNet, UplinkReport};
+pub use network::{
+    LinkCondition, Message, RemoteUplink, SimNet, Transport, UplinkOutcome, UplinkReport,
+};
 pub use pipeline::PipelineMode;
 pub use scenario::ScenarioEngine;
+pub use transport::{
+    run_worker, teardown_workers, TcpOptions, TcpServer, TcpTransport, WorkerOptions,
+};
 
 use anyhow::{anyhow, Result};
 
@@ -74,8 +88,11 @@ pub struct Coordinator<'b> {
     /// The global flat parameter vector (server copy).
     pub params: Vec<f32>,
     pub(crate) opt: MomentumSgd,
-    /// Simulated uplink network (accounts real wire bytes).
-    pub net: SimNet,
+    /// The transport the round's bytes move through: the in-process
+    /// [`SimNet`] simulation by default, or a remote transport (TCP worker
+    /// processes) injected via [`Coordinator::with_transport`]. Either way
+    /// it accounts real wire bytes under the SimNet latency model.
+    pub net: Box<dyn Transport>,
     /// Scenario engine: per-round churn/straggler/loss/staleness decisions.
     pub scenario: ScenarioEngine,
     pub(crate) groups: Vec<GroupRange>,
@@ -113,71 +130,102 @@ pub struct Coordinator<'b> {
     pub(crate) last_train_loss: f64,
 }
 
+/// The N logical clients of one experiment plus the server-side evaluation
+/// data, built deterministically from `(cfg, spec)`.
+pub(crate) struct Fleet {
+    pub(crate) clients: Vec<Client>,
+    pub(crate) test: Option<Dataset>,
+    pub(crate) lm_eval_corpus: Option<MarkovCorpus>,
+}
+
+/// Build the client fleet for an experiment — shared verbatim by
+/// [`Coordinator::new`] and the remote worker (`transport::run_worker`), so
+/// every process derives bit-identical shards, samplers, weights and codec
+/// state from the same config. Any drift here breaks the tcp==in-process
+/// digest parity pinned by `rust/tests/transport_props.rs`.
+pub(crate) fn build_fleet(cfg: &ExperimentConfig, spec: &ModelSpec) -> Result<Fleet> {
+    let mut clients = Vec::with_capacity(cfg.clients);
+    let mut test = None;
+    let mut lm_eval_corpus = None;
+    if spec.kind == "classifier" {
+        let train = crate::data::mnist_like_split(cfg.train_size, cfg.seed, 0);
+        test = Some(crate::data::mnist_like_split(cfg.test_size, cfg.seed, 1));
+        let total = train.len() as f64;
+        // IID contiguous shards, or Dirichlet label-skew under the
+        // non-IID scenario.
+        let shards: Vec<Dataset> = if cfg.scenario.noniid_alpha > 0.0 {
+            crate::data::dirichlet_shards(
+                &train,
+                cfg.clients,
+                cfg.scenario.noniid_alpha,
+                cfg.seed,
+            )
+        } else {
+            (0..cfg.clients).map(|i| train.shard(i, cfg.clients)).collect()
+        };
+        for (i, shard) in shards.into_iter().enumerate() {
+            let weight = shard.len() as f64 / total;
+            clients.push(Client {
+                id: i,
+                sampler: BatchSampler::new(shard.len(), cfg.seed, i as u64),
+                data: TaskData::Vision { shard },
+                codecs: make_codecs(cfg, &spec.groups),
+                arena: FrameArena::new(),
+                weight,
+            });
+        }
+    } else {
+        // LM task: every client samples from the same chain (IID) —
+        // label-skew sharding has no meaning here, so reject it rather
+        // than silently logging an "@noniid" run that never skewed.
+        if cfg.scenario.noniid_alpha > 0.0 {
+            return Err(anyhow!(
+                "noniid scenario requires a classifier task; \
+                 LM clients sample a shared corpus"
+            ));
+        }
+        let alphabet = spec.vocab.min(64).max(2);
+        for i in 0..cfg.clients {
+            clients.push(Client {
+                id: i,
+                sampler: BatchSampler::new(1, cfg.seed, i as u64),
+                data: TaskData::Lm {
+                    corpus: MarkovCorpus::new(alphabet, cfg.seed),
+                    seq_len: spec.seq_len,
+                },
+                codecs: make_codecs(cfg, &spec.groups),
+                arena: FrameArena::new(),
+                weight: 1.0 / cfg.clients as f64,
+            });
+        }
+        lm_eval_corpus = Some(MarkovCorpus::new(alphabet, cfg.seed));
+    }
+    Ok(Fleet { clients, test, lm_eval_corpus })
+}
+
 impl<'b> Coordinator<'b> {
-    /// Build the server, clients and their codecs for one experiment.
+    /// Build the server, clients and their codecs for one experiment, on the
+    /// in-process [`SimNet`] transport.
     pub fn new(cfg: ExperimentConfig, backend: &'b dyn Backend) -> Result<Self> {
+        let net = Box::new(SimNet::new(cfg.net));
+        Self::with_transport(cfg, backend, net)
+    }
+
+    /// Build the server for one experiment over an explicit [`Transport`]
+    /// (the TCP server mode injects a `TcpTransport` here). The coordinator
+    /// still builds the full in-process client fleet: a remote round uses it
+    /// only for weights, while `step()` keeps working for local rounds.
+    pub fn with_transport(
+        cfg: ExperimentConfig,
+        backend: &'b dyn Backend,
+        net: Box<dyn Transport>,
+    ) -> Result<Self> {
         cfg.validate()?;
         let spec = backend.model(&cfg.model)?;
         spec.validate()?;
         let params = backend.init_params(&cfg.model)?;
         let opt = MomentumSgd::new(params.len(), cfg.lr, cfg.momentum, cfg.weight_decay);
-
-        let mut clients = Vec::with_capacity(cfg.clients);
-        let mut test = None;
-        let mut lm_eval_corpus = None;
-        if spec.kind == "classifier" {
-            let train = crate::data::mnist_like_split(cfg.train_size, cfg.seed, 0);
-            test = Some(crate::data::mnist_like_split(cfg.test_size, cfg.seed, 1));
-            let total = train.len() as f64;
-            // IID contiguous shards, or Dirichlet label-skew under the
-            // non-IID scenario.
-            let shards: Vec<Dataset> = if cfg.scenario.noniid_alpha > 0.0 {
-                crate::data::dirichlet_shards(
-                    &train,
-                    cfg.clients,
-                    cfg.scenario.noniid_alpha,
-                    cfg.seed,
-                )
-            } else {
-                (0..cfg.clients).map(|i| train.shard(i, cfg.clients)).collect()
-            };
-            for (i, shard) in shards.into_iter().enumerate() {
-                let weight = shard.len() as f64 / total;
-                clients.push(Client {
-                    id: i,
-                    sampler: BatchSampler::new(shard.len(), cfg.seed, i as u64),
-                    data: TaskData::Vision { shard },
-                    codecs: make_codecs(&cfg, &spec.groups),
-                    arena: FrameArena::new(),
-                    weight,
-                });
-            }
-        } else {
-            // LM task: every client samples from the same chain (IID) —
-            // label-skew sharding has no meaning here, so reject it rather
-            // than silently logging an "@noniid" run that never skewed.
-            if cfg.scenario.noniid_alpha > 0.0 {
-                return Err(anyhow!(
-                    "noniid scenario requires a classifier task; \
-                     LM clients sample a shared corpus"
-                ));
-            }
-            let alphabet = spec.vocab.min(64).max(2);
-            for i in 0..cfg.clients {
-                clients.push(Client {
-                    id: i,
-                    sampler: BatchSampler::new(1, cfg.seed, i as u64),
-                    data: TaskData::Lm {
-                        corpus: MarkovCorpus::new(alphabet, cfg.seed),
-                        seq_len: spec.seq_len,
-                    },
-                    codecs: make_codecs(&cfg, &spec.groups),
-                    arena: FrameArena::new(),
-                    weight: 1.0 / cfg.clients as f64,
-                });
-            }
-            lm_eval_corpus = Some(MarkovCorpus::new(alphabet, cfg.seed));
-        }
+        let Fleet { clients, test, lm_eval_corpus } = build_fleet(&cfg, &spec)?;
 
         let dim = params.len();
         let agg_shards = if cfg.agg_shards > 0 {
@@ -187,7 +235,7 @@ impl<'b> Coordinator<'b> {
         }
         .min(spec.groups.len().max(1));
         Ok(Coordinator {
-            net: SimNet::new(cfg.net),
+            net,
             scenario: ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed),
             groups: spec.groups.clone(),
             spec,
@@ -269,6 +317,27 @@ impl<'b> Coordinator<'b> {
         }
     }
 
+    /// Execute one communication round against remote workers on the
+    /// injected [`Transport`]: broadcast parameters, collect uplink
+    /// outcomes, then run the same schedule/aggregate/apply epilogue as the
+    /// in-process pipelines. On clean scenarios the resulting
+    /// `replay_digest()` is bit-identical to [`Coordinator::step`] under
+    /// `PipelineMode::Barrier` — see `coordinator::transport`.
+    pub fn step_remote(&mut self) -> Result<RoundRecord> {
+        pipeline::step_remote(self)
+    }
+
+    /// Run the full experiment against remote workers ([`Self::step_remote`]
+    /// every round), then shut the transport down (workers exit cleanly).
+    pub fn run_remote(&mut self, verbose: bool) -> Result<RunLog> {
+        let log = self.run_rounds(verbose, true);
+        // Tear workers down even when a round failed mid-run.
+        let shutdown = self.net.shutdown();
+        let log = log?;
+        shutdown?;
+        Ok(log)
+    }
+
     /// Evaluate the current global model on the held-out set.
     /// Classifier: (mean loss, accuracy). LM: (mean token NLL, None).
     pub fn evaluate(&self) -> Result<(f64, Option<f64>)> {
@@ -311,9 +380,15 @@ impl<'b> Coordinator<'b> {
 
     /// Run the full experiment, logging every round + periodic evals.
     pub fn run(&mut self, verbose: bool) -> Result<RunLog> {
+        self.run_rounds(verbose, false)
+    }
+
+    /// The shared run loop: `cfg.rounds` rounds through either the local
+    /// pipelines or the remote transport, with periodic evaluations.
+    fn run_rounds(&mut self, verbose: bool, remote: bool) -> Result<RunLog> {
         let mut log = RunLog { config_id: self.cfg.id(), ..Default::default() };
         for _ in 0..self.cfg.rounds {
-            let mut rec = self.step()?;
+            let mut rec = if remote { self.step_remote()? } else { self.step()? };
             let last = self.round == self.cfg.rounds;
             if self.round % self.cfg.eval_every == 0 || last {
                 let (l, a) = self.evaluate()?;

@@ -1,4 +1,5 @@
-//! Simulated network between clients and server.
+//! The network seam between clients and server: the [`Transport`] trait,
+//! plus the simulated in-process implementation, [`SimNet`].
 //!
 //! The coordinator exchanges REAL bytes (wire frames); this module accounts
 //! for them and models transfer time under a bandwidth/latency model.  The
@@ -10,13 +11,24 @@
 //! with retransmits). The per-round [`UplinkReport`] surfaces *per-client*
 //! communication time (not just the max), so straggler scenarios can report
 //! tail latency, plus the bytes burned on retransmissions.
+//!
+//! [`Transport`] abstracts how a round's parameter broadcast and gradient
+//! uplinks move: [`SimNet`] keeps everything in-process (clients are threads
+//! in the coordinator), while `coordinator::transport::TcpTransport` drives
+//! real worker processes over TCP sockets (see `docs/PROTOCOL.md`). Both
+//! share the SimNet accounting model, so a clean multi-process run's
+//! `replay_digest()` is bit-identical to the in-process pipelines.
+
+use anyhow::{bail, Result};
 
 use crate::config::NetConfig;
 
 /// Per-round message with its payload bytes.
 #[derive(Clone, Debug)]
 pub struct Message {
+    /// Originating client id in `0..N`.
     pub client: usize,
+    /// Communication round the frames were encoded in.
     pub round: usize,
     /// (group index, frame bytes) per quantization group.
     pub frames: Vec<(usize, Vec<u8>)>,
@@ -75,15 +87,107 @@ pub struct UplinkReport {
     pub per_client: Vec<(usize, f64)>,
 }
 
+/// One client's contribution to a round as seen by a remote transport:
+/// the uplink decisions (packet loss, fault-injected drop) run on the
+/// worker, and the server receives only their outcome.
+#[derive(Clone, Debug)]
+pub struct RemoteUplink {
+    /// Originating client id.
+    pub client: usize,
+    /// The client's local training loss this round (reported for every
+    /// outcome — the in-process pipelines compute losses before routing, so
+    /// the round's loss mean includes lost and skipped clients too).
+    pub loss: f32,
+    /// What happened to the client's frames on the way up.
+    pub outcome: UplinkOutcome,
+}
+
+/// Fate of one remote client's frames for a round (mirrors the in-process
+/// pipeline's routing outcomes).
+#[derive(Clone, Debug)]
+pub enum UplinkOutcome {
+    /// The frames survived the uplink: `(group index, frame bytes)` pairs.
+    Arrived(Vec<(usize, Vec<u8>)>),
+    /// Lost after every retransmit; `wasted` wire bytes were burned.
+    Lost {
+        /// Wire bytes burned across all failed attempts.
+        wasted: u64,
+    },
+    /// Fault-injected drop (`drop_client`): nothing was sent.
+    Skipped,
+}
+
+/// How a round's bytes move between the server and its clients.
+///
+/// Two implementations exist:
+///
+/// * [`SimNet`] — the in-process simulation. Clients are threads inside the
+///   coordinator, so `begin_round`/`collect_round` are inert and only the
+///   accounting methods do work.
+/// * `coordinator::transport::TcpTransport` — real worker processes on TCP
+///   sockets exchanging the `quant::wire` frames as length-prefixed
+///   payloads (`docs/PROTOCOL.md` is the normative spec).
+///
+/// Every implementation routes its byte/latency accounting through the
+/// [`SimNet`] model, keeping `RunLog::replay_digest()` comparable — and on
+/// clean scenarios bit-identical — across transports.
+pub trait Transport: Send {
+    /// Short transport label for logs (`"sim"` | `"tcp"`).
+    fn name(&self) -> &'static str;
+
+    /// Which clients this transport can still reach, or `None` when
+    /// reachability is not a transport concern (the in-process simulation).
+    /// A remote transport reports a dead socket here so the coordinator's
+    /// churn mask excludes the client instead of hanging on its uplink.
+    fn reachable(&self) -> Option<Vec<bool>> {
+        None
+    }
+
+    /// Broadcast the round's parameters to the reachable clients, with the
+    /// participation mask (`active_set[i]` = client `i` computes this
+    /// round). In-process transports have nothing to send.
+    fn begin_round(&mut self, round: usize, active_set: &[bool], params: &[f32]) -> Result<()>;
+
+    /// Collect one uplink outcome from every reachable active client.
+    /// Clients whose connection dies mid-round are silently excluded (they
+    /// count toward `dropped_clients`, exactly like churned clients).
+    fn collect_round(&mut self, round: usize, active_set: &[bool]) -> Result<Vec<RemoteUplink>>;
+
+    /// Register a round's delivered messages under per-client link
+    /// conditions (see [`SimNet::round_uplink_conditioned`]).
+    fn round_uplink_conditioned(
+        &mut self,
+        msgs: &[Message],
+        conds: &[LinkCondition],
+    ) -> UplinkReport;
+
+    /// Account wasted wire bytes from frames that never arrived (see
+    /// [`SimNet::account_lost_bytes`]).
+    fn account_lost_bytes(&mut self, wasted: u64);
+
+    /// Cumulative client→server wire bytes (goodput + retransmits + waste).
+    fn total_bytes_up(&self) -> u64;
+
+    /// Cumulative retransmitted/wasted bytes across the run.
+    fn total_retransmitted(&self) -> u64;
+
+    /// Tear the transport down (remote transports tell workers to exit).
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
 /// Accounting + latency model for one round of uplinks.
 pub struct SimNet {
     cfg: NetConfig,
+    /// Cumulative client→server wire bytes across the run.
     pub total_bytes_up: u64,
     /// Cumulative retransmitted bytes across the run.
     pub total_retransmitted: u64,
 }
 
 impl SimNet {
+    /// A fresh accounting model with zeroed totals.
     pub fn new(cfg: NetConfig) -> Self {
         SimNet { cfg, total_bytes_up: 0, total_retransmitted: 0 }
     }
@@ -148,6 +252,41 @@ impl SimNet {
     pub fn account_lost_bytes(&mut self, wasted: u64) {
         self.total_bytes_up += wasted;
         self.total_retransmitted += wasted;
+    }
+}
+
+impl Transport for SimNet {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn begin_round(&mut self, _round: usize, _active_set: &[bool], _params: &[f32]) -> Result<()> {
+        // In-process clients read the parameter vector directly.
+        Ok(())
+    }
+
+    fn collect_round(&mut self, _round: usize, _active_set: &[bool]) -> Result<Vec<RemoteUplink>> {
+        bail!("SimNet has no remote workers; use the barrier/streaming pipelines")
+    }
+
+    fn round_uplink_conditioned(
+        &mut self,
+        msgs: &[Message],
+        conds: &[LinkCondition],
+    ) -> UplinkReport {
+        SimNet::round_uplink_conditioned(self, msgs, conds)
+    }
+
+    fn account_lost_bytes(&mut self, wasted: u64) {
+        SimNet::account_lost_bytes(self, wasted);
+    }
+
+    fn total_bytes_up(&self) -> u64 {
+        self.total_bytes_up
+    }
+
+    fn total_retransmitted(&self) -> u64 {
+        self.total_retransmitted
     }
 }
 

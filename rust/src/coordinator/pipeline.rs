@@ -59,11 +59,11 @@ use crate::quant::wire;
 use crate::runtime::GroupRange;
 
 use super::aggregate::{self, ContributionData, WeightedContribution};
-use super::network::{LinkCondition, Message};
+use super::network::{LinkCondition, Message, UplinkOutcome};
 use super::Coordinator;
 
 /// Outcome of one message's uplink decisions.
-enum Produced {
+pub(crate) enum Produced {
     /// The message survived the uplink.
     Arrived(Message, LinkCondition),
     /// Lost after every retransmit: the EF residual is already repaired and
@@ -75,9 +75,10 @@ enum Produced {
 
 /// The per-message uplink decisions — `drop_client` fault, packet loss with
 /// EF residual repair, frame recycling — shared verbatim by the barrier
-/// driver loop and the streaming encode workers, so the two modes cannot
-/// drift apart. Touches only this client's own state.
-fn route_message(
+/// driver loop, the streaming encode workers AND the remote TCP worker
+/// (`transport::run_worker`), so the three paths cannot drift apart.
+/// Touches only this client's own state.
+pub(crate) fn route_message(
     c: &mut super::Client,
     msg: Message,
     scenario: &super::ScenarioEngine,
@@ -313,6 +314,89 @@ pub(crate) fn step_streaming(coord: &mut Coordinator<'_>) -> Result<RoundRecord>
         encode_secs,
         Some((round, &dense_ok[..])),
     )
+}
+
+/// One round against remote workers on the coordinator's [`Transport`]
+/// (`super::transport::TcpTransport` behind `tqsgd serve`/`launch`):
+/// broadcast the parameters, let every worker run Compute → Encode and its
+/// own per-client uplink routing ([`route_message`], the code the
+/// in-process modes run), collect the outcomes, then hand the delivered set
+/// to the shared [`finish_round`] epilogue.
+///
+/// **Why tcp == in-process (barrier) bit-for-bit on clean scenarios.**
+///
+/// 1. the churn draws come first, from the same seeded stream in the same
+///    order as [`begin_round_stage`];
+/// 2. the worker rebuilds its `Client` via `coordinator::build_fleet` from
+///    the handshake config and receives the server's exact parameter bits,
+///    so its gradients, codec refits and frame bytes equal the in-process
+///    encode output;
+/// 3. outcomes are re-sorted to ascending client id — the barrier message
+///    order — before losses and accounting fold in, and the per-client
+///    [`LinkCondition`] is redrawn server-side from the same stateless
+///    per-(client, round) stream the worker used, rather than shipped;
+/// 4. [`finish_round`] is the same code, and the simulated-time accounting
+///    runs on the transport's embedded [`SimNet`] model — `net_secs` stays
+///    simulated time, not socket wall-clock, by design.
+///
+/// A worker whose socket dies is simply absent from the collected outcomes:
+/// it counts toward `dropped_clients` and is masked out of later rounds via
+/// `Transport::reachable`, which is exactly the churn drop/reweight path.
+/// Pinned by `rust/tests/transport_props.rs` and the CI transport smoke.
+pub(crate) fn step_remote(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
+    let timer = Timer::start();
+    let round = coord.round;
+    let n = coord.clients.len();
+    // Scenario churn first — same draws, same order as the local prologue.
+    let active = coord.scenario.begin_round(round as u64);
+    let reachable = coord.net.reachable().unwrap_or_else(|| vec![true; n]);
+    let mut active_set = vec![false; n];
+    for &i in &active {
+        if reachable[i] {
+            active_set[i] = true;
+        }
+    }
+    if !active_set.iter().any(|&a| a) {
+        bail!("no reachable active workers; every connection is dead");
+    }
+    let t = Timer::start();
+    coord.net.begin_round(round, &active_set, &coord.params)?;
+    let mut ups = coord.net.collect_round(round, &active_set)?;
+    let exchange_secs = t.secs();
+    // Ascending client id — the barrier path's deterministic message order
+    // (collection order is connection-dependent and must not leak).
+    ups.sort_by_key(|u| u.client);
+    let mut delivered: Vec<Message> = Vec::with_capacity(ups.len());
+    let mut conds: Vec<LinkCondition> = Vec::with_capacity(ups.len());
+    let mut losses: Vec<f32> = Vec::with_capacity(ups.len());
+    let mut lost_bytes = 0u64;
+    for u in ups {
+        losses.push(u.loss);
+        match u.outcome {
+            UplinkOutcome::Arrived(frames) => {
+                // The worker drew Some(..) from the same stateless
+                // per-(client, round) stream; redraw it here instead of
+                // shipping floats over the wire.
+                let cond = coord.scenario.link(u.client, round as u64).ok_or_else(|| {
+                    anyhow!(
+                        "client {}: frames arrived but the loss scenario says lost \
+                         (worker/server seed or config drift?)",
+                        u.client
+                    )
+                })?;
+                delivered.push(Message { client: u.client, round, frames, loss: u.loss });
+                conds.push(cond);
+            }
+            UplinkOutcome::Lost { wasted } => {
+                coord.net.account_lost_bytes(wasted);
+                lost_bytes += wasted;
+            }
+            UplinkOutcome::Skipped => {}
+        }
+    }
+    // compute/encode happened on the workers; the exchange window is the
+    // closest local analogue of the overlapped encode+uplink stage.
+    finish_round(coord, timer, delivered, conds, lost_bytes, &losses, 0.0, exchange_secs, None)
 }
 
 /// Stages shared verbatim by both modes once the delivered set is known (in

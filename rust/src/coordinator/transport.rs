@@ -1,0 +1,666 @@
+//! Real multi-process transport: the coordinator and its clients as
+//! separate OS processes exchanging `quant::wire` frames over TCP.
+//!
+//! Every message on the socket is a **length-prefixed payload**: a `u32`
+//! little-endian byte count, then that many payload bytes, whose first byte
+//! is the message type. Five message types exist — HELLO, WELCOME,
+//! ROUND_START, UPLINK, SHUTDOWN — and `docs/PROTOCOL.md` is the normative
+//! byte-level spec (including the four wire-frame kinds an UPLINK carries).
+//!
+//! Roles:
+//!
+//! * **server** ([`TcpServer`] → [`TcpTransport`]) — binds, accepts one
+//!   connection per client, and drives rounds through
+//!   `Coordinator::run_remote`. The handshake WELCOME carries the full
+//!   `ExperimentConfig` as JSON, so every process derives identical data
+//!   shards, codec state and RNG streams from one config + seed.
+//! * **worker** ([`run_worker`]) — connects, rebuilds its `Client` via
+//!   `coordinator::build_fleet`, then loops: receive parameters, compute
+//!   the local gradient, encode frames, run the same per-client uplink
+//!   routing the in-process pipelines use, and send the outcome back.
+//! * **orchestrator** (`tqsgd launch`) — spawns N local worker processes,
+//!   runs the server in-process, and tears everything down with
+//!   [`teardown_workers`]'s kill deadline.
+//!
+//! **Determinism.** The transport moves real bytes but keeps the
+//! *simulated* network clock: all byte/latency accounting runs through the
+//! embedded [`SimNet`] model, so `RunLog::replay_digest()` (which folds in
+//! `net_secs` as simulated seconds) is bit-identical between a clean
+//! multi-process run and the in-process barrier pipeline — see
+//! `pipeline::step_remote` for the argument and `docs/DETERMINISM.md` for
+//! the invariant table.
+//!
+//! **Fault injection on real connections.** A killed worker or dead socket
+//! surfaces as a read/write error or EOF; the server marks the connection
+//! dead, finishes the round with the survivors (the scenario engine's
+//! drop/reweight path), and masks the client out of later rounds via
+//! [`Transport::reachable`]. Read deadlines ([`TcpOptions::io_timeout`])
+//! bound how long a hung worker can stall a round, so a kill never hangs
+//! the run.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::json::Value;
+use crate::runtime::make_backend;
+
+use super::network::{
+    LinkCondition, Message, RemoteUplink, SimNet, Transport, UplinkOutcome, UplinkReport,
+};
+use super::pipeline::{self, Produced};
+use super::ScenarioEngine;
+
+/// Protocol version carried by HELLO/WELCOME. Both sides must match
+/// exactly; bump it whenever a message layout or wire-frame kind changes
+/// (see `docs/PROTOCOL.md` §Versioning).
+pub const PROTO_VERSION: u16 = 1;
+
+// Message type bytes (first payload byte).
+const MSG_HELLO: u8 = 0x01;
+const MSG_WELCOME: u8 = 0x02;
+const MSG_ROUND_START: u8 = 0x03;
+const MSG_UPLINK: u8 = 0x04;
+const MSG_SHUTDOWN: u8 = 0x05;
+
+// UPLINK outcome bytes (mirror `pipeline::Produced`).
+const OUTCOME_ARRIVED: u8 = 0;
+const OUTCOME_LOST: u8 = 1;
+const OUTCOME_SKIPPED: u8 = 2;
+
+/// Upper bound on one length-prefixed payload; a larger prefix is treated
+/// as protocol corruption rather than an allocation request.
+const MAX_MSG_LEN: u32 = 256 * 1024 * 1024;
+
+// -- framing ----------------------------------------------------------------
+
+/// Write one length-prefixed payload.
+fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed payload.
+fn read_msg<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len);
+    if n > MAX_MSG_LEN {
+        bail!("message length {n} exceeds the {MAX_MSG_LEN}-byte protocol bound");
+    }
+    let mut buf = vec![0u8; n as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Bounds-checked little-endian payload reader (the transport analogue of
+/// `quant::wire`'s internal reader).
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow!("truncated transport message"))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.b[self.i..];
+        self.i = self.b.len();
+        s
+    }
+}
+
+// -- server -----------------------------------------------------------------
+
+/// Socket tuning for the server side of the transport.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpOptions {
+    /// Per-read deadline on worker sockets: bounds how long a hung or
+    /// killed worker can stall a round before it is declared dead.
+    pub io_timeout: Duration,
+    /// How long [`TcpServer::accept_workers`] waits for all N workers to
+    /// connect and complete the handshake.
+    pub accept_timeout: Duration,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            io_timeout: Duration::from_secs(30),
+            accept_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// A bound listener waiting for its worker fleet: the step between "pick a
+/// port" and "all N workers handshaked" — split so an orchestrator can
+/// learn the ephemeral port before spawning workers at it.
+pub struct TcpServer {
+    listener: TcpListener,
+    cfg: ExperimentConfig,
+    opts: TcpOptions,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) for an
+    /// experiment expecting `cfg.clients` workers.
+    pub fn bind(addr: &str, cfg: &ExperimentConfig, opts: TcpOptions) -> Result<TcpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding coordinator on {addr}"))?;
+        Ok(TcpServer { listener, cfg: cfg.clone(), opts })
+    }
+
+    /// The bound socket address (the port workers must connect to).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and handshake all `cfg.clients` workers, or fail once
+    /// [`TcpOptions::accept_timeout`] elapses — a deadlocked handshake
+    /// fails fast instead of hanging the run.
+    pub fn accept_workers(self) -> Result<TcpTransport> {
+        let n = self.cfg.clients;
+        let cfg_json = self.cfg.to_json().to_json();
+        let deadline = Instant::now() + self.opts.accept_timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut conns: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < n {
+            match self.listener.accept() {
+                Ok((mut stream, peer)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(self.opts.io_timeout))?;
+                    let id = handshake_worker(&mut stream, n, &cfg_json)
+                        .with_context(|| format!("handshaking worker at {peer}"))?;
+                    if conns[id].is_some() {
+                        bail!("two workers claimed client id {id}");
+                    }
+                    conns[id] = Some(stream);
+                    connected += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out waiting for workers: {connected}/{n} connected \
+                             within {:?}",
+                            self.opts.accept_timeout
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(TcpTransport { sim: SimNet::new(self.cfg.net), conns })
+    }
+}
+
+/// Server side of one worker handshake: read HELLO, validate, send WELCOME
+/// with the experiment config. Returns the worker's client id.
+fn handshake_worker(stream: &mut TcpStream, n: usize, cfg_json: &str) -> Result<usize> {
+    let msg = read_msg(stream)?;
+    let mut c = Cur::new(&msg);
+    let t = c.u8()?;
+    if t != MSG_HELLO {
+        bail!("expected HELLO (0x01), got message type {t:#04x}");
+    }
+    let version = c.u16()?;
+    if version != PROTO_VERSION {
+        bail!("protocol version mismatch: worker speaks {version}, server {PROTO_VERSION}");
+    }
+    let id = c.u32()? as usize;
+    if id >= n {
+        bail!("client id {id} out of range for {n} clients");
+    }
+    let mut welcome = Vec::with_capacity(7 + cfg_json.len());
+    welcome.push(MSG_WELCOME);
+    welcome.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    welcome.extend_from_slice(&(id as u32).to_le_bytes());
+    welcome.extend_from_slice(cfg_json.as_bytes());
+    write_msg(stream, &welcome)?;
+    Ok(id)
+}
+
+/// The multi-process [`Transport`]: one TCP connection per worker plus the
+/// embedded [`SimNet`] accounting model (real bytes, simulated clock — the
+/// digest's `net_secs` stays the bandwidth/latency model, by design).
+pub struct TcpTransport {
+    sim: SimNet,
+    /// One slot per client; `None` once the connection is declared dead.
+    conns: Vec<Option<TcpStream>>,
+}
+
+impl TcpTransport {
+    /// Clients whose connection is still alive.
+    pub fn alive(&self) -> usize {
+        self.conns.iter().filter(|c| c.is_some()).count()
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn reachable(&self) -> Option<Vec<bool>> {
+        Some(self.conns.iter().map(|c| c.is_some()).collect())
+    }
+
+    /// Send ROUND_START to every live worker — actives get the parameter
+    /// vector, churned-out workers an empty keep-alive (so their read clock
+    /// keeps ticking). A failed write marks the connection dead; the round
+    /// proceeds with the survivors.
+    fn begin_round(&mut self, round: usize, active_set: &[bool], params: &[f32]) -> Result<()> {
+        for (i, slot) in self.conns.iter_mut().enumerate() {
+            let Some(stream) = slot else { continue };
+            let active = active_set.get(i).copied().unwrap_or(false);
+            let body = if active { 10 + 4 * params.len() } else { 10 };
+            let mut p = Vec::with_capacity(body);
+            p.push(MSG_ROUND_START);
+            p.extend_from_slice(&(round as u32).to_le_bytes());
+            p.push(active as u8);
+            if active {
+                p.extend_from_slice(&(params.len() as u32).to_le_bytes());
+                for x in params {
+                    p.extend_from_slice(&x.to_le_bytes());
+                }
+            } else {
+                p.extend_from_slice(&0u32.to_le_bytes());
+            }
+            if write_msg(stream, &p).is_err() {
+                *slot = None;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read one UPLINK from every live active worker, in ascending client
+    /// id. Sequential reads cannot deadlock — every worker computes and
+    /// writes independently, and replies buffer in the sockets until read.
+    /// Any read error (EOF from a killed worker, a blown
+    /// [`TcpOptions::io_timeout`], a malformed payload) declares that
+    /// connection dead and excludes the client from the round.
+    fn collect_round(&mut self, round: usize, active_set: &[bool]) -> Result<Vec<RemoteUplink>> {
+        let mut ups = Vec::new();
+        for i in 0..self.conns.len() {
+            if !active_set.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            let Some(stream) = self.conns[i].as_mut() else { continue };
+            match read_uplink(stream, round, i) {
+                Ok(u) => ups.push(u),
+                Err(_) => self.conns[i] = None,
+            }
+        }
+        Ok(ups)
+    }
+
+    fn round_uplink_conditioned(
+        &mut self,
+        msgs: &[Message],
+        conds: &[LinkCondition],
+    ) -> UplinkReport {
+        self.sim.round_uplink_conditioned(msgs, conds)
+    }
+
+    fn account_lost_bytes(&mut self, wasted: u64) {
+        self.sim.account_lost_bytes(wasted);
+    }
+
+    fn total_bytes_up(&self) -> u64 {
+        self.sim.total_bytes_up
+    }
+
+    fn total_retransmitted(&self) -> u64 {
+        self.sim.total_retransmitted
+    }
+
+    /// Send SHUTDOWN to every live worker and close the connections. Write
+    /// errors are ignored — the goal is teardown, not delivery.
+    fn shutdown(&mut self) -> Result<()> {
+        for slot in &mut self.conns {
+            if let Some(stream) = slot {
+                let _ = write_msg(stream, &[MSG_SHUTDOWN]);
+            }
+            *slot = None;
+        }
+        Ok(())
+    }
+}
+
+/// Parse one UPLINK payload from `client`, validating the round/client echo.
+fn read_uplink(stream: &mut TcpStream, round: usize, client: usize) -> Result<RemoteUplink> {
+    let msg = read_msg(stream)?;
+    let mut c = Cur::new(&msg);
+    let t = c.u8()?;
+    if t != MSG_UPLINK {
+        bail!("expected UPLINK (0x04), got message type {t:#04x}");
+    }
+    let r = c.u32()? as usize;
+    let cl = c.u32()? as usize;
+    if r != round || cl != client {
+        bail!("uplink out of sync: got (round {r}, client {cl}), expected ({round}, {client})");
+    }
+    let loss = c.f32()?;
+    let outcome = match c.u8()? {
+        OUTCOME_ARRIVED => {
+            let nf = c.u32()? as usize;
+            let mut frames = Vec::with_capacity(nf.min(1024));
+            for _ in 0..nf {
+                let gi = c.u32()? as usize;
+                let len = c.u32()? as usize;
+                frames.push((gi, c.take(len)?.to_vec()));
+            }
+            UplinkOutcome::Arrived(frames)
+        }
+        OUTCOME_LOST => UplinkOutcome::Lost { wasted: c.u64()? },
+        OUTCOME_SKIPPED => UplinkOutcome::Skipped,
+        other => bail!("unknown uplink outcome {other}"),
+    };
+    Ok(RemoteUplink { client, loss, outcome })
+}
+
+// -- worker -----------------------------------------------------------------
+
+/// Socket and lifecycle tuning for a worker process.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerOptions {
+    /// How long to keep retrying the initial connect (covers the window
+    /// where the orchestrator spawned the worker before the server bound).
+    pub connect_timeout: Duration,
+    /// Per-read deadline: bounds how long the worker waits for the next
+    /// ROUND_START/SHUTDOWN (covers the server's aggregate + eval window).
+    pub io_timeout: Duration,
+    /// Fault-injection hook: exit abruptly (dropping the socket, no
+    /// goodbye) after participating in this many active rounds — how the
+    /// tests and `--max-rounds` simulate a killed worker.
+    pub max_rounds: Option<usize>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            connect_timeout: Duration::from_secs(30),
+            io_timeout: Duration::from_secs(120),
+            max_rounds: None,
+        }
+    }
+}
+
+/// Retry `TcpStream::connect` until it succeeds or `timeout` elapses.
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("connecting to coordinator at {addr}: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Run one worker process (or thread): connect to the coordinator at
+/// `addr`, handshake as `client_id`, rebuild this client's exact
+/// in-process state from the config the server sends, then serve rounds
+/// until SHUTDOWN.
+///
+/// Per active round the worker runs the same three client-side stages as
+/// the in-process pipelines — batch + gradient, per-group encode
+/// (`Client::compress`), and the per-client uplink routing
+/// (`pipeline::route_message`: `drop_client` fault, seeded packet loss
+/// with EF residual repair) — and reports the outcome. The server redraws
+/// the link condition from the same seeded stream, which is what makes the
+/// clean-scenario digest bit-identical to the in-process barrier run.
+pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<()> {
+    let mut stream = connect_with_retry(addr, opts.connect_timeout)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(opts.io_timeout))?;
+
+    // HELLO → WELCOME: version + id check, then the experiment config.
+    let mut hello = Vec::with_capacity(7);
+    hello.push(MSG_HELLO);
+    hello.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    hello.extend_from_slice(&(client_id as u32).to_le_bytes());
+    write_msg(&mut stream, &hello)?;
+    let msg = read_msg(&mut stream).context("waiting for WELCOME")?;
+    let mut c = Cur::new(&msg);
+    let t = c.u8()?;
+    if t != MSG_WELCOME {
+        bail!("expected WELCOME (0x02), got message type {t:#04x}");
+    }
+    let version = c.u16()?;
+    if version != PROTO_VERSION {
+        bail!("protocol version mismatch: server speaks {version}, worker {PROTO_VERSION}");
+    }
+    let echoed = c.u32()? as usize;
+    if echoed != client_id {
+        bail!("server welcomed client {echoed}, expected {client_id}");
+    }
+    let cfg_text = std::str::from_utf8(c.rest()).context("WELCOME config is not UTF-8")?;
+    let cfg = ExperimentConfig::from_json(&Value::parse(cfg_text)?)?;
+    if client_id >= cfg.clients {
+        bail!("client id {client_id} out of range for {} clients", cfg.clients);
+    }
+
+    // Rebuild this client exactly as the in-process coordinator would:
+    // same fleet construction, same scenario engine, same spec. Everything
+    // downstream is a pure function of (cfg, params, round), so the frames
+    // this worker sends are bit-identical to the in-process encode.
+    let backend = make_backend(&cfg)?;
+    let spec = backend.model(&cfg.model)?;
+    spec.validate()?;
+    let mut me = super::build_fleet(&cfg, &spec)?.clients.swap_remove(client_id);
+    let scenario = ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed);
+    let groups = spec.groups.clone();
+
+    let mut params: Vec<f32> = Vec::new();
+    let mut active_rounds = 0usize;
+    loop {
+        let msg = read_msg(&mut stream).context("waiting for ROUND_START")?;
+        let mut c = Cur::new(&msg);
+        match c.u8()? {
+            MSG_SHUTDOWN => return Ok(()),
+            MSG_ROUND_START => {
+                let round = c.u32()? as usize;
+                let active = c.u8()? != 0;
+                let count = c.u32()? as usize;
+                if !active {
+                    // Keep-alive for a churned-out round: nothing to do.
+                    continue;
+                }
+                let bytes = c.take(
+                    count
+                        .checked_mul(4)
+                        .ok_or_else(|| anyhow!("parameter count overflow"))?,
+                )?;
+                params.clear();
+                params.reserve(count);
+                params.extend(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().expect("4 bytes"))),
+                );
+
+                // Compute → Encode → per-client uplink routing: the same
+                // stages, through the same code, as the in-process round.
+                let (x, y) = me.next_batch(spec.train_batch, cfg.seed, round as u64);
+                let out = backend.grad(&cfg.model, &params, &x, &y)?;
+                let refit_now = round % cfg.quant.estimate_every == 0;
+                let m = me.compress(&out.grads, &groups, round, cfg.seed, refit_now, out.loss);
+                let produced =
+                    pipeline::route_message(&mut me, m, &scenario, cfg.drop_client, round as u64);
+
+                let mut payload = Vec::with_capacity(14);
+                payload.push(MSG_UPLINK);
+                payload.extend_from_slice(&(round as u32).to_le_bytes());
+                payload.extend_from_slice(&(client_id as u32).to_le_bytes());
+                payload.extend_from_slice(&out.loss.to_le_bytes());
+                match produced {
+                    Produced::Arrived(m, _cond) => {
+                        payload.push(OUTCOME_ARRIVED);
+                        payload.extend_from_slice(&(m.frames.len() as u32).to_le_bytes());
+                        for (gi, frame) in &m.frames {
+                            payload.extend_from_slice(&(*gi as u32).to_le_bytes());
+                            payload.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+                            payload.extend_from_slice(frame);
+                        }
+                        me.recycle(m);
+                    }
+                    Produced::Lost { wasted } => {
+                        payload.push(OUTCOME_LOST);
+                        payload.extend_from_slice(&wasted.to_le_bytes());
+                    }
+                    Produced::Skipped => payload.push(OUTCOME_SKIPPED),
+                }
+                write_msg(&mut stream, &payload)?;
+
+                active_rounds += 1;
+                if opts.max_rounds.is_some_and(|max| active_rounds >= max) {
+                    // Simulated kill: vanish without a goodbye. The server
+                    // must detect the dead socket and take the drop path.
+                    return Ok(());
+                }
+            }
+            t => bail!("unexpected message type {t:#04x} mid-run"),
+        }
+    }
+}
+
+// -- orchestrator -----------------------------------------------------------
+
+/// Wait for spawned worker processes to exit, killing any that outlive
+/// `timeout`. Collects every failure (nonzero exit, forced kill) into one
+/// error so a partial teardown is never silent.
+pub fn teardown_workers(children: &mut [std::process::Child], timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    let mut failures = Vec::new();
+    for (i, ch) in children.iter_mut().enumerate() {
+        loop {
+            match ch.try_wait() {
+                Ok(Some(status)) => {
+                    if !status.success() {
+                        failures.push(format!("worker {i} exited with {status}"));
+                    }
+                    break;
+                }
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        let _ = ch.kill();
+                        let _ = ch.wait();
+                        failures.push(format!("worker {i} outlived the teardown deadline; killed"));
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    failures.push(format!("worker {i}: {e}"));
+                    break;
+                }
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!(failures.join("; ")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framing_roundtrip() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_msg(&mut buf, b"hello").unwrap();
+        write_msg(&mut buf, b"").unwrap();
+        assert_eq!(&buf[..4], &5u32.to_le_bytes());
+        let mut r = &buf[..];
+        assert_eq!(read_msg(&mut r).unwrap(), b"hello");
+        assert_eq!(read_msg(&mut r).unwrap(), b"");
+        assert!(read_msg(&mut r).is_err(), "stream exhausted");
+    }
+
+    #[test]
+    fn framing_rejects_oversized_prefix() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = &buf[..];
+        assert!(read_msg(&mut r).is_err());
+    }
+
+    #[test]
+    fn cursor_reads_little_endian_and_bounds_checks() {
+        let mut b = Vec::new();
+        b.push(7u8);
+        b.extend_from_slice(&0x0102u16.to_le_bytes());
+        b.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+        b.extend_from_slice(&1.5f32.to_le_bytes());
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        b.extend_from_slice(b"tail");
+        let mut c = Cur::new(&b);
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u16().unwrap(), 0x0102);
+        assert_eq!(c.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(c.f32().unwrap(), 1.5);
+        assert_eq!(c.u64().unwrap(), u64::MAX);
+        assert_eq!(c.rest(), b"tail");
+        assert!(c.u8().is_err(), "exhausted cursor must not read");
+    }
+
+    #[test]
+    fn handshake_rejects_bad_version_and_range() {
+        // A HELLO speaking a future protocol version must be refused.
+        let mut hello = Vec::new();
+        hello.push(MSG_HELLO);
+        hello.extend_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        let mut c = Cur::new(&hello);
+        assert_eq!(c.u8().unwrap(), MSG_HELLO);
+        assert_ne!(c.u16().unwrap(), PROTO_VERSION);
+    }
+}

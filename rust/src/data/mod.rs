@@ -8,7 +8,7 @@
 //!   and pixel noise. Learnable by the same MLP/CNN architectures, and —
 //!   the property the paper actually needs — training gradients on it are
 //!   heavy-tailed (verified by the Fig. 1 bench).
-//! * [`markov_corpus`] — byte-level token sequences from a seeded Markov
+//! * [`MarkovCorpus`] — byte-level token sequences from a seeded Markov
 //!   chain, for the transformer LM end-to-end example.
 //!
 //! Data is sharded across clients by contiguous ranges (the paper's
@@ -16,26 +16,34 @@
 
 use crate::util::Rng;
 
+/// Image side length (MNIST-shaped 28×28 inputs).
 pub const IMG_SIDE: usize = 28;
+/// Pixels per flattened image.
 pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+/// Number of label classes.
 pub const NUM_CLASSES: usize = 10;
 
 /// A labelled image dataset, images flattened row-major, pixels in [0, 1].
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Flattened images, `len() * IMG_PIXELS` f32s in [0, 1].
     pub images: Vec<f32>,
+    /// One label per image, in `0..NUM_CLASSES`.
     pub labels: Vec<u8>,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// Whether the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// The `i`-th flattened image.
     pub fn image(&self, i: usize) -> &[f32] {
         &self.images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]
     }
@@ -211,6 +219,7 @@ pub struct BatchSampler {
 }
 
 impl BatchSampler {
+    /// A sampler over `len` samples on the client's dedicated RNG stream.
     pub fn new(len: usize, seed: u64, client: u64) -> Self {
         let mut rng = Rng::for_stream(seed, 0xBA7C, client, 0);
         let mut order: Vec<usize> = (0..len).collect();
@@ -254,10 +263,12 @@ pub fn gather_batch(ds: &Dataset, idxs: &[usize]) -> (Vec<f32>, Vec<f32>) {
 pub struct MarkovCorpus {
     /// Transition CDF rows: `alphabet x alphabet`.
     cdf: Vec<f64>,
+    /// Number of distinct symbols.
     pub alphabet: usize,
 }
 
 impl MarkovCorpus {
+    /// A seeded corpus over `alphabet` symbols (same seed ⇒ same chain).
     pub fn new(alphabet: usize, seed: u64) -> Self {
         assert!(alphabet >= 2);
         let mut rng = Rng::for_stream(seed, 0xC0DE, alphabet as u64, 0);

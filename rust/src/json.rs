@@ -12,15 +12,22 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object; `BTreeMap` keeps key order deterministic when re-serialized.
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Parse a complete JSON document; trailing non-whitespace is an error.
     pub fn parse(text: &str) -> Result<Value> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -34,6 +41,7 @@ impl Value {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// Object field lookup; `None` for non-objects or missing keys.
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -46,6 +54,7 @@ impl Value {
         self.get(key).ok_or_else(|| anyhow!("missing key {key:?}"))
     }
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(x) => Some(*x),
@@ -53,10 +62,12 @@ impl Value {
         }
     }
 
+    /// The number truncated to `usize`, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string contents, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -64,6 +75,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -71,6 +83,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -78,6 +91,7 @@ impl Value {
         }
     }
 
+    /// The key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Some(m),
@@ -87,6 +101,9 @@ impl Value {
 
     // -- writer -------------------------------------------------------------
 
+    /// Serialize to compact JSON. Floats print via Rust's shortest-roundtrip
+    /// `Display`, so `parse(to_json(v))` recovers bit-identical numbers —
+    /// the property the TCP handshake's config exchange relies on.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -149,19 +166,22 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
-/// Convenience constructors for building JSON output.
+/// Convenience constructor: an object from `(key, value)` pairs.
 pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Convenience constructor: a number.
 pub fn num(x: f64) -> Value {
     Value::Num(x)
 }
 
+/// Convenience constructor: a string.
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }
 
+/// Convenience constructor: an array.
 pub fn arr(vs: Vec<Value>) -> Value {
     Value::Arr(vs)
 }

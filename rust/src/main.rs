@@ -7,13 +7,21 @@
 //! tqsgd solve   --gamma 4.0 --gmin 0.01 --rho 0.1 --bits 3
 //! tqsgd info
 //! tqsgd perf-check --current BENCH_perf.json [--baseline BENCH_baseline.json]
+//! tqsgd serve   --listen 127.0.0.1:7700 [--clients 3 --rounds 5 ...]
+//! tqsgd worker  --connect 127.0.0.1:7700 --client-id 0
+//! tqsgd launch  [--clients 3 --rounds 5 --verify-digest ...]
 //! ```
 
-use anyhow::{bail, Result};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
 use tqsgd::benchkit::{check_regression, Report, Table};
 use tqsgd::cli::Args;
-use tqsgd::config::{ExperimentConfig, Scheme};
-use tqsgd::coordinator::Coordinator;
+use tqsgd::config::{ExperimentConfig, PipelineMode, Scheme};
+use tqsgd::coordinator::{
+    run_worker, teardown_workers, Coordinator, TcpOptions, TcpServer, WorkerOptions,
+};
+use tqsgd::metrics::RunLog;
 use tqsgd::runtime::make_backend;
 use tqsgd::solver;
 use tqsgd::tail::{fit_gaussian, fit_laplace, fit_power_law, PowerLawModel};
@@ -28,8 +36,14 @@ fn main() -> Result<()> {
         Some("solve") => cmd_solve(&args),
         Some("info") => cmd_info(&args),
         Some("perf-check") => cmd_perf_check(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("launch") => cmd_launch(&args),
         Some(other) => {
-            bail!("unknown subcommand {other:?}; try: train sweep fit-tail solve info perf-check")
+            bail!(
+                "unknown subcommand {other:?}; try: train sweep fit-tail solve info \
+                 perf-check serve worker launch"
+            )
         }
         None => {
             println!(
@@ -40,7 +54,10 @@ fn main() -> Result<()> {
                  \x20 fit-tail  fit power-law/gaussian/laplace to real model gradients\n\
                  \x20 solve     print optimal quantizer parameters for a tail model\n\
                  \x20 info      show the selected backend and its models\n\
-                 \x20 perf-check  gate a bench JSON report against the committed baseline\n\n\
+                 \x20 perf-check  gate a bench JSON report against the committed baseline\n\
+                 \x20 serve     coordinator server: wait for TCP workers, then train\n\
+                 \x20 worker    client worker process: connect to a coordinator\n\
+                 \x20 launch    spawn N local workers + coordinator, run, tear down\n\n\
                  common flags: --model --scheme --bits --clients --rounds --lr --seed\n\
                  \x20             --backend (auto|native|pjrt) --error-feedback\n\
                  \x20             --drop-client --artifacts --preset\n\
@@ -235,6 +252,136 @@ fn cmd_perf_check(args: &Args) -> Result<()> {
         bail!("--metric {metrics:?} names no metrics; nothing was gated");
     }
     Ok(())
+}
+
+/// Parse a `--<name>-secs` style flag into a [`Duration`].
+fn secs_flag(args: &Args, name: &str, default: f64) -> Result<Duration> {
+    let secs = args.f64_or(name, default)?;
+    if !secs.is_finite() || secs <= 0.0 {
+        bail!("--{name} must be a positive number of seconds, got {secs}");
+    }
+    Ok(Duration::from_secs_f64(secs))
+}
+
+fn tcp_options(args: &Args) -> Result<TcpOptions> {
+    Ok(TcpOptions {
+        io_timeout: secs_flag(args, "io-timeout-secs", 30.0)?,
+        accept_timeout: secs_flag(args, "accept-timeout-secs", 60.0)?,
+    })
+}
+
+/// Shared tail of `serve`/`launch`: summary line, optional digest print, CSV.
+fn print_run_summary(args: &Args, log: &RunLog) -> Result<()> {
+    println!(
+        "\nfinal: acc {:.4} train_loss {:.4} bytes_up {}",
+        log.final_accuracy().unwrap_or(0.0),
+        log.final_train_loss().unwrap_or(f64::NAN),
+        log.total_bytes_up()
+    );
+    let max_dropped = log.records.iter().map(|r| r.dropped_clients).max().unwrap_or(0);
+    if max_dropped > 0 {
+        println!("faults: max {max_dropped} clients dropped in a round");
+    }
+    if args.has("print-digest") {
+        println!("replay_digest: {}", log.replay_digest());
+    }
+    if let Some(out) = args.get("out") {
+        log.save_csv(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Coordinator server mode: bind a listener, wait for `cfg.clients` worker
+/// processes to complete the handshake, then drive the round loop over TCP
+/// (wire format in `docs/PROTOCOL.md`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    println!("config: {}", cfg.id());
+    let listen = args.str_or("listen", "127.0.0.1:7700");
+    let server = TcpServer::bind(&listen, &cfg, tcp_options(args)?)?;
+    println!("listening on {} for {} workers", server.local_addr()?, cfg.clients);
+    let transport = server.accept_workers()?;
+    let backend = make_backend(&cfg)?;
+    let mut coord = Coordinator::with_transport(cfg, backend.as_ref(), Box::new(transport))?;
+    let log = coord.run_remote(true)?;
+    print_run_summary(args, &log)
+}
+
+/// Client worker mode: connect to a coordinator, receive the experiment
+/// config in the handshake, and serve compressed uplinks until told to stop.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("connect") else {
+        bail!("worker needs --connect HOST:PORT (the coordinator's listen address)");
+    };
+    if args.get("client-id").is_none() {
+        bail!("worker needs --client-id N (0-based, unique per worker)");
+    }
+    let client_id = args.usize_or("client-id", 0)?;
+    let max_rounds = args
+        .get("max-rounds")
+        .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--max-rounds {v:?}: {e}")))
+        .transpose()?;
+    let opts = WorkerOptions {
+        connect_timeout: secs_flag(args, "connect-timeout-secs", 30.0)?,
+        io_timeout: secs_flag(args, "io-timeout-secs", 120.0)?,
+        max_rounds,
+    };
+    run_worker(addr, client_id, &opts)
+}
+
+/// Orchestrator: bind an ephemeral port, spawn `cfg.clients` local worker
+/// processes (this same binary in `worker` mode), run the coordinator
+/// in-process, then tear the fleet down with a hard deadline. With
+/// `--verify-digest`, re-run the same config in-process with the barrier
+/// pipeline and fail unless the two `replay_digest()`s are bit-identical.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    println!("config: {}", cfg.id());
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let server = TcpServer::bind(&listen, &cfg, tcp_options(args)?)?;
+    let addr = server.local_addr()?.to_string();
+    println!("coordinator on {addr}; spawning {} workers", cfg.clients);
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(cfg.clients);
+    for i in 0..cfg.clients {
+        let child = std::process::Command::new(&exe)
+            .args(["worker", "--connect", &addr, "--client-id", &i.to_string()])
+            .spawn()
+            .map_err(|e| anyhow!("spawning worker {i}: {e}"))?;
+        children.push(child);
+    }
+    // Run the round loop, then tear the workers down no matter how it ended.
+    let result = {
+        let cfg = cfg.clone();
+        (move || -> Result<RunLog> {
+            let transport = server.accept_workers()?;
+            let backend = make_backend(&cfg)?;
+            let mut coord =
+                Coordinator::with_transport(cfg, backend.as_ref(), Box::new(transport))?;
+            coord.run_remote(true)
+        })()
+    };
+    let teardown =
+        teardown_workers(&mut children, secs_flag(args, "teardown-timeout-secs", 10.0)?);
+    let log = result?;
+    teardown?;
+    let digest = log.replay_digest();
+    if args.has("verify-digest") {
+        let mut ref_cfg = cfg;
+        ref_cfg.pipeline = PipelineMode::Barrier;
+        let backend = make_backend(&ref_cfg)?;
+        let mut coord = Coordinator::new(ref_cfg, backend.as_ref())?;
+        let ref_digest = coord.run(false)?.replay_digest();
+        if digest != ref_digest {
+            bail!(
+                "digest mismatch: multi-process run != in-process barrier\n  \
+                 tcp:     {digest}\n  barrier: {ref_digest}"
+            );
+        }
+        println!("digest parity: multi-process == in-process barrier (bit-identical)");
+    }
+    print_run_summary(args, &log)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

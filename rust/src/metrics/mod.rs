@@ -14,12 +14,15 @@ use crate::json::{self, Value};
 /// One communication round's record.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// Round index (0-based).
     pub round: usize,
+    /// Mean training loss over the round's participating clients.
     pub train_loss: f64,
     /// Bytes shipped client→server this round (all clients, goodput).
     pub bytes_up: u64,
-    /// Evaluation (if run this round).
+    /// Evaluation loss (if evaluation ran this round).
     pub test_loss: Option<f64>,
+    /// Evaluation accuracy (if evaluation ran this round).
     pub test_accuracy: Option<f64>,
     /// Wall-clock seconds spent in this round.
     pub secs: f64,
@@ -50,23 +53,29 @@ pub struct RoundRecord {
 /// Full run log.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
+    /// One record per completed round, in round order.
     pub records: Vec<RoundRecord>,
+    /// Short config id (see `ExperimentConfig::id`) stamped on JSONL rows.
     pub config_id: String,
 }
 
 impl RunLog {
+    /// Append one round's record.
     pub fn push(&mut self, r: RoundRecord) {
         self.records.push(r);
     }
 
+    /// Total client→server goodput bytes across all rounds.
     pub fn total_bytes_up(&self) -> u64 {
         self.records.iter().map(|r| r.bytes_up).sum()
     }
 
+    /// The most recent evaluation accuracy, if any round evaluated.
     pub fn final_accuracy(&self) -> Option<f64> {
         self.records.iter().rev().find_map(|r| r.test_accuracy)
     }
 
+    /// The best evaluation accuracy seen across the run.
     pub fn best_accuracy(&self) -> Option<f64> {
         self.records
             .iter()
@@ -74,6 +83,7 @@ impl RunLog {
             .fold(None, |m, a| Some(m.map_or(a, |m: f64| m.max(a))))
     }
 
+    /// The last round's training loss.
     pub fn final_train_loss(&self) -> Option<f64> {
         self.records.last().map(|r| r.train_loss)
     }
@@ -86,6 +96,7 @@ impl RunLog {
             .collect()
     }
 
+    /// Render every record as CSV (header + one line per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "round,train_loss,bytes_up,test_loss,test_accuracy,secs,net_secs,\
@@ -113,6 +124,7 @@ impl RunLog {
         s
     }
 
+    /// Render every record as one JSON object per line.
     pub fn to_jsonl(&self) -> String {
         let mut s = String::new();
         for r in &self.records {
@@ -169,6 +181,7 @@ impl RunLog {
         s
     }
 
+    /// Write [`RunLog::to_csv`] to `path`.
     pub fn save_csv(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {path:?}"))?;
@@ -197,10 +210,12 @@ pub fn fmt_staleness_hist(hist: &[u32]) -> String {
 pub struct Timer(Instant);
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Timer {
         Timer(Instant::now())
     }
 
+    /// Seconds elapsed since [`Timer::start`].
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }

@@ -11,13 +11,17 @@
 /// θ ← θ − η v
 /// ```
 pub struct MomentumSgd {
+    /// Learning rate η.
     pub lr: f64,
+    /// Momentum coefficient μ ∈ [0, 1).
     pub momentum: f64,
+    /// L2 weight-decay coefficient λ.
     pub weight_decay: f64,
     velocity: Vec<f32>,
 }
 
 impl MomentumSgd {
+    /// A fresh optimizer for a `dim`-element parameter vector (zero velocity).
     pub fn new(dim: usize, lr: f64, momentum: f64, weight_decay: f64) -> Self {
         assert!(lr > 0.0 && (0.0..1.0).contains(&momentum) && weight_decay >= 0.0);
         MomentumSgd { lr, momentum, weight_decay, velocity: vec![0.0; dim] }
@@ -37,6 +41,7 @@ impl MomentumSgd {
         }
     }
 
+    /// Override the learning rate (the schedule calls this per round).
     pub fn set_lr(&mut self, lr: f64) {
         self.lr = lr;
     }
@@ -45,6 +50,7 @@ impl MomentumSgd {
 /// Learning-rate schedule.
 #[derive(Clone, Copy, Debug)]
 pub enum LrSchedule {
+    /// The base learning rate at every round.
     Constant,
     /// Multiply by `factor` every `every` rounds.
     Step { every: usize, factor: f64 },
@@ -53,6 +59,7 @@ pub enum LrSchedule {
 }
 
 impl LrSchedule {
+    /// The learning rate this schedule yields at `round` given `base`.
     pub fn lr_at(&self, base: f64, round: usize) -> f64 {
         match *self {
             LrSchedule::Constant => base,

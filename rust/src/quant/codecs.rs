@@ -29,6 +29,7 @@ use super::wire;
 /// A gradient compressor: stateful (distribution estimates), one per
 /// (client, layer-group).
 pub trait Compressor: Send {
+    /// Which compression scheme this codec implements.
     fn scheme(&self) -> Scheme;
 
     /// Update distribution state from a fresh local gradient.

@@ -24,6 +24,7 @@ pub struct ErrorFeedback {
 }
 
 impl ErrorFeedback {
+    /// Wrap `inner` with a zero residual (sized lazily on first compress).
     pub fn new(inner: Box<dyn Compressor>) -> Self {
         ErrorFeedback {
             inner,
@@ -77,14 +78,17 @@ impl ErrorFeedback {
         }
     }
 
+    /// Re-estimate the inner codec's tail model (see [`Compressor::refit`]).
     pub fn refit(&mut self, grads: &[f32]) {
         self.inner.refit(grads);
     }
 
+    /// The inner codec's scheme.
     pub fn scheme(&self) -> Scheme {
         self.inner.scheme()
     }
 
+    /// Human-readable codec description, marked as EF-wrapped.
     pub fn describe(&self) -> String {
         format!("ef[{}]", self.inner.describe())
     }

@@ -59,6 +59,7 @@ impl Payload {
         }
     }
 
+    /// Whether the frame reconstructs zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -110,6 +111,9 @@ impl Payload {
         out
     }
 
+    /// Parse a frame produced by [`Payload::encode`]: validates the magic,
+    /// kind byte and every length field before allocating. The byte layout
+    /// per kind is specified normatively in `docs/PROTOCOL.md`.
     pub fn decode(bytes: &[u8]) -> Result<Payload> {
         let mut r = Reader { b: bytes, i: 0 };
         if r.u16()? != MAGIC {

@@ -11,16 +11,22 @@ use crate::json::Value;
 /// One tensor in an artifact signature.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter name in the exported signature.
     pub name: String,
+    /// Element dtype, e.g. `"f32"`.
     pub dtype: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 
 /// One AOT entry point.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Compiled artifact filename, relative to the artifacts directory.
     pub file: String,
+    /// Input tensor signature.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signature.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -29,33 +35,47 @@ pub struct ArtifactSpec {
 /// independently (Sec. V).
 #[derive(Clone, Debug, PartialEq)]
 pub struct GroupRange {
+    /// Group name, e.g. `"conv"`, `"fc"`, `"emb"`.
     pub group: String,
+    /// First parameter index (inclusive).
     pub start: usize,
+    /// One past the last parameter index (exclusive).
     pub end: usize,
 }
 
 /// One exported model.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
+    /// Model family: `"classifier"` or `"lm"`.
     pub kind: String,
+    /// Total flat parameter count.
     pub param_count: usize,
+    /// Quantization-group ranges covering `[0, param_count)`.
     pub groups: Vec<GroupRange>,
+    /// Per-client training batch size.
     pub train_batch: usize,
+    /// Evaluation batch size.
     pub eval_batch: usize,
     /// Classifier: flat input dim. LM: 0.
     pub input_dim: usize,
     /// LM: context length. Classifier: 0.
     pub seq_len: usize,
+    /// LM: vocabulary size. Classifier: number of classes.
     pub vocab: usize,
+    /// Initial-parameters file, relative to the artifacts directory.
     pub init_file: String,
+    /// Artifact name of the (loss, grads) entry point.
     pub grad_entry: String,
+    /// Artifact name of the evaluation entry point.
     pub eval_entry: String,
 }
 
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Compiled entry points by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Exported models by name.
     pub models: BTreeMap<String, ModelSpec>,
     /// Flat tile size for the standalone quantizer artifacts.
     pub quant_tile: usize,
@@ -82,6 +102,7 @@ fn tensor_list(v: &Value) -> Result<Vec<TensorSpec>> {
 }
 
 impl Manifest {
+    /// Parse a manifest from its JSON document.
     pub fn parse(v: &Value) -> Result<Manifest> {
         let mut artifacts = BTreeMap::new();
         for (name, a) in v.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts must be object"))? {
@@ -136,6 +157,7 @@ impl Manifest {
         Ok(Manifest { artifacts, models, quant_tile })
     }
 
+    /// Load and parse `manifest.json` from `path`.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {path:?}"))?;

@@ -110,8 +110,11 @@ pub fn uniform_codebook(alpha: f64, s: usize) -> Vec<f32> {
 /// The solved BiScaled design (Appendix D).
 #[derive(Clone, Debug)]
 pub struct BiScaledDesign {
+    /// Truncation threshold α*.
     pub alpha: f64,
+    /// Inner/outer scale split point β*.
     pub beta: f64,
+    /// Optimal interval-allocation ratio k*.
     pub k: f64,
     /// Inner intervals on [−β, β].
     pub s_beta: usize,

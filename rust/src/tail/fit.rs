@@ -8,6 +8,7 @@ use crate::util::math::{laplace_cdf, normal_cdf};
 /// Result of fitting one family to a gradient sample.
 #[derive(Clone, Debug)]
 pub struct FitReport {
+    /// Fitted family name: `"power-law"`, `"gaussian"` or `"laplace"`.
     pub family: &'static str,
     /// Family parameters: power-law (γ, g_min, ρ); gaussian (μ, σ);
     /// laplace (μ, b).

@@ -22,10 +22,12 @@ pub struct LogHistogram {
     pub underflow: u64,
     /// Samples above `hi` (not binned).
     pub overflow: u64,
+    /// Total samples seen (binned + underflow + overflow).
     pub total: u64,
 }
 
 impl LogHistogram {
+    /// An empty histogram with `bins` log-spaced bins on `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(lo > 0.0 && hi > lo && bins > 0);
         let l0 = lo.ln();
@@ -36,6 +38,7 @@ impl LogHistogram {
         LogHistogram { edges, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
     }
 
+    /// Bin one sample by |x|.
     pub fn add(&mut self, x: f64) {
         let a = x.abs();
         self.total += 1;
@@ -63,6 +66,7 @@ impl LogHistogram {
         self.counts[i] += 1;
     }
 
+    /// Bin every sample in `xs`.
     pub fn extend(&mut self, xs: &[f32]) {
         for &x in xs {
             self.add(x as f64);

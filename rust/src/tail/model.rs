@@ -16,6 +16,7 @@
 
 use crate::util::math::integrate;
 
+/// The paper's symmetric power-law gradient model (Definition 1 / Eq. 10).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PowerLawModel {
     /// Tail index γ (paper assumes 3 < γ ≤ 5 for finite E_TQ).
@@ -27,6 +28,8 @@ pub struct PowerLawModel {
 }
 
 impl PowerLawModel {
+    /// A model with tail index `gamma`, cutoff `g_min` and tail mass `rho`;
+    /// panics on parameters outside the paper's admissible ranges.
     pub fn new(gamma: f64, g_min: f64, rho: f64) -> Self {
         assert!(gamma > 1.0, "gamma must exceed 1, got {gamma}");
         assert!(g_min > 0.0, "g_min must be positive");

@@ -51,6 +51,7 @@ impl Rng {
         Rng::new(hash_seed(&[seed, role, index, round]))
     }
 
+    /// Next raw 64-bit output (xoshiro256**).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -475,7 +475,7 @@ fn lossy_scenario_retransmits_and_accounts_bytes() {
         retrans += rec.retransmitted_bytes;
     }
     assert!(retrans > 0, "20% loss over 40 uplinks must retransmit something");
-    assert_eq!(coord.net.total_retransmitted, retrans);
+    assert_eq!(coord.net.total_retransmitted(), retrans);
 }
 
 #[test]

@@ -1,0 +1,222 @@
+//! Multi-process transport contracts (see `docs/PROTOCOL.md` and
+//! `docs/DETERMINISM.md`):
+//!
+//! 1. every `quant::wire` frame kind survives a real loopback-TCP transit
+//!    byte-for-byte, pinned against the same golden fixtures as
+//!    `quant_props.rs`;
+//! 2. a 3-worker × 5-round run over real sockets produces a
+//!    `RunLog::replay_digest()` and final parameters bit-identical to the
+//!    in-process barrier pipeline (the tcp == in-process invariant);
+//! 3. killing a worker mid-run takes the server's existing drop/reweight
+//!    path — the run finishes (no hang), records `dropped_clients`, and
+//!    the parameters stay finite.
+//!
+//! Workers here run as threads calling the same [`run_worker`] entrypoint
+//! the `tqsgd worker` subcommand uses; the CI smoke job covers the real
+//! process-per-worker topology via `tqsgd launch --verify-digest`.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use tqsgd::config::{ExperimentConfig, PipelineMode, Scheme};
+use tqsgd::coordinator::{run_worker, Coordinator, TcpOptions, TcpServer, WorkerOptions};
+use tqsgd::quant::wire::Payload;
+use tqsgd::runtime::{backend_for, Backend};
+
+fn native() -> Box<dyn Backend> {
+    backend_for("native", "unused").unwrap()
+}
+
+/// A small but real experiment: the paper's nonuniform scheme at 3 bits so
+/// uplinks carry codebook frames, with enough data per client to train.
+fn tcp_cfg(clients: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = Scheme::Tnqsgd;
+    cfg.quant.bits = 3;
+    cfg.clients = clients;
+    cfg.rounds = rounds;
+    cfg.train_size = 384;
+    cfg.test_size = 96;
+    cfg.seed = 11;
+    cfg.net.bandwidth_bytes_per_sec = 1e6;
+    cfg.net.latency_sec = 0.01;
+    cfg
+}
+
+/// Generous on a healthy loopback, tight enough that a genuine deadlock
+/// fails the test instead of hanging the suite.
+fn test_opts() -> TcpOptions {
+    TcpOptions { io_timeout: Duration::from_secs(30), accept_timeout: Duration::from_secs(30) }
+}
+
+/// The golden wire fixtures from `quant_props.rs`, restated so a drift in
+/// either copy breaks a test: (payload, exact on-the-wire bytes).
+fn golden_frames() -> Vec<(Payload, Vec<u8>)> {
+    vec![
+        (
+            Payload::Raw(vec![1.0, -2.0]),
+            vec![
+                0x54, 0x51, // magic "TQ"
+                0x00, // kind: raw
+                0x00, // bits
+                0x02, 0x00, 0x00, 0x00, // d = 2
+                0x00, 0x00, 0x80, 0x3F, // 1.0f32
+                0x00, 0x00, 0x00, 0xC0, // -2.0f32
+            ],
+        ),
+        (
+            Payload::Uniform { alpha: 1.0, s: 7, idx: vec![0, 3, 7, 5] },
+            vec![
+                0x54, 0x51, // magic
+                0x01, // kind: uniform
+                0x03, // 3 bits per index
+                0x04, 0x00, 0x00, 0x00, // d = 4
+                0x00, 0x00, 0x80, 0x3F, // alpha = 1.0
+                0x07, 0x00, // s = 7
+                0xD8, 0x0B, // indices 0,3,7,5 packed LSB-first
+            ],
+        ),
+        (
+            Payload::Codebook { levels: vec![-0.5, 0.0, 0.5], idx: vec![2, 0, 1] },
+            vec![
+                0x54, 0x51, // magic
+                0x02, // kind: codebook
+                0x02, // 2 bits per index
+                0x03, 0x00, 0x00, 0x00, // d = 3
+                0x03, 0x00, // 3 levels
+                0x00, 0x00, 0x00, 0xBF, // -0.5f32
+                0x00, 0x00, 0x00, 0x00, // 0.0f32
+                0x00, 0x00, 0x00, 0x3F, // 0.5f32
+                0x12, // indices 2,0,1 packed LSB-first
+            ],
+        ),
+        (
+            Payload::Sparse { d: 6, pairs: vec![(1, 1.5), (4, -0.25)] },
+            vec![
+                0x54, 0x51, // magic
+                0x03, // kind: sparse
+                0x00, // bits
+                0x06, 0x00, 0x00, 0x00, // d = 6
+                0x02, 0x00, 0x00, 0x00, // k = 2
+                0x01, 0x00, 0x00, 0x00, // index 1
+                0x04, 0x00, 0x00, 0x00, // index 4
+                0x00, 0x00, 0xC0, 0x3F, // 1.5f32
+                0x00, 0x00, 0x80, 0xBE, // -0.25f32
+            ],
+        ),
+    ]
+}
+
+/// Every frame kind, length-prefixed exactly as the transport frames it,
+/// across a real TCP socket: the bytes and the decoded payload must both
+/// come back unchanged.
+#[test]
+fn loopback_tcp_roundtrips_every_golden_frame_kind() {
+    let fixtures = golden_frames();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sender = {
+        let frames: Vec<Vec<u8>> = fixtures.iter().map(|(_, b)| b.clone()).collect();
+        thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            for f in &frames {
+                s.write_all(&(f.len() as u32).to_le_bytes()).unwrap();
+                s.write_all(f).unwrap();
+            }
+        })
+    };
+    let (mut conn, _) = listener.accept().unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for (expect, golden) in &fixtures {
+        let mut len = [0u8; 4];
+        conn.read_exact(&mut len).unwrap();
+        let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+        conn.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, golden, "frame bytes changed in TCP transit");
+        let decoded = Payload::decode(&buf).expect("frame must decode after transit");
+        assert_eq!(&decoded, expect, "decoded payload diverged after transit");
+    }
+    sender.join().unwrap();
+}
+
+/// The tentpole acceptance test: same seed + config, three real workers
+/// over TCP vs the in-process barrier pipeline — replay digest and every
+/// final parameter bit must match.
+#[test]
+fn tcp_run_matches_in_process_barrier_bit_for_bit() {
+    let cfg = tcp_cfg(3, 5);
+    let server = TcpServer::bind("127.0.0.1:0", &cfg, test_opts()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..cfg.clients)
+        .map(|id| {
+            let addr = addr.clone();
+            thread::spawn(move || run_worker(&addr, id, &WorkerOptions::default()))
+        })
+        .collect();
+    let transport = server.accept_workers().unwrap();
+    let backend = native();
+    let mut coord =
+        Coordinator::with_transport(cfg.clone(), backend.as_ref(), Box::new(transport)).unwrap();
+    let log = coord.run_remote(false).unwrap();
+    for w in workers {
+        w.join().expect("worker thread panicked").expect("worker must exit cleanly");
+    }
+
+    let mut ref_cfg = cfg;
+    ref_cfg.pipeline = PipelineMode::Barrier;
+    let mut ref_coord = Coordinator::new(ref_cfg, backend.as_ref()).unwrap();
+    let ref_log = ref_coord.run(false).unwrap();
+    assert_eq!(
+        log.replay_digest(),
+        ref_log.replay_digest(),
+        "multi-process digest diverged from in-process barrier"
+    );
+    assert_eq!(coord.params.len(), ref_coord.params.len());
+    for (i, (a, b)) in coord.params.iter().zip(&ref_coord.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} diverged ({a} vs {b})");
+    }
+}
+
+/// Kill one worker after two rounds: the server must detect the dead
+/// socket, finish every remaining round with the survivors (drop path, no
+/// hang), record the drop in `dropped_clients`, and keep the parameters
+/// finite.
+#[test]
+fn killed_worker_takes_the_drop_path_without_hanging() {
+    let cfg = tcp_cfg(3, 5);
+    let opts = TcpOptions { io_timeout: Duration::from_secs(10), ..test_opts() };
+    let server = TcpServer::bind("127.0.0.1:0", &cfg, opts).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..cfg.clients)
+        .map(|id| {
+            let addr = addr.clone();
+            // Worker 2 vanishes after two active rounds — no goodbye, just
+            // a dead socket, like a SIGKILL mid-run.
+            let wopts = WorkerOptions {
+                max_rounds: if id == 2 { Some(2) } else { None },
+                ..WorkerOptions::default()
+            };
+            thread::spawn(move || run_worker(&addr, id, &wopts))
+        })
+        .collect();
+    let transport = server.accept_workers().unwrap();
+    let backend = native();
+    let mut coord =
+        Coordinator::with_transport(cfg.clone(), backend.as_ref(), Box::new(transport)).unwrap();
+    let log = coord.run_remote(false).unwrap();
+    for w in workers {
+        w.join().expect("worker thread panicked").expect("worker must exit cleanly");
+    }
+
+    assert_eq!(log.records.len(), cfg.rounds, "the run must finish every round");
+    assert!(
+        log.records.iter().skip(2).all(|r| r.dropped_clients >= 1),
+        "a killed worker must surface as dropped_clients from its death round on"
+    );
+    assert!(log.records.iter().all(|r| r.train_loss.is_finite()));
+    assert!(coord.params.iter().all(|p| p.is_finite()), "params must stay finite under the fault");
+}
