@@ -1,0 +1,164 @@
+//! §Perf — million-client-round scale machinery: the two-tier aggregator
+//! tree (`coordinator::aggregate::accumulate_two_tier`) and the cohort
+//! sampling + parked-residual memory path.
+//!
+//! * mid-tier decode→re-encode→fuse throughput over synthetic dense
+//!   contributions (`tier_agg_melems_per_s`), with a flat-path reference
+//!   column so the tree's overhead is visible;
+//! * cohort-round memory footprint: `bytes_per_client` after a short
+//!   error-feedback run with an engaged cohort, reported raw and inverted
+//!   as `cohort_clients_per_mib` (clients a mid-tier node can park per MiB
+//!   — higher is better, which is what `tqsgd perf-check` gates);
+//! * a cohort K=N bit-identity spot check, mirroring the degraded-mode
+//!   checks in `perf_round` — the timed machinery must not drift from the
+//!   full-participation reference.
+//!
+//! Regenerate with `cargo bench --bench perf_scale`; CI runs `-- --quick`
+//! with `TQSGD_BENCH_JSON=BENCH_perf_scale.json` and gates
+//! `tier_agg_melems_per_s` + `cohort_clients_per_mib` against
+//! `BENCH_baseline.json` (`tqsgd perf-check`). Refresh the baseline on real
+//! hardware with
+//! `TQSGD_BENCH_JSON=BENCH_perf_scale.json cargo bench --bench perf_scale -- --quick`
+//! and merge the metrics into the committed file.
+
+use tqsgd::benchkit::{bench, section, BenchOpts, Report, Table};
+use tqsgd::config::{ExperimentConfig, Scheme};
+use tqsgd::coordinator::aggregate::{
+    accumulate_sharded, accumulate_two_tier, ContributionData, WeightedContribution,
+};
+use tqsgd::coordinator::Coordinator;
+use tqsgd::metrics::RunLog;
+use tqsgd::runtime::{backend_for, GroupRange};
+
+/// Synthetic aggregation workload: `items` dense contributions over `dim`
+/// elements split into `ngroups` equal layer groups.
+fn synthetic(dim: usize, ngroups: usize, items: usize) -> (Vec<GroupRange>, Vec<Vec<f32>>) {
+    let per = dim / ngroups;
+    let groups = (0..ngroups)
+        .map(|g| GroupRange { group: format!("g{g}"), start: g * per, end: (g + 1) * per })
+        .collect();
+    let dense = (0..items)
+        .map(|j| (0..dim).map(|e| ((j * 31 + e) % 97) as f32 * 0.02 - 0.96).collect())
+        .collect();
+    (groups, dense)
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("perf_scale", &opts);
+    let backend = backend_for("native", "unused")?;
+    let (warmup, runs) = if opts.quick { (2, 8) } else { (4, 24) };
+
+    // -- Cohort K=N bit-identity spot check (cheap, always run) ------------
+    section("cohort K=N vs disabled-cohort bit-identity spot check");
+    {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "mlp_tiny".into();
+        cfg.backend = "native".into();
+        cfg.quant.scheme = Scheme::Tnqsgd;
+        cfg.quant.bits = 3;
+        cfg.clients = 4;
+        cfg.train_size = 384;
+        cfg.test_size = 96;
+        cfg.seed = 11;
+        let digest = |cfg: &ExperimentConfig| -> anyhow::Result<String> {
+            let mut coord = Coordinator::new(cfg.clone(), backend.as_ref())?;
+            let mut log = RunLog::default();
+            for _ in 0..3 {
+                log.push(coord.step()?);
+            }
+            Ok(log.replay_digest())
+        };
+        let reference = digest(&cfg)?;
+        cfg.cohort_k = cfg.clients;
+        assert_eq!(reference, digest(&cfg)?, "cohort K=N must be bit-identical to disabled");
+        println!("  K=N: digest bit-identical to full participation over 3 rounds");
+    }
+
+    // -- Two-tier aggregation throughput -----------------------------------
+    let (dim, ngroups, items) = if opts.quick { (65_536, 8, 36) } else { (262_144, 8, 64) };
+    section(&format!(
+        "two-tier aggregation throughput (dim {dim}, {ngroups} groups, {items} contributions)"
+    ));
+    let (groups, dense) = synthetic(dim, ngroups, items);
+    let contribs: Vec<WeightedContribution<'_>> = dense
+        .iter()
+        .map(|d| WeightedContribution {
+            data: ContributionData::Dense(&d[..]),
+            w: 1.0 / items as f32,
+        })
+        .collect();
+    let quant = {
+        let mut q = ExperimentConfig::default().quant;
+        q.scheme = Scheme::Qsgd;
+        q.bits = 4;
+        q
+    };
+    let shards = 4usize;
+    let elems = dim * items;
+    let mut agg = vec![0.0f32; dim];
+    let mut t = Table::new(&["path", "call", "Melems/s", "tier bytes"]);
+
+    let flat = bench(warmup, runs, || {
+        accumulate_sharded(&groups, &contribs, &mut agg, shards).expect("flat aggregate");
+    });
+    t.row(&[
+        "flat (reference)".into(),
+        flat.pretty(),
+        format!("{:.1}", flat.melems_per_s(elems)),
+        "0".into(),
+    ]);
+
+    let mut round = 0u64;
+    let mut tier_bytes = 0u64;
+    let tiered = bench(warmup, runs, || {
+        tier_bytes =
+            accumulate_two_tier(&groups, &contribs, &mut agg, shards, &quant, 7, round)
+                .expect("two-tier aggregate");
+        round += 1;
+    });
+    t.row(&[
+        "two-tier (qsgd b4)".into(),
+        tiered.pretty(),
+        format!("{:.1}", tiered.melems_per_s(elems)),
+        tier_bytes.to_string(),
+    ]);
+    assert!(tier_bytes > 0, "the tree must have re-encoded mid-tier partial sums");
+    t.print();
+    report.metric("tier_agg_melems_per_s", tiered.melems_per_s(elems));
+    report.metric("tier_agg_flat_ratio", tiered.melems_per_s(elems) / flat.melems_per_s(elems));
+    report.table("two-tier aggregation throughput", &t);
+
+    // -- Cohort-round memory footprint --------------------------------------
+    section("cohort-round per-client memory (mlp, N=8, K=3, error feedback)");
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = Scheme::Tqsgd;
+    cfg.quant.bits = 3;
+    cfg.quant.error_feedback = true;
+    cfg.clients = 8;
+    cfg.cohort_k = 3;
+    cfg.agg_tiers = 2;
+    cfg.train_size = 2048;
+    cfg.test_size = 256;
+    cfg.seed = 7;
+    let mut coord = Coordinator::new(cfg, backend.as_ref())?;
+    let mut bytes_per_client = 0u64;
+    for _ in 0..4 {
+        bytes_per_client = coord.step()?.bytes_per_client;
+    }
+    assert!(bytes_per_client > 0, "memory metric must be recorded");
+    let clients_per_mib = (1u64 << 20) as f64 / bytes_per_client as f64;
+    let mut m = Table::new(&["metric", "value"]);
+    m.row(&["bytes_per_client".into(), bytes_per_client.to_string()]);
+    m.row(&["cohort_clients_per_mib".into(), format!("{clients_per_mib:.2}")]);
+    m.row(&["tier_uplink_bytes (4 rounds)".into(), coord.tier_uplink_bytes().to_string()]);
+    m.print();
+    report.metric("bytes_per_client", bytes_per_client as f64);
+    report.metric("cohort_clients_per_mib", clients_per_mib);
+    report.table("cohort-round per-client memory", &m);
+
+    report.finish(&opts)?;
+    Ok(())
+}

@@ -380,6 +380,17 @@ pub struct ExperimentConfig {
     /// pipeline that overlaps client encode with server decode. A pure
     /// performance knob — the two modes are bit-identical.
     pub pipeline: PipelineMode,
+    /// Per-round cohort size K: each round only K of the N clients compute
+    /// and uplink, drawn from a dedicated seeded RNG stream so the draw
+    /// composes with churn/straggler/staleness without shifting their
+    /// streams. 0 (or any K >= N) = full participation — that path skips
+    /// the draw entirely and is bit-identical to the pre-cohort engine.
+    pub cohort_k: usize,
+    /// Aggregator-tree depth: 1 = the flat server aggregation; 2 = mid-tier
+    /// nodes fuse-decode their cohort slice and re-encode the quantized
+    /// partial sum uplink through the configured codec (unbiased, so the
+    /// expected aggregate is unchanged — see `coordinator::aggregate`).
+    pub agg_tiers: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -403,6 +414,8 @@ impl Default for ExperimentConfig {
             drop_client: usize::MAX,
             agg_shards: 0,
             pipeline: PipelineMode::default(),
+            cohort_k: 0,
+            agg_tiers: 1,
         }
     }
 }
@@ -470,6 +483,9 @@ impl ExperimentConfig {
         if !matches!(self.backend.as_str(), "auto" | "native" | "pjrt") {
             bail!("backend must be auto | native | pjrt, got {:?}", self.backend);
         }
+        if self.agg_tiers == 0 || self.agg_tiers > 2 {
+            bail!("agg_tiers must be 1 (flat) or 2 (mid-tier re-encode), got {}", self.agg_tiers);
+        }
         self.scenario.validate()?;
         Ok(())
     }
@@ -508,6 +524,8 @@ impl ExperimentConfig {
         if let Some(p) = args.get("pipeline") {
             self.pipeline = PipelineMode::parse(p)?;
         }
+        self.cohort_k = args.usize_or("cohort-k", self.cohort_k)?;
+        self.agg_tiers = args.usize_or("agg-tiers", self.agg_tiers)?;
         // Scenario: `--scenario <preset>` selects a base, then freeform
         // flags override individual fields on top of it.
         if let Some(name) = args.get("scenario") {
@@ -553,6 +571,8 @@ impl ExperimentConfig {
             })),
             ("agg_shards", json::num(self.agg_shards as f64)),
             ("pipeline", json::s(self.pipeline.name())),
+            ("cohort_k", json::num(self.cohort_k as f64)),
+            ("agg_tiers", json::num(self.agg_tiers as f64)),
             (
                 "quant",
                 json::obj(vec![
@@ -604,6 +624,10 @@ impl ExperimentConfig {
         if let Some(p) = v.get("pipeline").and_then(Value::as_str) {
             cfg.pipeline = PipelineMode::parse(p)?;
         }
+        // Older configs without the fields run full-participation and flat
+        // aggregation (cohort_k <= 0 saturates to 0 = everyone).
+        cfg.cohort_k = getf("cohort_k", cfg.cohort_k as f64).max(0.0) as usize;
+        cfg.agg_tiers = getf("agg_tiers", cfg.agg_tiers as f64).max(0.0) as usize;
         if let Some(q) = v.get("quant") {
             if let Some(s) = q.get("scheme").and_then(Value::as_str) {
                 cfg.quant.scheme = Scheme::parse(s)?;
@@ -723,6 +747,8 @@ mod tests {
         c.backend = "native".into();
         c.agg_shards = 4;
         c.pipeline = PipelineMode::Streaming;
+        c.cohort_k = 3;
+        c.agg_tiers = 2;
         let j = c.to_json().to_json();
         let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.model, "mlp");
@@ -733,11 +759,34 @@ mod tests {
         assert_eq!(c2.backend, "native");
         assert_eq!(c2.agg_shards, 4);
         assert_eq!(c2.pipeline, PipelineMode::Streaming);
+        assert_eq!(c2.cohort_k, 3);
+        assert_eq!(c2.agg_tiers, 2);
         assert!((c2.net.latency_sec - 0.01).abs() < 1e-12);
-        // Older configs without the fields default to auto / barrier.
+        // Older configs without the fields default to auto / barrier /
+        // full participation / flat aggregation.
         let legacy = ExperimentConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
         assert_eq!(legacy.agg_shards, 0);
         assert_eq!(legacy.pipeline, PipelineMode::Barrier);
+        assert_eq!(legacy.cohort_k, 0);
+        assert_eq!(legacy.agg_tiers, 1);
+    }
+
+    #[test]
+    fn cohort_and_tier_flags_parse_and_validate() {
+        let mut c = ExperimentConfig::default();
+        let args = crate::cli::Args::parse(
+            ["x", "--cohort-k", "5", "--agg-tiers", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.cohort_k, 5);
+        assert_eq!(c.agg_tiers, 2);
+        // Scale knobs must not change the run id (same experiment family).
+        assert_eq!(c.id(), ExperimentConfig::default().id());
+        c.agg_tiers = 0;
+        assert!(c.validate().is_err(), "agg_tiers = 0 must be rejected");
+        c.agg_tiers = 3;
+        assert!(c.validate().is_err(), "agg_tiers > 2 must be rejected");
     }
 
     #[test]

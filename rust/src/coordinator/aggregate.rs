@@ -49,8 +49,15 @@ use std::cmp::Reverse;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::quant::wire;
+use crate::config::QuantConfig;
+use crate::quant::{make_compressor, wire};
 use crate::runtime::GroupRange;
+use crate::util::Rng;
+
+/// RNG stream role for the mid-tier partial-sum re-encode draws: dedicated
+/// so tier quantization composes with every other seeded stream (client
+/// compress, scenario, parking) without shifting their draws.
+const ROLE_TIER: u64 = 0x7E1A;
 
 /// One applied uplink in the fixed apply order: a message's per-group
 /// frames (exactly as carried by [`Message`](super::Message)) and its
@@ -270,6 +277,81 @@ pub fn accumulate_sharded(
     Ok(())
 }
 
+/// Two-tier aggregator tree: the million-client round's server side.
+///
+/// The contributions are split into `ceil(sqrt(n))` contiguous chunks of
+/// the fixed apply order. Each mid-tier node runs the existing fused
+/// decode-accumulate shards ([`accumulate_sharded`]) over its chunk, then
+/// **re-encodes the partial sum uplink** through the configured
+/// [`Compressor`](crate::quant::Compressor) — one wire frame per layer
+/// group, refit onto the partial sum's own scale, compressed with a
+/// dedicated seeded stream per `(node, group, round)`. The top tier fuses
+/// those partial-sum frames into `agg` at weight 1.0.
+///
+/// **Unbiasedness.** The input weights are already normalized over the
+/// full apply set, so the exact chunk partials sum to the flat aggregate.
+/// With an unbiased quantizer (stochastic rounding — QSGD and the paper's
+/// truncated family inside the truncation range), `E[Q(p_j)] = p_j`, and
+/// the tiers being independent draws gives `E[Σ_j Q(p_j)] = Σ_j p_j`: the
+/// expected aggregate is the flat one, with per-element variance the sum
+/// of the per-node quantizer variances — the claim pinned by the property
+/// suite (`rust/tests/cohort_props.rs`). The tree changes the aggregate's
+/// exact bits (re-quantization + a different f32 association), which is
+/// why `agg_tiers = 2` is an explicit opt-in, not a default.
+///
+/// Returns the total re-encoded partial-sum bytes (the tree's interior
+/// uplink traffic). These are *not* folded into the round's `bytes_up` —
+/// that column is client uplink traffic, and the digest pins it.
+pub fn accumulate_two_tier(
+    groups: &[GroupRange],
+    items: &[WeightedContribution<'_>],
+    agg: &mut [f32],
+    shards: usize,
+    quant: &QuantConfig,
+    seed: u64,
+    round: u64,
+) -> Result<u64> {
+    let n = items.len();
+    let nodes = (n as f64).sqrt().ceil() as usize;
+    if n <= 1 || nodes <= 1 {
+        // A single mid-tier node would re-quantize the whole aggregate for
+        // no fan-in reduction; degrade to the flat path.
+        accumulate_sharded(groups, items, agg, shards)?;
+        return Ok(0);
+    }
+    check_items(groups, items, agg.len())?;
+    agg.fill(0.0);
+    let mut partial = vec![0.0f32; agg.len()];
+    let mut frame: Vec<u8> = Vec::new();
+    let mut tier_bytes = 0u64;
+    // Contiguous chunks of the apply order, sizes as equal as possible
+    // (the first `n % nodes` chunks take one extra item) — a deterministic
+    // partition, so the tree is replayable like everything else.
+    let (base, extra) = (n / nodes, n % nodes);
+    let mut start = 0usize;
+    for node in 0..nodes {
+        let len = base + usize::from(node < extra);
+        let chunk = &items[start..start + len];
+        start += len;
+        if chunk.is_empty() {
+            continue;
+        }
+        accumulate_sharded(groups, chunk, &mut partial, shards)?;
+        for (gi, g) in groups.iter().enumerate() {
+            let slice = &partial[g.start..g.end];
+            let mut codec = make_compressor(quant);
+            codec.refit(slice);
+            let mut rng =
+                Rng::for_stream(seed, ROLE_TIER, (node * 1031 + gi) as u64, round);
+            frame.clear();
+            codec.compress_into(slice, &mut rng, &mut frame);
+            tier_bytes += frame.len() as u64;
+            wire::decode_dequantize_accumulate_into(&frame, 1.0, &mut agg[g.start..g.end])?;
+        }
+    }
+    Ok(tier_bytes)
+}
+
 /// [`accumulate_serial`] over frame-only uplinks (the historical API; the
 /// perf_server bench and the wire-level property tests pin it).
 pub fn aggregate_serial(
@@ -414,6 +496,61 @@ mod tests {
                 assert_eq!(got, want, "{shards}-shard dense/mixed must match bitwise");
             }
         }
+    }
+
+    #[test]
+    fn two_tier_with_lossless_codec_matches_flat_within_rounding() {
+        use crate::config::{QuantConfig, Scheme};
+        let groups = groups_of(&[50, 30]);
+        let mut rng = crate::util::Rng::new(21);
+        let dense: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..80).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let items: Vec<WeightedContribution<'_>> = dense
+            .iter()
+            .map(|d| WeightedContribution { data: ContributionData::Dense(d), w: 1.0 / 9.0 })
+            .collect();
+        let mut flat = vec![0.0f32; 80];
+        accumulate_serial(&groups, &items, &mut flat).unwrap();
+        // DSGD mid-tier frames are raw f32 (lossless), so the only tree
+        // effect left is the f32 association of the top-tier adds.
+        let q = QuantConfig { scheme: Scheme::Dsgd, ..Default::default() };
+        let mut tiered = vec![0.0f32; 80];
+        let bytes = accumulate_two_tier(&groups, &items, &mut tiered, 1, &q, 7, 0).unwrap();
+        assert!(bytes > 0, "9 items → 3 mid-tier nodes → interior frames");
+        for (i, (&a, &b)) in tiered.iter().zip(&flat).enumerate() {
+            assert!((a - b).abs() <= 1e-5, "elem {i}: tiered {a} vs flat {b}");
+        }
+        // A single contribution degrades to the flat path: no tree, 0 bytes.
+        let one = &items[..1];
+        let mut t1 = vec![1.0f32; 80];
+        let mut f1 = vec![0.0f32; 80];
+        assert_eq!(accumulate_two_tier(&groups, one, &mut t1, 1, &q, 7, 0).unwrap(), 0);
+        accumulate_serial(&groups, one, &mut f1).unwrap();
+        assert_eq!(t1, f1, "degenerate tree must be the flat path bit-for-bit");
+    }
+
+    #[test]
+    fn two_tier_draws_are_seeded_per_round() {
+        use crate::config::{QuantConfig, Scheme};
+        let groups = groups_of(&[64]);
+        let mut rng = crate::util::Rng::new(3);
+        let dense: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..64).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let items: Vec<WeightedContribution<'_>> = dense
+            .iter()
+            .map(|d| WeightedContribution { data: ContributionData::Dense(d), w: 0.25 })
+            .collect();
+        let q = QuantConfig { scheme: Scheme::Qsgd, bits: 3, ..Default::default() };
+        let run = |round: u64| -> Vec<f32> {
+            let mut agg = vec![0.0f32; 64];
+            accumulate_two_tier(&groups, &items, &mut agg, 1, &q, 42, round).unwrap();
+            agg
+        };
+        let a = run(0);
+        assert_eq!(a, run(0), "same (seed, round) → bit-identical tree output");
+        assert_ne!(a, run(1), "rounds use independent quantization draws");
     }
 
     #[test]

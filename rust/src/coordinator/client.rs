@@ -51,6 +51,16 @@ impl GroupCodec {
             GroupCodec::Ef(c) => c.describe(),
         }
     }
+
+    /// Resident bytes of mutable codec state (plain codecs keep only their
+    /// fit parameters — O(1), counted as 0 here; EF keeps the residual
+    /// working set or its parked frame).
+    fn state_bytes(&self) -> usize {
+        match self {
+            GroupCodec::Plain(_) => 0,
+            GroupCodec::Ef(c) => c.state_bytes(),
+        }
+    }
 }
 
 /// The task a client trains on.
@@ -152,6 +162,48 @@ impl Client {
     /// construction (see [`FrameArena::fresh_allocs`]).
     pub fn frame_allocs(&self) -> u64 {
         self.arena.fresh_allocs()
+    }
+
+    /// Park every EF residual as a quantized frame (arena-recycled buffers,
+    /// dedicated RNG stream per group) — called on clients left outside the
+    /// round cohort. No-op for plain codecs or already-parked state.
+    pub(crate) fn park_residuals(&mut self, seed: u64, round: u64) {
+        for (gi, codec) in self.codecs.iter_mut().enumerate() {
+            if let GroupCodec::Ef(ef) = codec {
+                if ef.is_parked() {
+                    continue;
+                }
+                let mut rng =
+                    Rng::for_stream(seed, 0x9A7F, (self.id * 1031 + gi) as u64, round);
+                let buf = self.arena.take();
+                if let Some(unused) = ef.park(&mut rng, buf) {
+                    self.arena.put(unused);
+                }
+            }
+        }
+    }
+
+    /// Restore any parked EF residuals to dense form — called on cohort
+    /// members before they compute/encode. Frame buffers go back to the
+    /// arena.
+    pub(crate) fn unpark_residuals(&mut self) -> anyhow::Result<()> {
+        for codec in &mut self.codecs {
+            if let GroupCodec::Ef(ef) = codec {
+                if let Some(frame) = ef.unpark()? {
+                    self.arena.put(frame);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Resident bytes of this client's mutable per-round state: codec
+    /// state (EF residuals, dense or parked) plus pooled arena buffers —
+    /// the per-client term of the `bytes_per_client` metric. Model
+    /// parameters are shared server state and excluded.
+    pub fn state_bytes(&self) -> usize {
+        self.codecs.iter().map(GroupCodec::state_bytes).sum::<usize>()
+            + self.arena.pooled_bytes()
     }
 
     /// One-line description of each layer group's codec state.

@@ -128,6 +128,10 @@ pub struct Coordinator<'b> {
     /// that computes no losses at all, so the loss column can never turn
     /// `0/0` NaN (unreachable today: churn always revives one client).
     pub(crate) last_train_loss: f64,
+    /// Cumulative mid-tier partial-sum bytes re-encoded by the two-tier
+    /// aggregator tree (`agg_tiers = 2`); 0 on the flat path. Interior
+    /// server-tree traffic — deliberately not folded into `bytes_up`.
+    pub(crate) tier_bytes: u64,
 }
 
 /// The N logical clients of one experiment plus the server-side evaluation
@@ -254,6 +258,7 @@ impl<'b> Coordinator<'b> {
             contrib: Vec::new(),
             contrib_reallocs: 0,
             last_train_loss: 0.0,
+            tier_bytes: 0,
         })
     }
 
@@ -305,6 +310,27 @@ impl<'b> Coordinator<'b> {
     /// per available core, capped by the layer-group count).
     pub fn agg_shards(&self) -> usize {
         self.agg_shards
+    }
+
+    /// Cumulative bytes the two-tier aggregator tree (`agg_tiers = 2`) spent
+    /// re-encoding mid-tier partial sums. Interior server traffic: reported
+    /// by the scale bench but deliberately not part of `bytes_up` (which
+    /// stays "client uplink bytes", the paper's communication metric).
+    pub fn tier_uplink_bytes(&self) -> u64 {
+        self.tier_bytes
+    }
+
+    /// Mean resident bytes of mutable per-client state (EF residuals — dense
+    /// or parked as quantized frames — plus pooled arena buffers). The
+    /// million-client capacity metric: cohort sampling parks non-cohort
+    /// residuals, so this shrinks toward the quantized-frame size as
+    /// `cohort_k` drops.
+    pub fn bytes_per_client(&self) -> u64 {
+        if self.clients.is_empty() {
+            return 0;
+        }
+        let total: u64 = self.clients.iter().map(|c| c.state_bytes() as u64).sum();
+        total / self.clients.len() as u64
     }
 
     /// Execute one communication round through the configured pipeline;

@@ -107,24 +107,84 @@ pub(crate) fn route_message(
 /// decisions, and the compute stage with its clock.
 struct RoundStart {
     timer: Timer,
-    /// Participation mask over all clients (churn decisions).
+    /// Participation mask over all clients (churn ∧ cohort decisions).
     active_set: Vec<bool>,
     /// Number of participating clients (the encode fan-out width).
     active_len: usize,
+    /// How many uplinks the server expects this round: the cohort size K
+    /// when cohort sampling is engaged, N otherwise — the baseline
+    /// `dropped_clients` is counted against.
+    expected: usize,
     grads: Vec<Vec<f32>>,
     losses: Vec<f32>,
     compute_secs: f64,
+}
+
+/// The cohort stage: intersect the round's cohort draw into the
+/// participation mask and (in-process modes) migrate EF residual state —
+/// cohort members unpark, everyone else parks as a compact quantized frame.
+///
+/// **Degenerate case is a strict no-op.** When `cohort_k == 0` or
+/// `cohort_k >= N` the function returns `N` without touching the mask,
+/// drawing from any RNG stream, or parking anything — so full-participation
+/// runs are bit-identical to a build without cohort sampling at all
+/// (invariant 5 in docs/DETERMINISM.md, pinned by
+/// `rust/tests/cohort_props.rs`).
+///
+/// `migrate_state` is false on the remote path: there the per-client codec
+/// state lives in the worker processes, and non-cohort workers simply sit
+/// the round out.
+fn cohort_stage(
+    coord: &mut Coordinator<'_>,
+    round: u64,
+    active_set: &mut [bool],
+    migrate_state: bool,
+) -> Result<usize> {
+    let n = coord.clients.len();
+    let k = coord.cfg.cohort_k;
+    if k == 0 || k >= n {
+        return Ok(n);
+    }
+    let cohort = coord.scenario.sample_cohort(round, n, k);
+    let mut in_cohort = vec![false; n];
+    for &i in &cohort {
+        in_cohort[i] = true;
+    }
+    for (i, a) in active_set.iter_mut().enumerate() {
+        *a = *a && in_cohort[i];
+    }
+    // Cohort ∧ churn may be empty; mirror the churn engine's never-go-dark
+    // rule by reviving one deterministic cohort member.
+    if !active_set.iter().any(|&a| a) {
+        active_set[cohort[round as usize % cohort.len()]] = true;
+    }
+    if migrate_state {
+        let seed = coord.cfg.seed;
+        for (i, c) in coord.clients.iter_mut().enumerate() {
+            if in_cohort[i] {
+                c.unpark_residuals()?;
+            } else {
+                c.park_residuals(seed, round);
+            }
+        }
+    }
+    Ok(k)
 }
 
 fn begin_round_stage(coord: &mut Coordinator<'_>) -> Result<RoundStart> {
     let timer = Timer::start();
     let round = coord.round;
     // Scenario: churn decides who participates this round.
-    let active = coord.scenario.begin_round(round as u64);
+    let churn_active = coord.scenario.begin_round(round as u64);
     let mut active_set = vec![false; coord.clients.len()];
-    for &i in &active {
+    for &i in &churn_active {
         active_set[i] = true;
     }
+    // Cohort sampling narrows participation further (no-op at K = 0 / K ≥ N)
+    // and migrates EF residual state in/out of parked form.
+    let expected = cohort_stage(coord, round as u64, &mut active_set, true)?;
+    let active: Vec<usize> =
+        active_set.iter().enumerate().filter_map(|(i, &a)| a.then_some(i)).collect();
     // Compute: local gradients for participating clients (backend on this
     // thread; PJRT/XLA parallelizes inside, the native path is cheap scalar
     // math).
@@ -134,6 +194,7 @@ fn begin_round_stage(coord: &mut Coordinator<'_>) -> Result<RoundStart> {
         timer,
         active_set,
         active_len: active.len(),
+        expected,
         grads,
         losses,
         compute_secs: t.secs(),
@@ -197,6 +258,7 @@ pub(crate) fn step_barrier(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     finish_round(
         coord,
         start.timer,
+        start.expected,
         delivered,
         conds,
         lost_bytes,
@@ -306,6 +368,7 @@ pub(crate) fn step_streaming(coord: &mut Coordinator<'_>) -> Result<RoundRecord>
     finish_round(
         coord,
         start.timer,
+        start.expected,
         delivered,
         conds,
         lost_bytes,
@@ -359,6 +422,10 @@ pub(crate) fn step_remote(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     if !active_set.iter().any(|&a| a) {
         bail!("no reachable active workers; every connection is dead");
     }
+    // Cohort sampling narrows the broadcast set exactly as in-process; the
+    // per-client codec state lives in the worker processes, so no residual
+    // parking happens here — non-cohort workers just sit the round out.
+    let expected = cohort_stage(coord, round as u64, &mut active_set, false)?;
     let t = Timer::start();
     coord.net.begin_round(round, &active_set, &coord.params)?;
     let mut ups = coord.net.collect_round(round, &active_set)?;
@@ -396,19 +463,34 @@ pub(crate) fn step_remote(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     }
     // compute/encode happened on the workers; the exchange window is the
     // closest local analogue of the overlapped encode+uplink stage.
-    finish_round(coord, timer, delivered, conds, lost_bytes, &losses, 0.0, exchange_secs, None)
+    finish_round(
+        coord,
+        timer,
+        expected,
+        delivered,
+        conds,
+        lost_bytes,
+        &losses,
+        0.0,
+        exchange_secs,
+        None,
+    )
 }
 
 /// Stages shared verbatim by both modes once the delivered set is known (in
 /// ascending client order): network accounting, the bounded-staleness
 /// schedule, the staleness histogram, the weighted apply + optimizer step,
-/// frame recycling, and the round record. `dense` is the streaming mode's
-/// `(round, per-client buffered?)` marker for contributions decoded during
-/// the overlap; `None` in barrier mode.
+/// frame recycling, and the round record. `expected` is how many uplinks
+/// this round asked for — the cohort size K when sampling is engaged, N
+/// otherwise — so `dropped_clients` counts real failures (churn, dead
+/// sockets, drop faults), never clients the cohort deliberately rested.
+/// `dense` is the streaming mode's `(round, per-client buffered?)` marker
+/// for contributions decoded during the overlap; `None` in barrier mode.
 #[allow(clippy::too_many_arguments)]
 fn finish_round(
     coord: &mut Coordinator<'_>,
     timer: Timer,
+    expected: usize,
     delivered: Vec<Message>,
     conds: Vec<LinkCondition>,
     lost_bytes: u64,
@@ -418,7 +500,7 @@ fn finish_round(
     dense: Option<(usize, &[bool])>,
 ) -> Result<RoundRecord> {
     let round = coord.round;
-    let dropped_clients = coord.clients.len() - delivered.len();
+    let dropped_clients = expected.saturating_sub(delivered.len());
     let report = coord.net.round_uplink_conditioned(&delivered, &conds);
 
     // Bounded-staleness schedule: which frames apply now vs next round
@@ -467,6 +549,7 @@ fn finish_round(
         dropped_clients,
         retransmitted_bytes: report.retransmitted_bytes + lost_bytes,
         staleness_hist,
+        bytes_per_client: coord.bytes_per_client(),
     })
 }
 
@@ -564,7 +647,25 @@ fn weighted_apply(
             WeightedContribution { data, w }
         })
         .collect();
-    aggregate::accumulate_sharded(&coord.groups, &items, &mut coord.agg, coord.agg_shards)?;
+    if coord.cfg.agg_tiers >= 2 {
+        // Two-tier aggregator tree: mid-tier nodes shard-accumulate their
+        // slice of the apply order, then re-encode the partial sum through
+        // the experiment's codec before the root folds it in. Changes bits
+        // by design (opt-in lossy interior hop); tier traffic is tracked
+        // separately from client uplink bytes.
+        let tier_bytes = aggregate::accumulate_two_tier(
+            &coord.groups,
+            &items,
+            &mut coord.agg,
+            coord.agg_shards,
+            &coord.cfg.quant,
+            coord.cfg.seed,
+            coord.round as u64,
+        )?;
+        coord.tier_bytes += tier_bytes;
+    } else {
+        aggregate::accumulate_sharded(&coord.groups, &items, &mut coord.agg, coord.agg_shards)?;
+    }
     drop(items);
     let agg = std::mem::take(&mut coord.agg);
     coord.opt.step(&mut coord.params, &agg);

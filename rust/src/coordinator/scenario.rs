@@ -31,6 +31,7 @@ use super::network::{LinkCondition, Message};
 const ROLE_STRAGGLER: u64 = 0x5C_E1;
 const ROLE_CHURN: u64 = 0x5C_E2;
 const ROLE_LOSS: u64 = 0x5C_E3;
+const ROLE_COHORT: u64 = 0x5C_E4;
 
 /// A frame held back by the bounded-staleness scheduler.
 #[derive(Clone, Debug)]
@@ -54,10 +55,17 @@ pub struct ScenarioEngine {
 
 impl ScenarioEngine {
     /// Build the engine for `n` clients. The straggler subset is chosen by a
-    /// dedicated seeded shuffle, so it is stable for a (seed, n) pair.
+    /// dedicated seeded shuffle, so it is stable for a (seed, n) pair. Any
+    /// `straggler_frac > 0` designates at least one straggler: on small
+    /// fleets `round()` would otherwise yield zero and silently turn the
+    /// scenario into `clean` (e.g. n = 3, frac = 0.1 rounds to 0).
     pub fn new(cfg: ScenarioConfig, n: usize, seed: u64) -> Self {
         assert!(n >= 1);
-        let slow_count = ((cfg.straggler_frac * n as f64).round() as usize).min(n);
+        let slow_count = if cfg.straggler_frac > 0.0 {
+            ((cfg.straggler_frac * n as f64).round() as usize).max(1).min(n)
+        } else {
+            0
+        };
         let mut order: Vec<usize> = (0..n).collect();
         Rng::for_stream(seed, ROLE_STRAGGLER, 0, 0).shuffle(&mut order);
         let mut slow = vec![false; n];
@@ -178,13 +186,39 @@ impl ScenarioEngine {
 
     /// Aggregation-weight multiplier for a frame `staleness` rounds old.
     /// Exactly 1.0 for fresh frames, so the synchronous path is untouched.
+    ///
+    /// The exponent saturates at `i32::MAX` instead of casting `u32 → i32`
+    /// directly: a staleness above 2^31 would wrap negative and turn the
+    /// decay into an *amplifier* (`decay^-k > 1`). At any such exponent a
+    /// decay < 1 has underflowed to 0 long before the clamp matters, so
+    /// saturation is bit-identical for every reachable staleness.
     pub fn stale_weight(&self, staleness: u32) -> f64 {
-        self.cfg.stale_decay.powi(staleness as i32)
+        self.cfg.stale_decay.powi(staleness.min(i32::MAX as u32) as i32)
     }
 
     /// Frames currently waiting in the late queue.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Seeded per-round cohort draw: a sorted K-subset of `0..n` chosen by
+    /// a Fisher–Yates shuffle on a dedicated stream (`ROLE_COHORT`), so the
+    /// draw composes with churn/straggler/loss without shifting their
+    /// streams. The cohort is drawn over *all* N clients (independent of
+    /// churn state); callers intersect it with the churn-active set.
+    ///
+    /// `k == 0` or `k >= n` means full participation and performs **no
+    /// draws at all** — the K=N degenerate path is bit-identical to the
+    /// pre-cohort engine by construction.
+    pub fn sample_cohort(&self, round: u64, n: usize, k: usize) -> Vec<usize> {
+        if k == 0 || k >= n {
+            return (0..n).collect();
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::for_stream(self.seed, ROLE_COHORT, 0, round).shuffle(&mut order);
+        let mut cohort = order[..k].to_vec();
+        cohort.sort_unstable();
+        cohort
     }
 }
 
@@ -294,6 +328,79 @@ mod tests {
         assert_eq!(apply2[0].1, 1);
         assert_eq!(e.stale_weight(apply2[0].1), 0.5);
         assert_eq!(e.stale_weight(0), 1.0);
+    }
+
+    #[test]
+    fn small_fleet_nonzero_frac_selects_at_least_one_straggler() {
+        // Regression: n = 3, frac = 0.1 rounds to 0 stragglers, silently
+        // degrading the scenario to `clean`. The engine must clamp to 1.
+        let cfg = ScenarioConfig {
+            straggler_frac: 0.1,
+            straggler_mult: 4.0,
+            ..Default::default()
+        };
+        let e = ScenarioEngine::new(cfg.clone(), 3, 11);
+        let slow: Vec<usize> = (0..3).filter(|&i| e.is_straggler(i)).collect();
+        assert_eq!(slow.len(), 1, "straggler_frac > 0 must select >= 1 straggler");
+        // The assignment is digest-relevant (straggler_mult scales net_secs,
+        // which replay_digest folds in) — pin that it is seed-stable.
+        let e2 = ScenarioEngine::new(cfg, 3, 11);
+        let slow2: Vec<usize> = (0..3).filter(|&i| e2.is_straggler(i)).collect();
+        assert_eq!(slow, slow2);
+        assert_eq!(e.link(slow[0], 0).unwrap().latency_mult, 4.0);
+        // frac = 0 still means zero stragglers (the clean path is untouched).
+        let clean = ScenarioEngine::new(ScenarioConfig::default(), 3, 11);
+        assert!((0..3).all(|i| !clean.is_straggler(i)));
+    }
+
+    #[test]
+    fn stale_weight_saturates_at_extreme_staleness() {
+        let cfg = ScenarioConfig { stale_decay: 0.5, ..Default::default() };
+        let e = ScenarioEngine::new(cfg, 2, 1);
+        // Existing semantics are untouched at reachable staleness.
+        assert_eq!(e.stale_weight(0), 1.0);
+        assert_eq!(e.stale_weight(1), 0.5);
+        assert_eq!(e.stale_weight(10), 0.5f64.powi(10));
+        // Extreme staleness: a naive `as i32` cast would wrap negative and
+        // return 2^k > 1; the saturated form underflows to 0 instead.
+        for s in [i32::MAX as u32, i32::MAX as u32 + 1, u32::MAX] {
+            let w = e.stale_weight(s);
+            assert!(
+                w >= 0.0 && w <= f64::MIN_POSITIVE,
+                "stale_weight({s}) = {w} must underflow toward 0, never amplify"
+            );
+        }
+        // decay = 1.0 (the synchronous default) stays exactly 1 everywhere.
+        let sync = ScenarioEngine::new(ScenarioConfig::default(), 2, 1);
+        assert_eq!(sync.stale_weight(u32::MAX), 1.0);
+    }
+
+    #[test]
+    fn cohort_draw_is_seeded_sorted_and_composes() {
+        let cfg = ScenarioConfig::preset("churn").unwrap();
+        let e = ScenarioEngine::new(cfg.clone(), 8, 5);
+        // K = 0 and K >= N are full participation with no draws.
+        assert_eq!(e.sample_cohort(0, 8, 0), (0..8).collect::<Vec<_>>());
+        assert_eq!(e.sample_cohort(0, 8, 8), (0..8).collect::<Vec<_>>());
+        assert_eq!(e.sample_cohort(0, 8, 99), (0..8).collect::<Vec<_>>());
+        // K < N: sorted K-subset, deterministic per (seed, round).
+        let c = e.sample_cohort(3, 8, 3);
+        assert_eq!(c.len(), 3);
+        assert!(c.windows(2).all(|w| w[0] < w[1]), "cohort must be sorted: {c:?}");
+        assert!(c.iter().all(|&i| i < 8));
+        assert_eq!(c, e.sample_cohort(3, 8, 3), "same (seed, round) → same cohort");
+        // Different rounds vary the draw (over 16 rounds at K=3 of N=8 a
+        // constant cohort is astronomically unlikely).
+        let varies = (0..16).any(|r| e.sample_cohort(r, 8, 3) != c);
+        assert!(varies, "cohort must be redrawn per round");
+        // Composability: the cohort draw must not perturb the churn stream —
+        // an engine that never samples cohorts sees identical churn.
+        let mut with = ScenarioEngine::new(cfg.clone(), 8, 5);
+        let mut without = ScenarioEngine::new(cfg, 8, 5);
+        for round in 0..12 {
+            let _ = with.sample_cohort(round, 8, 3);
+            assert_eq!(with.begin_round(round), without.begin_round(round));
+        }
     }
 
     #[test]

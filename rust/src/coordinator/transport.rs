@@ -77,9 +77,21 @@ const MAX_MSG_LEN: u32 = 256 * 1024 * 1024;
 
 // -- framing ----------------------------------------------------------------
 
+/// Checked `usize → u32` conversion against the protocol frame bound, for
+/// every length/count a writer serializes. A plain `as u32` cast would
+/// silently truncate past `u32::MAX` and desync the stream; bounding at
+/// [`MAX_MSG_LEN`] mirrors the read-side check so an oversized payload is
+/// rejected **before** it hits the wire, not by the confused peer.
+fn checked_wire_len(n: usize, what: &str) -> Result<u32> {
+    if n as u64 > MAX_MSG_LEN as u64 {
+        bail!("{what} length {n} exceeds the {MAX_MSG_LEN}-byte protocol bound");
+    }
+    Ok(n as u32)
+}
+
 /// Write one length-prefixed payload.
 fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&checked_wire_len(payload.len(), "payload")?.to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
@@ -299,7 +311,9 @@ impl Transport for TcpTransport {
             p.extend_from_slice(&(round as u32).to_le_bytes());
             p.push(active as u8);
             if active {
-                p.extend_from_slice(&(params.len() as u32).to_le_bytes());
+                // Checked: a model with > MAX_MSG_LEN parameters must fail
+                // loudly here, not truncate the count and desync the worker.
+                p.extend_from_slice(&checked_wire_len(params.len(), "params")?.to_le_bytes());
                 for x in params {
                     p.extend_from_slice(&x.to_le_bytes());
                 }
@@ -541,10 +555,11 @@ pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<
                 match produced {
                     Produced::Arrived(m, _cond) => {
                         payload.push(OUTCOME_ARRIVED);
-                        payload.extend_from_slice(&(m.frames.len() as u32).to_le_bytes());
+                        payload
+                            .extend_from_slice(&checked_wire_len(m.frames.len(), "frame count")?.to_le_bytes());
                         for (gi, frame) in &m.frames {
-                            payload.extend_from_slice(&(*gi as u32).to_le_bytes());
-                            payload.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+                            payload.extend_from_slice(&checked_wire_len(*gi, "group index")?.to_le_bytes());
+                            payload.extend_from_slice(&checked_wire_len(frame.len(), "frame")?.to_le_bytes());
                             payload.extend_from_slice(frame);
                         }
                         me.recycle(m);
@@ -631,6 +646,27 @@ mod tests {
         buf.extend_from_slice(&u32::MAX.to_le_bytes());
         let mut r = &buf[..];
         assert!(read_msg(&mut r).is_err());
+    }
+
+    #[test]
+    fn write_side_length_check_mirrors_read_bound() {
+        // In-bounds conversions pass through unchanged.
+        assert_eq!(checked_wire_len(0, "x").unwrap(), 0);
+        assert_eq!(checked_wire_len(MAX_MSG_LEN as usize, "x").unwrap(), MAX_MSG_LEN);
+        // One past the protocol bound must bail — and so must the sizes a
+        // bare `as u32` cast would have *silently truncated* (u32::MAX + 1
+        // wraps to 0, desyncing the peer's length-prefixed reader).
+        for n in [MAX_MSG_LEN as usize + 1, u32::MAX as usize, u32::MAX as usize + 1] {
+            let err = checked_wire_len(n, "payload").unwrap_err().to_string();
+            assert!(err.contains("protocol bound"), "n = {n}: {err}");
+        }
+        // write_msg routes every payload length through the same gate (the
+        // check fires before any byte is written), so in-bounds writes are
+        // untouched; the oversized branch is pinned above via the helper
+        // rather than by materializing a > 256 MiB buffer in a unit test.
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &[0u8; 1]).unwrap();
+        assert_eq!(&buf[..4], &1u32.to_le_bytes());
     }
 
     #[test]

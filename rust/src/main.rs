@@ -63,6 +63,8 @@ fn main() -> Result<()> {
                  \x20             --drop-client --artifacts --preset\n\
                  \x20             --agg-shards (server aggregation fan-out; 0 = auto)\n\
                  \x20             --pipeline (barrier|streaming round engine; bit-identical)\n\
+                 \x20             --cohort-k (clients sampled per round; 0 = all, K >= N = all)\n\
+                 \x20             --agg-tiers (1 = flat aggregation; 2 = two-tier re-encoded tree)\n\
                  scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid)\n\
                  \x20             --straggler-frac --straggler-mult --loss-prob --max-retries\n\
                  \x20             --dropout-prob --rejoin-prob --stale-k --stale-decay\n\

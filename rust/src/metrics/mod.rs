@@ -48,6 +48,13 @@ pub struct RoundRecord {
     /// number of frames applied this round that were s rounds old. Empty
     /// and `vec![k]` both mean "k fresh frames, nothing late".
     pub staleness_hist: Vec<u32>,
+    /// Mean resident bytes of mutable per-client server-side state at the
+    /// end of the round (EF residuals — dense, or parked as quantized
+    /// frames for non-cohort clients — plus pooled frame-arena buffers).
+    /// The million-client memory-capacity metric; logged, but deliberately
+    /// outside `replay_digest` (it tracks allocator capacities, not the
+    /// training trajectory).
+    pub bytes_per_client: u64,
 }
 
 /// Full run log.
@@ -101,11 +108,11 @@ impl RunLog {
         let mut s = String::from(
             "round,train_loss,bytes_up,test_loss,test_accuracy,secs,net_secs,\
              compute_secs,encode_secs,agg_secs,\
-             dropped_clients,retransmitted_bytes,staleness_hist\n",
+             dropped_clients,retransmitted_bytes,staleness_hist,bytes_per_client\n",
         );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.bytes_up,
@@ -119,6 +126,7 @@ impl RunLog {
                 r.dropped_clients,
                 r.retransmitted_bytes,
                 fmt_staleness_hist(&r.staleness_hist),
+                r.bytes_per_client,
             ));
         }
         s
@@ -145,6 +153,7 @@ impl RunLog {
                         r.staleness_hist.iter().map(|&c| json::num(c as f64)).collect(),
                     ),
                 ),
+                ("bytes_per_client", json::num(r.bytes_per_client as f64)),
                 ("config", json::s(&self.config_id)),
             ];
             if let Some(l) = r.test_loss {
@@ -246,6 +255,7 @@ mod tests {
             dropped_clients: 0,
             retransmitted_bytes: 0,
             staleness_hist: Vec::new(),
+            bytes_per_client: 0,
         });
         log.push(RoundRecord {
             round: 1,
@@ -261,6 +271,7 @@ mod tests {
             dropped_clients: 2,
             retransmitted_bytes: 333,
             staleness_hist: vec![6, 2],
+            bytes_per_client: 4096,
         });
         log
     }
@@ -284,10 +295,11 @@ mod tests {
         assert!(csv.contains(",333,"), "retransmitted bytes column");
         assert!(csv.contains("0:6|1:2"), "staleness histogram column");
         let header = csv.lines().next().unwrap();
-        for col in ["compute_secs", "encode_secs", "agg_secs"] {
-            assert!(header.contains(col), "missing stage column {col}");
+        for col in ["compute_secs", "encode_secs", "agg_secs", "bytes_per_client"] {
+            assert!(header.contains(col), "missing column {col}");
         }
         assert!(csv.contains(",0.05,0.0625,0.0125,"), "stage columns in row order");
+        assert!(csv.contains("0:6|1:2,4096"), "bytes_per_client trails the histogram");
     }
 
     #[test]
@@ -321,6 +333,18 @@ mod tests {
         let mut d = sample_log();
         d.records[0].train_loss += 1e-12; // even ULP-level drift must show
         assert_ne!(a.replay_digest(), d.replay_digest());
+        let mut e = sample_log();
+        // Memory-capacity metric tracks allocator capacities, not the
+        // training trajectory — it must stay outside the digest.
+        e.records[1].bytes_per_client = 1;
+        assert_eq!(a.replay_digest(), e.replay_digest());
+    }
+
+    #[test]
+    fn jsonl_carries_bytes_per_client() {
+        let jl = sample_log().to_jsonl();
+        let v = parse_jsonl_line(jl.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(v.get("bytes_per_client").unwrap().as_f64(), Some(4096.0));
     }
 
     #[test]

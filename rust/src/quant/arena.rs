@@ -60,6 +60,12 @@ impl FrameArena {
     pub fn pooled(&self) -> usize {
         self.free.len()
     }
+
+    /// Total capacity (bytes) held by pooled buffers — the arena's term of
+    /// the `bytes_per_client` memory metric.
+    pub fn pooled_bytes(&self) -> usize {
+        self.free.iter().map(Vec::capacity).sum()
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +102,16 @@ mod tests {
         let first = a.take();
         assert_eq!(first.capacity(), x_cap);
         assert_eq!(a.pooled(), 1);
+    }
+
+    #[test]
+    fn pooled_bytes_sums_capacities() {
+        let mut a = FrameArena::new();
+        assert_eq!(a.pooled_bytes(), 0);
+        let mut x = a.take();
+        x.extend_from_slice(&[0u8; 64]);
+        let cap = x.capacity();
+        a.put(x);
+        assert_eq!(a.pooled_bytes(), cap);
     }
 }

@@ -21,6 +21,10 @@ pub struct ErrorFeedback {
     adjusted: Vec<f32>,
     /// Scratch: own-frame decode target, reused across rounds.
     decoded: Vec<f32>,
+    /// Dormant-client parking: the residual quantized through the inner
+    /// codec into one wire frame, replacing the dense f32 working set
+    /// while the client sits outside the round cohort. `None` = live.
+    parked: Option<Vec<u8>>,
 }
 
 impl ErrorFeedback {
@@ -31,6 +35,7 @@ impl ErrorFeedback {
             residual: Vec::new(),
             adjusted: Vec::new(),
             decoded: Vec::new(),
+            parked: None,
         }
     }
 
@@ -44,6 +49,9 @@ impl ErrorFeedback {
         rng: &mut Rng,
         out: &mut Vec<u8>,
     ) {
+        // The lazy resize below would silently replace a parked residual
+        // with zeros — a dormant client must be unparked before it encodes.
+        assert!(self.parked.is_none(), "unpark the EF residual before compressing");
         if self.residual.len() != grads.len() {
             self.residual = vec![0.0; grads.len()];
         }
@@ -105,6 +113,60 @@ impl ErrorFeedback {
     pub fn residual_norm(&self) -> f64 {
         self.residual.iter().map(|&r| (r as f64) * (r as f64)).sum::<f64>().sqrt()
     }
+
+    // -- dormant-client parking ---------------------------------------------
+
+    /// Park the residual as one quantized wire frame, freeing the dense f32
+    /// working set (residual + both scratch buffers ≈ 12 bytes/element →
+    /// one b-bit frame). Compresses into the caller-provided `frame` buffer
+    /// (arena-recycled by `Client`); hands it back untouched when there is
+    /// nothing to park (already parked, or no residual yet).
+    ///
+    /// Parking is **lossy** by design — the residual is itself quantization
+    /// error, so re-quantizing it (after a refit onto its own scale) keeps
+    /// the bulk of the mass while dropping the memory by ~the codec's
+    /// compression ratio. The tradeoff only arises for clients outside the
+    /// cohort; full-participation runs never park and keep exact residuals.
+    pub fn park(&mut self, rng: &mut Rng, mut frame: Vec<u8>) -> Option<Vec<u8>> {
+        if self.parked.is_some() || self.residual.is_empty() {
+            return Some(frame);
+        }
+        // Refit onto the residual's own scale: without this, a truncating
+        // codec fitted to *gradient* range would clamp the tail mass the
+        // residual exists to preserve.
+        self.inner.refit(&self.residual);
+        self.inner.compress_into(&self.residual, rng, &mut frame);
+        self.parked = Some(frame);
+        self.residual = Vec::new();
+        self.adjusted = Vec::new();
+        self.decoded = Vec::new();
+        None
+    }
+
+    /// Restore a parked residual to its dense form. Returns the spent frame
+    /// buffer for arena recycling (`None` when nothing was parked). The
+    /// next [`Self::compress_with_feedback_into`] then proceeds exactly as
+    /// if the residual had stayed dense (modulo the documented parking
+    /// quantization).
+    pub fn unpark(&mut self) -> anyhow::Result<Option<Vec<u8>>> {
+        let Some(frame) = self.parked.take() else { return Ok(None) };
+        wire::decode_dequantize_into(&frame, &mut self.residual)?;
+        Ok(Some(frame))
+    }
+
+    /// Is the residual currently parked as a quantized frame?
+    pub fn is_parked(&self) -> bool {
+        self.parked.is_some()
+    }
+
+    /// Resident bytes of this wrapper's state: the dense f32 working set
+    /// when live, the quantized frame when parked (the `bytes_per_client`
+    /// metric's EF term).
+    pub fn state_bytes(&self) -> usize {
+        let dense = 4 * (self.residual.capacity() + self.adjusted.capacity()
+            + self.decoded.capacity());
+        dense + self.parked.as_ref().map_or(0, |f| f.capacity())
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +223,46 @@ mod tests {
                 "elem {i}: residual {r} should equal the undelivered gradient {gi}"
             );
         }
+    }
+
+    #[test]
+    fn park_roundtrip_compacts_and_approximately_preserves_residual() {
+        let mut rng = Rng::new(5);
+        let mut ef = ErrorFeedback::new(make_compressor(&QuantConfig {
+            scheme: Scheme::Qsgd,
+            bits: 8,
+            ..Default::default()
+        }));
+        let g: Vec<f32> = (0..512).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+        let _ = ef.compress_with_feedback(&g, &mut rng);
+        let before = ef.residual().to_vec();
+        let live_bytes = ef.state_bytes();
+        assert!(ef.park(&mut rng, Vec::new()).is_none(), "first park consumes the buffer");
+        assert!(ef.is_parked());
+        assert!(
+            ef.state_bytes() * 4 < live_bytes,
+            "parked state {} must be a small fraction of live state {live_bytes}",
+            ef.state_bytes()
+        );
+        // Parking twice is a no-op that hands the spare buffer back.
+        assert!(ef.park(&mut rng, Vec::new()).is_some());
+        let frame = ef.unpark().unwrap().expect("a parked frame comes back for recycling");
+        assert!(!frame.is_empty());
+        assert!(!ef.is_parked());
+        // 8-bit re-quantization after a residual-scale refit: the restored
+        // residual tracks the original within a couple of quantization bins.
+        assert_eq!(ef.residual().len(), before.len());
+        let scale = before.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for (i, (&r, &b)) in ef.residual().iter().zip(&before).enumerate() {
+            assert!(
+                (r - b).abs() <= scale * 0.02 + 1e-6,
+                "elem {i}: parked {b} restored {r} (scale {scale})"
+            );
+        }
+        // Unparking an already-live wrapper is a no-op.
+        assert!(ef.unpark().unwrap().is_none());
+        // And the wrapper keeps working after the round trip.
+        let _ = ef.compress_with_feedback(&g, &mut rng);
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Cohort-sampling and two-tier aggregation properties (the million-client
+//! round machinery; see `docs/DETERMINISM.md` invariant 5):
+//!
+//! 1. **K = N degenerates bit-for-bit.** A run with `cohort_k` equal to (or
+//!    above) the fleet size produces the exact `replay_digest()` and final
+//!    parameter bits of a run with cohort sampling disabled — across every
+//!    scenario preset, both pipeline modes, error feedback, and the TCP
+//!    transport.
+//! 2. **K < N keeps pipeline bit-identity.** An engaged cohort is decided in
+//!    the shared round prologue, so barrier and streaming still agree
+//!    bit-for-bit.
+//! 3. **Cohort draws are uniform.** The seeded per-round draw covers clients
+//!    evenly and the cohort mean is an unbiased estimate of the full mean.
+//! 4. **Two-tier partial aggregates are unbiased with bounded variance.**
+//!    Re-encoding mid-tier partial sums through an unbiased stochastic
+//!    quantizer preserves the flat aggregate in expectation, with
+//!    per-element noise bounded by the summed per-node quantizer variance.
+//! 5. **Resting is not dropping.** With an engaged cohort on a clean
+//!    scenario, `dropped_clients` stays 0 (counted against K, not N) and the
+//!    parked non-cohort residuals shrink `bytes_per_client`.
+
+use tqsgd::config::{ExperimentConfig, PipelineMode, ScenarioConfig, Scheme};
+use tqsgd::coordinator::aggregate::{
+    accumulate_sharded, accumulate_two_tier, ContributionData, WeightedContribution,
+};
+use tqsgd::coordinator::{run_worker, Coordinator, ScenarioEngine, TcpOptions, TcpServer, WorkerOptions};
+use tqsgd::metrics::RunLog;
+use tqsgd::runtime::{backend_for, Backend, GroupRange};
+
+const PRESETS: [&str; 4] = ["clean", "lossy", "stale", "churn"];
+
+fn native() -> Box<dyn Backend> {
+    backend_for("native", "unused").unwrap()
+}
+
+/// The pipeline_props grid config: small but real, with simulated arrival
+/// times so stale/churn presets have an ordering to cut.
+fn grid_cfg(scheme: Scheme, bits: u32, preset: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = scheme;
+    cfg.quant.bits = bits;
+    cfg.clients = 4;
+    cfg.train_size = 384;
+    cfg.test_size = 96;
+    cfg.seed = 11;
+    cfg.net.bandwidth_bytes_per_sec = 1e6;
+    cfg.net.latency_sec = 0.01;
+    cfg.scenario = ScenarioConfig::preset(preset).unwrap();
+    cfg
+}
+
+/// Run `rounds` rounds in-process; return (replay digest, final parameters).
+fn run(backend: &dyn Backend, cfg: &ExperimentConfig, rounds: usize) -> (String, Vec<f32>) {
+    let mut coord = Coordinator::new(cfg.clone(), backend).unwrap();
+    let mut log = RunLog::default();
+    for _ in 0..rounds {
+        log.push(coord.step().unwrap());
+    }
+    (log.replay_digest(), coord.params.clone())
+}
+
+fn assert_bit_identical(a: &(String, Vec<f32>), b: &(String, Vec<f32>), label: &str) {
+    assert_eq!(a.0, b.0, "{label}: replay digests diverged");
+    assert_eq!(a.1.len(), b.1.len(), "{label}: parameter dim diverged");
+    for (i, (x, y)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: param {i} diverged ({x} vs {y})");
+    }
+}
+
+/// Invariant 5, in-process: cohort_k in {N, > N} must be indistinguishable
+/// from cohort_k = 0 — the degenerate path draws nothing and parks nothing.
+#[test]
+fn full_cohort_is_bit_identical_to_disabled_cohort() {
+    let backend = native();
+    for preset in PRESETS {
+        for pipeline in [PipelineMode::Barrier, PipelineMode::Streaming] {
+            let mut cfg = grid_cfg(Scheme::Tnqsgd, 3, preset);
+            cfg.pipeline = pipeline;
+            let reference = run(backend.as_ref(), &cfg, 3);
+            for k in [cfg.clients, cfg.clients + 5] {
+                let mut c = cfg.clone();
+                c.cohort_k = k;
+                let got = run(backend.as_ref(), &c, 3);
+                let label = format!("tnqsgd@{preset} {} K={k}", pipeline.name());
+                assert_bit_identical(&reference, &got, &label);
+            }
+        }
+    }
+}
+
+/// Same degenerate-K invariant with error feedback in play: K >= N must not
+/// touch (let alone park) any EF residual.
+#[test]
+fn full_cohort_parity_holds_with_error_feedback() {
+    let backend = native();
+    for preset in PRESETS {
+        let mut cfg = grid_cfg(Scheme::Tqsgd, 3, preset);
+        cfg.quant.error_feedback = true;
+        let reference = run(backend.as_ref(), &cfg, 4);
+        let mut c = cfg.clone();
+        c.cohort_k = c.clients;
+        let got = run(backend.as_ref(), &c, 4);
+        assert_bit_identical(&reference, &got, &format!("tqsgd+ef@{preset} K=N"));
+    }
+}
+
+/// An engaged cohort (K < N) is decided in the shared round prologue, so
+/// the barrier/streaming bit-identity contract must survive it — including
+/// the park/unpark state migration under error feedback.
+#[test]
+fn engaged_cohort_keeps_pipeline_bit_identity() {
+    let backend = native();
+    for preset in PRESETS {
+        let mut cfg = grid_cfg(Scheme::Tqsgd, 3, preset);
+        cfg.quant.error_feedback = true;
+        cfg.cohort_k = 2;
+        let mut barrier = cfg.clone();
+        barrier.pipeline = PipelineMode::Barrier;
+        let a = run(backend.as_ref(), &barrier, 4);
+        let mut streaming = cfg;
+        streaming.pipeline = PipelineMode::Streaming;
+        let b = run(backend.as_ref(), &streaming, 4);
+        assert_bit_identical(&a, &b, &format!("tqsgd+ef@{preset} K=2 modes"));
+    }
+}
+
+/// Invariant 5 over real sockets: a TCP run at K = N must match the
+/// in-process barrier run with cohort sampling disabled, bit for bit.
+#[test]
+fn tcp_full_cohort_matches_in_process_disabled_cohort() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = Scheme::Tnqsgd;
+    cfg.quant.bits = 3;
+    cfg.clients = 3;
+    cfg.rounds = 4;
+    cfg.train_size = 384;
+    cfg.test_size = 96;
+    cfg.seed = 11;
+    cfg.net.bandwidth_bytes_per_sec = 1e6;
+    cfg.net.latency_sec = 0.01;
+    cfg.cohort_k = 3; // == clients: engaged in name, degenerate in effect
+
+    let opts = TcpOptions {
+        io_timeout: std::time::Duration::from_secs(30),
+        accept_timeout: std::time::Duration::from_secs(30),
+    };
+    let server = TcpServer::bind("127.0.0.1:0", &cfg, opts).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..cfg.clients)
+        .map(|id| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, id, &WorkerOptions::default()))
+        })
+        .collect();
+    let transport = server.accept_workers().unwrap();
+    let backend = native();
+    let mut coord =
+        Coordinator::with_transport(cfg.clone(), backend.as_ref(), Box::new(transport)).unwrap();
+    let log = coord.run_remote(false).unwrap();
+    for w in workers {
+        w.join().expect("worker thread panicked").expect("worker must exit cleanly");
+    }
+
+    let mut ref_cfg = cfg;
+    ref_cfg.cohort_k = 0;
+    ref_cfg.pipeline = PipelineMode::Barrier;
+    let mut ref_coord = Coordinator::new(ref_cfg, backend.as_ref()).unwrap();
+    let ref_log = ref_coord.run(false).unwrap();
+    assert_eq!(
+        log.replay_digest(),
+        ref_log.replay_digest(),
+        "tcp K=N digest diverged from in-process cohort-disabled barrier"
+    );
+    for (i, (a, b)) in coord.params.iter().zip(&ref_coord.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} diverged ({a} vs {b})");
+    }
+}
+
+/// The seeded cohort draw: K sorted unique indices per round, per-client
+/// selection frequency uniform, and the cohort mean an unbiased estimator
+/// of the full-population mean (all deterministic under the fixed seed).
+#[test]
+fn cohort_draws_are_uniform_and_unbiased() {
+    let (n, k, rounds) = (10usize, 3usize, 4000u64);
+    let eng = ScenarioEngine::new(ScenarioConfig::default(), n, 42);
+    // Fixed "client values" with a heavy spread, so bias would show.
+    let v: Vec<f64> = (0..n).map(|i| (i * i) as f64).collect();
+    let full_mean = v.iter().sum::<f64>() / n as f64;
+    let mut counts = vec![0u64; n];
+    let mut mean_of_means = 0.0;
+    for r in 0..rounds {
+        let cohort = eng.sample_cohort(r, n, k);
+        assert_eq!(cohort.len(), k, "round {r}: cohort size");
+        assert!(
+            cohort.windows(2).all(|w| w[0] < w[1]) && *cohort.last().unwrap() < n,
+            "round {r}: cohort must be sorted, unique, in range: {cohort:?}"
+        );
+        for &i in &cohort {
+            counts[i] += 1;
+        }
+        mean_of_means += cohort.iter().map(|&i| v[i]).sum::<f64>() / k as f64;
+    }
+    mean_of_means /= rounds as f64;
+    assert!(
+        (mean_of_means - full_mean).abs() < 0.05 * full_mean,
+        "cohort mean {mean_of_means} is a biased estimate of {full_mean}"
+    );
+    let expect = rounds * k as u64 / n as u64;
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            (c as f64) > 0.85 * expect as f64 && (c as f64) < 1.15 * expect as f64,
+            "client {i} drawn {c} times, expected ~{expect}: draw is not uniform"
+        );
+    }
+}
+
+/// Two-tier re-encoded partial sums with an unbiased stochastic quantizer
+/// (QSGD): the per-round aggregate is lossy (bits change by design), but
+/// its mean over independent rounds converges on the flat aggregate, and
+/// the per-element spread stays within the summed per-node quantizer
+/// variance envelope.
+#[test]
+fn two_tier_partial_aggregates_are_unbiased_with_bounded_variance() {
+    let dim = 96usize;
+    let groups = vec![
+        GroupRange { group: "a".into(), start: 0, end: 48 },
+        GroupRange { group: "b".into(), start: 48, end: dim },
+    ];
+    // 9 deterministic dense contributions at uniform normalized weights.
+    let n_items = 9usize;
+    let dense: Vec<Vec<f32>> = (0..n_items)
+        .map(|j| (0..dim).map(|e| ((j * 31 + e) % 17) as f32 * 0.1 - 0.8).collect())
+        .collect();
+    let items: Vec<WeightedContribution<'_>> = dense
+        .iter()
+        .map(|d| WeightedContribution {
+            data: ContributionData::Dense(&d[..]),
+            w: 1.0 / n_items as f32,
+        })
+        .collect();
+    let mut flat = vec![0.0f32; dim];
+    accumulate_sharded(&groups, &items, &mut flat, 2).unwrap();
+
+    let mut quant = ExperimentConfig::default().quant;
+    quant.scheme = Scheme::Qsgd;
+    quant.bits = 4;
+    quant.error_feedback = false;
+
+    let rounds = 600u64;
+    let mut agg = vec![0.0f32; dim];
+    let mut sum = vec![0.0f64; dim];
+    let mut sum_sq = vec![0.0f64; dim];
+    let mut any_lossy = false;
+    for r in 0..rounds {
+        let bytes = accumulate_two_tier(&groups, &items, &mut agg, 2, &quant, 7, r).unwrap();
+        assert!(bytes > 0, "round {r}: mid-tier re-encode must ship frames");
+        for e in 0..dim {
+            sum[e] += agg[e] as f64;
+            sum_sq[e] += (agg[e] as f64) * (agg[e] as f64);
+            if agg[e].to_bits() != flat[e].to_bits() {
+                any_lossy = true;
+            }
+        }
+    }
+    assert!(any_lossy, "two-tier re-quantization should change bits (it is lossy by design)");
+    for e in 0..dim {
+        let mean = sum[e] / rounds as f64;
+        let var = (sum_sq[e] / rounds as f64 - mean * mean).max(0.0);
+        assert!(
+            (mean - flat[e] as f64).abs() < 0.01,
+            "element {e}: tiered mean {mean} drifted from flat {}",
+            flat[e]
+        );
+        // ceil(sqrt(9)) = 3 nodes, each with per-element stochastic-rounding
+        // variance <= (alpha/s)^2/4; partials stay within |0.31|, s = 15 at
+        // 4 bits, so the summed envelope is ~1e-3 — 2.5e-3 is generous.
+        assert!(var < 2.5e-3, "element {e}: variance {var} above the per-node envelope");
+    }
+}
+
+/// The single-item degenerate tree takes the flat path exactly: zero tier
+/// bytes, bit-identical aggregate.
+#[test]
+fn two_tier_degenerates_to_flat_for_tiny_fan_in() {
+    let dim = 32usize;
+    let groups = vec![GroupRange { group: "a".into(), start: 0, end: dim }];
+    let dense: Vec<f32> = (0..dim).map(|e| e as f32 * 0.01 - 0.2).collect();
+    let items =
+        vec![WeightedContribution { data: ContributionData::Dense(&dense[..]), w: 1.0 }];
+    let mut flat = vec![0.0f32; dim];
+    accumulate_sharded(&groups, &items, &mut flat, 1).unwrap();
+    let quant = {
+        let mut q = ExperimentConfig::default().quant;
+        q.scheme = Scheme::Qsgd;
+        q.bits = 4;
+        q
+    };
+    let mut agg = vec![0.0f32; dim];
+    let bytes = accumulate_two_tier(&groups, &items, &mut agg, 1, &quant, 7, 0).unwrap();
+    assert_eq!(bytes, 0, "a single-node tree must not re-encode anything");
+    for (e, (a, b)) in agg.iter().zip(&flat).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "element {e} diverged on the degenerate path");
+    }
+}
+
+/// Engaged cohort end-to-end: resting clients are not failures
+/// (`dropped_clients` counts against K), training stays finite, and parking
+/// the non-cohort EF residuals shrinks the per-client memory footprint
+/// versus full participation.
+#[test]
+fn engaged_cohort_rests_clients_without_counting_drops_and_compacts_state() {
+    let backend = native();
+    let base = {
+        let mut cfg = grid_cfg(Scheme::Tqsgd, 3, "clean");
+        cfg.quant.error_feedback = true;
+        cfg
+    };
+    let full_bpc = {
+        let mut coord = Coordinator::new(base.clone(), backend.as_ref()).unwrap();
+        let mut last = 0u64;
+        for _ in 0..4 {
+            last = coord.step().unwrap().bytes_per_client;
+        }
+        last
+    };
+    let mut cfg = base;
+    cfg.cohort_k = 2;
+    let mut coord = Coordinator::new(cfg, backend.as_ref()).unwrap();
+    let mut cohort_bpc = 0u64;
+    for _ in 0..4 {
+        let rec = coord.step().unwrap();
+        assert_eq!(rec.dropped_clients, 0, "resting non-cohort clients are not drops");
+        assert!(rec.train_loss.is_finite());
+        assert!(rec.bytes_per_client > 0, "memory metric must be recorded");
+        cohort_bpc = rec.bytes_per_client;
+    }
+    assert!(coord.params.iter().all(|p| p.is_finite()));
+    assert!(
+        cohort_bpc < full_bpc,
+        "parked residuals should compact state: cohort {cohort_bpc} vs full {full_bpc}"
+    );
+}
