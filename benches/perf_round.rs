@@ -8,7 +8,10 @@
 //!   and `replay_digest()`s, and short stale/churn runs re-check the
 //!   degraded-mode paths;
 //! * the per-stage wall-clock breakdown (`compute/encode/agg` columns of
-//!   `RoundRecord`) so the encode↔decode overlap is visible, not inferred.
+//!   `RoundRecord`) so the encode↔decode overlap is visible, not inferred;
+//! * budgeted rounds (multiscale under a binding `bit_budget`), asserting
+//!   the per-round uplink stays under the budget and recording
+//!   `budget_round_melems_per_s` / `budget_bytes_per_round`.
 //!
 //! Regenerate with `cargo bench --bench perf_round`; CI runs `-- --quick`
 //! with `TQSGD_BENCH_JSON=BENCH_perf_round.json` and gates
@@ -145,6 +148,50 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     report.table("end-to-end round throughput (barrier vs streaming)", &t);
+
+    // -- Budgeted rounds: scheduler planning + multiscale re-rating on the
+    // -- hot path, with the per-round uplink cap asserted on every timed
+    // -- round (the bytes the committed `budget_bytes_per_round` gate pins).
+    section(&format!(
+        "budgeted round throughput (multiscale b8, streaming, {} timed rounds)",
+        runs
+    ));
+    let mut cfg = base_cfg(Scheme::Multiscale, 8, PipelineMode::Streaming);
+    // Probe one unbudgeted round for the free-running uplink, then set the
+    // fleet budget to 60% of it: binding at 8 bits, comfortably above the
+    // scheduler's 3-bit multiscale floor.
+    let free_bytes = {
+        let mut probe = Coordinator::new(cfg.clone(), backend.as_ref())?;
+        probe.step()?.bytes_up
+    };
+    cfg.bit_budget = free_bytes * 6 / 10;
+    let mut t = Table::new(&["pipeline", "round", "Melems/s", "bytes/round", "free bytes"]);
+    let mut coord = Coordinator::new(cfg.clone(), backend.as_ref())?;
+    let elems = coord.params.len() * cfg.clients;
+    let mut records: Vec<RoundRecord> = Vec::with_capacity(warmup + runs);
+    let timing = bench(warmup, runs, || {
+        records.push(coord.step().expect("budgeted round"));
+    });
+    let max_bytes =
+        records.iter().skip(warmup).map(|r| r.bytes_up).max().expect("timed rounds ran");
+    assert!(
+        max_bytes <= cfg.bit_budget,
+        "budgeted round spent {max_bytes} bytes, over the {} budget",
+        cfg.bit_budget
+    );
+    assert!(max_bytes < free_bytes, "the 60% budget must be binding (free = {free_bytes})");
+    assert!(coord.params.iter().all(|p| p.is_finite()), "params must stay finite under budget");
+    t.row(&[
+        "streaming".to_string(),
+        timing.pretty(),
+        format!("{:.1}", timing.melems_per_s(elems)),
+        max_bytes.to_string(),
+        free_bytes.to_string(),
+    ]);
+    t.print();
+    report.table("budgeted round throughput (multiscale b8)", &t);
+    report.metric("budget_round_melems_per_s", timing.melems_per_s(elems));
+    report.metric("budget_bytes_per_round", max_bytes as f64);
 
     report.finish(&opts)?;
     Ok(())

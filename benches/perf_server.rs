@@ -1,6 +1,6 @@
 //! §Perf — server-side aggregation throughput (the stage-4 hot path):
 //!
-//! * fused decode-accumulate ([`aggregate_serial`]) vs the pre-PR two-pass
+//! * fused decode-accumulate ([`accumulate_serial`]) vs the pre-PR two-pass
 //!   reference (decode into a dense scratch, then re-read it into the
 //!   weighted accumulate) per payload kind — the win the committed
 //!   `server_agg_fused_melems_per_s` baseline floor records,
@@ -18,7 +18,9 @@
 
 use tqsgd::benchkit::{bench, section, BenchOpts, Report, Table};
 use tqsgd::config::{QuantConfig, Scheme};
-use tqsgd::coordinator::aggregate::{aggregate_serial, aggregate_sharded, WeightedUplink};
+use tqsgd::coordinator::aggregate::{
+    accumulate_serial, accumulate_sharded, ContributionData, WeightedContribution,
+};
 use tqsgd::quant::{make_compressor, wire};
 use tqsgd::runtime::GroupRange;
 use tqsgd::util::Rng;
@@ -28,21 +30,37 @@ use tqsgd::util::Rng;
 /// then a second pass re-reads the scratch into the weighted accumulate.
 fn legacy_aggregate(
     groups: &[GroupRange],
-    uplinks: &[WeightedUplink<'_>],
+    items: &[WeightedContribution<'_>],
     agg: &mut [f32],
     scratch: &mut Vec<f32>,
 ) {
     agg.fill(0.0);
-    for u in uplinks {
-        for (gi, frame) in u.frames {
+    for item in items {
+        let ContributionData::Frames(frames) = &item.data else {
+            unreachable!("this bench only builds frame contributions")
+        };
+        for (gi, frame) in *frames {
             let g = &groups[*gi];
             wire::decode_dequantize_into(frame, scratch).unwrap();
             assert_eq!(scratch.len(), g.end - g.start, "frame length != group size");
             for (a, &d) in agg[g.start..g.end].iter_mut().zip(scratch.iter()) {
-                *a += u.w * d;
+                *a += item.w * d;
             }
         }
     }
+}
+
+/// Frame-backed contributions in apply order (the shape `finish_round`
+/// hands to the accumulate functions).
+fn frame_items<'a>(
+    frames: &'a [Vec<(usize, Vec<u8>)>],
+    ws: &[f32],
+) -> Vec<WeightedContribution<'a>> {
+    frames
+        .iter()
+        .zip(ws)
+        .map(|(f, &w)| WeightedContribution { data: ContributionData::Frames(f.as_slice()), w })
+        .collect()
 }
 
 /// Per-client frame sets: one codec per layer group (refit on that group's
@@ -123,20 +141,16 @@ fn main() -> anyhow::Result<()> {
     ] {
         let frames = make_frames(&groups, 8, scheme, bits.min(8), &mut rng);
         let ws = weights(8);
-        let uplinks: Vec<WeightedUplink<'_>> = frames
-            .iter()
-            .zip(&ws)
-            .map(|(f, &w)| WeightedUplink { frames: f, w })
-            .collect();
+        let items = frame_items(&frames, &ws);
         let mut agg_legacy = vec![0.0f32; d_total];
         let mut scratch = Vec::new();
         let t_legacy = bench(warmup, runs, || {
-            legacy_aggregate(&groups, &uplinks, &mut agg_legacy, &mut scratch);
+            legacy_aggregate(&groups, &items, &mut agg_legacy, &mut scratch);
             std::hint::black_box(&agg_legacy);
         });
         let mut agg_fused = vec![0.0f32; d_total];
         let t_fused = bench(warmup, runs, || {
-            aggregate_serial(&groups, &uplinks, &mut agg_fused).unwrap();
+            accumulate_serial(&groups, &items, &mut agg_fused).unwrap();
             std::hint::black_box(&agg_fused);
         });
         assert!(
@@ -171,18 +185,14 @@ fn main() -> anyhow::Result<()> {
     for &n in &client_counts {
         let frames = make_frames(&groups, n, Scheme::Tnqsgd, 3, &mut rng);
         let ws = weights(n);
-        let uplinks: Vec<WeightedUplink<'_>> = frames
-            .iter()
-            .zip(&ws)
-            .map(|(f, &w)| WeightedUplink { frames: f, w })
-            .collect();
+        let items = frame_items(&frames, &ws);
         let mut agg_ref = vec![0.0f32; d_total];
-        aggregate_serial(&groups, &uplinks, &mut agg_ref)?;
+        accumulate_serial(&groups, &items, &mut agg_ref)?;
         let mut base_ns = 0.0f64;
         for &shards in &shard_counts {
             let mut agg = vec![0.0f32; d_total];
             let timing = bench(warmup, runs, || {
-                aggregate_sharded(&groups, &uplinks, &mut agg, shards).unwrap();
+                accumulate_sharded(&groups, &items, &mut agg, shards).unwrap();
                 std::hint::black_box(&agg);
             });
             assert!(

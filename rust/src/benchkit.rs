@@ -10,8 +10,10 @@
 //!   every bench target honors (no per-target `env_usize` drift),
 //! * [`Report`] — captures every printed table plus named numeric metrics
 //!   and serializes them to JSON (the `BENCH_*.json` perf trajectory),
-//! * [`check_regression`] — the CI gate comparing a fresh report against
-//!   the committed `BENCH_baseline.json` (see `tqsgd perf-check`).
+//! * [`check_regression`] / [`check_ceiling`] — the CI gates comparing a
+//!   fresh report against the committed `BENCH_baseline.json` floors
+//!   (throughput, higher is better) and ceilings (bytes, lower is better);
+//!   see `tqsgd perf-check`.
 
 use std::time::Instant;
 
@@ -427,6 +429,41 @@ pub fn check_regression(
     ))
 }
 
+/// CI perf gate for lower-is-better metrics (bytes, latency): `metric` in
+/// `current` may not rise more than `max_rise` (fraction in `[0, 1)`) above
+/// `baseline`. Returns a one-line summary on pass, an error on fail.
+pub fn check_ceiling(
+    current: &Report,
+    baseline: &Report,
+    metric: &str,
+    max_rise: f64,
+) -> Result<String> {
+    if !(0.0..1.0).contains(&max_rise) {
+        bail!("max_rise must be in [0, 1), got {max_rise}");
+    }
+    let cur = current
+        .metric_value(metric)
+        .ok_or_else(|| anyhow!("current report has no metric {metric:?}"))?;
+    let base = baseline
+        .metric_value(metric)
+        .ok_or_else(|| anyhow!("baseline report has no metric {metric:?}"))?;
+    if base <= 0.0 || base.is_nan() || !cur.is_finite() {
+        bail!("non-positive baseline ({base}) or non-finite current ({cur}) for {metric:?}");
+    }
+    let ceiling = base * (1.0 + max_rise);
+    if cur > ceiling {
+        bail!(
+            "perf regression: {metric} = {cur:.2} is above the ceiling {ceiling:.2} \
+             ({:.0}% of baseline {base:.2})",
+            100.0 * (1.0 + max_rise)
+        );
+    }
+    Ok(format!(
+        "{metric}: {cur:.2} vs baseline {base:.2} (ceiling {ceiling:.2}, {:+.1}%) — OK",
+        100.0 * (cur / base - 1.0)
+    ))
+}
+
 /// Section header used by the bench binaries.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -578,5 +615,21 @@ mod tests {
         let err = check_regression(&slow, &base, "enc", 0.30).unwrap_err();
         assert!(err.to_string().contains("regression"), "{err}");
         assert!(check_regression(&ok, &base, "missing", 0.30).is_err());
+    }
+
+    #[test]
+    fn ceiling_gate_passes_and_fails() {
+        let opts = BenchOpts::default();
+        let mut base = Report::new("perf_round", &opts);
+        base.metric("bytes", 1000.0);
+        let mut ok = Report::new("perf_round", &opts);
+        ok.metric("bytes", 1090.0);
+        assert!(check_ceiling(&ok, &base, "bytes", 0.10).is_ok());
+        let mut fat = Report::new("perf_round", &opts);
+        fat.metric("bytes", 1101.0);
+        let err = check_ceiling(&fat, &base, "bytes", 0.10).unwrap_err();
+        assert!(err.to_string().contains("ceiling"), "{err}");
+        assert!(check_ceiling(&ok, &base, "missing", 0.10).is_err());
+        assert!(check_ceiling(&ok, &base, "bytes", 1.0).is_err(), "max_rise must be < 1");
     }
 }

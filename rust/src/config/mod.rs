@@ -12,6 +12,14 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::json::{self, Value};
 
+/// Largest per-element index bit-width the whole stack carries: `bitpack`
+/// packs 1..=16-bit indices, the wire decoders fall back off the 256-entry
+/// w·LUT above 8 bits, and [`ExperimentConfig::validate`] plus the preset
+/// grammar reject anything outside 1..=`MAX_BITS`. This is the single
+/// source of truth for the bound — the fused ≤ 8-bit kernels are a fast
+/// path, not a format limit.
+pub const MAX_BITS: u32 = 16;
+
 /// Gradient-compression scheme (the paper's methods + its baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scheme {
@@ -31,6 +39,10 @@ pub enum Scheme {
     Terngrad,
     /// Top-k sparsification baseline.
     Topk,
+    /// Extension: unbiased two-scale quantizer (Vineeth 2021) — a fine grid
+    /// on the distribution body merged with a coarse grid out to the
+    /// truncation threshold. Rate-adaptive via `Compressor::set_rate`.
+    Multiscale,
 }
 
 impl Scheme {
@@ -45,6 +57,7 @@ impl Scheme {
             "tbqsgd" => Scheme::Tbqsgd,
             "terngrad" => Scheme::Terngrad,
             "topk" => Scheme::Topk,
+            "multiscale" => Scheme::Multiscale,
             other => bail!("unknown scheme {other:?}"),
         })
     }
@@ -60,16 +73,29 @@ impl Scheme {
             Scheme::Tbqsgd => "tbqsgd",
             Scheme::Terngrad => "terngrad",
             Scheme::Topk => "topk",
+            Scheme::Multiscale => "multiscale",
         }
     }
 
-    /// Does this scheme use the truncated two-stage quantizer?
+    /// Does this scheme use the truncated two-stage quantizer? (Multiscale
+    /// also truncates at a fitted α, merged with its body grid.)
     pub fn truncated(&self) -> bool {
-        matches!(self, Scheme::Tqsgd | Scheme::Tnqsgd | Scheme::Tbqsgd)
+        matches!(
+            self,
+            Scheme::Tqsgd | Scheme::Tnqsgd | Scheme::Tbqsgd | Scheme::Multiscale
+        )
+    }
+
+    /// Can [`Compressor::set_rate`](crate::quant::Compressor::set_rate)
+    /// re-target this scheme's per-element bit-width? False for the codecs
+    /// whose rate is intrinsic (DSGD fp32, TernGrad's 2 bits, Top-k's
+    /// sparse pairs) — the bit-budget scheduler treats those as fixed cost.
+    pub fn rate_adaptive(&self) -> bool {
+        !matches!(self, Scheme::Dsgd | Scheme::Terngrad | Scheme::Topk)
     }
 
     /// Every scheme, in the order the sweeps and test grids iterate.
-    pub fn all() -> [Scheme; 8] {
+    pub fn all() -> [Scheme; 9] {
         [
             Scheme::Dsgd,
             Scheme::Qsgd,
@@ -79,6 +105,7 @@ impl Scheme {
             Scheme::Tbqsgd,
             Scheme::Terngrad,
             Scheme::Topk,
+            Scheme::Multiscale,
         ]
     }
 }
@@ -178,6 +205,15 @@ pub struct ScenarioConfig {
     /// Dirichlet concentration for label-skew (non-IID) sharding of the
     /// vision dataset; 0 = IID contiguous shards. Smaller = more skew.
     pub noniid_alpha: f64,
+    /// Per-client per-round uplink cap in bytes (0 = uncapped). A binding
+    /// cap engages the bit-budget scheduler even without a global
+    /// `bit_budget`, throttling that client's codecs so its round message
+    /// fits — observable in the `bytes_per_client` column.
+    pub uplink_cap_bytes: u64,
+    /// Uplink-cap heterogeneity: each client's cap is drawn deterministically
+    /// (seeded, dedicated stream role) from
+    /// `[uplink_cap_min_frac · cap, cap]`. 1.0 = homogeneous caps.
+    pub uplink_cap_min_frac: f64,
 }
 
 impl Default for ScenarioConfig {
@@ -193,14 +229,16 @@ impl Default for ScenarioConfig {
             stale_k: 0,
             stale_decay: 1.0,
             noniid_alpha: 0.0,
+            uplink_cap_bytes: 0,
+            uplink_cap_min_frac: 1.0,
         }
     }
 }
 
 impl ScenarioConfig {
     /// All preset names, in presentation order.
-    pub fn preset_names() -> [&'static str; 6] {
-        ["clean", "straggler", "lossy", "churn", "stale", "noniid"]
+    pub fn preset_names() -> [&'static str; 7] {
+        ["clean", "straggler", "lossy", "churn", "stale", "noniid", "bandwidth"]
     }
 
     /// Named scenario presets (see README §Scenarios).
@@ -227,6 +265,13 @@ impl ScenarioConfig {
             "noniid" => {
                 s.noniid_alpha = 0.3;
             }
+            "bandwidth" => {
+                // Heterogeneous per-client uplink caps that bind at the
+                // default model sizes, so the bit-budget scheduler's
+                // throttling shows up in bytes_up / bytes_per_client.
+                s.uplink_cap_bytes = 8192;
+                s.uplink_cap_min_frac = 0.5;
+            }
             other => bail!(
                 "unknown scenario {other:?}; presets: {}",
                 Self::preset_names().join(" ")
@@ -244,6 +289,7 @@ impl ScenarioConfig {
             && self.rejoin_prob == 0.0
             && self.stale_k == 0
             && self.noniid_alpha == 0.0
+            && self.uplink_cap_bytes == 0
     }
 
     /// Validate field ranges.
@@ -270,6 +316,12 @@ impl ScenarioConfig {
         if self.noniid_alpha < 0.0 || !self.noniid_alpha.is_finite() {
             bail!("scenario noniid_alpha must be >= 0, got {}", self.noniid_alpha);
         }
+        if !(self.uplink_cap_min_frac > 0.0 && self.uplink_cap_min_frac <= 1.0) {
+            bail!(
+                "scenario uplink_cap_min_frac must be in (0, 1], got {}",
+                self.uplink_cap_min_frac
+            );
+        }
         Ok(())
     }
 
@@ -286,6 +338,8 @@ impl ScenarioConfig {
             ("stale_k", json::num(self.stale_k as f64)),
             ("stale_decay", json::num(self.stale_decay)),
             ("noniid_alpha", json::num(self.noniid_alpha)),
+            ("uplink_cap_bytes", json::num(self.uplink_cap_bytes as f64)),
+            ("uplink_cap_min_frac", json::num(self.uplink_cap_min_frac)),
         ])
     }
 
@@ -312,6 +366,14 @@ impl ScenarioConfig {
         s.rejoin_prob = getf("rejoin_prob", s.rejoin_prob);
         s.stale_decay = getf("stale_decay", s.stale_decay);
         s.noniid_alpha = getf("noniid_alpha", s.noniid_alpha);
+        // Same loud failure for a negative byte cap (`-1 as u64` would mean
+        // "cap at 16 EiB", i.e. silently uncapped).
+        let cap = getf("uplink_cap_bytes", s.uplink_cap_bytes as f64);
+        if cap < 0.0 {
+            bail!("scenario uplink_cap_bytes must be >= 0, got {cap}");
+        }
+        s.uplink_cap_bytes = cap as u64;
+        s.uplink_cap_min_frac = getf("uplink_cap_min_frac", s.uplink_cap_min_frac);
         s.validate()?;
         Ok(s)
     }
@@ -391,6 +453,16 @@ pub struct ExperimentConfig {
     /// partial sum uplink through the configured codec (unbiased, so the
     /// expected aggregate is unchanged — see `coordinator::aggregate`).
     pub agg_tiers: usize,
+    /// Per-round total uplink byte budget driving the adaptive bit-rate
+    /// scheduler (`quant::budget::BitBudget`): each round the server
+    /// allocates per-(client, layer-group) bit-widths — DQ-SGD style,
+    /// from the observed truncation thresholds — so the fleet's summed
+    /// frame bytes fit the budget. Named for the bit allocation it drives;
+    /// the unit is bytes. 0 = disabled (codecs keep the static
+    /// `quant.bits`, bit-identical to the unscheduled engine). Per-client
+    /// caps (`scenario.uplink_cap_bytes`) compose with, and also engage,
+    /// the scheduler.
+    pub bit_budget: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -416,6 +488,7 @@ impl Default for ExperimentConfig {
             pipeline: PipelineMode::default(),
             cohort_k: 0,
             agg_tiers: 1,
+            bit_budget: 0,
         }
     }
 }
@@ -453,9 +526,13 @@ impl ExperimentConfig {
         if parts.len() == 3 && parts[2].starts_with('b') {
             cfg.model = parts[0].to_string();
             cfg.quant.scheme = Scheme::parse(parts[1])?;
-            cfg.quant.bits = parts[2][1..]
+            let bits: u32 = parts[2][1..]
                 .parse()
                 .map_err(|e| anyhow!("bad bits in preset {name:?}: {e}"))?;
+            if !(1..=MAX_BITS).contains(&bits) {
+                bail!("preset {name:?}: bits must be in 1..={MAX_BITS}, got {bits}");
+            }
+            cfg.quant.bits = bits;
             cfg.validate()?;
             return Ok(cfg);
         }
@@ -468,8 +545,8 @@ impl ExperimentConfig {
         if self.clients == 0 {
             bail!("clients must be >= 1");
         }
-        if !(1..=8).contains(&self.quant.bits) {
-            bail!("bits must be in 1..=8, got {}", self.quant.bits);
+        if !(1..=MAX_BITS).contains(&self.quant.bits) {
+            bail!("bits must be in 1..={MAX_BITS}, got {}", self.quant.bits);
         }
         if self.lr <= 0.0 || !(0.0..1.0).contains(&self.momentum) {
             bail!("bad optimizer hyper-parameters");
@@ -526,6 +603,7 @@ impl ExperimentConfig {
         }
         self.cohort_k = args.usize_or("cohort-k", self.cohort_k)?;
         self.agg_tiers = args.usize_or("agg-tiers", self.agg_tiers)?;
+        self.bit_budget = args.u64_or("bit-budget", self.bit_budget)?;
         // Scenario: `--scenario <preset>` selects a base, then freeform
         // flags override individual fields on top of it.
         if let Some(name) = args.get("scenario") {
@@ -541,6 +619,8 @@ impl ExperimentConfig {
         sc.stale_k = args.usize_or("stale-k", sc.stale_k)?;
         sc.stale_decay = args.f64_or("stale-decay", sc.stale_decay)?;
         sc.noniid_alpha = args.f64_or("noniid-alpha", sc.noniid_alpha)?;
+        sc.uplink_cap_bytes = args.u64_or("uplink-cap", sc.uplink_cap_bytes)?;
+        sc.uplink_cap_min_frac = args.f64_or("uplink-cap-frac", sc.uplink_cap_min_frac)?;
         self.validate()
     }
 
@@ -573,6 +653,7 @@ impl ExperimentConfig {
             ("pipeline", json::s(self.pipeline.name())),
             ("cohort_k", json::num(self.cohort_k as f64)),
             ("agg_tiers", json::num(self.agg_tiers as f64)),
+            ("bit_budget", json::num(self.bit_budget as f64)),
             (
                 "quant",
                 json::obj(vec![
@@ -628,6 +709,13 @@ impl ExperimentConfig {
         // aggregation (cohort_k <= 0 saturates to 0 = everyone).
         cfg.cohort_k = getf("cohort_k", cfg.cohort_k as f64).max(0.0) as usize;
         cfg.agg_tiers = getf("agg_tiers", cfg.agg_tiers as f64).max(0.0) as usize;
+        // Older configs without the field run unscheduled (budget disabled);
+        // a negative budget fails loudly like the scenario counts above.
+        let budget = getf("bit_budget", cfg.bit_budget as f64);
+        if budget < 0.0 {
+            bail!("bit_budget must be >= 0, got {budget}");
+        }
+        cfg.bit_budget = budget as u64;
         if let Some(q) = v.get("quant") {
             if let Some(s) = q.get("scheme").and_then(Value::as_str) {
                 cfg.quant.scheme = Scheme::parse(s)?;
@@ -749,6 +837,7 @@ mod tests {
         c.pipeline = PipelineMode::Streaming;
         c.cohort_k = 3;
         c.agg_tiers = 2;
+        c.bit_budget = 65536;
         let j = c.to_json().to_json();
         let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.model, "mlp");
@@ -761,14 +850,25 @@ mod tests {
         assert_eq!(c2.pipeline, PipelineMode::Streaming);
         assert_eq!(c2.cohort_k, 3);
         assert_eq!(c2.agg_tiers, 2);
+        assert_eq!(c2.bit_budget, 65536);
         assert!((c2.net.latency_sec - 0.01).abs() < 1e-12);
         // Older configs without the fields default to auto / barrier /
-        // full participation / flat aggregation.
+        // full participation / flat aggregation / unscheduled.
         let legacy = ExperimentConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
         assert_eq!(legacy.agg_shards, 0);
         assert_eq!(legacy.pipeline, PipelineMode::Barrier);
         assert_eq!(legacy.cohort_k, 0);
         assert_eq!(legacy.agg_tiers, 1);
+        assert_eq!(legacy.bit_budget, 0);
+        assert_eq!(legacy.scenario.uplink_cap_bytes, 0);
+        // Negative budgets / caps fail loudly instead of wrapping to huge.
+        for j in [
+            r#"{"bit_budget": -1}"#,
+            r#"{"scenario": {"uplink_cap_bytes": -4096}}"#,
+        ] {
+            let v = Value::parse(j).unwrap();
+            assert!(ExperimentConfig::from_json(&v).is_err(), "{j} must be rejected");
+        }
     }
 
     #[test]
@@ -822,6 +922,23 @@ mod tests {
     }
 
     #[test]
+    fn bits_bound_is_max_bits_everywhere() {
+        // The validate bound, the preset grammar, and bitpack all agree on
+        // MAX_BITS: 9..=16-bit configs are legal (they take the staged
+        // non-LUT decode path), 17 is not.
+        let mut c = ExperimentConfig::default();
+        for bits in 1..=MAX_BITS {
+            c.quant.bits = bits;
+            c.validate().unwrap();
+        }
+        c.quant.bits = MAX_BITS + 1;
+        assert!(c.validate().is_err());
+        assert_eq!(ExperimentConfig::preset("cnn_qsgd_b12").unwrap().quant.bits, 12);
+        assert!(ExperimentConfig::preset("cnn_qsgd_b17").is_err());
+        assert!(ExperimentConfig::preset("cnn_qsgd_b0").is_err());
+    }
+
+    #[test]
     fn scenario_presets_parse_and_validate() {
         for name in ScenarioConfig::preset_names() {
             let s = ScenarioConfig::preset(name).unwrap();
@@ -831,6 +948,11 @@ mod tests {
         assert!(ScenarioConfig::preset("mars-attack").is_err());
         assert!(ScenarioConfig::preset("clean").unwrap().is_clean());
         assert!(!ScenarioConfig::preset("lossy").unwrap().is_clean());
+        // A binding uplink cap is a perturbation: it engages the scheduler.
+        let bw = ScenarioConfig::preset("bandwidth").unwrap();
+        assert!(!bw.is_clean());
+        assert_eq!(bw.uplink_cap_bytes, 8192);
+        assert_eq!(bw.uplink_cap_min_frac, 0.5);
     }
 
     #[test]
@@ -841,6 +963,10 @@ mod tests {
         assert!(s.validate().is_err());
         let s = ScenarioConfig { stale_decay: 0.0, ..Default::default() };
         assert!(s.validate().is_err());
+        let s = ScenarioConfig { uplink_cap_min_frac: 0.0, ..Default::default() };
+        assert!(s.validate().is_err());
+        let s = ScenarioConfig { uplink_cap_min_frac: 1.5, ..Default::default() };
+        assert!(s.validate().is_err());
     }
 
     #[test]
@@ -848,6 +974,8 @@ mod tests {
         let scenario = ScenarioConfig {
             stale_k: 5,
             noniid_alpha: 0.25,
+            uplink_cap_bytes: 4096,
+            uplink_cap_min_frac: 0.75,
             ..ScenarioConfig::preset("lossy").unwrap()
         };
         let c = ExperimentConfig { scenario, ..Default::default() };
@@ -896,5 +1024,31 @@ mod tests {
         assert_eq!(c.quant.scheme, Scheme::Qsgd);
         assert_eq!(c.quant.bits, 5);
         assert_eq!(c.rounds, 10);
+    }
+
+    #[test]
+    fn budget_cli_flags() {
+        let mut c = ExperimentConfig::default();
+        let args = crate::cli::Args::parse(
+            [
+                "x",
+                "--bit-budget",
+                "32768",
+                "--scenario",
+                "bandwidth",
+                "--uplink-cap",
+                "2048",
+                "--uplink-cap-frac",
+                "0.8",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.bit_budget, 32768);
+        assert_eq!(c.scenario.uplink_cap_bytes, 2048, "flag overrides the preset");
+        assert_eq!(c.scenario.uplink_cap_min_frac, 0.8);
+        assert!(c.id().ends_with("@bandwidth"), "{}", c.id());
     }
 }

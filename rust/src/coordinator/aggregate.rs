@@ -50,7 +50,7 @@ use std::cmp::Reverse;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::QuantConfig;
-use crate::quant::{make_compressor, wire};
+use crate::quant::{wire, CodecBuilder};
 use crate::runtime::GroupRange;
 use crate::util::Rng;
 
@@ -58,16 +58,6 @@ use crate::util::Rng;
 /// so tier quantization composes with every other seeded stream (client
 /// compress, scenario, parking) without shifting their draws.
 const ROLE_TIER: u64 = 0x7E1A;
-
-/// One applied uplink in the fixed apply order: a message's per-group
-/// frames (exactly as carried by [`Message`](super::Message)) and its
-/// normalized aggregation weight `w_i = weight_i * decay^staleness / Σw`.
-pub struct WeightedUplink<'a> {
-    /// `(group index, frame bytes)` pairs for this client's round.
-    pub frames: &'a [(usize, Vec<u8>)],
-    /// Normalized weight applied to every dequantized element.
-    pub w: f32,
-}
 
 /// Where one applied contribution's per-element values come from.
 pub enum ContributionData<'a> {
@@ -324,6 +314,10 @@ pub fn accumulate_two_tier(
     let mut partial = vec![0.0f32; agg.len()];
     let mut frame: Vec<u8> = Vec::new();
     let mut tier_bytes = 0u64;
+    // Mid-tier codecs come from the same builder as the client fleet's, but
+    // always bare: partial sums are transient, so error feedback across
+    // rounds would be meaningless here.
+    let builder = CodecBuilder::from_quant(quant).error_feedback(false);
     // Contiguous chunks of the apply order, sizes as equal as possible
     // (the first `n % nodes` chunks take one extra item) — a deterministic
     // partition, so the tree is replayable like everything else.
@@ -339,7 +333,7 @@ pub fn accumulate_two_tier(
         accumulate_sharded(groups, chunk, &mut partial, shards)?;
         for (gi, g) in groups.iter().enumerate() {
             let slice = &partial[g.start..g.end];
-            let mut codec = make_compressor(quant);
+            let mut codec = builder.build_plain();
             codec.refit(slice);
             let mut rng =
                 Rng::for_stream(seed, ROLE_TIER, (node * 1031 + gi) as u64, round);
@@ -350,33 +344,6 @@ pub fn accumulate_two_tier(
         }
     }
     Ok(tier_bytes)
-}
-
-/// [`accumulate_serial`] over frame-only uplinks (the historical API; the
-/// perf_server bench and the wire-level property tests pin it).
-pub fn aggregate_serial(
-    groups: &[GroupRange],
-    uplinks: &[WeightedUplink<'_>],
-    agg: &mut [f32],
-) -> Result<()> {
-    accumulate_serial(groups, &frame_items(uplinks), agg)
-}
-
-/// [`accumulate_sharded`] over frame-only uplinks (the historical API).
-pub fn aggregate_sharded(
-    groups: &[GroupRange],
-    uplinks: &[WeightedUplink<'_>],
-    agg: &mut [f32],
-    shards: usize,
-) -> Result<()> {
-    accumulate_sharded(groups, &frame_items(uplinks), agg, shards)
-}
-
-fn frame_items<'a>(uplinks: &'a [WeightedUplink<'a>]) -> Vec<WeightedContribution<'a>> {
-    uplinks
-        .iter()
-        .map(|u| WeightedContribution { data: ContributionData::Frames(u.frames), w: u.w })
-        .collect()
 }
 
 #[cfg(test)]
@@ -426,24 +393,28 @@ mod tests {
         };
         let frames_a = vec![(0usize, mk(&mut rng, 40)), (1usize, mk(&mut rng, 25))];
         let frames_b = vec![(0usize, mk(&mut rng, 40)), (1usize, mk(&mut rng, 25))];
-        let ups = vec![
-            WeightedUplink { frames: &frames_a, w: 0.75 },
-            WeightedUplink { frames: &frames_b, w: 0.25 },
-        ];
+        let ups = [(&frames_a, 0.75f32), (&frames_b, 0.25f32)];
         // Reference: the old scratch-buffer loop, uplinks outer.
         let mut want = vec![0.0f32; 65];
         let mut scratch = Vec::new();
-        for u in &ups {
-            for (gi, frame) in u.frames {
+        for (frames, w) in &ups {
+            for (gi, frame) in frames.iter() {
                 let g = &groups[*gi];
                 wire::decode_dequantize_into(frame, &mut scratch).unwrap();
                 for (a, &d) in want[g.start..g.end].iter_mut().zip(&scratch) {
-                    *a += u.w * d;
+                    *a += w * d;
                 }
             }
         }
+        let items: Vec<WeightedContribution<'_>> = ups
+            .iter()
+            .map(|(f, w)| WeightedContribution {
+                data: ContributionData::Frames(f.as_slice()),
+                w: *w,
+            })
+            .collect();
         let mut got = vec![7.0f32; 65]; // dirty: aggregate must zero first
-        aggregate_serial(&groups, &ups, &mut got).unwrap();
+        accumulate_serial(&groups, &items, &mut got).unwrap();
         assert_eq!(got, want);
     }
 
@@ -569,20 +540,23 @@ mod tests {
         let mut groups = groups_of(&[30, 30]);
         groups[1].start = 20; // overlap
         let frames = vec![(0usize, crate::quant::wire::Payload::Raw(vec![0.0; 30]).encode(0))];
-        let ups = vec![WeightedUplink { frames: &frames, w: 1.0 }];
+        let items =
+            vec![WeightedContribution { data: ContributionData::Frames(&frames), w: 1.0 }];
         let mut agg = vec![0.0f32; 60];
-        assert!(aggregate_sharded(&groups, &ups, &mut agg, 2).is_err());
+        assert!(accumulate_sharded(&groups, &items, &mut agg, 2).is_err());
         // Frame length != group size errors through the shard threads too.
         let groups = groups_of(&[30, 30]);
         let short = vec![(0usize, crate::quant::wire::Payload::Raw(vec![0.0; 10]).encode(0))];
-        let ups = vec![WeightedUplink { frames: &short, w: 1.0 }];
-        assert!(aggregate_sharded(&groups, &ups, &mut agg, 2).is_err());
-        assert!(aggregate_serial(&groups, &ups, &mut agg).is_err());
+        let items =
+            vec![WeightedContribution { data: ContributionData::Frames(&short), w: 1.0 }];
+        assert!(accumulate_sharded(&groups, &items, &mut agg, 2).is_err());
+        assert!(accumulate_serial(&groups, &items, &mut agg).is_err());
         // A frame referencing a group that does not exist must fail on BOTH
         // paths — never be silently skipped by the shard match.
         let orphan = vec![(5usize, crate::quant::wire::Payload::Raw(vec![0.0; 30]).encode(0))];
-        let ups = vec![WeightedUplink { frames: &orphan, w: 1.0 }];
-        assert!(aggregate_sharded(&groups, &ups, &mut agg, 2).is_err());
-        assert!(aggregate_serial(&groups, &ups, &mut agg).is_err());
+        let items =
+            vec![WeightedContribution { data: ContributionData::Frames(&orphan), w: 1.0 }];
+        assert!(accumulate_sharded(&groups, &items, &mut agg, 2).is_err());
+        assert!(accumulate_serial(&groups, &items, &mut agg).is_err());
     }
 }

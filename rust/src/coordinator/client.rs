@@ -10,58 +10,13 @@
 
 use crate::config::ExperimentConfig;
 use crate::data::{gather_batch, BatchSampler, Dataset, MarkovCorpus};
-use crate::quant::{make_compressor, Compressor, ErrorFeedback, FrameArena};
+use crate::quant::{CodecBuilder, FrameArena};
 use crate::runtime::GroupRange;
 use crate::util::Rng;
 
 use super::network::Message;
 
-/// Per-(client, group) compression state: plain codec or EF-wrapped.
-pub(crate) enum GroupCodec {
-    Plain(Box<dyn Compressor>),
-    Ef(ErrorFeedback),
-}
-
-impl GroupCodec {
-    fn refit(&mut self, grads: &[f32]) {
-        match self {
-            GroupCodec::Plain(c) => c.refit(grads),
-            GroupCodec::Ef(c) => c.refit(grads),
-        }
-    }
-
-    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
-        match self {
-            GroupCodec::Plain(c) => c.compress_into(grads, rng, out),
-            GroupCodec::Ef(c) => c.compress_with_feedback_into(grads, rng, out),
-        }
-    }
-
-    /// The network lost this frame for good: EF codecs fold it back into the
-    /// residual (plain codecs have no state to repair).
-    fn restore_lost(&mut self, frame: &[u8]) {
-        if let GroupCodec::Ef(c) = self {
-            c.restore_lost(frame);
-        }
-    }
-
-    fn describe(&self) -> String {
-        match self {
-            GroupCodec::Plain(c) => c.describe(),
-            GroupCodec::Ef(c) => c.describe(),
-        }
-    }
-
-    /// Resident bytes of mutable codec state (plain codecs keep only their
-    /// fit parameters — O(1), counted as 0 here; EF keeps the residual
-    /// working set or its parked frame).
-    fn state_bytes(&self) -> usize {
-        match self {
-            GroupCodec::Plain(_) => 0,
-            GroupCodec::Ef(c) => c.state_bytes(),
-        }
-    }
-}
+pub(crate) use crate::quant::GroupCodec;
 
 /// The task a client trains on.
 pub enum TaskData {
@@ -137,7 +92,7 @@ impl Client {
             }
             let mut rng = Rng::for_stream(seed, 0x9A7E, (self.id * 1031 + gi) as u64, round as u64);
             let mut buf = self.arena.take();
-            self.codecs[gi].compress_into(slice, &mut rng, &mut buf);
+            self.codecs[gi].encode(slice, &mut rng, &mut buf);
             frames.push((gi, buf));
         }
         Message { client: self.id, round, frames, loss }
@@ -162,6 +117,17 @@ impl Client {
     /// construction (see [`FrameArena::fresh_allocs`]).
     pub fn frame_allocs(&self) -> u64 {
         self.arena.fresh_allocs()
+    }
+
+    /// Apply a [`RatePlan`](crate::quant::RatePlan) row: re-target each
+    /// layer group's codec at the scheduled width (see
+    /// [`Compressor::set_rate`](crate::quant::Compressor::set_rate) — the
+    /// standing fit is reused, no refit). Extra entries are ignored,
+    /// missing ones leave the codec unchanged.
+    pub(crate) fn set_rates(&mut self, bits: &[u32]) {
+        for (codec, &b) in self.codecs.iter_mut().zip(bits) {
+            codec.set_rate(b);
+        }
     }
 
     /// Park every EF residual as a quantized frame (arena-recycled buffers,
@@ -214,15 +180,5 @@ impl Client {
 
 /// One codec per layer group, EF-wrapped when the experiment asks for it.
 pub(crate) fn make_codecs(cfg: &ExperimentConfig, groups: &[GroupRange]) -> Vec<GroupCodec> {
-    groups
-        .iter()
-        .map(|_| {
-            let inner = make_compressor(&cfg.quant);
-            if cfg.quant.error_feedback {
-                GroupCodec::Ef(ErrorFeedback::new(inner))
-            } else {
-                GroupCodec::Plain(inner)
-            }
-        })
-        .collect()
+    CodecBuilder::from_quant(&cfg.quant).build_many(groups.len())
 }

@@ -73,7 +73,7 @@ use crate::config::ExperimentConfig;
 use crate::data::{gather_batch, BatchSampler, Dataset, MarkovCorpus};
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::MomentumSgd;
-use crate::quant::FrameArena;
+use crate::quant::{BitBudget, FrameArena};
 use crate::runtime::{Backend, GroupRange, ModelSpec};
 use crate::util::Rng;
 
@@ -132,6 +132,11 @@ pub struct Coordinator<'b> {
     /// aggregator tree (`agg_tiers = 2`); 0 on the flat path. Interior
     /// server-tree traffic — deliberately not folded into `bytes_up`.
     pub(crate) tier_bytes: u64,
+    /// Adaptive bit-rate scheduler, engaged only when `bit_budget > 0` or
+    /// the scenario sets per-client uplink caps. `None` is the strict
+    /// no-op path: no plans, no observations, no RNG draws — bit-identical
+    /// to the pre-scheduler engine (DETERMINISM.md invariant 6).
+    pub(crate) budget: Option<BitBudget>,
 }
 
 /// The N logical clients of one experiment plus the server-side evaluation
@@ -238,9 +243,16 @@ impl<'b> Coordinator<'b> {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         }
         .min(spec.groups.len().max(1));
+        let scenario = ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed);
+        let budget = if cfg.bit_budget > 0 || cfg.scenario.uplink_cap_bytes > 0 {
+            let dims = spec.groups.iter().map(|g| g.end - g.start).collect();
+            Some(BitBudget::new(&cfg, dims, scenario.uplink_caps().to_vec()))
+        } else {
+            None
+        };
         Ok(Coordinator {
             net,
-            scenario: ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed),
+            scenario,
             groups: spec.groups.clone(),
             spec,
             cfg,
@@ -259,6 +271,7 @@ impl<'b> Coordinator<'b> {
             contrib_reallocs: 0,
             last_train_loss: 0.0,
             tier_bytes: 0,
+            budget,
         })
     }
 

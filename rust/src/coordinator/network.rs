@@ -22,6 +22,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::NetConfig;
+use crate::quant::RatePlan;
 
 /// Per-round message with its payload bytes.
 #[derive(Clone, Debug)]
@@ -145,8 +146,18 @@ pub trait Transport: Send {
 
     /// Broadcast the round's parameters to the reachable clients, with the
     /// participation mask (`active_set[i]` = client `i` computes this
-    /// round). In-process transports have nothing to send.
-    fn begin_round(&mut self, round: usize, active_set: &[bool], params: &[f32]) -> Result<()>;
+    /// round) and, when the bit-budget scheduler is active, each client's
+    /// per-layer-group bit assignment for the round (`rates` is `None`
+    /// whenever the scheduler is off — the wire then carries an empty rate
+    /// block, see PROTOCOL.md §3.3). In-process transports have nothing to
+    /// send: the coordinator applies the plan to its own `Client`s.
+    fn begin_round(
+        &mut self,
+        round: usize,
+        active_set: &[bool],
+        params: &[f32],
+        rates: Option<&RatePlan>,
+    ) -> Result<()>;
 
     /// Collect one uplink outcome from every reachable active client.
     /// Clients whose connection dies mid-round are silently excluded (they
@@ -260,8 +271,15 @@ impl Transport for SimNet {
         "sim"
     }
 
-    fn begin_round(&mut self, _round: usize, _active_set: &[bool], _params: &[f32]) -> Result<()> {
-        // In-process clients read the parameter vector directly.
+    fn begin_round(
+        &mut self,
+        _round: usize,
+        _active_set: &[bool],
+        _params: &[f32],
+        _rates: Option<&RatePlan>,
+    ) -> Result<()> {
+        // In-process clients read the parameter vector directly (and the
+        // coordinator applies rate plans to its own clients).
         Ok(())
     }
 

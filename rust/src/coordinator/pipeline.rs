@@ -171,6 +171,22 @@ fn cohort_stage(
     Ok(k)
 }
 
+/// The bit-budget stage shared by the in-process modes: compute this
+/// round's rate plan from the latest tail observations (if the scheduler is
+/// engaged) and re-target the active clients' codecs at the scheduled
+/// widths — `set_rate` re-derives thresholds from each codec's standing
+/// fit, no refit. Strict no-op when the scheduler is off (`budget: None`):
+/// no plan, no draws, no codec touches (DETERMINISM.md invariant 6).
+fn apply_rate_plan(coord: &mut Coordinator<'_>, round: u64, active_set: &[bool]) {
+    let Some(budget) = &coord.budget else { return };
+    let active: Vec<usize> =
+        active_set.iter().enumerate().filter_map(|(i, &a)| a.then_some(i)).collect();
+    let plan = budget.plan(round, &active);
+    for (i, bits) in plan.clients.iter().zip(&plan.bits) {
+        coord.clients[*i].set_rates(bits);
+    }
+}
+
 fn begin_round_stage(coord: &mut Coordinator<'_>) -> Result<RoundStart> {
     let timer = Timer::start();
     let round = coord.round;
@@ -206,6 +222,7 @@ fn begin_round_stage(coord: &mut Coordinator<'_>) -> Result<RoundStart> {
 pub(crate) fn step_barrier(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     let start = begin_round_stage(coord)?;
     let round = coord.round;
+    apply_rate_plan(coord, round as u64, &start.active_set);
 
     // Encode: per-client compression fanned out across threads. Strict
     // barrier — the round proceeds only once every encoder has joined.
@@ -275,6 +292,7 @@ pub(crate) fn step_barrier(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
 pub(crate) fn step_streaming(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     let start = begin_round_stage(coord)?;
     let round = coord.round;
+    apply_rate_plan(coord, round as u64, &start.active_set);
 
     // Lazily size the per-client contribution buffers (one full-dimension
     // f32 buffer per client, reused across rounds — the decode-side
@@ -426,8 +444,16 @@ pub(crate) fn step_remote(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     // per-client codec state lives in the worker processes, so no residual
     // parking happens here — non-cohort workers just sit the round out.
     let expected = cohort_stage(coord, round as u64, &mut active_set, false)?;
+    // Bit-budget scheduler: the plan rides the ROUND_START broadcast so the
+    // workers re-target their codecs exactly as the in-process modes do
+    // (`None` → an empty rate block on the wire, PROTOCOL.md §3.3).
+    let rates = coord.budget.as_ref().map(|b| {
+        let active: Vec<usize> =
+            active_set.iter().enumerate().filter_map(|(i, &a)| a.then_some(i)).collect();
+        b.plan(round as u64, &active)
+    });
     let t = Timer::start();
-    coord.net.begin_round(round, &active_set, &coord.params)?;
+    coord.net.begin_round(round, &active_set, &coord.params, rates.as_ref())?;
     let mut ups = coord.net.collect_round(round, &active_set)?;
     let exchange_secs = t.secs();
     // Ascending client id — the barrier path's deterministic message order
@@ -501,6 +527,15 @@ fn finish_round(
 ) -> Result<RoundRecord> {
     let round = coord.round;
     let dropped_clients = expected.saturating_sub(delivered.len());
+    // Bit-budget observation: harvest the truncation threshold each frame
+    // already carries (keyed by the frame's origin round, newest-wins), so
+    // the next plan sees current tail scale. Only when the scheduler is
+    // engaged — the disabled path must not touch budget state at all.
+    if let Some(budget) = &mut coord.budget {
+        for m in &delivered {
+            budget.observe(m.client, m.round, &m.frames);
+        }
+    }
     let report = coord.net.round_uplink_conditioned(&delivered, &conds);
 
     // Bounded-staleness schedule: which frames apply now vs next round

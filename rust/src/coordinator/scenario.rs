@@ -32,6 +32,7 @@ const ROLE_STRAGGLER: u64 = 0x5C_E1;
 const ROLE_CHURN: u64 = 0x5C_E2;
 const ROLE_LOSS: u64 = 0x5C_E3;
 const ROLE_COHORT: u64 = 0x5C_E4;
+const ROLE_BW: u64 = 0x5C_E5;
 
 /// A frame held back by the bounded-staleness scheduler.
 #[derive(Clone, Debug)]
@@ -50,6 +51,10 @@ pub struct ScenarioEngine {
     active: Vec<bool>,
     /// Fixed straggler assignment per client.
     slow: Vec<bool>,
+    /// Fixed per-client uplink cap in bytes (empty when the scenario sets
+    /// no caps; 0 entries would mean "uncapped", but the draw below always
+    /// yields positive caps).
+    uplink_caps: Vec<u64>,
     pending: Vec<LateFrame>,
 }
 
@@ -72,7 +77,41 @@ impl ScenarioEngine {
         for &i in &order[..slow_count] {
             slow[i] = true;
         }
-        ScenarioEngine { cfg, seed, active: vec![true; n], slow, pending: Vec::new() }
+        // Heterogeneous uplink caps: each client's cap is a seeded draw in
+        // [min_frac, 1] of the configured ceiling, fixed for the run (real
+        // fleets have stable per-device bandwidth, not per-round jitter).
+        // cap == 0 performs NO draws, keeping invariant 6's strict no-op.
+        let uplink_caps = if cfg.uplink_cap_bytes > 0 {
+            (0..n)
+                .map(|i| {
+                    let u = Rng::for_stream(seed, ROLE_BW, i as u64, 0).f64();
+                    let frac = cfg.uplink_cap_min_frac + (1.0 - cfg.uplink_cap_min_frac) * u;
+                    ((cfg.uplink_cap_bytes as f64 * frac) as u64).max(1)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        ScenarioEngine {
+            cfg,
+            seed,
+            active: vec![true; n],
+            slow,
+            uplink_caps,
+            pending: Vec::new(),
+        }
+    }
+
+    /// This client's uplink cap in bytes (0 = uncapped). Fixed per run by
+    /// a dedicated seeded stream (`ROLE_BW`), so the bit-budget planner's
+    /// per-client constraints are reproducible.
+    pub fn uplink_cap(&self, client: usize) -> u64 {
+        self.uplink_caps.get(client).copied().unwrap_or(0)
+    }
+
+    /// Per-client uplink caps for the whole fleet (empty = no caps).
+    pub fn uplink_caps(&self) -> &[u64] {
+        &self.uplink_caps
     }
 
     /// The scenario this engine runs.
@@ -401,6 +440,31 @@ mod tests {
             let _ = with.sample_cohort(round, 8, 3);
             assert_eq!(with.begin_round(round), without.begin_round(round));
         }
+    }
+
+    #[test]
+    fn uplink_caps_are_seeded_bounded_and_off_by_default() {
+        let cfg = ScenarioConfig::preset("bandwidth").unwrap();
+        let a = ScenarioEngine::new(cfg.clone(), 8, 5);
+        let b = ScenarioEngine::new(cfg.clone(), 8, 5);
+        for c in 0..8 {
+            let cap = a.uplink_cap(c);
+            assert_eq!(cap, b.uplink_cap(c), "caps must be seed-stable");
+            let lo = (cfg.uplink_cap_bytes as f64 * cfg.uplink_cap_min_frac) as u64;
+            assert!(
+                cap >= lo && cap <= cfg.uplink_cap_bytes,
+                "client {c}: cap {cap} outside [{lo}, {}]",
+                cfg.uplink_cap_bytes
+            );
+        }
+        assert!(
+            (0..8).any(|c| a.uplink_cap(c) < cfg.uplink_cap_bytes),
+            "min_frac < 1 should produce heterogeneous caps"
+        );
+        // The default scenario draws nothing and reports uncapped.
+        let clean = ScenarioEngine::new(ScenarioConfig::default(), 8, 5);
+        assert!(clean.uplink_caps().is_empty());
+        assert_eq!(clean.uplink_cap(3), 0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! little-endian byte count, then that many payload bytes, whose first byte
 //! is the message type. Five message types exist — HELLO, WELCOME,
 //! ROUND_START, UPLINK, SHUTDOWN — and `docs/PROTOCOL.md` is the normative
-//! byte-level spec (including the four wire-frame kinds an UPLINK carries).
+//! byte-level spec (including the five wire-frame kinds an UPLINK carries).
 //!
 //! Roles:
 //!
@@ -46,6 +46,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::json::Value;
+use crate::quant::RatePlan;
 use crate::runtime::make_backend;
 
 use super::network::{
@@ -56,8 +57,9 @@ use super::ScenarioEngine;
 
 /// Protocol version carried by HELLO/WELCOME. Both sides must match
 /// exactly; bump it whenever a message layout or wire-frame kind changes
-/// (see `docs/PROTOCOL.md` §Versioning).
-pub const PROTO_VERSION: u16 = 1;
+/// (see `docs/PROTOCOL.md` §Versioning). Version 2 added the ROUND_START
+/// rate block and the multiscale wire-frame kind (4).
+pub const PROTO_VERSION: u16 = 2;
 
 // Message type bytes (first payload byte).
 const MSG_HELLO: u8 = 0x01;
@@ -298,14 +300,26 @@ impl Transport for TcpTransport {
     }
 
     /// Send ROUND_START to every live worker — actives get the parameter
-    /// vector, churned-out workers an empty keep-alive (so their read clock
+    /// vector plus their bit-budget plan row (empty when the scheduler is
+    /// off), churned-out workers an empty keep-alive (so their read clock
     /// keeps ticking). A failed write marks the connection dead; the round
     /// proceeds with the survivors.
-    fn begin_round(&mut self, round: usize, active_set: &[bool], params: &[f32]) -> Result<()> {
+    fn begin_round(
+        &mut self,
+        round: usize,
+        active_set: &[bool],
+        params: &[f32],
+        rates: Option<&RatePlan>,
+    ) -> Result<()> {
         for (i, slot) in self.conns.iter_mut().enumerate() {
             let Some(stream) = slot else { continue };
             let active = active_set.get(i).copied().unwrap_or(false);
-            let body = if active { 10 + 4 * params.len() } else { 10 };
+            let bits: &[u32] = if active {
+                rates.and_then(|plan| plan.rates_for(i)).unwrap_or(&[])
+            } else {
+                &[]
+            };
+            let body = if active { 14 + 4 * params.len() + bits.len() } else { 14 };
             let mut p = Vec::with_capacity(body);
             p.push(MSG_ROUND_START);
             p.extend_from_slice(&(round as u32).to_le_bytes());
@@ -319,6 +333,14 @@ impl Transport for TcpTransport {
                 }
             } else {
                 p.extend_from_slice(&0u32.to_le_bytes());
+            }
+            // Rate block (PROTOCOL.md §3.3): this worker's plan row, one
+            // byte per layer group. Empty when the scheduler is off, the
+            // worker is inactive, or the plan has no row for the client —
+            // the worker then keeps its standing codec widths.
+            p.extend_from_slice(&checked_wire_len(bits.len(), "rates")?.to_le_bytes());
+            for &b in bits {
+                p.push(b.min(u8::MAX as u32) as u8);
             }
             if write_msg(stream, &p).is_err() {
                 *slot = None;
@@ -522,7 +544,8 @@ pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<
                 let active = c.u8()? != 0;
                 let count = c.u32()? as usize;
                 if !active {
-                    // Keep-alive for a churned-out round: nothing to do.
+                    // Keep-alive for a churned-out round: nothing to do (the
+                    // trailing rate block is dropped with the payload).
                     continue;
                 }
                 let bytes = c.take(
@@ -537,6 +560,15 @@ pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<
                         .chunks_exact(4)
                         .map(|b| f32::from_le_bytes(b.try_into().expect("4 bytes"))),
                 );
+                // Rate block: re-target the codecs at the scheduled widths
+                // before encoding, exactly as the in-process pipelines do.
+                // Empty block → the scheduler is off; keep standing widths.
+                let nrates = c.u32()? as usize;
+                let rate_bytes = c.take(nrates)?;
+                if !rate_bytes.is_empty() {
+                    let bits: Vec<u32> = rate_bytes.iter().map(|&b| b as u32).collect();
+                    me.set_rates(&bits);
+                }
 
                 // Compute → Encode → per-client uplink routing: the same
                 // stages, through the same code, as the in-process round.

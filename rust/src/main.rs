@@ -15,7 +15,7 @@
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
-use tqsgd::benchkit::{check_regression, Report, Table};
+use tqsgd::benchkit::{check_ceiling, check_regression, Report, Table};
 use tqsgd::cli::Args;
 use tqsgd::config::{ExperimentConfig, PipelineMode, Scheme};
 use tqsgd::coordinator::{
@@ -65,10 +65,14 @@ fn main() -> Result<()> {
                  \x20             --pipeline (barrier|streaming round engine; bit-identical)\n\
                  \x20             --cohort-k (clients sampled per round; 0 = all, K >= N = all)\n\
                  \x20             --agg-tiers (1 = flat aggregation; 2 = two-tier re-encoded tree)\n\
-                 scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid)\n\
+                 \x20             --bit-budget (fleet uplink bytes/round; 0 = scheduler off;\n\
+                 \x20              pairs well with --scheme multiscale, which re-rates per round)\n\
+                 scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid|bandwidth)\n\
                  \x20             --straggler-frac --straggler-mult --loss-prob --max-retries\n\
                  \x20             --dropout-prob --rejoin-prob --stale-k --stale-decay\n\
-                 \x20             --noniid-alpha"
+                 \x20             --noniid-alpha\n\
+                 \x20             --uplink-cap --uplink-cap-frac (per-client byte caps; the\n\
+                 \x20              bandwidth preset draws seeded caps in [frac*cap, cap])"
             );
             Ok(())
         }
@@ -92,6 +96,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("config: {}", cfg.id());
     if !cfg.scenario.is_clean() {
         println!("scenario: {} (seeded, bit-reproducible)", cfg.scenario.name);
+    }
+    if cfg.bit_budget > 0 {
+        println!("bit budget: {} uplink bytes/round (adaptive per-group rates)", cfg.bit_budget);
     }
     let report = run_experiment(cfg.clone(), true)?;
     println!(
@@ -228,16 +235,20 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// CI perf gate: compare a fresh bench JSON report (`perf_hotpath` or
-/// `perf_server`) against the committed `BENCH_baseline.json` and fail
-/// (non-zero exit) when any gated throughput metric dropped more than
-/// `--max-drop` below the baseline. `--metric` takes a comma-separated
-/// list; every listed metric must hold its floor.
+/// CI perf gate: compare a fresh bench JSON report (`perf_hotpath`,
+/// `perf_server`, `perf_round`) against the committed `BENCH_baseline.json`
+/// and fail (non-zero exit) when a gated metric broke its bound. `--metric`
+/// lists higher-is-better metrics (each must stay within `--max-drop` of its
+/// baseline floor); `--metric-max` lists lower-is-better metrics like
+/// `budget_bytes_per_round` (each must stay within `--max-rise` of its
+/// baseline ceiling). Both take comma-separated lists.
 fn cmd_perf_check(args: &Args) -> Result<()> {
     let current = args.str_or("current", "BENCH_perf.json");
     let baseline = args.str_or("baseline", "BENCH_baseline.json");
     let metrics = args.str_or("metric", "tqsgd_b4_encode_into_melems_per_s");
+    let metrics_max = args.str_or("metric-max", "");
     let max_drop = args.f64_or("max-drop", 0.30)?;
+    let max_rise = args.f64_or("max-rise", 0.10)?;
     let cur = Report::load(std::path::Path::new(&current))?;
     let base = Report::load(std::path::Path::new(&baseline))?;
     let mut checked = 0usize;
@@ -249,9 +260,20 @@ fn cmd_perf_check(args: &Args) -> Result<()> {
         );
         checked += 1;
     }
-    // An empty --metric list must be a loud failure, not a green no-op gate.
+    for metric in metrics_max.split(',').map(str::trim).filter(|m| !m.is_empty()) {
+        println!(
+            "{}",
+            check_ceiling(&cur, &base, metric, max_rise)
+                .map_err(|e| e.context(format!("{current} vs {baseline}")))?
+        );
+        checked += 1;
+    }
+    // Empty --metric lists must be a loud failure, not a green no-op gate.
     if checked == 0 {
-        bail!("--metric {metrics:?} names no metrics; nothing was gated");
+        bail!(
+            "--metric {metrics:?} / --metric-max {metrics_max:?} name no metrics; \
+             nothing was gated"
+        );
     }
     Ok(())
 }

@@ -1,0 +1,413 @@
+//! Adaptive bit-budget scheduler (extension beyond the paper).
+//!
+//! DQ-SGD (arxiv 2107.14575) shows that under a total communication budget
+//! the right move is to spend bits where the gradient variance is — and the
+//! truncation thresholds the paper's codecs already fit per round are
+//! exactly that signal. [`BitBudget`] watches the α each uplink frame
+//! carries (via [`wire::frame_alpha`] — no extra wire traffic), and each
+//! round runs a deterministic greedy water-filling pass that assigns a
+//! bit-width to every (client, layer-group) pair such that the fleet's
+//! summed frame bytes fit a per-round budget and optional per-client
+//! uplink caps.
+//!
+//! The allocator maximizes marginal MSE reduction per extra byte: for a
+//! uniform s-level grid the quantization error scales as α²·d/s², so the
+//! benefit of moving a pair from b to b+1 bits is
+//! `α²·d·(1/s_b² − 1/s_{b+1}²)` with `s_b = 2^b − 1`, and the cost is the
+//! frame-byte delta from the wire-format model below. Pairs start at the
+//! scheme's minimum admissible width and are upgraded best-first until the
+//! budget binds or every pair reaches the configured ceiling.
+//!
+//! Everything is deterministic: observations are keyed by round
+//! (newest-wins, so transport arrival order is irrelevant) and heap ties
+//! break on a seeded per-(client, group) stream (`ROLE_BUDGET`), never on
+//! float identity or iteration order.
+
+use std::collections::BinaryHeap;
+
+use crate::config::{ExperimentConfig, Scheme, MAX_BITS};
+use crate::util::Rng;
+
+use super::wire;
+
+/// RNG role for allocator tie-breaking (see `util::rng` role registry).
+const ROLE_BUDGET: u64 = 0xB1D6;
+
+/// The bit-widths one round's scheduler pass assigned.
+///
+/// `clients` holds the active client ids in ascending order; `bits[i][g]`
+/// is the width for `clients[i]`'s layer group `g`. The coordinator applies
+/// a plan via `Client::set_rates` (in-process) or ships it in ROUND_START
+/// (remote workers).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RatePlan {
+    /// Active client ids, ascending.
+    pub clients: Vec<usize>,
+    /// Per-client, per-layer-group bit-widths, aligned with `clients`.
+    pub bits: Vec<Vec<u32>>,
+}
+
+impl RatePlan {
+    /// The bit row for `client`, if it is part of this plan.
+    pub fn rates_for(&self, client: usize) -> Option<&[u32]> {
+        let i = self.clients.binary_search(&client).ok()?;
+        Some(&self.bits[i])
+    }
+}
+
+/// Heap entry for the greedy upgrade pass. Ordered by score bits first
+/// (nonnegative finite f64, so the raw bit pattern preserves order), then
+/// the seeded tiebreak, then (client, group) as a last resort — a total
+/// order with no float comparisons.
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Upgrade {
+    score_bits: u64,
+    tie: u64,
+    client: usize,
+    group: usize,
+}
+
+/// Per-round adaptive bit-rate scheduler. See the module docs for the
+/// allocation model; construction happens once in the coordinator when
+/// `bit_budget > 0` or the scenario sets per-client uplink caps.
+pub struct BitBudget {
+    /// Total per-round uplink budget in bytes (0 = no fleet-wide bound,
+    /// per-client caps only).
+    budget: u64,
+    /// Per-client uplink caps in bytes (0 = uncapped), indexed by client.
+    caps: Vec<u64>,
+    scheme: Scheme,
+    /// Highest width the allocator may assign (`cfg.quant.bits`).
+    ceiling: u32,
+    topk_frac: f64,
+    /// Element count per layer group.
+    dims: Vec<usize>,
+    seed: u64,
+    /// Newest observed (round, α²) per (client, layer group).
+    obs: Vec<Vec<Option<(usize, f64)>>>,
+}
+
+impl BitBudget {
+    /// Scheduler for `cfg` over layer groups of the given element counts,
+    /// with per-client uplink caps (empty = uncapped; from
+    /// `ScenarioEngine::uplink_cap`).
+    pub fn new(cfg: &ExperimentConfig, dims: Vec<usize>, caps: Vec<u64>) -> BitBudget {
+        let n_groups = dims.len();
+        BitBudget {
+            budget: cfg.bit_budget,
+            caps,
+            scheme: cfg.quant.scheme,
+            ceiling: cfg.quant.bits.clamp(min_bits(cfg.quant.scheme), MAX_BITS),
+            topk_frac: cfg.quant.topk_frac,
+            dims,
+            seed: cfg.seed,
+            obs: vec![vec![None; n_groups]; cfg.clients],
+        }
+    }
+
+    /// Record the truncation thresholds a delivered uplink message carried.
+    /// Keyed by the message's round with newest-wins, so transport arrival
+    /// order (streaming reorders, staleness) cannot change the next plan.
+    pub fn observe(&mut self, client: usize, round: usize, frames: &[(usize, Vec<u8>)]) {
+        let Some(row) = self.obs.get_mut(client) else { return };
+        for (gi, frame) in frames {
+            let Some(alpha) = wire::frame_alpha(frame) else { continue };
+            let v = (alpha as f64) * (alpha as f64);
+            if !v.is_finite() {
+                continue;
+            }
+            if let Some(slot) = row.get_mut(*gi) {
+                match slot {
+                    Some((r, _)) if *r > round => {}
+                    _ => *slot = Some((round, v)),
+                }
+            }
+        }
+    }
+
+    /// Allocate this round's bit-widths for the active clients (ascending
+    /// ids). Deterministic in (config, seed, round, observations). When the
+    /// budget is infeasible even at minimum widths the plan is best-effort:
+    /// every pair stays at its minimum.
+    pub fn plan(&self, round: u64, active: &[usize]) -> RatePlan {
+        let floor = min_bits(self.scheme);
+        let mut clients = active.to_vec();
+        clients.sort_unstable();
+        let floor_row = vec![floor; self.dims.len()];
+        let mut bits: Vec<Vec<u32>> = clients.iter().map(|_| floor_row.clone()).collect();
+
+        // Message cost at the floor allocation (full wire cost including
+        // the message envelope, so "Σ bytes ≤ budget" holds on the wire).
+        let floor_cost = self.message_bytes_at(&floor_row);
+        let mut client_cost: Vec<u64> = vec![floor_cost; clients.len()];
+        let mut total: u64 = client_cost.iter().sum();
+
+        if !self.scheme.rate_adaptive() || self.ceiling <= floor {
+            return RatePlan { clients, bits };
+        }
+        if self.budget > 0 && total > self.budget {
+            // Infeasible: nothing to upgrade, ship the minima.
+            return RatePlan { clients, bits };
+        }
+
+        let mut heap = BinaryHeap::new();
+        for (i, &c) in clients.iter().enumerate() {
+            for g in 0..self.dims.len() {
+                if let Some(u) = self.upgrade_entry(c, g, floor, round) {
+                    heap.push((u, i));
+                }
+            }
+        }
+
+        while let Some((u, i)) = heap.pop() {
+            let b = bits[i][u.group];
+            if b >= self.ceiling {
+                continue;
+            }
+            let extra = self.frame_bytes(u.group, b + 1) - self.frame_bytes(u.group, b);
+            if self.budget > 0 && total + extra > self.budget {
+                continue; // other (smaller-frame) upgrades may still fit
+            }
+            let cap = self.caps.get(u.client).copied().unwrap_or(0);
+            if cap > 0 && client_cost[i] + extra > cap {
+                continue; // this client is saturated; drop the chain
+            }
+            bits[i][u.group] = b + 1;
+            client_cost[i] += extra;
+            total += extra;
+            if let Some(next) = self.upgrade_entry(u.client, u.group, b + 1, round) {
+                heap.push((next, i));
+            }
+        }
+
+        RatePlan { clients, bits }
+    }
+
+    /// The heap entry for upgrading (client, group) from `b` to `b+1`, or
+    /// `None` at the ceiling.
+    fn upgrade_entry(&self, client: usize, group: usize, b: u32, round: u64) -> Option<Upgrade> {
+        if b >= self.ceiling {
+            return None;
+        }
+        let v = match self.obs.get(client).and_then(|row| row.get(group)) {
+            Some(Some((_, v))) => *v,
+            _ => 1.0, // no observation yet (round 0): uniform priority
+        };
+        let s_lo = ((1u64 << b) - 1) as f64;
+        let s_hi = ((1u64 << (b + 1)) - 1) as f64;
+        let benefit = v * self.dims[group] as f64 * (1.0 / (s_lo * s_lo) - 1.0 / (s_hi * s_hi));
+        let extra = (self.frame_bytes(group, b + 1) - self.frame_bytes(group, b)).max(1);
+        let score = benefit / extra as f64;
+        let tie = Rng::for_stream(
+            self.seed,
+            ROLE_BUDGET,
+            (client * 1031 + group) as u64,
+            round,
+        )
+        .next_u64();
+        Some(Upgrade { score_bits: score.to_bits(), tie, client, group })
+    }
+
+    /// Upper-bound wire bytes of one frame for layer group `g` at width
+    /// `bits`, per the frame layouts in `quant::wire` (codebook frames may
+    /// dedup below the bound; the planner never undercounts).
+    fn frame_bytes(&self, g: usize, bits: u32) -> u64 {
+        let d = self.dims[g] as u64;
+        let packed = |b: u32| (d * b as u64).div_ceil(8);
+        match self.scheme {
+            Scheme::Dsgd => 8 + 4 * d,
+            Scheme::Qsgd | Scheme::Tqsgd => 14 + packed(bits),
+            Scheme::Nqsgd | Scheme::Tnqsgd | Scheme::Tbqsgd => {
+                10 + 4 * (1u64 << bits) + packed(bits)
+            }
+            Scheme::Terngrad => 14 + packed(2),
+            Scheme::Topk => {
+                let k = ((d as f64 * self.topk_frac).ceil() as u64).clamp(1, d);
+                12 + 8 * k
+            }
+            Scheme::Multiscale => 20 + packed(bits),
+        }
+    }
+
+    /// Full wire bytes of one client's message at the given per-group
+    /// widths: the 16-byte message envelope plus 4 bytes framing per frame.
+    fn message_bytes_at(&self, bits: &[u32]) -> u64 {
+        16 + (0..self.dims.len())
+            .map(|g| 4 + self.frame_bytes(g, bits[g]))
+            .sum::<u64>()
+    }
+
+    /// Upper-bound wire bytes of one client's message under `plan` (the
+    /// pinned budget test checks the *actual* bytes against this bound).
+    pub fn planned_message_bytes(&self, plan: &RatePlan, client: usize) -> Option<u64> {
+        plan.rates_for(client).map(|bits| self.message_bytes_at(bits))
+    }
+}
+
+/// Smallest admissible width per scheme: BiScaled needs s ≥ 3 (2 bits),
+/// multiscale needs both grids (3 bits), everything else packs down to 1.
+fn min_bits(scheme: Scheme) -> u32 {
+    match scheme {
+        Scheme::Multiscale => 3,
+        Scheme::Tbqsgd => 2,
+        _ => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(scheme: Scheme, bits: u32, budget: u64) -> ExperimentConfig {
+        ExperimentConfig {
+            clients: 4,
+            bit_budget: budget,
+            quant: crate::config::QuantConfig { scheme, bits, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn unconstrained_plan_reaches_the_ceiling() {
+        let b = BitBudget::new(&cfg(Scheme::Tqsgd, 6, 0), vec![1000, 500], vec![]);
+        let plan = b.plan(0, &[0, 1, 2, 3]);
+        assert_eq!(plan.clients, vec![0, 1, 2, 3]);
+        for row in &plan.bits {
+            assert_eq!(row, &vec![6, 6]);
+        }
+    }
+
+    #[test]
+    fn fleet_budget_is_respected_and_binding() {
+        let dims = vec![4000usize, 2000];
+        let c = cfg(Scheme::Tqsgd, 8, 9000);
+        let b = BitBudget::new(&c, dims, vec![]);
+        let plan = b.plan(3, &[0, 1, 2, 3]);
+        let total: u64 = plan
+            .clients
+            .iter()
+            .map(|&cl| b.planned_message_bytes(&plan, cl).unwrap())
+            .sum();
+        assert!(total <= 9000, "planned {total} > budget");
+        // Binding: at least one pair sits strictly between floor and ceiling
+        // bounds of an unconstrained plan.
+        assert!(
+            plan.bits.iter().flatten().any(|&bi| bi < 8),
+            "budget did not bind: {:?}",
+            plan.bits
+        );
+        assert!(
+            plan.bits.iter().flatten().any(|&bi| bi > 1),
+            "nothing upgraded: {:?}",
+            plan.bits
+        );
+    }
+
+    #[test]
+    fn per_client_caps_bind_individually() {
+        let dims = vec![4000usize];
+        let c = cfg(Scheme::Tqsgd, 8, 0);
+        // Client 1 capped tightly, others uncapped.
+        let b = BitBudget::new(&c, dims, vec![0, 1600, 0, 0]);
+        let plan = b.plan(0, &[0, 1, 2, 3]);
+        assert!(b.planned_message_bytes(&plan, 1).unwrap() <= 1600);
+        assert_eq!(plan.bits[0], vec![8], "uncapped client must hit the ceiling");
+        assert!(plan.bits[1][0] < 8, "capped client must stay below the ceiling");
+    }
+
+    #[test]
+    fn observations_steer_bits_toward_hot_groups() {
+        let dims = vec![1000usize, 1000];
+        let c = cfg(Scheme::Tqsgd, 8, 0);
+        let mut b = BitBudget::new(&c, dims, vec![]);
+        // Group 0 has 10x the truncation threshold of group 1 for client 0.
+        let hot = crate::quant::wire::Payload::Uniform { alpha: 1.0, s: 7, idx: vec![0; 4] }
+            .encode(3);
+        let cold = crate::quant::wire::Payload::Uniform { alpha: 0.1, s: 7, idx: vec![0; 4] }
+            .encode(3);
+        b.observe(0, 5, &[(0, hot), (1, cold)]);
+        // A budget that cannot afford the ceiling everywhere must favor the
+        // hot group.
+        let tight = BitBudget { budget: 2 * b.message_bytes_at(&[4, 4]), ..b };
+        let plan = tight.plan(6, &[0, 1]);
+        let row0 = &plan.bits[plan.clients.iter().position(|&x| x == 0).unwrap()];
+        assert!(
+            row0[0] > row0[1],
+            "hot group should get more bits: {:?}",
+            plan.bits
+        );
+    }
+
+    #[test]
+    fn newest_observation_wins_regardless_of_arrival_order() {
+        let dims = vec![100usize];
+        let c = cfg(Scheme::Tqsgd, 8, 0);
+        let mk = |alpha: f32| {
+            crate::quant::wire::Payload::Uniform { alpha, s: 7, idx: vec![0; 4] }.encode(3)
+        };
+        let mut early_then_late = BitBudget::new(&c, dims.clone(), vec![]);
+        early_then_late.observe(0, 3, &[(0, mk(0.5))]);
+        early_then_late.observe(0, 7, &[(0, mk(2.0))]);
+        let mut late_then_early = BitBudget::new(&c, dims, vec![]);
+        late_then_early.observe(0, 7, &[(0, mk(2.0))]);
+        late_then_early.observe(0, 3, &[(0, mk(0.5))]);
+        assert_eq!(early_then_late.obs, late_then_early.obs);
+        assert_eq!(early_then_late.obs[0][0], Some((7, 4.0)));
+    }
+
+    #[test]
+    fn plans_ignore_active_list_order() {
+        let dims = vec![300usize, 300];
+        let c = cfg(Scheme::Tnqsgd, 8, 3000);
+        let b = BitBudget::new(&c, dims, vec![]);
+        let p1 = b.plan(2, &[0, 1, 2, 3]);
+        let p2 = b.plan(2, &[3, 2, 1, 0]); // order of `active` is irrelevant
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn infeasible_budget_falls_back_to_minimum_widths() {
+        let dims = vec![4000usize];
+        let c = cfg(Scheme::Tqsgd, 8, 10); // cannot fit even 1-bit frames
+        let b = BitBudget::new(&c, dims, vec![]);
+        let plan = b.plan(0, &[0, 1]);
+        assert!(plan.bits.iter().flatten().all(|&bi| bi == 1), "{:?}", plan.bits);
+    }
+
+    #[test]
+    fn fixed_rate_schemes_get_flat_plans() {
+        for scheme in [Scheme::Dsgd, Scheme::Terngrad, Scheme::Topk] {
+            let b = BitBudget::new(&cfg(scheme, 3, 1 << 20), vec![100], vec![]);
+            let plan = b.plan(0, &[0]);
+            assert_eq!(plan.bits[0], vec![min_bits(scheme)], "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn frame_model_never_undercounts_real_frames() {
+        // Encode real frames at several widths and check the planner's
+        // byte model is an upper bound (exact for uniform/multiscale).
+        use crate::quant::codecs::make_compressor;
+        use crate::config::QuantConfig;
+        let mut rng = Rng::new(9);
+        let g: Vec<f32> =
+            (0..3000).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+        for scheme in Scheme::all() {
+            for bits in [2u32, 3, 5, 8] {
+                if scheme == Scheme::Multiscale && bits < 3 {
+                    continue;
+                }
+                let mut c = make_compressor(&QuantConfig { scheme, bits, ..Default::default() });
+                c.refit(&g);
+                let frame = c.compress(&g, &mut rng);
+                let b = BitBudget::new(&cfg(scheme, bits, 0), vec![g.len()], vec![]);
+                assert!(
+                    frame.len() as u64 <= b.frame_bytes(0, bits),
+                    "{scheme:?} bits={bits}: frame {} > model {}",
+                    frame.len(),
+                    b.frame_bytes(0, bits)
+                );
+            }
+        }
+    }
+}

@@ -18,7 +18,7 @@
 //! `estimate_every` rounds per layer group, mirroring the paper's per-layer
 //! γ MLE).
 
-use crate::config::{QuantConfig, Scheme};
+use crate::config::{QuantConfig, Scheme, MAX_BITS};
 use crate::solver;
 use crate::tail::{fit::report_to_model, fit_power_law_sampled, PowerLawModel, REFIT_SAMPLE_CAP};
 use crate::util::Rng;
@@ -45,11 +45,27 @@ pub trait Compressor: Send {
 
     /// Convenience wrapper over [`Compressor::compress_into`] that allocates
     /// a fresh frame — byte- and RNG-stream-identical to the in-place path.
+    /// Kept as a documented test convenience; production call sites go
+    /// through `compress_into` with a recycled buffer.
     fn compress(&mut self, grads: &[f32], rng: &mut Rng) -> Vec<u8> {
         let mut out = Vec::new();
         self.compress_into(grads, rng, &mut out);
         out
     }
+
+    /// Current per-element wire bit-width: the packed index width for the
+    /// quantized codecs, 32 for DSGD's raw f32s, 2 for TernGrad, 0 for
+    /// Top-k (whose cost is set by `frac`, not an index width).
+    fn rate(&self) -> u32;
+
+    /// Re-target the per-element bit-width from the STANDING distribution
+    /// fit, without a refit: re-derives the truncation threshold (and any
+    /// codebook) from the stored model at the new density. Codecs clamp
+    /// `bits` to their admissible range (e.g. BiScaled needs ≥ 2,
+    /// multiscale ≥ 3) — callers read back [`Compressor::rate`] for the
+    /// width actually in effect. Fixed-rate codecs (DSGD, TernGrad, Top-k
+    /// — see [`Scheme::rate_adaptive`]) ignore the call.
+    fn set_rate(&mut self, bits: u32);
 
     /// One-line description of current state (for logs).
     fn describe(&self) -> String;
@@ -67,6 +83,7 @@ pub fn make_compressor(cfg: &QuantConfig) -> Box<dyn Compressor> {
         Scheme::Tbqsgd => Box::new(TbqsgdCodec { s, state: None }),
         Scheme::Terngrad => Box::new(TerngradCodec),
         Scheme::Topk => Box::new(TopkCodec::new(cfg.topk_frac)),
+        Scheme::Multiscale => Box::new(MultiscaleCodec::new(cfg.bits)),
     }
 }
 
@@ -93,6 +110,12 @@ impl Compressor for DsgdCodec {
         // Straight from the borrowed slice — no `grads.to_vec()` staging copy.
         wire::encode_raw_into(grads, out);
     }
+
+    fn rate(&self) -> u32 {
+        32
+    }
+
+    fn set_rate(&mut self, _bits: u32) {}
 
     fn describe(&self) -> String {
         "dsgd(fp32)".into()
@@ -122,6 +145,14 @@ impl Compressor for QsgdCodec {
         let bits = bits_for(self.s);
         wire::begin_uniform_frame(out, alpha, self.s as u16, grads.len() as u32, bits);
         quantize_uniform_pack_into(grads, rng, alpha, self.s, bits, out);
+    }
+
+    fn rate(&self) -> u32 {
+        bits_for(self.s)
+    }
+
+    fn set_rate(&mut self, bits: u32) {
+        self.s = solver::levels_for_bits(bits.clamp(1, MAX_BITS)) as u32;
     }
 
     fn describe(&self) -> String {
@@ -168,6 +199,16 @@ impl Compressor for NqsgdCodec {
                 quantize_uniform_pack_into(grads, rng, range as f32, self.s, bits, out);
             }
         }
+    }
+
+    fn rate(&self) -> u32 {
+        bits_for(self.s)
+    }
+
+    fn set_rate(&mut self, bits: u32) {
+        // The codebook is shaped per compress call from max|g|; only the
+        // density changes.
+        self.s = solver::levels_for_bits(bits.clamp(1, MAX_BITS)) as u32;
     }
 
     fn describe(&self) -> String {
@@ -229,6 +270,19 @@ impl Compressor for TqsgdCodec {
         quantize_uniform_pack_into(grads, rng, alpha, self.s, bits, out);
     }
 
+    fn rate(&self) -> u32 {
+        bits_for(self.s)
+    }
+
+    fn set_rate(&mut self, bits: u32) {
+        self.s = solver::levels_for_bits(bits.clamp(1, MAX_BITS)) as u32;
+        // Eq. (12)'s optimum depends on s: re-solve from the standing model
+        // without touching the fit itself.
+        if let Some(st) = &mut self.state {
+            st.alpha = solver::optimal_alpha_uniform(&st.model, self.s as usize);
+        }
+    }
+
     fn describe(&self) -> String {
         match &self.state {
             Some(st) => format!(
@@ -272,6 +326,19 @@ impl Compressor for TnqsgdCodec {
                 wire::begin_uniform_frame(out, alpha, self.s as u16, grads.len() as u32, bits);
                 quantize_uniform_pack_into(grads, rng, alpha, self.s, bits, out);
             }
+        }
+    }
+
+    fn rate(&self) -> u32 {
+        bits_for(self.s)
+    }
+
+    fn set_rate(&mut self, bits: u32) {
+        self.s = solver::levels_for_bits(bits.clamp(1, MAX_BITS)) as u32;
+        if let Some(st) = &mut self.state {
+            st.alpha = solver::optimal_alpha_nonuniform(&st.model, self.s as usize);
+            st.codebook =
+                Some(solver::nonuniform_codebook(&st.model, st.alpha, self.s as usize));
         }
     }
 
@@ -322,6 +389,20 @@ impl Compressor for TbqsgdCodec {
         }
     }
 
+    fn rate(&self) -> u32 {
+        bits_for(self.s)
+    }
+
+    fn set_rate(&mut self, bits: u32) {
+        // BiScaled needs s >= 3 intervals, i.e. at least 2 bits.
+        self.s = solver::levels_for_bits(bits.clamp(2, MAX_BITS)) as u32;
+        if let Some(st) = &mut self.state {
+            let design = solver::solve_biscaled(&st.model, self.s as usize);
+            st.alpha = design.alpha;
+            st.codebook = Some(design.codebook());
+        }
+    }
+
     fn describe(&self) -> String {
         match &self.state {
             Some(st) => format!(
@@ -353,6 +434,12 @@ impl Compressor for TerngradCodec {
         wire::begin_uniform_frame(out, alpha, 2, grads.len() as u32, 2);
         quantize_uniform_pack_into(grads, rng, alpha, 2, 2, out);
     }
+
+    fn rate(&self) -> u32 {
+        2
+    }
+
+    fn set_rate(&mut self, _bits: u32) {}
 
     fn describe(&self) -> String {
         "terngrad(s=2)".into()
@@ -399,8 +486,266 @@ impl Compressor for TopkCodec {
         wire::encode_sparse_into(grads.len() as u32, &self.pairs, out);
     }
 
+    fn rate(&self) -> u32 {
+        0
+    }
+
+    fn set_rate(&mut self, _bits: u32) {}
+
     fn describe(&self) -> String {
         format!("topk({:.2}%)", self.frac * 100.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extension: multiscale (Vineeth 2021, arxiv 2109.12497)
+// ---------------------------------------------------------------------------
+
+struct MsState {
+    model: PowerLawModel,
+    /// Coarse-grid truncation threshold (Eq. (12) optimum at `s_hi`).
+    alpha: f64,
+    /// Fine-grid half-range covering the distribution body.
+    beta: f64,
+    /// Merged sorted level set the wire frame implies (f32, so it matches
+    /// the decoder's reconstruction bit-exactly).
+    codebook: Vec<f32>,
+}
+
+/// Unbiased two-scale quantizer: a coarse uniform grid on [-α, α] capturing
+/// the heavy tail, overlaid with a fine uniform grid on [-β, β] (β ≪ α)
+/// resolving the body where most mass sits. The merged level set is encoded
+/// with stochastic interval rounding, so the codec stays unbiased inside
+/// [-α, α] while reaching effective rates between the two grids — the
+/// property the [`BitBudget`](super::budget::BitBudget) scheduler relies on
+/// when it assigns fractional-feeling budgets.
+pub struct MultiscaleCodec {
+    bits: u32,
+    state: Option<MsState>,
+}
+
+impl MultiscaleCodec {
+    /// Codec targeting `bits`-wide packed indices (clamped to 3..=MAX_BITS;
+    /// below 3 bits the two grids cannot both exist).
+    pub fn new(bits: u32) -> MultiscaleCodec {
+        MultiscaleCodec { bits: bits.clamp(3, MAX_BITS), state: None }
+    }
+
+    /// Grid densities at the current rate: both even so the two grids share
+    /// level 0 and the merged codebook stays within 2^bits entries.
+    fn grids(&self) -> (u16, u16) {
+        ((1u32 << (self.bits - 1)) as u16, ((1u32 << (self.bits - 1)) - 2) as u16)
+    }
+
+    /// Re-derive α, β, and the merged codebook from the standing fit.
+    fn rederive(&mut self) {
+        let (s_hi, s_lo) = self.grids();
+        if let Some(st) = &mut self.state {
+            st.alpha = solver::optimal_alpha_uniform(&st.model, s_hi as usize);
+            // β from the closed-form threshold at the fine density, kept
+            // well inside the coarse range so the overlay resolves the body.
+            st.beta = solver::approx_alpha_uniform(&st.model, s_lo as usize)
+                .clamp(st.alpha * 0.05, st.alpha * 0.5);
+            st.codebook =
+                wire::multiscale_codebook(st.alpha as f32, st.beta as f32, s_hi, s_lo);
+        }
+    }
+}
+
+impl Compressor for MultiscaleCodec {
+    fn scheme(&self) -> Scheme {
+        Scheme::Multiscale
+    }
+
+    fn refit(&mut self, grads: &[f32]) {
+        if let Some(model) = fit_clamped(grads) {
+            self.state =
+                Some(MsState { model, alpha: 0.0, beta: 0.0, codebook: Vec::new() });
+            self.rederive();
+        }
+    }
+
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+        let (s_hi, s_lo) = self.grids();
+        match &self.state {
+            Some(st) => {
+                let pack_bits = bits_for(st.codebook.len() as u32 - 1);
+                wire::begin_multiscale_frame(
+                    out,
+                    st.alpha as f32,
+                    st.beta as f32,
+                    s_hi,
+                    s_lo,
+                    grads.len() as u32,
+                    pack_bits,
+                );
+                quantize_codebook_pack_into(grads, rng, &st.codebook, pack_bits, out);
+            }
+            None => {
+                // Unfitted fallback: coarse range from max|g|, body at a
+                // fixed quarter of it.
+                let alpha = max_abs(grads).max(f32::MIN_POSITIVE);
+                let beta = alpha / 4.0;
+                let cb = wire::multiscale_codebook(alpha, beta, s_hi, s_lo);
+                let pack_bits = bits_for(cb.len() as u32 - 1);
+                wire::begin_multiscale_frame(
+                    out,
+                    alpha,
+                    beta,
+                    s_hi,
+                    s_lo,
+                    grads.len() as u32,
+                    pack_bits,
+                );
+                quantize_codebook_pack_into(grads, rng, &cb, pack_bits, out);
+            }
+        }
+    }
+
+    fn rate(&self) -> u32 {
+        self.bits
+    }
+
+    fn set_rate(&mut self, bits: u32) {
+        self.bits = bits.clamp(3, MAX_BITS);
+        self.rederive();
+    }
+
+    fn describe(&self) -> String {
+        match &self.state {
+            Some(st) => format!(
+                "multiscale(b={}, α={:.4}, β={:.4}, γ̂={:.2})",
+                self.bits, st.alpha, st.beta, st.model.gamma
+            ),
+            None => format!("multiscale(b={}, unfitted)", self.bits),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codec construction
+// ---------------------------------------------------------------------------
+
+/// Per-(client, layer-group) compression state: plain codec or EF-wrapped.
+/// Both variants drive through one `dyn Compressor` view — EF's trait impl
+/// routes `compress_into` through the feedback loop — so the per-variant
+/// match arms live here once, not at every call site.
+pub enum GroupCodec {
+    /// The bare codec.
+    Plain(Box<dyn Compressor>),
+    /// Wrapped with an error-feedback residual.
+    Ef(super::error_feedback::ErrorFeedback),
+}
+
+impl GroupCodec {
+    fn as_compressor(&mut self) -> &mut dyn Compressor {
+        match self {
+            GroupCodec::Plain(c) => c.as_mut(),
+            GroupCodec::Ef(c) => c,
+        }
+    }
+
+    fn as_compressor_ref(&self) -> &dyn Compressor {
+        match self {
+            GroupCodec::Plain(c) => c.as_ref(),
+            GroupCodec::Ef(c) => c,
+        }
+    }
+
+    /// Update distribution state from a fresh local gradient.
+    pub fn refit(&mut self, grads: &[f32]) {
+        self.as_compressor().refit(grads);
+    }
+
+    /// The uniform encode entry point every call site (client fan-out,
+    /// mid-tier re-encode, worker rebuild) goes through: plain codecs
+    /// compress directly, EF codecs run the feedback loop.
+    pub fn encode(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+        self.as_compressor().compress_into(grads, rng, out);
+    }
+
+    /// Current per-element wire bit-width (see [`Compressor::rate`]).
+    pub fn rate(&self) -> u32 {
+        self.as_compressor_ref().rate()
+    }
+
+    /// Re-target the bit-width from the standing fit (see
+    /// [`Compressor::set_rate`]).
+    pub fn set_rate(&mut self, bits: u32) {
+        self.as_compressor().set_rate(bits);
+    }
+
+    /// The network lost this frame for good: EF codecs fold it back into
+    /// the residual (plain codecs have no state to repair).
+    pub fn restore_lost(&mut self, frame: &[u8]) {
+        if let GroupCodec::Ef(c) = self {
+            c.restore_lost(frame);
+        }
+    }
+
+    /// Resident bytes of mutable codec state (plain codecs keep only their
+    /// fit parameters — O(1), counted as 0 here; EF keeps the residual
+    /// working set or its parked frame).
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            GroupCodec::Plain(_) => 0,
+            GroupCodec::Ef(c) => c.state_bytes(),
+        }
+    }
+
+    /// One-line description of current state (for logs).
+    pub fn describe(&self) -> String {
+        self.as_compressor_ref().describe()
+    }
+}
+
+/// The single construction point for the scheme × bits × error-feedback
+/// wiring. The client fan-out, the mid-tier re-encode, the worker-side
+/// rebuild in `run_worker`, and the [`BitBudget`](super::budget::BitBudget)
+/// scheduler all build codecs through this builder instead of hand-rolling
+/// the `make_compressor` + EF-wrap dance.
+#[derive(Clone)]
+pub struct CodecBuilder {
+    quant: QuantConfig,
+}
+
+impl CodecBuilder {
+    /// Builder seeded from an experiment's quantization config.
+    pub fn from_quant(q: &QuantConfig) -> CodecBuilder {
+        CodecBuilder { quant: q.clone() }
+    }
+
+    /// Override the per-element bit-width.
+    pub fn bits(mut self, bits: u32) -> CodecBuilder {
+        self.quant.bits = bits;
+        self
+    }
+
+    /// Override whether the codec gets an error-feedback wrapper (the
+    /// mid-tier re-encode always disables it — partial sums are transient).
+    pub fn error_feedback(mut self, ef: bool) -> CodecBuilder {
+        self.quant.error_feedback = ef;
+        self
+    }
+
+    /// Build one codec, EF-wrapped if configured.
+    pub fn build(&self) -> GroupCodec {
+        let inner = make_compressor(&self.quant);
+        if self.quant.error_feedback {
+            GroupCodec::Ef(super::error_feedback::ErrorFeedback::new(inner))
+        } else {
+            GroupCodec::Plain(inner)
+        }
+    }
+
+    /// Build a bare compressor, ignoring the error-feedback flag.
+    pub fn build_plain(&self) -> Box<dyn Compressor> {
+        make_compressor(&self.quant)
+    }
+
+    /// Build `n` independent codecs (one per layer group).
+    pub fn build_many(&self, n: usize) -> Vec<GroupCodec> {
+        (0..n).map(|_| self.build()).collect()
     }
 }
 
@@ -558,6 +903,9 @@ mod tests {
                     if scheme == Scheme::Tbqsgd && bits < 2 {
                         continue; // BiScaled needs s >= 3 intervals
                     }
+                    if scheme == Scheme::Multiscale && bits < 3 {
+                        continue; // two grids need at least 3 bits
+                    }
                     let mut c = make_compressor(&QuantConfig {
                         scheme,
                         bits,
@@ -587,6 +935,79 @@ mod tests {
     }
 
     #[test]
+    fn multiscale_set_rate_rederives_without_refit() {
+        let mut rng = Rng::new(11);
+        let g: Vec<f32> =
+            (0..50_000).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        let mut c = MultiscaleCodec::new(3);
+        c.refit(&g);
+        let (a3, b3) = match &c.state {
+            Some(st) => (st.alpha, st.beta),
+            None => panic!("fit failed"),
+        };
+        assert!(a3 > 0.0 && b3 > 0.0 && b3 < a3, "α={a3} β={b3}");
+        c.set_rate(6);
+        assert_eq!(c.rate(), 6);
+        let st = c.state.as_ref().unwrap();
+        // Denser coarse grid ⇒ the Eq. (12)-style optimum moves outward.
+        assert!(st.alpha > a3, "α should grow with s: {} vs {a3}", st.alpha);
+        assert!(st.beta < st.alpha, "β={} must stay inside α={}", st.beta, st.alpha);
+        // Out-of-range requests clamp to the admissible window.
+        c.set_rate(0);
+        assert_eq!(c.rate(), 3);
+        c.set_rate(99);
+        assert_eq!(c.rate(), MAX_BITS);
+    }
+
+    #[test]
+    fn fixed_rate_codecs_ignore_set_rate() {
+        let mut rng = Rng::new(12);
+        let g = heavy(&mut rng, 2000);
+        for scheme in [Scheme::Dsgd, Scheme::Terngrad, Scheme::Topk] {
+            assert!(!scheme.rate_adaptive());
+            let mut c = make_compressor(&QuantConfig { scheme, bits: 3, ..Default::default() });
+            c.refit(&g);
+            let before = c.rate();
+            let mut r1 = Rng::new(77);
+            let f1 = c.compress(&g, &mut r1);
+            c.set_rate(7);
+            assert_eq!(c.rate(), before, "{scheme:?}");
+            let mut r2 = Rng::new(77);
+            let f2 = c.compress(&g, &mut r2);
+            assert_eq!(f1, f2, "{scheme:?} frame changed after set_rate");
+        }
+    }
+
+    #[test]
+    fn adaptive_set_rate_matches_fresh_construction_bytes() {
+        // set_rate on a fitted codec must land on the same wire bytes as a
+        // codec built at that width and refit on the same gradient — the
+        // scheduler depends on this equivalence when it re-targets rates
+        // mid-run without refitting.
+        let mut rng = Rng::new(13);
+        let g: Vec<f32> =
+            (0..40_000).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        for scheme in
+            [Scheme::Qsgd, Scheme::Tqsgd, Scheme::Tnqsgd, Scheme::Tbqsgd, Scheme::Multiscale]
+        {
+            let mut retuned =
+                make_compressor(&QuantConfig { scheme, bits: 3, ..Default::default() });
+            retuned.refit(&g);
+            retuned.set_rate(5);
+            let mut fresh =
+                make_compressor(&QuantConfig { scheme, bits: 5, ..Default::default() });
+            fresh.refit(&g);
+            let mut r1 = Rng::new(88);
+            let mut r2 = Rng::new(88);
+            assert_eq!(
+                retuned.compress(&g, &mut r1),
+                fresh.compress(&g, &mut r2),
+                "{scheme:?}: set_rate(5) != fresh bits=5"
+            );
+        }
+    }
+
+    #[test]
     fn property_roundtrip_all_schemes() {
         prop::check(40, |rng| {
             let g = prop::gen_gradient(rng, 4096);
@@ -598,6 +1019,7 @@ mod tests {
                 Scheme::Tbqsgd,
                 Scheme::Terngrad,
                 Scheme::Topk,
+                Scheme::Multiscale,
             ] {
                 let mut c = make_compressor(&QuantConfig {
                     scheme,

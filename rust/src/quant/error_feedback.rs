@@ -169,6 +169,36 @@ impl ErrorFeedback {
     }
 }
 
+/// EF as a [`Compressor`]: the encode path runs through the feedback loop,
+/// everything else delegates to the wrapped codec. This is what lets
+/// [`GroupCodec`](super::GroupCodec) drive Plain and EF codecs through one
+/// `&mut dyn Compressor` without per-variant match arms.
+impl Compressor for ErrorFeedback {
+    fn scheme(&self) -> Scheme {
+        self.inner.scheme()
+    }
+
+    fn refit(&mut self, grads: &[f32]) {
+        self.inner.refit(grads);
+    }
+
+    fn compress_into(&mut self, grads: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+        self.compress_with_feedback_into(grads, rng, out);
+    }
+
+    fn rate(&self) -> u32 {
+        self.inner.rate()
+    }
+
+    fn set_rate(&mut self, bits: u32) {
+        self.inner.set_rate(bits);
+    }
+
+    fn describe(&self) -> String {
+        format!("ef[{}]", self.inner.describe())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

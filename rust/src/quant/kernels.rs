@@ -185,6 +185,11 @@ impl<'a> BitWriter<'a> {
 /// unfused slice functions remain the reference and the Pallas-parity
 /// surface, and the packed bytes are bit-identical to
 /// `bitpack::pack(&indices, bits)`.
+///
+/// Widths above 8 bits (legal up to [`crate::config::MAX_BITS`]) take a
+/// staged cold path — quantize into an index buffer, then `bitpack::pack`
+/// — because the streaming `BitWriter`'s flush-at-56 arithmetic is only
+/// safe for ≤ 8-bit pushes. Same RNG stream, same indices, same bytes.
 pub fn quantize_uniform_pack_into(
     grads: &[f32],
     rng: &mut crate::util::Rng,
@@ -193,12 +198,24 @@ pub fn quantize_uniform_pack_into(
     bits: u32,
     out: &mut Vec<u8>,
 ) {
-    debug_assert!((1..=8).contains(&bits));
+    debug_assert!((1..=crate::config::MAX_BITS).contains(&bits));
     debug_assert!(s < (1 << bits));
     out.reserve(super::bitpack::packed_len(grads.len(), bits));
     let step = 2.0f32 * alpha / s as f32;
     let inv_step = 1.0f32 / step;
     let s_m1 = (s - 1) as f32;
+    if bits > 8 {
+        let mut idx = Vec::with_capacity(grads.len());
+        for &g in grads {
+            let u = rng.f32();
+            let gc = g.clamp(-alpha, alpha);
+            let x = (gc + alpha) * inv_step;
+            let lo = x.min(s_m1) as u32;
+            idx.push((lo + u32::from(u < x - lo as f32)).min(s));
+        }
+        out.extend_from_slice(&super::bitpack::pack(&idx, bits));
+        return;
+    }
     // NOTE(perf): a two-uniforms-per-u64 variant (Rng::f32_pair) was tried
     // and measured <1% faster — the RNG is not the bottleneck — so the
     // simple one-f32-per-element stream (identical to the unfused reference
@@ -220,22 +237,9 @@ pub fn quantize_uniform_pack_into(
     w.finish();
 }
 
-/// Allocating wrapper over [`quantize_uniform_pack_into`] (kept for tests
-/// and one-shot callers; byte-identical output).
-pub fn quantize_uniform_packed(
-    grads: &[f32],
-    rng: &mut crate::util::Rng,
-    alpha: f32,
-    s: u32,
-    bits: u32,
-) -> Vec<u8> {
-    let mut out = Vec::with_capacity(super::bitpack::packed_len(grads.len(), bits));
-    quantize_uniform_pack_into(grads, rng, alpha, s, bits, &mut out);
-    out
-}
-
-/// Fused quantize + bit-pack for a codebook quantizer (same contract and
-/// accumulator scheme as [`quantize_uniform_pack_into`]).
+/// Fused quantize + bit-pack for a codebook quantizer (same contract,
+/// accumulator scheme, and staged >8-bit cold path as
+/// [`quantize_uniform_pack_into`]).
 pub fn quantize_codebook_pack_into(
     grads: &[f32],
     rng: &mut crate::util::Rng,
@@ -244,12 +248,25 @@ pub fn quantize_codebook_pack_into(
     out: &mut Vec<u8>,
 ) {
     let s = codebook.len() - 1;
-    debug_assert!((1..=8).contains(&bits));
+    debug_assert!((1..=crate::config::MAX_BITS).contains(&bits));
     debug_assert!(s < (1 << bits));
     out.reserve(super::bitpack::packed_len(grads.len(), bits));
     let lo_bound = codebook[0];
     let hi_bound = codebook[s];
     let interior = &codebook[1..s];
+    if bits > 8 {
+        let mut idx = Vec::with_capacity(grads.len());
+        for &g in grads {
+            let gc = g.clamp(lo_bound, hi_bound);
+            let k = interior.partition_point(|&b| b <= gc);
+            let lower = codebook[k];
+            let width = codebook[k + 1] - lower;
+            let frac = if width > 0.0 { (gc - lower) / width } else { 0.0 };
+            idx.push((k + usize::from(rng.f32() < frac)) as u32);
+        }
+        out.extend_from_slice(&super::bitpack::pack(&idx, bits));
+        return;
+    }
     let mut w = BitWriter::new(out);
     for &g in grads {
         let gc = g.clamp(lo_bound, hi_bound);
@@ -261,18 +278,6 @@ pub fn quantize_codebook_pack_into(
         w.push(idx, bits);
     }
     w.finish();
-}
-
-/// Allocating wrapper over [`quantize_codebook_pack_into`].
-pub fn quantize_codebook_packed(
-    grads: &[f32],
-    rng: &mut crate::util::Rng,
-    codebook: &[f32],
-    bits: u32,
-) -> Vec<u8> {
-    let mut out = Vec::with_capacity(super::bitpack::packed_len(grads.len(), bits));
-    quantize_codebook_pack_into(grads, rng, codebook, bits, &mut out);
-    out
 }
 
 /// Vectorized codebook quantization.
@@ -402,11 +407,13 @@ mod tests {
     #[test]
     fn packed_matches_unfused_uniform() {
         // Same RNG stream ⇒ identical indices ⇒ identical packed bytes.
+        // The >8-bit rows exercise the staged (non-BitWriter) cold path.
         let mut rng = Rng::new(11);
         let g: Vec<f32> = (0..10_000).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
-        for &(s, bits) in &[(3u32, 2u32), (7, 3), (15, 4), (31, 5)] {
+        for &(s, bits) in &[(3u32, 2u32), (7, 3), (15, 4), (31, 5), (511, 9), (4095, 12)] {
             let mut r1 = Rng::new(77);
-            let packed = quantize_uniform_packed(&g, &mut r1, 0.03, s, bits);
+            let mut packed = Vec::new();
+            quantize_uniform_pack_into(&g, &mut r1, 0.03, s, bits, &mut packed);
             let mut r2 = Rng::new(77);
             let u: Vec<f32> = (0..g.len()).map(|_| r2.f32()).collect();
             let mut idx = Vec::new();
@@ -420,13 +427,16 @@ mod tests {
         let mut rng = Rng::new(12);
         let g: Vec<f32> = (0..10_000).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
         let cb: Vec<f32> = vec![-0.05, -0.01, -0.002, 0.0, 0.002, 0.01, 0.02, 0.05];
-        let mut r1 = Rng::new(88);
-        let packed = quantize_codebook_packed(&g, &mut r1, &cb, 3);
-        let mut r2 = Rng::new(88);
-        let u: Vec<f32> = (0..g.len()).map(|_| r2.f32()).collect();
-        let mut idx = Vec::new();
-        quantize_codebook_slice(&g, &u, &cb, &mut idx);
-        assert_eq!(packed, crate::quant::bitpack::pack(&idx, 3));
+        for bits in [3u32, 9] {
+            let mut r1 = Rng::new(88);
+            let mut packed = Vec::new();
+            quantize_codebook_pack_into(&g, &mut r1, &cb, bits, &mut packed);
+            let mut r2 = Rng::new(88);
+            let u: Vec<f32> = (0..g.len()).map(|_| r2.f32()).collect();
+            let mut idx = Vec::new();
+            quantize_codebook_slice(&g, &u, &cb, &mut idx);
+            assert_eq!(packed, crate::quant::bitpack::pack(&idx, bits), "bits={bits}");
+        }
     }
 
     #[test]

@@ -5,19 +5,24 @@
 //!   plus the fused quantize→pack streaming kernels of the encode hot path,
 //! * [`bitpack`] — tight n-bit index packing,
 //! * [`wire`] — self-describing frames (the bytes on the simulated network),
-//! * [`codecs`] — TQSGD / TNQSGD / TBQSGD + QSGD / NQSGD / TernGrad / Top-k,
+//! * [`codecs`] — TQSGD / TNQSGD / TBQSGD + QSGD / NQSGD / TernGrad / Top-k /
+//!   multiscale, the [`CodecBuilder`] construction point and the
+//!   [`GroupCodec`] per-(client, group) state,
 //! * [`arena`] — recycled frame buffers (zero-allocation steady state),
-//! * [`error_feedback`] — optional EF wrapper (extension).
+//! * [`error_feedback`] — optional EF wrapper (extension),
+//! * [`budget`] — the adaptive per-round bit-rate scheduler (extension).
 
 pub mod arena;
 pub mod bitpack;
+pub mod budget;
 pub mod codecs;
 pub mod error_feedback;
 pub mod kernels;
 pub mod wire;
 
 pub use arena::FrameArena;
-pub use codecs::{make_compressor, Compressor};
+pub use budget::{BitBudget, RatePlan};
+pub use codecs::{make_compressor, CodecBuilder, Compressor, GroupCodec};
 pub use error_feedback::ErrorFeedback;
 pub use wire::Payload;
 

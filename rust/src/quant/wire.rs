@@ -8,24 +8,33 @@
 //!
 //! ```text
 //! [0..2)  magic 0x5154 ("TQ")
-//! [2]     payload kind: 0 raw | 1 uniform | 2 codebook | 3 sparse
-//! [3]     bits per index (uniform/codebook; 0 otherwise)
+//! [2]     payload kind: 0 raw | 1 uniform | 2 codebook | 3 sparse | 4 multiscale
+//! [3]     bits per index (uniform/codebook/multiscale; 0 otherwise)
 //! [4..8)  d: element count u32
 //! then kind-specific:
-//!   raw:      d * f32
-//!   uniform:  alpha f32, s u16, packed indices
-//!   codebook: len u16, len * f32 levels, packed indices
-//!   sparse:   k u32, k * (u32 index), k * (f32 value)
+//!   raw:        d * f32
+//!   uniform:    alpha f32, s u16, packed indices
+//!   codebook:   len u16, len * f32 levels, packed indices
+//!   sparse:     k u32, k * (u32 index), k * (f32 value)
+//!   multiscale: alpha f32, beta f32, s_hi u16, s_lo u16, packed indices
 //! ```
+//!
+//! A multiscale frame (kind 4) ships only the two scales and interval
+//! counts; both ends rebuild the merged two-scale codebook with
+//! [`multiscale_codebook`], so the level table never crosses the wire.
 
 use anyhow::{anyhow, bail, Result};
 
 use super::bitpack;
+use crate::config::MAX_BITS;
 
 const MAGIC: u16 = 0x5154;
 
 /// On-the-wire kind byte of a sparse (Top-k) frame.
 pub const KIND_SPARSE: u8 = 3;
+
+/// On-the-wire kind byte of a multiscale (two-scale) frame.
+pub const KIND_MULTISCALE: u8 = 4;
 
 /// Peek a frame's payload-kind byte (header offset 2) without decoding —
 /// used by the streaming pipeline to route sparse frames to the fused
@@ -46,6 +55,11 @@ pub enum Payload {
     Codebook { levels: Vec<f32>, idx: Vec<u32> },
     /// Sparse (index, value) pairs over a d-element vector (Top-k).
     Sparse { d: u32, pairs: Vec<(u32, f32)> },
+    /// Two-scale quantizer (Vineeth 2021): a coarse grid with `s_hi`
+    /// intervals on [−α, α] merged with a fine grid of `s_lo` intervals on
+    /// [−β, β] (0 < β ≤ α); indices address the merged, sorted,
+    /// deduplicated codebook from [`multiscale_codebook`].
+    Multiscale { alpha: f32, beta: f32, s_hi: u16, s_lo: u16, idx: Vec<u32> },
 }
 
 impl Payload {
@@ -56,6 +70,7 @@ impl Payload {
             Payload::Uniform { idx, .. } => idx.len(),
             Payload::Codebook { idx, .. } => idx.len(),
             Payload::Sparse { d, .. } => *d as usize,
+            Payload::Multiscale { idx, .. } => idx.len(),
         }
     }
 
@@ -107,6 +122,16 @@ impl Payload {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
+            Payload::Multiscale { alpha, beta, s_hi, s_lo, idx } => {
+                out.push(4u8);
+                out.push(bits as u8);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                out.extend_from_slice(&alpha.to_le_bytes());
+                out.extend_from_slice(&beta.to_le_bytes());
+                out.extend_from_slice(&s_hi.to_le_bytes());
+                out.extend_from_slice(&s_lo.to_le_bytes());
+                out.extend_from_slice(&bitpack::pack(idx, bits));
+            }
         }
         out
     }
@@ -122,6 +147,7 @@ impl Payload {
         let kind = r.u8()?;
         let bits = r.u8()? as u32;
         let d = r.u32()? as usize;
+        check_bits(kind, bits)?;
         Ok(match kind {
             0 => {
                 let mut v = Vec::with_capacity(d);
@@ -157,6 +183,15 @@ impl Payload {
                 }
                 Payload::Sparse { d: d as u32, pairs }
             }
+            4 => {
+                let alpha = r.f32()?;
+                let beta = r.f32()?;
+                let s_hi = r.u16()?;
+                let s_lo = r.u16()?;
+                check_multiscale(alpha, beta, s_hi, s_lo)?;
+                let idx = bitpack::unpack(r.rest(), bits, d);
+                Payload::Multiscale { alpha, beta, s_hi, s_lo, idx }
+            }
             k => bail!("unknown payload kind {k}"),
         })
     }
@@ -179,7 +214,83 @@ impl Payload {
                 }
                 v
             }
+            Payload::Multiscale { alpha, beta, s_hi, s_lo, idx } => {
+                let levels = multiscale_codebook(*alpha, *beta, *s_hi, *s_lo);
+                idx.iter().map(|&k| levels[k as usize]).collect()
+            }
         }
+    }
+}
+
+/// Reject index bit-widths no decoder handles: quantized kinds
+/// (uniform/codebook/multiscale) must carry 1..=[`MAX_BITS`] — anything
+/// wider is corruption, and letting it through would shift-overflow the
+/// unpack masks.
+fn check_bits(kind: u8, bits: u32) -> Result<()> {
+    if matches!(kind, 1 | 2 | 4) && !(1..=MAX_BITS).contains(&bits) {
+        bail!("frame bits {bits} outside the packed range 1..={MAX_BITS}");
+    }
+    Ok(())
+}
+
+/// Validate a multiscale frame's scale parameters before building the
+/// merged codebook from them.
+fn check_multiscale(alpha: f32, beta: f32, s_hi: u16, s_lo: u16) -> Result<()> {
+    if s_hi == 0 || s_lo == 0 {
+        bail!("multiscale frame with zero interval count");
+    }
+    if !alpha.is_finite() || !beta.is_finite() || !(beta > 0.0 && beta <= alpha) {
+        bail!("multiscale scales must satisfy 0 < beta <= alpha, got alpha={alpha} beta={beta}");
+    }
+    Ok(())
+}
+
+/// The merged two-scale codebook a multiscale frame's indices address:
+/// the coarse grid of `s_hi` even intervals on [−α, α] unioned with the
+/// fine grid of `s_lo` even intervals on [−β, β], sorted ascending and
+/// deduplicated (even interval counts make both grids hit exactly 0.0, so
+/// the merged table has at most `s_hi + s_lo + 1` levels). Levels are
+/// computed in f64 and cast once, like `solver::uniform_codebook`, so the
+/// encoder and every decoder reconstruct bit-identical tables.
+pub fn multiscale_codebook(alpha: f32, beta: f32, s_hi: u16, s_lo: u16) -> Vec<f32> {
+    let mut levels = Vec::with_capacity(s_hi as usize + s_lo as usize + 2);
+    for k in 0..=s_hi {
+        levels.push((-(alpha as f64) + 2.0 * alpha as f64 * k as f64 / s_hi as f64) as f32);
+    }
+    for k in 0..=s_lo {
+        levels.push((-(beta as f64) + 2.0 * beta as f64 * k as f64 / s_lo as f64) as f32);
+    }
+    levels.sort_by(f32::total_cmp);
+    levels.dedup();
+    levels
+}
+
+/// Extract the truncation threshold a quantized frame encodes: α for
+/// uniform and multiscale frames, the largest |level| for codebook frames,
+/// `None` for raw/sparse frames (untruncated) or anything too short to
+/// carry one. This is the bit-budget scheduler's observation channel — the
+/// server reads the fit-driven α from the frames it already receives, so
+/// scheduling needs no extra uplink traffic.
+pub fn frame_alpha(bytes: &[u8]) -> Option<f32> {
+    if bytes.len() < 8 || bytes[0..2] != MAGIC.to_le_bytes() {
+        return None;
+    }
+    match bytes[2] {
+        1 | 4 => bytes.get(8..12).map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+        2 => {
+            let n = u16::from_le_bytes(bytes.get(8..10)?.try_into().unwrap()) as usize;
+            if n == 0 {
+                return None;
+            }
+            let mut m = 0.0f32;
+            for k in 0..n {
+                let off = 10 + 4 * k;
+                let l = f32::from_le_bytes(bytes.get(off..off + 4)?.try_into().unwrap());
+                m = m.max(l.abs());
+            }
+            Some(m)
+        }
+        _ => None,
     }
 }
 
@@ -211,6 +322,31 @@ pub fn begin_codebook_frame(out: &mut Vec<u8>, levels: &[f32], d: u32, bits: u32
     for l in levels {
         out.extend_from_slice(&l.to_le_bytes());
     }
+}
+
+/// Start a multiscale frame (kind 4) in a caller-provided buffer (see
+/// [`begin_uniform_frame`] for the contract). `bits` is the packed index
+/// width of the merged codebook — `bits_for(n − 1)` where `n` is the
+/// length of [`multiscale_codebook`]`(alpha, beta, s_hi, s_lo)`.
+pub fn begin_multiscale_frame(
+    out: &mut Vec<u8>,
+    alpha: f32,
+    beta: f32,
+    s_hi: u16,
+    s_lo: u16,
+    d: u32,
+    bits: u32,
+) {
+    out.clear();
+    out.reserve(20 + super::bitpack::packed_len(d as usize, bits));
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(KIND_MULTISCALE);
+    out.push(bits as u8);
+    out.extend_from_slice(&d.to_le_bytes());
+    out.extend_from_slice(&alpha.to_le_bytes());
+    out.extend_from_slice(&beta.to_le_bytes());
+    out.extend_from_slice(&s_hi.to_le_bytes());
+    out.extend_from_slice(&s_lo.to_le_bytes());
 }
 
 /// Encode a raw (DSGD) frame straight from the borrowed gradient slice into
@@ -280,6 +416,7 @@ pub fn decode_dequantize_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
     let kind = r.u8()?;
     let bits = r.u8()? as u32;
     let d = r.u32()? as usize;
+    check_bits(kind, bits)?;
     match kind {
         1 => {
             let alpha = r.f32()?;
@@ -290,6 +427,14 @@ pub fn decode_dequantize_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
                 bail!("truncated uniform payload");
             }
             out.reserve(d);
+            if bits > 8 {
+                // Wide indices: the inline two-byte window below only covers
+                // bits + offset ≤ 16 when bits ≤ 8; stage through unpack.
+                for idx in super::bitpack::unpack(packed, bits, d) {
+                    out.push(-alpha + idx as f32 * step);
+                }
+                return Ok(());
+            }
             let mask = (1u32 << bits) - 1;
             let mut bitpos = 0usize;
             for _ in 0..d {
@@ -311,25 +456,16 @@ pub fn decode_dequantize_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
             for _ in 0..n {
                 levels.push(r.f32()?);
             }
-            let packed = r.rest();
-            if packed.len() < super::bitpack::packed_len(d, bits) {
-                bail!("truncated codebook payload");
-            }
-            out.reserve(d);
-            let mask = (1u32 << bits) - 1;
-            let mut bitpos = 0usize;
-            for _ in 0..d {
-                let byte = bitpos >> 3;
-                let off = (bitpos & 7) as u32;
-                let mut wide = packed[byte] as u32;
-                if let Some(&b1) = packed.get(byte + 1) {
-                    wide |= (b1 as u32) << 8;
-                }
-                let idx = ((wide >> off) & mask) as usize;
-                out.push(*levels.get(idx).ok_or_else(|| anyhow!("index {idx} out of codebook"))?);
-                bitpos += bits as usize;
-            }
-            Ok(())
+            dequantize_levels_packed_into(r.rest(), bits, d, &levels, out)
+        }
+        4 => {
+            let alpha = r.f32()?;
+            let beta = r.f32()?;
+            let s_hi = r.u16()?;
+            let s_lo = r.u16()?;
+            check_multiscale(alpha, beta, s_hi, s_lo)?;
+            let levels = multiscale_codebook(alpha, beta, s_hi, s_lo);
+            dequantize_levels_packed_into(r.rest(), bits, d, &levels, out)
         }
         // Raw: read the f32s straight into the reused dense buffer (the
         // decode mirror of `encode_raw_into` — no staging Vec, no clone).
@@ -357,6 +493,44 @@ pub fn decode_dequantize_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
     }
 }
 
+/// Shared level-table decode tail for codebook-shaped payloads
+/// (kinds 2 and 4): validate the packed length, then walk the bitstream
+/// pushing `levels[idx]` — inline two-byte window for bits ≤ 8, staged
+/// `bitpack::unpack` for the wide 9..=[`MAX_BITS`] widths.
+fn dequantize_levels_packed_into(
+    packed: &[u8],
+    bits: u32,
+    d: usize,
+    levels: &[f32],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if packed.len() < bitpack::packed_len(d, bits) {
+        bail!("truncated codebook payload");
+    }
+    out.reserve(d);
+    if bits > 8 {
+        for idx in bitpack::unpack(packed, bits, d) {
+            let idx = idx as usize;
+            out.push(*levels.get(idx).ok_or_else(|| anyhow!("index {idx} out of codebook"))?);
+        }
+        return Ok(());
+    }
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = 0usize;
+    for _ in 0..d {
+        let byte = bitpos >> 3;
+        let off = (bitpos & 7) as u32;
+        let mut wide = packed[byte] as u32;
+        if let Some(&b1) = packed.get(byte + 1) {
+            wide |= (b1 as u32) << 8;
+        }
+        let idx = ((wide >> off) & mask) as usize;
+        out.push(*levels.get(idx).ok_or_else(|| anyhow!("index {idx} out of codebook"))?);
+        bitpos += bits as usize;
+    }
+    Ok(())
+}
+
 /// Allocating wrapper over [`decode_dequantize_into`].
 pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
     let mut out = Vec::new();
@@ -368,9 +542,11 @@ pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
 /// where `d` is the frame's dense reconstruction, in ONE walk over the
 /// bitstream — the dense scratch write + re-read pass of
 /// `decode_dequantize_into` followed by a `zip` accumulate disappears
-/// entirely. For uniform/codebook frames (bits ≤ 8, all the encoders emit)
-/// the per-level products `w * level_k` are precomputed into a 256-entry
-/// LUT, so the inner loop is an unpack, a table load and an add.
+/// entirely. For uniform/codebook/multiscale frames with bits ≤ 8 and at
+/// most 256 levels the per-level products `w * level_k` are precomputed
+/// into a 256-entry LUT, so the inner loop is an unpack, a table load and
+/// an add; wider frames (legal up to [`MAX_BITS`]) fall back to a staged
+/// unpack with the identical per-element f32 operations.
 ///
 /// Bit-identity contract (the server's sharded aggregation relies on it,
 /// property-tested across schemes × bits): every element receives exactly
@@ -396,18 +572,26 @@ pub fn decode_dequantize_accumulate_into(bytes: &[u8], w: f32, acc: &mut [f32]) 
     if d != acc.len() {
         bail!("frame length {} != accumulator size {}", d, acc.len());
     }
+    check_bits(kind, bits)?;
     match kind {
         1 => {
             let alpha = r.f32()?;
             let s = r.u16()?;
-            if !(1..=8).contains(&bits) {
-                bail!("uniform frame bits {bits} outside the packed range 1..=8");
-            }
             let packed = r.rest();
             if packed.len() < super::bitpack::packed_len(d, bits) {
                 bail!("truncated uniform payload");
             }
             let step = 2.0f32 * alpha / s as f32;
+            if bits > 8 {
+                // Wide indices overflow the 256-entry LUT: compute `d_k`
+                // per element instead — the same f32 expression and the
+                // same single `w * d` product, so bit-identity holds.
+                for (a, idx) in acc.iter_mut().zip(super::bitpack::unpack(packed, bits, d)) {
+                    let dk = -alpha + idx as f32 * step;
+                    *a += w * dk;
+                }
+                return Ok(());
+            }
             let mask = (1usize << bits) - 1;
             let mut wlut = [0.0f32; 256];
             for (k, slot) in wlut.iter_mut().enumerate().take(mask + 1) {
@@ -424,23 +608,50 @@ pub fn decode_dequantize_accumulate_into(bytes: &[u8], w: f32, acc: &mut [f32]) 
         }
         2 => {
             let n = r.u16()? as usize;
-            if n > 256 {
-                bail!("codebook with {n} levels exceeds the 8-bit index space");
+            if n <= 256 && bits <= 8 {
+                let mut wlut = [0.0f32; 256];
+                for slot in wlut.iter_mut().take(n) {
+                    *slot = w * r.f32()?;
+                }
+                let packed = r.rest();
+                if packed.len() < super::bitpack::packed_len(d, bits) {
+                    bail!("truncated codebook payload");
+                }
+                super::kernels::accumulate_packed_wlut(packed, bits, n, &wlut, acc)
+                    .map_err(|idx| anyhow!("index {idx} out of codebook"))?;
+                return Ok(());
             }
-            if !(1..=8).contains(&bits) {
-                bail!("codebook frame bits {bits} outside the packed range 1..=8");
+            // Wide path (9..=MAX_BITS-bit indices or an oversized level
+            // table): read the levels, then accumulate per element —
+            // `w * level` is the very product the LUT precomputes.
+            let mut levels = Vec::with_capacity(n);
+            for _ in 0..n {
+                levels.push(r.f32()?);
             }
-            let mut wlut = [0.0f32; 256];
-            for slot in wlut.iter_mut().take(n) {
-                *slot = w * r.f32()?;
+            accumulate_levels_packed(r.rest(), bits, d, &levels, w, acc)
+        }
+        4 => {
+            let alpha = r.f32()?;
+            let beta = r.f32()?;
+            let s_hi = r.u16()?;
+            let s_lo = r.u16()?;
+            check_multiscale(alpha, beta, s_hi, s_lo)?;
+            let levels = multiscale_codebook(alpha, beta, s_hi, s_lo);
+            let n = levels.len();
+            if n <= 256 && bits <= 8 {
+                let mut wlut = [0.0f32; 256];
+                for (slot, &l) in wlut.iter_mut().zip(&levels) {
+                    *slot = w * l;
+                }
+                let packed = r.rest();
+                if packed.len() < super::bitpack::packed_len(d, bits) {
+                    bail!("truncated multiscale payload");
+                }
+                super::kernels::accumulate_packed_wlut(packed, bits, n, &wlut, acc)
+                    .map_err(|idx| anyhow!("index {idx} out of codebook"))?;
+                return Ok(());
             }
-            let packed = r.rest();
-            if packed.len() < super::bitpack::packed_len(d, bits) {
-                bail!("truncated codebook payload");
-            }
-            super::kernels::accumulate_packed_wlut(packed, bits, n, &wlut, acc)
-                .map_err(|idx| anyhow!("index {idx} out of codebook"))?;
-            Ok(())
+            accumulate_levels_packed(r.rest(), bits, d, &levels, w, acc)
         }
         // Raw: accumulate straight from the byte stream.
         0 => {
@@ -463,6 +674,27 @@ pub fn decode_dequantize_accumulate_into(bytes: &[u8], w: f32, acc: &mut [f32]) 
         }
         k => bail!("unknown payload kind {k}"),
     }
+}
+
+/// Staged accumulate tail for codebook-shaped frames that don't fit the
+/// 256-entry w·LUT: unpack, bounds-check each index, `acc += w * level`.
+fn accumulate_levels_packed(
+    packed: &[u8],
+    bits: u32,
+    d: usize,
+    levels: &[f32],
+    w: f32,
+    acc: &mut [f32],
+) -> Result<()> {
+    if packed.len() < bitpack::packed_len(d, bits) {
+        bail!("truncated codebook payload");
+    }
+    for (a, idx) in acc.iter_mut().zip(bitpack::unpack(packed, bits, d)) {
+        let idx = idx as usize;
+        let l = *levels.get(idx).ok_or_else(|| anyhow!("index {idx} out of codebook"))?;
+        *a += w * l;
+    }
+    Ok(())
 }
 
 struct Reader<'a> {
@@ -553,6 +785,78 @@ mod tests {
     }
 
     #[test]
+    fn multiscale_codebook_merges_sorted_dedup() {
+        // Even interval counts put 0.0 on both grids exactly once.
+        let cb = multiscale_codebook(1.0, 0.25, 2, 2);
+        assert_eq!(cb, vec![-1.0, -0.25, 0.0, 0.25, 1.0]);
+        // A fine grid nested strictly inside the coarse one keeps all
+        // s_hi + s_lo + 1 distinct levels, strictly increasing.
+        let cb = multiscale_codebook(0.1, 0.02, 4, 2);
+        assert_eq!(cb.len(), 7);
+        assert!(cb.windows(2).all(|w| w[0] < w[1]), "{cb:?}");
+        assert_eq!(cb[0], -0.1);
+        assert_eq!(cb[6], 0.1);
+    }
+
+    #[test]
+    fn multiscale_roundtrip() {
+        let cb = multiscale_codebook(0.1, 0.02, 4, 2);
+        let idx: Vec<u32> = (0..100).map(|i| i % cb.len() as u32).collect();
+        let p = Payload::Multiscale { alpha: 0.1, beta: 0.02, s_hi: 4, s_lo: 2, idx };
+        let bytes = p.encode(3);
+        // header 8 + alpha 4 + beta 4 + s_hi 2 + s_lo 2 + ceil(100*3/8)
+        assert_eq!(bytes.len(), 20 + 38);
+        let q = Payload::decode(&bytes).unwrap();
+        assert_eq!(p, q);
+        let dense = q.dequantize();
+        assert_eq!(dense[0], cb[0]);
+        assert_eq!(dense[3], cb[3]);
+    }
+
+    #[test]
+    fn multiscale_golden_bytes() {
+        // Hand-computed fixture; docs/PROTOCOL.md §4.5 restates these bytes.
+        let p = Payload::Multiscale {
+            alpha: 1.0,
+            beta: 0.25,
+            s_hi: 2,
+            s_lo: 2,
+            idx: vec![0, 4, 2],
+        };
+        let want: Vec<u8> = vec![
+            0x54, 0x51, // magic
+            0x04, // kind = multiscale
+            0x03, // bits = 3
+            0x03, 0x00, 0x00, 0x00, // d = 3
+            0x00, 0x00, 0x80, 0x3F, // alpha = 1.0
+            0x00, 0x00, 0x80, 0x3E, // beta = 0.25
+            0x02, 0x00, // s_hi = 2
+            0x02, 0x00, // s_lo = 2
+            0xA0, 0x00, // indices 0,4,2 packed LSB-first
+        ];
+        assert_eq!(p.encode(3), want);
+        // Merged codebook {−1, −0.25, 0, 0.25, 1}: indices 0/4/2 hit the
+        // endpoints and the shared zero level.
+        assert_eq!(decode_dequantize(&want).unwrap(), vec![-1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn frame_alpha_extraction() {
+        let u = Payload::Uniform { alpha: 0.07, s: 7, idx: vec![0, 3] }.encode(3);
+        assert_eq!(frame_alpha(&u), Some(0.07));
+        let m = Payload::Multiscale { alpha: 0.5, beta: 0.1, s_hi: 4, s_lo: 2, idx: vec![0] }
+            .encode(3);
+        assert_eq!(frame_alpha(&m), Some(0.5));
+        let c = Payload::Codebook { levels: vec![-0.3, 0.0, 0.2], idx: vec![1] }.encode(2);
+        assert_eq!(frame_alpha(&c), Some(0.3));
+        let r = Payload::Raw(vec![9.0]).encode(0);
+        assert_eq!(frame_alpha(&r), None);
+        let s = Payload::Sparse { d: 4, pairs: vec![(0, 2.0)] }.encode(0);
+        assert_eq!(frame_alpha(&s), None);
+        assert_eq!(frame_alpha(&[0x54]), None);
+    }
+
+    #[test]
     fn fused_decode_equals_general_path() {
         // decode_dequantize (hot path) must produce exactly what
         // Payload::decode().dequantize() (reference path) produces, for
@@ -561,7 +865,7 @@ mod tests {
             let d = 1 + rng.below(3000) as usize;
             let bits = 2 + rng.below(4) as u32;
             let s = (1u32 << bits) - 1;
-            let kind = rng.below(4);
+            let kind = rng.below(5);
             let bytes = match kind {
                 0 => Payload::Raw((0..d).map(|_| rng.f32() - 0.5).collect()).encode(0),
                 1 => {
@@ -575,12 +879,19 @@ mod tests {
                     let b = 32 - (cb.len() as u32 - 1).leading_zeros();
                     Payload::Codebook { levels: cb, idx }.encode(b)
                 }
-                _ => {
+                3 => {
                     let k = 1 + rng.below(d as u64) as usize;
                     let mut pairs: Vec<(u32, f32)> =
                         (0..k).map(|i| (i as u32, rng.f32())).collect();
                     pairs.dedup_by_key(|p| p.0);
                     Payload::Sparse { d: d as u32, pairs }.encode(0)
+                }
+                _ => {
+                    let n = multiscale_codebook(0.1, 0.02, 4, 2).len() as u64;
+                    let idx: Vec<u32> = (0..d).map(|_| rng.below(n) as u32).collect();
+                    let b = 32 - (n as u32 - 1).leading_zeros();
+                    Payload::Multiscale { alpha: 0.1, beta: 0.02, s_hi: 4, s_lo: 2, idx }
+                        .encode(b)
                 }
             };
             let fused = decode_dequantize(&bytes).map_err(|e| e.to_string())?;
@@ -599,7 +910,7 @@ mod tests {
             let bits = 1 + rng.below(8) as u32;
             let s = (1u32 << bits) - 1;
             let w = (rng.f64() * 1.5) as f32;
-            let kind = rng.below(4);
+            let kind = rng.below(5);
             let bytes = match kind {
                 0 => Payload::Raw((0..d).map(|_| rng.f32() - 0.5).collect()).encode(0),
                 1 => {
@@ -613,12 +924,19 @@ mod tests {
                     let b = 32 - (cb.len() as u32 - 1).leading_zeros();
                     Payload::Codebook { levels: cb, idx }.encode(b)
                 }
-                _ => {
+                3 => {
                     let k = 1 + rng.below(d as u64) as usize;
                     let mut pairs: Vec<(u32, f32)> =
                         (0..k).map(|i| (i as u32, rng.f32())).collect();
                     pairs.dedup_by_key(|p| p.0);
                     Payload::Sparse { d: d as u32, pairs }.encode(0)
+                }
+                _ => {
+                    let n = multiscale_codebook(0.1, 0.02, 4, 2).len() as u64;
+                    let idx: Vec<u32> = (0..d).map(|_| rng.below(n) as u32).collect();
+                    let b = 32 - (n as u32 - 1).leading_zeros();
+                    Payload::Multiscale { alpha: 0.1, beta: 0.02, s_hi: 4, s_lo: 2, idx }
+                        .encode(b)
                 }
             };
             let base: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
@@ -685,5 +1003,66 @@ mod tests {
         let mut bad = p.clone();
         bad[0] ^= 0xFF;
         assert!(Payload::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bits_outside_max_bits() {
+        // A hostile bits byte must error in every decoder, not shift-overflow.
+        let mut frame = Payload::Uniform { alpha: 0.1, s: 7, idx: vec![0, 1, 2] }.encode(3);
+        frame[3] = 200;
+        assert!(Payload::decode(&frame).is_err());
+        assert!(decode_dequantize(&frame).is_err());
+        let mut acc = vec![0.0f32; 3];
+        assert!(decode_dequantize_accumulate_into(&frame, 1.0, &mut acc).is_err());
+        frame[3] = 0;
+        assert!(Payload::decode(&frame).is_err(), "quantized kinds need bits >= 1");
+    }
+
+    #[test]
+    fn rejects_bad_multiscale_params() {
+        let good = Payload::Multiscale { alpha: 0.1, beta: 0.02, s_hi: 4, s_lo: 2, idx: vec![0] };
+        assert!(Payload::decode(&good.encode(3)).is_ok());
+        for (alpha, beta, s_hi, s_lo) in [
+            (0.1f32, 0.02f32, 0u16, 2u16), // zero coarse intervals
+            (0.1, 0.02, 4, 0),             // zero fine intervals
+            (0.02, 0.1, 4, 2),             // beta > alpha
+            (0.1, 0.0, 4, 2),              // beta = 0
+            (f32::NAN, 0.02, 4, 2),        // non-finite scale
+        ] {
+            let p = Payload::Multiscale { alpha, beta, s_hi, s_lo, idx: vec![0] };
+            let bytes = p.encode(3);
+            assert!(
+                Payload::decode(&bytes).is_err(),
+                "alpha={alpha} beta={beta} s_hi={s_hi} s_lo={s_lo} must be rejected"
+            );
+            assert!(decode_dequantize(&bytes).is_err());
+        }
+    }
+
+    #[test]
+    fn wide_bits_fallback_matches_reference() {
+        // 9..=16-bit frames take the staged (non-LUT) decode paths; they
+        // must agree bit-for-bit with the generic reference path.
+        let s = 4095u32;
+        let bits = 12u32;
+        let idx: Vec<u32> = (0..777).map(|i| (i * 37) % (s + 1)).collect();
+        let uni = Payload::Uniform { alpha: 0.1, s: s as u16, idx: idx.clone() }.encode(bits);
+        let levels: Vec<f32> = (0..600).map(|k| (k as f32 - 300.0) * 1e-4).collect();
+        let cbi: Vec<u32> = (0..777).map(|i| (i * 13) % 600).collect();
+        let cb = Payload::Codebook { levels, idx: cbi }.encode(10);
+        for bytes in [&uni, &cb] {
+            let fused = decode_dequantize(bytes).unwrap();
+            let general = Payload::decode(bytes).unwrap().dequantize();
+            assert_eq!(fused, general);
+            let base: Vec<f32> = (0..777).map(|i| i as f32 * 0.01 - 3.0).collect();
+            let mut want = base.clone();
+            for (a, &dv) in want.iter_mut().zip(&general) {
+                *a += 0.3 * dv;
+            }
+            let mut got = base;
+            decode_dequantize_accumulate_into(bytes, 0.3, &mut got).unwrap();
+            let same = got.iter().map(|x| x.to_bits()).eq(want.iter().map(|x| x.to_bits()));
+            assert!(same, "wide-bit accumulate diverged from two-pass");
+        }
     }
 }

@@ -1,0 +1,340 @@
+//! Bit-budget scheduler and multi-scale codec properties (see
+//! `docs/DETERMINISM.md` invariant 6 and `docs/PROTOCOL.md` §3.3/§4.5):
+//!
+//! 1. **Disabled is a strict no-op.** `bit_budget = 0` on a preset without
+//!    uplink caps constructs no scheduler, and an *unconstrained* budget
+//!    (no bound ever binds) is bit-identical to the disabled path — the
+//!    budget analogue of cohort invariant 5's K = N degeneracy — across
+//!    scenario presets and both pipeline modes.
+//! 2. **A feasible budget is respected.** With a binding fleet budget the
+//!    per-round uplink goodput never exceeds it, and sits strictly below
+//!    the unbudgeted run's.
+//! 3. **The plan is pipeline- and transport-invariant.** An engaged
+//!    scheduler keeps barrier ≡ streaming bit-identity, and a TCP run
+//!    (rates shipped in ROUND_START) matches the in-process barrier run.
+//! 4. **Multi-scale stays unbiased at every scheduled rate.** At each
+//!    width a real plan assigns, the two-scale codec's round-trip is
+//!    unbiased for the truncated gradient with per-element error bounded
+//!    by the widest merged-codebook gap.
+//! 5. **The kind-4 wire bytes are pinned** (the same fixture as
+//!    `quant_props.rs` and PROTOCOL.md §4.5), including the header field
+//!    the scheduler's observation channel reads.
+
+use tqsgd::config::{ExperimentConfig, PipelineMode, ScenarioConfig, Scheme};
+use tqsgd::coordinator::{run_worker, Coordinator, TcpOptions, TcpServer, WorkerOptions};
+use tqsgd::metrics::RunLog;
+use tqsgd::quant::wire::{self, Payload};
+use tqsgd::quant::{BitBudget, CodecBuilder};
+use tqsgd::runtime::{backend_for, Backend};
+use tqsgd::util::Rng;
+
+const PRESETS: [&str; 4] = ["clean", "lossy", "stale", "churn"];
+
+fn native() -> Box<dyn Backend> {
+    backend_for("native", "unused").unwrap()
+}
+
+/// The pipeline_props grid config: small but real.
+fn grid_cfg(scheme: Scheme, bits: u32, preset: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = scheme;
+    cfg.quant.bits = bits;
+    cfg.clients = 4;
+    cfg.train_size = 384;
+    cfg.test_size = 96;
+    cfg.seed = 11;
+    cfg.net.bandwidth_bytes_per_sec = 1e6;
+    cfg.net.latency_sec = 0.01;
+    cfg.scenario = ScenarioConfig::preset(preset).unwrap();
+    cfg
+}
+
+/// Run `rounds` rounds in-process; return (replay digest, final parameters,
+/// per-round uplink bytes).
+fn run(
+    backend: &dyn Backend,
+    cfg: &ExperimentConfig,
+    rounds: usize,
+) -> (String, Vec<f32>, Vec<u64>) {
+    let mut coord = Coordinator::new(cfg.clone(), backend).unwrap();
+    let mut log = RunLog::default();
+    for _ in 0..rounds {
+        log.push(coord.step().unwrap());
+    }
+    let bytes = log.records.iter().map(|r| r.bytes_up).collect();
+    (log.replay_digest(), coord.params.clone(), bytes)
+}
+
+fn assert_bit_identical(a: &(String, Vec<f32>, Vec<u64>), b: &(String, Vec<f32>, Vec<u64>), label: &str) {
+    assert_eq!(a.0, b.0, "{label}: replay digests diverged");
+    assert_eq!(a.1.len(), b.1.len(), "{label}: parameter dim diverged");
+    for (i, (x, y)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: param {i} diverged ({x} vs {y})");
+    }
+}
+
+/// Probe the scheduler's frame-size model for a config: total planned
+/// message bytes across `active` at the given fleet budget.
+fn planned_total(cfg: &ExperimentConfig, dims: &[usize], active: &[usize]) -> u64 {
+    let b = BitBudget::new(cfg, dims.to_vec(), Vec::new());
+    let plan = b.plan(0, active);
+    active.iter().map(|&c| b.planned_message_bytes(&plan, c).unwrap()).sum()
+}
+
+/// A fleet budget halfway between the minimum-width cost and the
+/// ceiling cost — feasible by construction, binding by construction.
+fn binding_budget(cfg: &ExperimentConfig, dims: &[usize], active: &[usize]) -> u64 {
+    let floor = {
+        let mut c = cfg.clone();
+        c.bit_budget = 1; // infeasible probe: the plan falls back to minima
+        planned_total(&c, dims, active)
+    };
+    let ceil = {
+        let mut c = cfg.clone();
+        c.bit_budget = 1 << 40; // unconstrained probe: the plan hits the ceiling
+        planned_total(&c, dims, active)
+    };
+    assert!(floor < ceil, "probe budgets must bracket: floor {floor} vs ceiling {ceil}");
+    (floor + ceil) / 2
+}
+
+/// Layer-group element counts of the configured model.
+fn model_dims(backend: &dyn Backend, cfg: &ExperimentConfig) -> Vec<usize> {
+    let spec = backend.model(&cfg.model).unwrap();
+    spec.groups.iter().map(|g| g.end - g.start).collect()
+}
+
+/// Invariant 6, degenerate direction: a budget so large no bound ever binds
+/// schedules every codec at the configured ceiling — which must be
+/// bit-identical to not constructing the scheduler at all, across presets
+/// and both pipelines (error feedback in play).
+#[test]
+fn unconstrained_budget_is_bit_identical_to_disabled() {
+    let backend = native();
+    for preset in PRESETS {
+        for pipeline in [PipelineMode::Barrier, PipelineMode::Streaming] {
+            let mut cfg = grid_cfg(Scheme::Tqsgd, 3, preset);
+            cfg.quant.error_feedback = true;
+            cfg.pipeline = pipeline;
+            let reference = run(backend.as_ref(), &cfg, 3);
+            let mut c = cfg.clone();
+            c.bit_budget = 1 << 40;
+            let got = run(backend.as_ref(), &c, 3);
+            let label = format!("tqsgd+ef@{preset} {} unconstrained-budget", pipeline.name());
+            assert_bit_identical(&reference, &got, &label);
+        }
+    }
+}
+
+/// Invariant 6, binding direction: with a feasible fleet budget, every
+/// round's uplink goodput respects it — and sits strictly below the
+/// unbudgeted run (the budget is observable, not decorative).
+#[test]
+fn feasible_budget_caps_per_round_uplink_bytes() {
+    let backend = native();
+    let cfg = grid_cfg(Scheme::Tqsgd, 8, "clean");
+    let dims = model_dims(backend.as_ref(), &cfg);
+    let active: Vec<usize> = (0..cfg.clients).collect();
+    let budget = binding_budget(&cfg, &dims, &active);
+
+    let (_, _, free_bytes) = run(backend.as_ref(), &cfg, 3);
+    let mut budgeted = cfg;
+    budgeted.bit_budget = budget;
+    let (_, params, bytes) = run(backend.as_ref(), &budgeted, 3);
+
+    assert!(params.iter().all(|p| p.is_finite()));
+    for (r, (&b, &f)) in bytes.iter().zip(&free_bytes).enumerate() {
+        assert!(b <= budget, "round {r}: bytes_up {b} exceeds the {budget}-byte budget");
+        assert!(b < f, "round {r}: budgeted bytes {b} not below unbudgeted {f}");
+        assert!(b > 0, "round {r}: a feasible budget must still ship frames");
+    }
+}
+
+/// The bandwidth preset's per-client uplink caps engage the scheduler on
+/// their own (no fleet budget) and shrink the uplink versus clean.
+#[test]
+fn bandwidth_preset_caps_shrink_the_uplink() {
+    let backend = native();
+    let clean = run(backend.as_ref(), &grid_cfg(Scheme::Tqsgd, 8, "clean"), 3);
+    let capped = run(backend.as_ref(), &grid_cfg(Scheme::Tqsgd, 8, "bandwidth"), 3);
+    for (r, (&c, &f)) in capped.2.iter().zip(&clean.2).enumerate() {
+        assert!(c < f, "round {r}: capped bytes {c} not below clean {f}");
+        assert!(c > 0, "round {r}: capped clients must still ship frames");
+    }
+}
+
+/// An engaged scheduler is decided in the shared round prologue, so the
+/// barrier/streaming bit-identity contract survives it — with the
+/// multi-scale codec carrying the frames (kind 4 through both decode
+/// paths) on top of per-client caps AND a binding fleet budget.
+#[test]
+fn engaged_budget_keeps_pipeline_bit_identity() {
+    let backend = native();
+    let base = grid_cfg(Scheme::Multiscale, 6, "bandwidth");
+    let dims = model_dims(backend.as_ref(), &base);
+    let active: Vec<usize> = (0..base.clients).collect();
+    let mut cfg = base;
+    cfg.bit_budget = binding_budget(&cfg, &dims, &active);
+
+    let mut barrier = cfg.clone();
+    barrier.pipeline = PipelineMode::Barrier;
+    let a = run(backend.as_ref(), &barrier, 4);
+    let mut streaming = cfg;
+    streaming.pipeline = PipelineMode::Streaming;
+    let b = run(backend.as_ref(), &streaming, 4);
+    assert_bit_identical(&a, &b, "multiscale@bandwidth budgeted modes");
+}
+
+/// The plan must survive the wire: a TCP run — workers re-targeting their
+/// codecs from the ROUND_START rate block (PROTOCOL.md §3.3) — matches the
+/// in-process barrier run bit for bit under a binding budget.
+#[test]
+fn tcp_budget_run_matches_in_process_barrier() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.backend = "native".into();
+    cfg.quant.scheme = Scheme::Multiscale;
+    cfg.quant.bits = 6;
+    cfg.clients = 3;
+    cfg.rounds = 4;
+    cfg.train_size = 384;
+    cfg.test_size = 96;
+    cfg.seed = 11;
+    cfg.net.bandwidth_bytes_per_sec = 1e6;
+    cfg.net.latency_sec = 0.01;
+    let backend = native();
+    let dims = model_dims(backend.as_ref(), &cfg);
+    let active: Vec<usize> = (0..cfg.clients).collect();
+    cfg.bit_budget = binding_budget(&cfg, &dims, &active);
+
+    let opts = TcpOptions {
+        io_timeout: std::time::Duration::from_secs(30),
+        accept_timeout: std::time::Duration::from_secs(30),
+    };
+    let server = TcpServer::bind("127.0.0.1:0", &cfg, opts).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..cfg.clients)
+        .map(|id| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, id, &WorkerOptions::default()))
+        })
+        .collect();
+    let transport = server.accept_workers().unwrap();
+    let mut coord =
+        Coordinator::with_transport(cfg.clone(), backend.as_ref(), Box::new(transport)).unwrap();
+    let log = coord.run_remote(false).unwrap();
+    for w in workers {
+        w.join().expect("worker thread panicked").expect("worker must exit cleanly");
+    }
+
+    let mut ref_cfg = cfg;
+    ref_cfg.pipeline = PipelineMode::Barrier;
+    let mut ref_coord = Coordinator::new(ref_cfg, backend.as_ref()).unwrap();
+    let ref_log = ref_coord.run(false).unwrap();
+    assert_eq!(
+        log.replay_digest(),
+        ref_log.replay_digest(),
+        "budgeted TCP digest diverged from in-process barrier"
+    );
+    for (i, (a, b)) in coord.params.iter().zip(&ref_coord.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} diverged ({a} vs {b})");
+    }
+}
+
+/// Multi-scale round-trips at every width a real plan schedules: unbiased
+/// for the truncated gradient, per-element error within the widest merged
+/// codebook gap — so the budget can move the rate without breaking the
+/// unbiased-aggregation contract.
+#[test]
+fn multiscale_is_unbiased_at_every_scheduled_rate() {
+    // Schedule real rates: a mid-sized fleet budget over two uneven groups.
+    let mut cfg = ExperimentConfig::default();
+    cfg.clients = 2;
+    cfg.quant.scheme = Scheme::Multiscale;
+    cfg.quant.bits = 8;
+    let dims = [600usize, 300];
+    cfg.bit_budget = binding_budget(&cfg, &dims, &[0, 1]);
+    let b = BitBudget::new(&cfg, dims.to_vec(), Vec::new());
+    let plan = b.plan(0, &[0, 1]);
+    let mut rates: Vec<u32> = plan.bits.iter().flatten().copied().collect();
+    rates.sort_unstable();
+    rates.dedup();
+    assert!(!rates.is_empty(), "the plan must schedule at least one width");
+    assert!(rates.iter().all(|&r| (3..=8).contains(&r)), "scheduled widths {rates:?}");
+
+    for &bits in &rates {
+        let mut codec = CodecBuilder::from_quant(&cfg.quant).build_plain();
+        let mut rng = Rng::new(0x5EED ^ u64::from(bits));
+        let fit: Vec<f32> =
+            (0..20_000).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        codec.refit(&fit);
+        codec.set_rate(bits);
+        assert_eq!(codec.rate(), bits, "set_rate must land on the scheduled width");
+
+        let n = 48usize;
+        let g: Vec<f32> =
+            (0..n).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+        // Reconstruct the standing merged codebook from a frame's header —
+        // the same derivation the decoder uses.
+        let probe = codec.compress(&g, &mut Rng::for_stream(0xB06, u64::from(bits), 0, 0));
+        let Payload::Multiscale { alpha, beta, s_hi, s_lo, .. } =
+            Payload::decode(&probe).unwrap()
+        else {
+            panic!("multiscale codec must emit kind-4 frames");
+        };
+        let cb = wire::multiscale_codebook(alpha, beta, s_hi, s_lo);
+        let (lo, hi) = (cb[0] as f64, *cb.last().unwrap() as f64);
+        let max_gap = cb.windows(2).map(|w| (w[1] - w[0]) as f64).fold(0.0f64, f64::max);
+        assert!(max_gap > 0.0, "b{bits}: degenerate codebook");
+
+        let reps = 400u64;
+        let mut mean = vec![0.0f64; n];
+        for r in 0..reps {
+            let mut rr = Rng::for_stream(0xB06, u64::from(bits), r, 1);
+            let dec = Payload::decode(&codec.compress(&g, &mut rr)).unwrap().dequantize();
+            assert_eq!(dec.len(), n);
+            for (i, (&d, m)) in dec.iter().zip(mean.iter_mut()).enumerate() {
+                let trunc = (g[i] as f64).clamp(lo, hi);
+                assert!(
+                    (d as f64 - trunc).abs() <= max_gap + 1e-6,
+                    "b{bits} elem {i}: |{d} - {trunc}| above the {max_gap} gap bound"
+                );
+                *m += d as f64;
+            }
+        }
+        let tol = 4.0 * max_gap / (reps as f64).sqrt();
+        for (i, (&gi, &m)) in g.iter().zip(&mean).enumerate() {
+            let trunc = (gi as f64).clamp(lo, hi);
+            let err = (m / reps as f64 - trunc).abs();
+            assert!(err <= tol, "b{bits} elem {i}: bias {err} > tol {tol}");
+        }
+    }
+}
+
+/// The kind-4 golden bytes (restated from `quant_props.rs`, normative copy
+/// in PROTOCOL.md §4.5) — plus the header field the scheduler's observation
+/// channel reads off every frame it sees.
+#[test]
+fn golden_multiscale_fixture_feeds_the_observation_channel() {
+    let p = Payload::Multiscale { alpha: 1.0, beta: 0.25, s_hi: 2, s_lo: 2, idx: vec![0, 4, 2] };
+    let want: Vec<u8> = vec![
+        0x54, 0x51, // magic
+        0x04, // kind: multiscale
+        0x03, // 3 bits per index
+        0x03, 0x00, 0x00, 0x00, // d = 3
+        0x00, 0x00, 0x80, 0x3F, // alpha = 1.0
+        0x00, 0x00, 0x80, 0x3E, // beta = 0.25
+        0x02, 0x00, // s_hi = 2
+        0x02, 0x00, // s_lo = 2
+        0xA0, 0x00, // indices 0,4,2 packed LSB-first
+    ];
+    let bytes = p.encode(3);
+    assert_eq!(bytes, want);
+    assert_eq!(Payload::decode(&want).unwrap(), p);
+    assert_eq!(Payload::decode(&want).unwrap().dequantize(), vec![-1.0, 1.0, 0.0]);
+    // frame_alpha is BitBudget's tail-scale observation: kind 4 carries the
+    // truncation threshold at header offset 8.
+    assert_eq!(wire::frame_alpha(&bytes), Some(1.0));
+}

@@ -10,7 +10,9 @@
 //! compatibility.
 
 use tqsgd::config::{QuantConfig, Scheme};
-use tqsgd::coordinator::aggregate::{aggregate_serial, aggregate_sharded, WeightedUplink};
+use tqsgd::coordinator::aggregate::{
+    accumulate_serial, accumulate_sharded, ContributionData, WeightedContribution,
+};
 use tqsgd::prop;
 use tqsgd::quant::bitpack;
 use tqsgd::quant::error_feedback::ErrorFeedback;
@@ -225,6 +227,27 @@ fn golden_sparse_frame_bytes() {
 }
 
 #[test]
+fn golden_multiscale_frame_bytes() {
+    let p = Payload::Multiscale { alpha: 1.0, beta: 0.25, s_hi: 2, s_lo: 2, idx: vec![0, 4, 2] };
+    let want: Vec<u8> = vec![
+        0x54, 0x51, // magic
+        0x04, // kind: multiscale
+        0x03, // 3 bits per index
+        0x03, 0x00, 0x00, 0x00, // d = 3
+        0x00, 0x00, 0x80, 0x3F, // alpha = 1.0
+        0x00, 0x00, 0x80, 0x3E, // beta = 0.25
+        0x02, 0x00, // s_hi = 2
+        0x02, 0x00, // s_lo = 2
+        0xA0, 0x00, // indices 0,4,2 packed LSB-first
+    ];
+    assert_eq!(p.encode(3), want);
+    assert_eq!(Payload::decode(&want).unwrap(), p);
+    // Merged two-scale codebook {-1, -0.25, 0, 0.25, 1}: idx 0 → -1, 4 → 1,
+    // 2 → 0 — the same fixture PROTOCOL.md §4.5 walks through.
+    assert_eq!(Payload::decode(&want).unwrap().dequantize(), vec![-1.0, 1.0, 0.0]);
+}
+
+#[test]
 fn frame_kind_peeks_the_header() {
     let uniform = Payload::Uniform { alpha: 1.0, s: 3, idx: vec![0, 1] }.encode(2);
     assert_eq!(wire::frame_kind(&uniform), Some(1));
@@ -302,17 +325,20 @@ fn sharded_aggregation_is_bit_identical_to_serial() {
                             .collect()
                     })
                     .collect();
-                let uplinks: Vec<WeightedUplink<'_>> = frames
+                let items: Vec<WeightedContribution<'_>> = frames
                     .iter()
                     .zip(&ws)
-                    .map(|(f, &w)| WeightedUplink { frames: f, w })
+                    .map(|(f, &w)| WeightedContribution {
+                        data: ContributionData::Frames(f.as_slice()),
+                        w,
+                    })
                     .collect();
 
                 // Historical reference: two-pass scratch loop.
                 let mut want = vec![0.0f32; d_total];
                 let mut scratch = Vec::new();
-                for u in &uplinks {
-                    for (gi, frame) in u.frames {
+                for (f, &w) in frames.iter().zip(&ws) {
+                    for (gi, frame) in f {
                         let g = &groups[*gi];
                         wire::decode_dequantize_into(frame, &mut scratch)
                             .map_err(|e| format!("{scheme:?} b{bits}: {e}"))?;
@@ -320,13 +346,13 @@ fn sharded_aggregation_is_bit_identical_to_serial() {
                             return Err(format!("{scheme:?} b{bits}: bad frame length"));
                         }
                         for (a, &d) in want[g.start..g.end].iter_mut().zip(&scratch) {
-                            *a += u.w * d;
+                            *a += w * d;
                         }
                     }
                 }
 
                 let mut fused = vec![0.5f32; d_total]; // dirty on purpose
-                aggregate_serial(&groups, &uplinks, &mut fused)
+                accumulate_serial(&groups, &items, &mut fused)
                     .map_err(|e| format!("{scheme:?} b{bits} serial: {e}"))?;
                 if !bits_eq(&fused, &want) {
                     return Err(format!(
@@ -335,7 +361,7 @@ fn sharded_aggregation_is_bit_identical_to_serial() {
                 }
                 for shards in [1usize, 2, 7] {
                     let mut agg = vec![-1.0f32; d_total]; // dirty on purpose
-                    aggregate_sharded(&groups, &uplinks, &mut agg, shards)
+                    accumulate_sharded(&groups, &items, &mut agg, shards)
                         .map_err(|e| format!("{scheme:?} b{bits} x{shards}: {e}"))?;
                     if !bits_eq(&agg, &want) {
                         return Err(format!(

@@ -108,6 +108,20 @@ fn golden_frames() -> Vec<(Payload, Vec<u8>)> {
                 0x00, 0x00, 0x80, 0xBE, // -0.25f32
             ],
         ),
+        (
+            Payload::Multiscale { alpha: 1.0, beta: 0.25, s_hi: 2, s_lo: 2, idx: vec![0, 4, 2] },
+            vec![
+                0x54, 0x51, // magic
+                0x04, // kind: multiscale
+                0x03, // 3 bits per index
+                0x03, 0x00, 0x00, 0x00, // d = 3
+                0x00, 0x00, 0x80, 0x3F, // alpha = 1.0
+                0x00, 0x00, 0x80, 0x3E, // beta = 0.25
+                0x02, 0x00, // s_hi = 2
+                0x02, 0x00, // s_lo = 2
+                0xA0, 0x00, // indices 0,4,2 packed LSB-first
+            ],
+        ),
     ]
 }
 
