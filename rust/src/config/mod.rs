@@ -214,6 +214,26 @@ pub struct ScenarioConfig {
     /// (seeded, dedicated stream role) from
     /// `[uplink_cap_min_frac · cap, cap]`. 1.0 = homogeneous caps.
     pub uplink_cap_min_frac: f64,
+    /// Chaos harness: per-round probability an ARRIVED uplink's bytes are
+    /// corrupted in flight (the CRC trailer catches it and the transport
+    /// retransmits — see PROTOCOL.md §2 and the `corrupt_frames` column).
+    /// Drawn per (client, round) from the dedicated `ROLE_CHAOS` stream.
+    pub chaos_corrupt_prob: f64,
+    /// Chaos harness: how many payload bytes a corruption event flips
+    /// (distinct seeded positions, XOR 0xFF). Must be >= 1 when
+    /// `chaos_corrupt_prob > 0`.
+    pub chaos_corrupt_bytes: usize,
+    /// Chaos harness: the round after whose uplink one seeded worker dies
+    /// and is respawned (the victim is drawn from `ROLE_CHAOS`; it uploads
+    /// its exact state first and REJOINs the next round — see PROTOCOL.md
+    /// §3.6/§3.7). 0 = no kill.
+    pub chaos_kill_round: usize,
+    /// Chaos harness: per-round probability a worker stalls (sleeps) before
+    /// its uplink. Wall-clock only — the simulated network clock, and hence
+    /// the digest, is unaffected while the stall stays under `io_timeout`.
+    pub chaos_stall_prob: f64,
+    /// Chaos harness: stall duration in (real) seconds.
+    pub chaos_stall_secs: f64,
 }
 
 impl Default for ScenarioConfig {
@@ -231,14 +251,19 @@ impl Default for ScenarioConfig {
             noniid_alpha: 0.0,
             uplink_cap_bytes: 0,
             uplink_cap_min_frac: 1.0,
+            chaos_corrupt_prob: 0.0,
+            chaos_corrupt_bytes: 0,
+            chaos_kill_round: 0,
+            chaos_stall_prob: 0.0,
+            chaos_stall_secs: 0.0,
         }
     }
 }
 
 impl ScenarioConfig {
     /// All preset names, in presentation order.
-    pub fn preset_names() -> [&'static str; 7] {
-        ["clean", "straggler", "lossy", "churn", "stale", "noniid", "bandwidth"]
+    pub fn preset_names() -> [&'static str; 8] {
+        ["clean", "straggler", "lossy", "churn", "stale", "noniid", "bandwidth", "chaos"]
     }
 
     /// Named scenario presets (see README §Scenarios).
@@ -272,6 +297,15 @@ impl ScenarioConfig {
                 s.uplink_cap_bytes = 8192;
                 s.uplink_cap_min_frac = 0.5;
             }
+            "chaos" => {
+                // Seeded transport faults: frequent small corruptions (the
+                // CRC trailer + retransmit path), one scheduled worker
+                // kill/rejoin after round 3. Stalls stay off by default —
+                // they add wall-clock without touching the digest.
+                s.chaos_corrupt_prob = 0.25;
+                s.chaos_corrupt_bytes = 3;
+                s.chaos_kill_round = 3;
+            }
             other => bail!(
                 "unknown scenario {other:?}; presets: {}",
                 Self::preset_names().join(" ")
@@ -290,6 +324,9 @@ impl ScenarioConfig {
             && self.stale_k == 0
             && self.noniid_alpha == 0.0
             && self.uplink_cap_bytes == 0
+            && self.chaos_corrupt_prob == 0.0
+            && self.chaos_kill_round == 0
+            && self.chaos_stall_prob == 0.0
     }
 
     /// Validate field ranges.
@@ -299,6 +336,8 @@ impl ScenarioConfig {
             ("loss_prob", self.loss_prob),
             ("dropout_prob", self.dropout_prob),
             ("rejoin_prob", self.rejoin_prob),
+            ("chaos_corrupt_prob", self.chaos_corrupt_prob),
+            ("chaos_stall_prob", self.chaos_stall_prob),
         ] {
             if !(0.0..=1.0).contains(&p) {
                 bail!("scenario {label} must be in [0, 1], got {p}");
@@ -322,6 +361,15 @@ impl ScenarioConfig {
                 self.uplink_cap_min_frac
             );
         }
+        if self.chaos_corrupt_prob > 0.0 && self.chaos_corrupt_bytes == 0 {
+            bail!("scenario chaos_corrupt_bytes must be >= 1 when chaos_corrupt_prob > 0");
+        }
+        if self.chaos_stall_secs < 0.0 || !self.chaos_stall_secs.is_finite() {
+            bail!(
+                "scenario chaos_stall_secs must be a finite nonnegative number, got {}",
+                self.chaos_stall_secs
+            );
+        }
         Ok(())
     }
 
@@ -340,6 +388,11 @@ impl ScenarioConfig {
             ("noniid_alpha", json::num(self.noniid_alpha)),
             ("uplink_cap_bytes", json::num(self.uplink_cap_bytes as f64)),
             ("uplink_cap_min_frac", json::num(self.uplink_cap_min_frac)),
+            ("chaos_corrupt_prob", json::num(self.chaos_corrupt_prob)),
+            ("chaos_corrupt_bytes", json::num(self.chaos_corrupt_bytes as f64)),
+            ("chaos_kill_round", json::num(self.chaos_kill_round as f64)),
+            ("chaos_stall_prob", json::num(self.chaos_stall_prob)),
+            ("chaos_stall_secs", json::num(self.chaos_stall_secs)),
         ])
     }
 
@@ -374,6 +427,17 @@ impl ScenarioConfig {
         }
         s.uplink_cap_bytes = cap as u64;
         s.uplink_cap_min_frac = getf("uplink_cap_min_frac", s.uplink_cap_min_frac);
+        s.chaos_corrupt_prob = getf("chaos_corrupt_prob", s.chaos_corrupt_prob);
+        s.chaos_stall_prob = getf("chaos_stall_prob", s.chaos_stall_prob);
+        s.chaos_stall_secs = getf("chaos_stall_secs", s.chaos_stall_secs);
+        // Chaos counts fail loudly on negatives like the other counts above.
+        let corrupt_bytes = getf("chaos_corrupt_bytes", s.chaos_corrupt_bytes as f64);
+        let kill_round = getf("chaos_kill_round", s.chaos_kill_round as f64);
+        if corrupt_bytes < 0.0 || kill_round < 0.0 {
+            bail!("scenario chaos_corrupt_bytes/chaos_kill_round must be >= 0");
+        }
+        s.chaos_corrupt_bytes = corrupt_bytes as usize;
+        s.chaos_kill_round = kill_round as usize;
         s.validate()?;
         Ok(s)
     }
@@ -621,6 +685,12 @@ impl ExperimentConfig {
         sc.noniid_alpha = args.f64_or("noniid-alpha", sc.noniid_alpha)?;
         sc.uplink_cap_bytes = args.u64_or("uplink-cap", sc.uplink_cap_bytes)?;
         sc.uplink_cap_min_frac = args.f64_or("uplink-cap-frac", sc.uplink_cap_min_frac)?;
+        sc.chaos_corrupt_prob = args.f64_or("chaos-corrupt-prob", sc.chaos_corrupt_prob)?;
+        sc.chaos_corrupt_bytes =
+            args.usize_or("chaos-corrupt-bytes", sc.chaos_corrupt_bytes)?;
+        sc.chaos_kill_round = args.usize_or("chaos-kill-round", sc.chaos_kill_round)?;
+        sc.chaos_stall_prob = args.f64_or("chaos-stall-prob", sc.chaos_stall_prob)?;
+        sc.chaos_stall_secs = args.f64_or("chaos-stall-secs", sc.chaos_stall_secs)?;
         self.validate()
     }
 
@@ -967,6 +1037,63 @@ mod tests {
         assert!(s.validate().is_err());
         let s = ScenarioConfig { uplink_cap_min_frac: 1.5, ..Default::default() };
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_preset_and_validation() {
+        let s = ScenarioConfig::preset("chaos").unwrap();
+        assert!(!s.is_clean());
+        assert_eq!(s.chaos_corrupt_prob, 0.25);
+        assert_eq!(s.chaos_corrupt_bytes, 3);
+        assert_eq!(s.chaos_kill_round, 3);
+        assert_eq!(s.chaos_stall_prob, 0.0, "stalls stay off by default");
+        s.validate().unwrap();
+        assert!(ScenarioConfig::preset_names().contains(&"chaos"));
+        // Corruption without a byte count is a config error, not a silent
+        // no-op; probabilities stay in [0, 1]; stall seconds stay finite.
+        let bad = ScenarioConfig { chaos_corrupt_prob: 0.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ScenarioConfig {
+            chaos_corrupt_prob: 1.5,
+            chaos_corrupt_bytes: 1,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ScenarioConfig { chaos_stall_prob: -0.1, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ScenarioConfig { chaos_stall_secs: f64::NAN, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_json_and_cli_roundtrip() {
+        let scenario = ScenarioConfig {
+            chaos_stall_prob: 0.1,
+            chaos_stall_secs: 0.05,
+            ..ScenarioConfig::preset("chaos").unwrap()
+        };
+        let c = ExperimentConfig { scenario, ..Default::default() };
+        let j = c.to_json().to_json();
+        let c2 = ExperimentConfig::from_json(&Value::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.scenario, c.scenario, "chaos fields survive the JSON roundtrip");
+        for j in [
+            r#"{"scenario": {"chaos_corrupt_bytes": -2}}"#,
+            r#"{"scenario": {"chaos_kill_round": -1}}"#,
+        ] {
+            let v = Value::parse(j).unwrap();
+            assert!(ExperimentConfig::from_json(&v).is_err(), "{j} must not saturate to 0");
+        }
+        let mut c = ExperimentConfig::default();
+        let args = crate::cli::Args::parse(
+            ["x", "--scenario", "chaos", "--chaos-kill-round", "5", "--chaos-corrupt-bytes", "1"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.scenario.chaos_kill_round, 5, "freeform flag overrides the preset");
+        assert_eq!(c.scenario.chaos_corrupt_bytes, 1);
+        assert_eq!(c.scenario.chaos_corrupt_prob, 0.25, "preset value survives overrides");
     }
 
     #[test]

@@ -1,0 +1,578 @@
+//! Versioned binary checkpoint/resume for in-process training runs.
+//!
+//! A checkpoint is a **pure observer** of the coordinator: taking one never
+//! mutates training state, and `checkpoint-at-k` followed by `resume` is
+//! bit-identical — parameters and `replay_digest()` — to the uninterrupted
+//! run (DETERMINISM.md invariant 7, pinned by
+//! `rust/tests/transport_props.rs`). To make that hold, the snapshot
+//! captures *every* piece of mutable training state:
+//!
+//! * server: parameter vector, optimizer velocity, completed-round counter,
+//!   loss carry, two-tier aggregate byte counter, cumulative network byte
+//!   totals;
+//! * per client: the full batch-sampler state (epoch order, cursor,
+//!   reshuffle RNG words) and each layer group's EF residual — dense
+//!   residuals as lossless `Raw` wire frames, parked residuals as their
+//!   quantized frame **verbatim** (re-parking would be a second lossy hop);
+//! * scenario engine: the churn membership mask and the bounded-staleness
+//!   late-frame queue;
+//! * bit-budget scheduler: the `(round, α²)` observation table;
+//! * the run log so far, field-exact (floats as raw bits), so the resumed
+//!   run's digest covers the pre-checkpoint rounds unchanged.
+//!
+//! Codec *fit* state (tail-model parameters) is deliberately absent: the
+//! invariant is scoped to `estimate_every == 1`, where every round refits
+//! from that round's gradients before encoding, so the fit is re-derived —
+//! [`resume`] warns when a config falls outside that scope.
+//!
+//! **Wire format** (version 1, all integers little-endian): magic `TQCP`,
+//! version, config JSON, the state blocks above, and a CRC32 trailer over
+//! everything before it — the same integrity check the transport's message
+//! framing uses, so a truncated or bit-flipped checkpoint fails loudly
+//! instead of resuming silently wrong. Files are written to `<path>.tmp`
+//! and atomically renamed, so a crash mid-write never clobbers the last
+//! good snapshot. Checkpointing is in-process only: a remote round's
+//! client state lives in worker processes the server cannot observe.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::quant::wire;
+use crate::runtime::Backend;
+use crate::util::crc32;
+use crate::util::json::Value;
+
+use super::Coordinator;
+
+/// File magic: "TQCP".
+const MAGIC: &[u8; 4] = b"TQCP";
+/// Current checkpoint format version.
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Little-endian buffer writer/reader
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u32(buf, b.len() as u32);
+    buf.extend_from_slice(b);
+}
+
+/// Bounds-checked reader over the checkpoint body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("checkpoint truncated at byte {}", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Save
+// ---------------------------------------------------------------------------
+
+/// Serialize the coordinator's complete mutable training state plus the run
+/// log so far, and atomically write it to `path`. Pure observer — the
+/// coordinator is untouched. Fails on remote transports: worker-side client
+/// state is not observable from the server.
+pub fn save(coord: &Coordinator<'_>, log: &RunLog, path: &Path) -> Result<()> {
+    if coord.net.name() != "sim" {
+        bail!(
+            "checkpointing is in-process only: client state lives in remote \
+             worker processes on the '{}' transport",
+            coord.net.name()
+        );
+    }
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_bytes(&mut buf, coord.cfg.to_json().to_json().as_bytes());
+    put_u64(&mut buf, coord.round as u64);
+    put_f64(&mut buf, coord.last_train_loss);
+    put_u64(&mut buf, coord.tier_bytes);
+    put_u64(&mut buf, coord.net.total_bytes_up());
+    put_u64(&mut buf, coord.net.total_retransmitted());
+
+    let mut frame = Vec::new();
+    wire::encode_raw_into(&coord.params, &mut frame);
+    put_bytes(&mut buf, &frame);
+    wire::encode_raw_into(coord.opt.velocity(), &mut frame);
+    put_bytes(&mut buf, &frame);
+
+    put_u32(&mut buf, coord.clients.len() as u32);
+    for c in &coord.clients {
+        let st = c.sampler_state();
+        put_u32(&mut buf, st.order.len() as u32);
+        for &i in &st.order {
+            put_u32(&mut buf, i as u32);
+        }
+        put_u32(&mut buf, st.cursor as u32);
+        for w in st.rng {
+            put_u64(&mut buf, w);
+        }
+        match st.rng_spare {
+            Some(s) => {
+                buf.push(1);
+                put_f64(&mut buf, s);
+            }
+            None => buf.push(0),
+        }
+        put_u32(&mut buf, c.codecs.len() as u32);
+        for codec in &c.codecs {
+            match codec.ef() {
+                Some(ef) if ef.is_parked() => {
+                    buf.push(2);
+                    put_bytes(&mut buf, ef.parked_frame().expect("parked EF has a frame"));
+                }
+                Some(ef) if !ef.residual().is_empty() => {
+                    buf.push(1);
+                    wire::encode_raw_into(ef.residual(), &mut frame);
+                    put_bytes(&mut buf, &frame);
+                }
+                _ => buf.push(0),
+            }
+        }
+    }
+
+    let (active, pending) = coord.scenario.export_state();
+    put_u32(&mut buf, active.len() as u32);
+    buf.extend(active.iter().map(|&a| a as u8));
+    put_u32(&mut buf, pending.len() as u32);
+    for (msg, staleness) in &pending {
+        put_u32(&mut buf, *staleness);
+        put_u32(&mut buf, msg.client as u32);
+        put_u64(&mut buf, msg.round as u64);
+        put_f32(&mut buf, msg.loss);
+        put_u32(&mut buf, msg.frames.len() as u32);
+        for (gi, f) in &msg.frames {
+            put_u32(&mut buf, *gi as u32);
+            put_bytes(&mut buf, f);
+        }
+    }
+
+    match &coord.budget {
+        Some(b) => {
+            buf.push(1);
+            let obs = b.export_obs();
+            put_u32(&mut buf, obs.len() as u32);
+            for row in &obs {
+                put_u32(&mut buf, row.len() as u32);
+                for slot in row {
+                    match slot {
+                        Some((round, v)) => {
+                            buf.push(1);
+                            put_u64(&mut buf, *round as u64);
+                            put_f64(&mut buf, *v);
+                        }
+                        None => buf.push(0),
+                    }
+                }
+            }
+        }
+        None => buf.push(0),
+    }
+
+    put_u32(&mut buf, log.records.len() as u32);
+    for r in &log.records {
+        put_record(&mut buf, r);
+    }
+
+    let crc = crc32::crc32(&buf);
+    put_u32(&mut buf, crc);
+
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &buf)
+        .with_context(|| format!("writing checkpoint to {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming checkpoint into {}", path.display()))?;
+    Ok(())
+}
+
+fn put_record(buf: &mut Vec<u8>, r: &RoundRecord) {
+    put_u32(buf, r.round as u32);
+    put_f64(buf, r.train_loss);
+    put_u64(buf, r.bytes_up);
+    for opt in [r.test_loss, r.test_accuracy] {
+        match opt {
+            Some(v) => {
+                buf.push(1);
+                put_f64(buf, v);
+            }
+            None => buf.push(0),
+        }
+    }
+    for v in [r.secs, r.net_secs, r.compute_secs, r.encode_secs, r.agg_secs] {
+        put_f64(buf, v);
+    }
+    put_u32(buf, r.dropped_clients as u32);
+    put_u64(buf, r.retransmitted_bytes);
+    put_u32(buf, r.rejoined_clients);
+    put_u32(buf, r.corrupt_frames);
+    put_u32(buf, r.staleness_hist.len() as u32);
+    for &h in &r.staleness_hist {
+        put_u32(buf, h);
+    }
+    put_u64(buf, r.bytes_per_client);
+}
+
+// ---------------------------------------------------------------------------
+// Resume
+// ---------------------------------------------------------------------------
+
+/// Verify the CRC32 trailer, magic and version, and parse the embedded
+/// config; returns a reader positioned at the first state block.
+fn open_body(data: &[u8]) -> Result<(Reader<'_>, ExperimentConfig)> {
+    if data.len() < MAGIC.len() + 8 {
+        bail!("checkpoint too short ({} bytes)", data.len());
+    }
+    let (body, trailer) = data.split_at(data.len() - 4);
+    let stored = u32::from_le_bytes(trailer.try_into().unwrap());
+    let actual = crc32::crc32(body);
+    if stored != actual {
+        bail!("checkpoint CRC mismatch (stored {stored:08x}, computed {actual:08x})");
+    }
+    let mut r = Reader { buf: body, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("not a tqsgd checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version} (this build reads {VERSION})");
+    }
+    let cfg_text = std::str::from_utf8(r.bytes()?).context("checkpoint config is not UTF-8")?;
+    let cfg = ExperimentConfig::from_json(&Value::parse(cfg_text)?)?;
+    Ok((r, cfg))
+}
+
+/// Read just the experiment config out of a checkpoint (after verifying its
+/// CRC32 trailer, magic and version) — e.g. to select a compute backend
+/// before calling [`resume`].
+pub fn load_config(path: &Path) -> Result<ExperimentConfig> {
+    let data = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    Ok(open_body(&data)?.1)
+}
+
+/// Load a checkpoint and rebuild a coordinator positioned to continue the
+/// run: the returned records are the pre-checkpoint rounds, to be prepended
+/// to the continued run's log. Verifies the CRC32 trailer, magic and
+/// version before touching any field.
+pub fn resume<'b>(
+    path: &Path,
+    backend: &'b dyn Backend,
+) -> Result<(Coordinator<'b>, Vec<RoundRecord>)> {
+    let data = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let (mut r, cfg) = open_body(&data)?;
+    if cfg.quant.estimate_every != 1 {
+        eprintln!(
+            "warning: checkpoint config has estimate_every = {}; codec tail \
+             fits are re-derived on resume, so bit-exact resume (invariant 7) \
+             is only guaranteed at estimate_every = 1",
+            cfg.quant.estimate_every
+        );
+    }
+    let round = r.u64()? as usize;
+    let last_train_loss = r.f64()?;
+    let tier_bytes = r.u64()?;
+    let bytes_up = r.u64()?;
+    let retransmitted = r.u64()?;
+
+    let mut coord = Coordinator::new(cfg, backend)?;
+    wire::decode_dequantize_into(r.bytes()?, &mut coord.params)
+        .context("checkpoint parameter frame")?;
+    let mut velocity = Vec::new();
+    wire::decode_dequantize_into(r.bytes()?, &mut velocity)
+        .context("checkpoint velocity frame")?;
+    coord.opt.set_velocity(velocity);
+    coord.round = round;
+    coord.last_train_loss = last_train_loss;
+    coord.tier_bytes = tier_bytes;
+    coord.net.restore_totals(bytes_up, retransmitted);
+
+    let n = r.u32()? as usize;
+    if n != coord.clients.len() {
+        bail!("checkpoint has {n} clients, config builds {}", coord.clients.len());
+    }
+    let mut residual = Vec::new();
+    for c in &mut coord.clients {
+        let order_len = r.u32()? as usize;
+        let mut order = Vec::with_capacity(order_len);
+        for _ in 0..order_len {
+            order.push(r.u32()? as usize);
+        }
+        let cursor = r.u32()? as usize;
+        let mut rng = [0u64; 4];
+        for w in &mut rng {
+            *w = r.u64()?;
+        }
+        let rng_spare = match r.u8()? {
+            0 => None,
+            _ => Some(r.f64()?),
+        };
+        c.restore_sampler(crate::data::SamplerState { order, cursor, rng, rng_spare });
+        let n_codecs = r.u32()? as usize;
+        if n_codecs != c.codecs.len() {
+            bail!(
+                "checkpoint has {n_codecs} codecs for client {}, expected {}",
+                c.id,
+                c.codecs.len()
+            );
+        }
+        for codec in &mut c.codecs {
+            match r.u8()? {
+                0 => {}
+                1 => {
+                    wire::decode_dequantize_into(r.bytes()?, &mut residual)
+                        .context("checkpoint EF residual frame")?;
+                    codec
+                        .ef_mut()
+                        .ok_or_else(|| anyhow!("checkpoint EF residual for a plain codec"))?
+                        .set_residual(residual.clone());
+                }
+                2 => {
+                    let frame = r.bytes()?.to_vec();
+                    codec
+                        .ef_mut()
+                        .ok_or_else(|| anyhow!("checkpoint parked frame for a plain codec"))?
+                        .set_parked_frame(frame);
+                }
+                k => bail!("unknown EF state tag {k}"),
+            }
+        }
+    }
+
+    let mask_len = r.u32()? as usize;
+    let active: Vec<bool> = r.take(mask_len)?.iter().map(|&b| b != 0).collect();
+    let pending_len = r.u32()? as usize;
+    let mut pending = Vec::with_capacity(pending_len);
+    for _ in 0..pending_len {
+        let staleness = r.u32()?;
+        let client = r.u32()? as usize;
+        let msg_round = r.u64()? as usize;
+        let loss = r.f32()?;
+        let n_frames = r.u32()? as usize;
+        let mut frames = Vec::with_capacity(n_frames);
+        for _ in 0..n_frames {
+            let gi = r.u32()? as usize;
+            frames.push((gi, r.bytes()?.to_vec()));
+        }
+        pending.push((super::Message { client, round: msg_round, frames, loss }, staleness));
+    }
+    coord.scenario.restore_state(active, pending);
+
+    if r.u8()? == 1 {
+        let rows = r.u32()? as usize;
+        let mut obs = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let slots = r.u32()? as usize;
+            let mut row = Vec::with_capacity(slots);
+            for _ in 0..slots {
+                row.push(match r.u8()? {
+                    0 => None,
+                    _ => Some((r.u64()? as usize, r.f64()?)),
+                });
+            }
+            obs.push(row);
+        }
+        coord
+            .budget
+            .as_mut()
+            .ok_or_else(|| anyhow!("checkpoint has budget observations but the scheduler is off"))?
+            .import_obs(obs);
+    }
+
+    let n_records = r.u32()? as usize;
+    let mut records = Vec::with_capacity(n_records);
+    for _ in 0..n_records {
+        records.push(read_record(&mut r)?);
+    }
+    if r.pos != r.buf.len() {
+        bail!("{} trailing bytes after checkpoint body", r.buf.len() - r.pos);
+    }
+    Ok((coord, records))
+}
+
+fn read_record(r: &mut Reader<'_>) -> Result<RoundRecord> {
+    let round = r.u32()? as usize;
+    let train_loss = r.f64()?;
+    let bytes_up = r.u64()?;
+    let mut opts = [None, None];
+    for o in &mut opts {
+        *o = match r.u8()? {
+            0 => None,
+            _ => Some(r.f64()?),
+        };
+    }
+    let [test_loss, test_accuracy] = opts;
+    let secs = r.f64()?;
+    let net_secs = r.f64()?;
+    let compute_secs = r.f64()?;
+    let encode_secs = r.f64()?;
+    let agg_secs = r.f64()?;
+    let dropped_clients = r.u32()? as usize;
+    let retransmitted_bytes = r.u64()?;
+    let rejoined_clients = r.u32()?;
+    let corrupt_frames = r.u32()?;
+    let hist_len = r.u32()? as usize;
+    let mut staleness_hist = Vec::with_capacity(hist_len);
+    for _ in 0..hist_len {
+        staleness_hist.push(r.u32()?);
+    }
+    let bytes_per_client = r.u64()?;
+    Ok(RoundRecord {
+        round,
+        train_loss,
+        bytes_up,
+        test_loss,
+        test_accuracy,
+        secs,
+        net_secs,
+        compute_secs,
+        encode_secs,
+        agg_secs,
+        dropped_clients,
+        retransmitted_bytes,
+        rejoined_clients,
+        corrupt_frames,
+        staleness_hist,
+        bytes_per_client,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            clients: 2,
+            rounds: 4,
+            train_size: 64,
+            test_size: 32,
+            quant: crate::config::QuantConfig {
+                estimate_every: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_bit_exactly() {
+        let backend = NativeBackend::new();
+        let dir = std::env::temp_dir().join(format!("tqcp-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.ckpt");
+
+        let cfg = tiny_cfg();
+        let mut coord = Coordinator::new(cfg.clone(), &backend).unwrap();
+        let mut log = RunLog { config_id: cfg.id(), ..Default::default() };
+        for _ in 0..2 {
+            log.push(coord.step().unwrap());
+        }
+        save(&coord, &log, &path).unwrap();
+
+        let (mut resumed, records) = resume(&path, &backend).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(resumed.round, 2);
+        assert_eq!(resumed.params, coord.params, "parameters must restore bit-exactly");
+        assert_eq!(resumed.opt.velocity(), coord.opt.velocity());
+
+        // Continue both and compare digests: invariant 7 in miniature.
+        let mut log_b = RunLog { config_id: cfg.id(), ..Default::default() };
+        log_b.records = records;
+        for _ in 0..2 {
+            let a = coord.step().unwrap();
+            let b = resumed.step().unwrap();
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.bytes_up, b.bytes_up);
+            log.push(a);
+            log_b.push(b);
+        }
+        assert_eq!(log.replay_digest(), log_b.replay_digest());
+        assert_eq!(coord.params, resumed.params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_rejected() {
+        let backend = NativeBackend::new();
+        let dir = std::env::temp_dir().join(format!("tqcp-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.ckpt");
+
+        let cfg = tiny_cfg();
+        let mut coord = Coordinator::new(cfg.clone(), &backend).unwrap();
+        let mut log = RunLog { config_id: cfg.id(), ..Default::default() };
+        log.push(coord.step().unwrap());
+        save(&coord, &log, &path).unwrap();
+
+        let mut data = std::fs::read(&path).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let err = resume(&path, &backend).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "flipped byte must fail the CRC check: {err}");
+
+        // Truncation must fail loudly too.
+        std::fs::write(&path, &data[..8]).unwrap();
+        assert!(resume(&path, &backend).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

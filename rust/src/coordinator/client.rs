@@ -163,6 +163,38 @@ impl Client {
         Ok(())
     }
 
+    /// Snapshot the batch sampler's complete state (epoch order, cursor,
+    /// reshuffle RNG) — serialized into worker STATE messages and
+    /// coordinator checkpoints so a restored client draws the exact batch
+    /// sequence an uninterrupted one would.
+    pub fn sampler_state(&self) -> crate::data::SamplerState {
+        self.sampler.export_state()
+    }
+
+    /// Restore a [`Self::sampler_state`] snapshot (rejoin/resume path).
+    pub fn restore_sampler(&mut self, st: crate::data::SamplerState) {
+        self.sampler.restore_state(st);
+    }
+
+    /// Export each layer group's EF residual as a dense vector (`None` for
+    /// plain codecs). Lossless by design — this is the rejoin/checkpoint
+    /// hand-off; the lossy [`Self::park_residuals`] path is only for
+    /// dormant cohort members.
+    pub fn export_residuals(&self) -> Vec<Option<Vec<f32>>> {
+        self.codecs.iter().map(|c| c.ef().map(|ef| ef.residual().to_vec())).collect()
+    }
+
+    /// Restore residuals exported by [`Self::export_residuals`]. Entries
+    /// match layer groups positionally; `None` and surplus entries leave
+    /// the codec untouched.
+    pub fn import_residuals(&mut self, residuals: &[Option<Vec<f32>>]) {
+        for (codec, r) in self.codecs.iter_mut().zip(residuals) {
+            if let (Some(ef), Some(r)) = (codec.ef_mut(), r) {
+                ef.set_residual(r.clone());
+            }
+        }
+    }
+
     /// Resident bytes of this client's mutable per-round state: codec
     /// state (EF residuals, dense or parked) plus pooled arena buffers —
     /// the per-client term of the `bytes_per_client` metric. Model

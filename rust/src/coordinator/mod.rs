@@ -49,6 +49,7 @@
 //! drop/reweight path the scenario engine exercises in-process.
 
 pub mod aggregate;
+pub mod checkpoint;
 pub mod client;
 pub mod network;
 pub mod pipeline;
@@ -62,7 +63,8 @@ pub use network::{
 pub use pipeline::PipelineMode;
 pub use scenario::ScenarioEngine;
 pub use transport::{
-    run_worker, teardown_workers, TcpOptions, TcpServer, TcpTransport, WorkerOptions,
+    run_worker, teardown_workers, ReadError, TcpOptions, TcpServer, TcpTransport, WorkerExit,
+    WorkerOptions,
 };
 
 use anyhow::{anyhow, Result};
@@ -137,6 +139,15 @@ pub struct Coordinator<'b> {
     /// no-op path: no plans, no observations, no RNG draws — bit-identical
     /// to the pre-scheduler engine (DETERMINISM.md invariant 6).
     pub(crate) budget: Option<BitBudget>,
+    /// Where periodic checkpoints go (`None` = checkpointing off). Set via
+    /// [`Coordinator::checkpoint_to`]; snapshots are taken by the run loop
+    /// every `ckpt_every` completed rounds.
+    pub(crate) ckpt_path: Option<std::path::PathBuf>,
+    /// Checkpoint cadence in completed rounds (0 = off).
+    pub(crate) ckpt_every: usize,
+    /// Round records restored from a checkpoint, prepended to the next run
+    /// loop's log so `replay_digest()` spans the whole training history.
+    pub(crate) restored_records: Vec<RoundRecord>,
 }
 
 /// The N logical clients of one experiment plus the server-side evaluation
@@ -272,7 +283,35 @@ impl<'b> Coordinator<'b> {
             last_train_loss: 0.0,
             tier_bytes: 0,
             budget,
+            ckpt_path: None,
+            ckpt_every: 0,
+            restored_records: Vec::new(),
         })
+    }
+
+    /// Rebuild a coordinator from a checkpoint written by
+    /// [`Coordinator::checkpoint`], positioned at the checkpointed round
+    /// with the pre-checkpoint records queued for the next run loop's log.
+    /// See [`checkpoint`] for the format and the bit-exactness contract
+    /// (DETERMINISM.md invariant 7).
+    pub fn resume(path: &std::path::Path, backend: &'b dyn Backend) -> Result<Self> {
+        let (mut coord, records) = checkpoint::resume(path, backend)?;
+        coord.restored_records = records;
+        Ok(coord)
+    }
+
+    /// Enable periodic checkpoints: every `every` completed rounds the run
+    /// loop snapshots the full training state to `path` (atomic replace).
+    /// `every == 0` disables. In-process transports only.
+    pub fn checkpoint_to(&mut self, path: std::path::PathBuf, every: usize) {
+        self.ckpt_path = Some(path);
+        self.ckpt_every = every;
+    }
+
+    /// Snapshot the complete mutable training state plus `log` to `path`
+    /// (see [`checkpoint::save`]). Pure observer — training is unaffected.
+    pub fn checkpoint(&self, log: &RunLog, path: &std::path::Path) -> Result<()> {
+        checkpoint::save(self, log, path)
     }
 
     /// Metadata of the model this experiment trains.
@@ -422,11 +461,20 @@ impl<'b> Coordinator<'b> {
         self.run_rounds(verbose, false)
     }
 
-    /// The shared run loop: `cfg.rounds` rounds through either the local
-    /// pipelines or the remote transport, with periodic evaluations.
+    /// The shared run loop: from the current round (0 on a fresh build,
+    /// later after [`Coordinator::resume`]) to `cfg.rounds`, through either
+    /// the local pipelines or the remote transport, with periodic
+    /// evaluations and (when configured) periodic checkpoints.
     fn run_rounds(&mut self, verbose: bool, remote: bool) -> Result<RunLog> {
+        if remote && self.ckpt_every > 0 {
+            return Err(anyhow!(
+                "checkpointing is in-process only: remote workers own the \
+                 client state a checkpoint must capture"
+            ));
+        }
         let mut log = RunLog { config_id: self.cfg.id(), ..Default::default() };
-        for _ in 0..self.cfg.rounds {
+        log.records = std::mem::take(&mut self.restored_records);
+        while self.round < self.cfg.rounds {
             let mut rec = if remote { self.step_remote()? } else { self.step()? };
             let last = self.round == self.cfg.rounds;
             if self.round % self.cfg.eval_every == 0 || last {
@@ -447,6 +495,13 @@ impl<'b> Coordinator<'b> {
                 }
             }
             log.push(rec);
+            // Snapshot AFTER the record lands so checkpoint-at-k restores
+            // to exactly "k rounds completed, k records logged".
+            if self.ckpt_every > 0 && self.round % self.ckpt_every == 0 {
+                if let Some(path) = self.ckpt_path.clone() {
+                    self.checkpoint(&log, &path)?;
+                }
+            }
         }
         Ok(log)
     }

@@ -57,6 +57,21 @@ impl Message {
     pub fn lost_wire_bytes(&self, attempts: u32) -> u64 {
         self.wire_bytes() * attempts as u64
     }
+
+    /// Byte length of the multi-process UPLINK payload carrying this
+    /// message (PROTOCOL.md §3.4, Arrived outcome): type + round + client +
+    /// loss + outcome + frame count, then a `(group, len)` prefix per
+    /// frame. This is what a corrupted uplink wastes on the wire, so both
+    /// the TCP transport and the in-process chaos model charge exactly this
+    /// many bytes per corrupt transmission — keeping `replay_digest()`
+    /// bit-identical across transports under seeded corruption.
+    pub fn remote_uplink_payload_bytes(&self) -> u64 {
+        18 + self
+            .frames
+            .iter()
+            .map(|(_, f)| 8 + f.len() as u64)
+            .sum::<u64>()
+    }
 }
 
 /// Per-uplink transmission conditions injected by the scenario engine.
@@ -164,6 +179,24 @@ pub trait Transport: Send {
     /// count toward `dropped_clients`, exactly like churned clients).
     fn collect_round(&mut self, round: usize, active_set: &[bool]) -> Result<Vec<RemoteUplink>>;
 
+    /// Re-admit workers that restarted after a seeded chaos kill. Called at
+    /// the top of each round, *before* [`Transport::reachable`], so a
+    /// rejoined worker participates in the very round it returns. Returns
+    /// how many workers rejoined. In-process transports have no sockets to
+    /// re-accept, so the default is a no-op.
+    fn poll_rejoins(&mut self, _round: usize) -> Result<u32> {
+        Ok(0)
+    }
+
+    /// Drain this round's fault counters: `(rejoined workers, corrupt
+    /// frames detected, wire bytes wasted by corrupt transmissions)`. The
+    /// coordinator folds the waste into its lost-byte accounting and the
+    /// counts into the round record, then the counters reset. Transports
+    /// without real sockets report zeros.
+    fn take_round_faults(&mut self) -> (u32, u32, u64) {
+        (0, 0, 0)
+    }
+
     /// Register a round's delivered messages under per-client link
     /// conditions (see [`SimNet::round_uplink_conditioned`]).
     fn round_uplink_conditioned(
@@ -181,6 +214,10 @@ pub trait Transport: Send {
 
     /// Cumulative retransmitted/wasted bytes across the run.
     fn total_retransmitted(&self) -> u64;
+
+    /// Restore the cumulative byte counters from a checkpoint (resume
+    /// path). Transports that don't support checkpointing ignore the call.
+    fn restore_totals(&mut self, _bytes_up: u64, _retransmitted: u64) {}
 
     /// Tear the transport down (remote transports tell workers to exit).
     fn shutdown(&mut self) -> Result<()> {
@@ -305,6 +342,11 @@ impl Transport for SimNet {
 
     fn total_retransmitted(&self) -> u64 {
         self.total_retransmitted
+    }
+
+    fn restore_totals(&mut self, bytes_up: u64, retransmitted: u64) {
+        self.total_bytes_up = bytes_up;
+        self.total_retransmitted = retransmitted;
     }
 }
 

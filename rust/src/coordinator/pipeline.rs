@@ -187,6 +187,49 @@ fn apply_rate_plan(coord: &mut Coordinator<'_>, round: u64, active_set: &[bool])
     }
 }
 
+/// In-process model of the chaos harness's wire faults, so the three
+/// pipeline modes keep their bit-identity contract with the TCP transport:
+///
+/// * **Corruption** — on the wire, a chaos worker flips bytes of its first
+///   uplink transmission; the server's CRC32 trailer rejects it and a clean
+///   retransmit follows. Digest-visible cost: one extra copy of the uplink
+///   payload ([`Message::remote_uplink_payload_bytes`]) burned per corrupt
+///   frame, charged to lost-byte accounting exactly like a scenario loss.
+///   The in-process modes have no wire, so they charge the same bytes from
+///   the same seeded draw ([`super::scenario::chaos_corrupts`]).
+/// * **Kill + rejoin** — cooperative: the victim uploads, ships its state,
+///   dies, and rejoins next round with that state restored, so training is
+///   bit-identical to an uninterrupted run. In-process it is a pure
+///   bookkeeping entry: `rejoined = 1` on the round after the kill.
+///
+/// Returns `(rejoined, corrupt_frames, corrupt_wasted_bytes)` — all zero
+/// whenever the chaos knobs are off, so non-chaos runs take no draws.
+fn model_chaos_faults(
+    coord: &Coordinator<'_>,
+    round: u64,
+    delivered: &[Message],
+) -> (u32, u32, u64) {
+    let sc = &coord.cfg.scenario;
+    if sc.chaos_corrupt_prob == 0.0 && sc.chaos_kill_round == 0 {
+        return (0, 0, 0);
+    }
+    let seed = coord.cfg.seed;
+    let mut corrupt = 0u32;
+    let mut wasted = 0u64;
+    for m in delivered {
+        if super::scenario::chaos_corrupts(sc, seed, m.client, round) {
+            corrupt += 1;
+            wasted += m.remote_uplink_payload_bytes();
+        }
+    }
+    let rejoined = u32::from(
+        sc.chaos_kill_round > 0
+            && round as usize == sc.chaos_kill_round + 1
+            && super::scenario::chaos_kill_target(sc, seed, coord.clients.len()).is_some(),
+    );
+    (rejoined, corrupt, wasted)
+}
+
 fn begin_round_stage(coord: &mut Coordinator<'_>) -> Result<RoundStart> {
     let timer = Timer::start();
     let round = coord.round;
@@ -272,6 +315,11 @@ pub(crate) fn step_barrier(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
             Produced::Skipped => {}
         }
     }
+    // Chaos harness: charge corrupt first-transmissions and record rejoins
+    // exactly as the TCP transport reports them, keeping digests aligned.
+    let (rejoined, corrupt, corrupt_wasted) = model_chaos_faults(coord, round as u64, &delivered);
+    coord.net.account_lost_bytes(corrupt_wasted);
+    lost_bytes += corrupt_wasted;
     finish_round(
         coord,
         start.timer,
@@ -279,6 +327,8 @@ pub(crate) fn step_barrier(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
         delivered,
         conds,
         lost_bytes,
+        rejoined,
+        corrupt,
         &start.losses,
         start.compute_secs,
         encode_secs,
@@ -382,7 +432,11 @@ pub(crate) fn step_streaming(coord: &mut Coordinator<'_>) -> Result<RoundRecord>
         delivered.push(m);
         conds.push(c);
     }
-    coord.net.account_lost_bytes(lost_bytes);
+    // Chaos harness: same seeded fault model as the barrier path, applied
+    // after the re-sort so the draws see the deterministic delivered set.
+    let (rejoined, corrupt, corrupt_wasted) = model_chaos_faults(coord, round as u64, &delivered);
+    coord.net.account_lost_bytes(lost_bytes + corrupt_wasted);
+    let lost_bytes = lost_bytes + corrupt_wasted;
     finish_round(
         coord,
         start.timer,
@@ -390,6 +444,8 @@ pub(crate) fn step_streaming(coord: &mut Coordinator<'_>) -> Result<RoundRecord>
         delivered,
         conds,
         lost_bytes,
+        rejoined,
+        corrupt,
         &start.losses,
         start.compute_secs,
         encode_secs,
@@ -430,6 +486,10 @@ pub(crate) fn step_remote(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     let n = coord.clients.len();
     // Scenario churn first — same draws, same order as the local prologue.
     let active = coord.scenario.begin_round(round as u64);
+    // Fault tolerance: re-admit chaos-killed workers whose respawns are
+    // waiting in the listen backlog BEFORE reachability is computed, so a
+    // rejoined worker participates this very round (no dropped-round gap).
+    coord.net.poll_rejoins(round)?;
     let reachable = coord.net.reachable().unwrap_or_else(|| vec![true; n]);
     let mut active_set = vec![false; n];
     for &i in &active {
@@ -487,6 +547,13 @@ pub(crate) fn step_remote(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
             UplinkOutcome::Skipped => {}
         }
     }
+    // Fault counters the transport accumulated during the exchange: CRC
+    // failures already cost a retransmit on the wire; fold the wasted bytes
+    // into the same lost-byte accounting the in-process chaos model charges,
+    // so digests stay aligned across transports.
+    let (rejoined, corrupt, corrupt_wasted) = coord.net.take_round_faults();
+    coord.net.account_lost_bytes(corrupt_wasted);
+    lost_bytes += corrupt_wasted;
     // compute/encode happened on the workers; the exchange window is the
     // closest local analogue of the overlapped encode+uplink stage.
     finish_round(
@@ -496,6 +563,8 @@ pub(crate) fn step_remote(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
         delivered,
         conds,
         lost_bytes,
+        rejoined,
+        corrupt,
         &losses,
         0.0,
         exchange_secs,
@@ -520,6 +589,8 @@ fn finish_round(
     delivered: Vec<Message>,
     conds: Vec<LinkCondition>,
     lost_bytes: u64,
+    rejoined: u32,
+    corrupt: u32,
     losses: &[f32],
     compute_secs: f64,
     encode_secs: f64,
@@ -583,6 +654,8 @@ fn finish_round(
         agg_secs,
         dropped_clients,
         retransmitted_bytes: report.retransmitted_bytes + lost_bytes,
+        rejoined_clients: rejoined,
+        corrupt_frames: corrupt,
         staleness_hist,
         bytes_per_client: coord.bytes_per_client(),
     })

@@ -33,6 +33,63 @@ const ROLE_CHURN: u64 = 0x5C_E2;
 const ROLE_LOSS: u64 = 0x5C_E3;
 const ROLE_COHORT: u64 = 0x5C_E4;
 const ROLE_BW: u64 = 0x5C_E5;
+/// Chaos-harness faults (corruption, stalls, the kill target). Sub-streams
+/// are separated by high bits of the index so per-client decision draws
+/// (index = client) never collide with the corrupt-position draws
+/// (client | 1 << 32), stall draws (client | 2 << 32) or the fleet-wide
+/// kill-target draw (3 << 32).
+const ROLE_CHAOS: u64 = 0x5C_E6;
+
+/// Does the chaos harness corrupt this client's uplink payload this round?
+/// Seeded and stateless, so the worker (which flips the bytes) and the
+/// server (which models the waste for in-process parity) agree exactly.
+pub fn chaos_corrupts(cfg: &ScenarioConfig, seed: u64, client: usize, round: u64) -> bool {
+    cfg.chaos_corrupt_prob > 0.0
+        && Rng::for_stream(seed, ROLE_CHAOS, client as u64, round).f64() < cfg.chaos_corrupt_prob
+}
+
+/// The distinct payload byte positions a corrupting worker flips
+/// (`chaos_corrupt_bytes` of them, each XOR 0xFF). Drawn from a dedicated
+/// sub-stream so adding corruption never shifts the corrupt-or-not draw.
+pub fn chaos_corrupt_positions(
+    cfg: &ScenarioConfig,
+    seed: u64,
+    client: usize,
+    round: u64,
+    payload_len: usize,
+) -> Vec<usize> {
+    let want = cfg.chaos_corrupt_bytes.min(payload_len);
+    let mut rng = Rng::for_stream(seed, ROLE_CHAOS, client as u64 | (1 << 32), round);
+    let mut positions = Vec::with_capacity(want);
+    while positions.len() < want {
+        let p = rng.below(payload_len as u64) as usize;
+        if !positions.contains(&p) {
+            positions.push(p);
+        }
+    }
+    positions
+}
+
+/// Does the chaos harness stall this client before its uplink this round
+/// (a real `sleep(chaos_stall_secs)` on the worker, absorbed by the
+/// server's read deadline)?
+pub fn chaos_stalls(cfg: &ScenarioConfig, seed: u64, client: usize, round: u64) -> bool {
+    cfg.chaos_stall_prob > 0.0
+        && Rng::for_stream(seed, ROLE_CHAOS, client as u64 | (2 << 32), round).f64()
+            < cfg.chaos_stall_prob
+}
+
+/// The worker the chaos harness kills after round `chaos_kill_round`'s
+/// uplink, or `None` when no kill is scheduled. One fleet-wide draw keyed
+/// on the kill round, so every process (victim, server, orchestrator)
+/// derives the same victim from the shared config + seed.
+pub fn chaos_kill_target(cfg: &ScenarioConfig, seed: u64, n: usize) -> Option<usize> {
+    if cfg.chaos_kill_round == 0 || n == 0 {
+        return None;
+    }
+    let mut rng = Rng::for_stream(seed, ROLE_CHAOS, 3 << 32, cfg.chaos_kill_round as u64);
+    Some(rng.below(n as u64) as usize)
+}
 
 /// A frame held back by the bounded-staleness scheduler.
 #[derive(Clone, Debug)]
@@ -238,6 +295,28 @@ impl ScenarioEngine {
     /// Frames currently waiting in the late queue.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Snapshot the engine's mutable state for a checkpoint: the churn
+    /// membership mask and the late-frame queue as `(message, staleness)`
+    /// pairs. Everything else (straggler assignment, uplink caps) is a pure
+    /// function of `(cfg, n, seed)` and is rebuilt on resume.
+    pub fn export_state(&self) -> (Vec<bool>, Vec<(Message, u32)>) {
+        (
+            self.active.clone(),
+            self.pending.iter().map(|lf| (lf.msg.clone(), lf.staleness)).collect(),
+        )
+    }
+
+    /// Restore a snapshot taken by [`ScenarioEngine::export_state`].
+    /// Panics if the churn mask's length does not match this fleet.
+    pub fn restore_state(&mut self, active: Vec<bool>, pending: Vec<(Message, u32)>) {
+        assert_eq!(active.len(), self.active.len(), "churn mask size mismatch");
+        self.active = active;
+        self.pending = pending
+            .into_iter()
+            .map(|(msg, staleness)| LateFrame { msg, staleness })
+            .collect();
     }
 
     /// Seeded per-round cohort draw: a sorted K-subset of `0..n` chosen by
@@ -465,6 +544,69 @@ mod tests {
         let clean = ScenarioEngine::new(ScenarioConfig::default(), 8, 5);
         assert!(clean.uplink_caps().is_empty());
         assert_eq!(clean.uplink_cap(3), 0);
+    }
+
+    #[test]
+    fn chaos_draws_are_seeded_and_off_by_default() {
+        let clean = ScenarioConfig::default();
+        for c in 0..4 {
+            assert!(!chaos_corrupts(&clean, 7, c, 0));
+            assert!(!chaos_stalls(&clean, 7, c, 0));
+        }
+        assert_eq!(chaos_kill_target(&clean, 7, 4), None, "kill_round 0 = no kill");
+
+        let chaos = ScenarioConfig::preset("chaos").unwrap();
+        // Kill target: deterministic, in range, keyed on the kill round.
+        let victim = chaos_kill_target(&chaos, 7, 4).unwrap();
+        assert!(victim < 4);
+        assert_eq!(Some(victim), chaos_kill_target(&chaos, 7, 4));
+        // Corruption decision: deterministic per (client, round), and at
+        // prob 0.25 both outcomes occur over 4 clients x 50 rounds.
+        let mut hits = 0usize;
+        for round in 0..50 {
+            for c in 0..4 {
+                let a = chaos_corrupts(&chaos, 7, c, round);
+                assert_eq!(a, chaos_corrupts(&chaos, 7, c, round));
+                hits += a as usize;
+            }
+        }
+        assert!(hits > 10 && hits < 190, "corrupt_prob 0.25 should hit ~50/200: {hits}");
+        // Positions: exactly `chaos_corrupt_bytes` distinct in-bounds
+        // indices, identical on redraw (worker and test harness agree).
+        let pos = chaos_corrupt_positions(&chaos, 7, 1, 3, 64);
+        assert_eq!(pos.len(), chaos.chaos_corrupt_bytes);
+        assert!(pos.iter().all(|&p| p < 64));
+        let mut uniq = pos.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), pos.len(), "positions must be distinct: {pos:?}");
+        assert_eq!(pos, chaos_corrupt_positions(&chaos, 7, 1, 3, 64));
+        // A tiny payload clamps to its length instead of spinning forever.
+        assert_eq!(chaos_corrupt_positions(&chaos, 7, 1, 3, 2).len(), 2);
+    }
+
+    #[test]
+    fn scenario_state_export_restore_roundtrips() {
+        let cfg = ScenarioConfig { stale_k: 1, stale_decay: 0.5, ..Default::default() };
+        let mut e = ScenarioEngine::new(cfg.clone(), 3, 1);
+        let (apply, _) = e.schedule(vec![(msg(0, 0), 0.1), (msg(1, 0), 0.9), (msg(2, 0), 0.5)]);
+        assert_eq!(apply.len(), 1);
+        assert_eq!(e.pending_len(), 2);
+        let (active, pending) = e.export_state();
+        let mut fresh = ScenarioEngine::new(cfg, 3, 1);
+        assert_eq!(fresh.pending_len(), 0);
+        fresh.restore_state(active, pending);
+        assert_eq!(fresh.pending_len(), 2);
+        // The restored queue drains exactly like the original's would.
+        let (a1, s1) = e.schedule(vec![(msg(0, 1), 0.2)]);
+        let (a2, s2) = fresh.schedule(vec![(msg(0, 1), 0.2)]);
+        assert_eq!(s1, s2);
+        assert_eq!(a1.len(), a2.len());
+        for (x, y) in a1.iter().zip(&a2) {
+            assert_eq!(x.0.client, y.0.client);
+            assert_eq!(x.0.round, y.0.round);
+            assert_eq!(x.1, y.1);
+        }
     }
 
     #[test]

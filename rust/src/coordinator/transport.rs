@@ -1,11 +1,13 @@
 //! Real multi-process transport: the coordinator and its clients as
 //! separate OS processes exchanging `quant::wire` frames over TCP.
 //!
-//! Every message on the socket is a **length-prefixed payload**: a `u32`
-//! little-endian byte count, then that many payload bytes, whose first byte
-//! is the message type. Five message types exist — HELLO, WELCOME,
-//! ROUND_START, UPLINK, SHUTDOWN — and `docs/PROTOCOL.md` is the normative
-//! byte-level spec (including the five wire-frame kinds an UPLINK carries).
+//! Every message on the socket is a **length-prefixed, checksummed
+//! payload**: a `u32` little-endian byte count, that many payload bytes
+//! (whose first byte is the message type), then a 4-byte CRC32 trailer
+//! over the payload (`util::crc32`). Eight message types exist — HELLO,
+//! WELCOME, ROUND_START, UPLINK, SHUTDOWN, REJOIN, STATE, RETRANSMIT —
+//! and `docs/PROTOCOL.md` is the normative byte-level spec (including the
+//! five wire-frame kinds an UPLINK carries).
 //!
 //! Roles:
 //!
@@ -13,7 +15,9 @@
 //!   connection per client, and drives rounds through
 //!   `Coordinator::run_remote`. The handshake WELCOME carries the full
 //!   `ExperimentConfig` as JSON, so every process derives identical data
-//!   shards, codec state and RNG streams from one config + seed.
+//!   shards, codec state and RNG streams from one config + seed. The
+//!   listener stays open for the life of the run so a killed worker can
+//!   come back (REJOIN).
 //! * **worker** ([`run_worker`]) — connects, rebuilds its `Client` via
 //!   `coordinator::build_fleet`, then loops: receive parameters, compute
 //!   the local gradient, encode frames, run the same per-client uplink
@@ -30,13 +34,21 @@
 //! `pipeline::step_remote` for the argument and `docs/DETERMINISM.md` for
 //! the invariant table.
 //!
-//! **Fault injection on real connections.** A killed worker or dead socket
-//! surfaces as a read/write error or EOF; the server marks the connection
-//! dead, finishes the round with the survivors (the scenario engine's
-//! drop/reweight path), and masks the client out of later rounds via
-//! [`Transport::reachable`]. Read deadlines ([`TcpOptions::io_timeout`])
-//! bound how long a hung worker can stall a round, so a kill never hangs
-//! the run.
+//! **Fault injection on real connections.** Read failures are classified
+//! by the [`ReadError`] taxonomy. EOF from a killed worker or a blown
+//! [`TcpOptions::io_timeout`] means the peer is *gone*: the server marks
+//! the connection dead, finishes the round with the survivors (the
+//! scenario engine's drop/reweight path), and masks the client out of
+//! later rounds via [`Transport::reachable`]. A CRC32 trailer mismatch is
+//! [`ReadError::Corrupt`] — the bytes arrived but failed integrity — and
+//! takes the RETRANSMIT path instead: the server charges the wasted
+//! bytes, asks the worker to re-send, and the round proceeds without
+//! losing the client. The seeded chaos harness (`scenario::chaos_*`)
+//! drives both paths deterministically: byte corruption on UPLINK
+//! payloads, real pre-uplink stalls, and a *cooperative* kill where the
+//! victim uploads its mutable state (STATE) after its scheduled round and
+//! the respawned process re-admits via REJOIN one round later with
+//! bit-identical state.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -45,21 +57,28 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ExperimentConfig;
+use crate::data::SamplerState;
 use crate::json::Value;
+use crate::quant::wire;
 use crate::quant::RatePlan;
 use crate::runtime::make_backend;
+use crate::util::crc32::crc32;
+use crate::util::Rng;
 
 use super::network::{
     LinkCondition, Message, RemoteUplink, SimNet, Transport, UplinkOutcome, UplinkReport,
 };
 use super::pipeline::{self, Produced};
+use super::scenario::{chaos_corrupt_positions, chaos_corrupts, chaos_kill_target, chaos_stalls};
 use super::ScenarioEngine;
 
-/// Protocol version carried by HELLO/WELCOME. Both sides must match
+/// Protocol version carried by HELLO/WELCOME/REJOIN. Both sides must match
 /// exactly; bump it whenever a message layout or wire-frame kind changes
 /// (see `docs/PROTOCOL.md` §Versioning). Version 2 added the ROUND_START
-/// rate block and the multiscale wire-frame kind (4).
-pub const PROTO_VERSION: u16 = 2;
+/// rate block and the multiscale wire-frame kind (4); version 3 added the
+/// CRC32 trailer on every message plus the REJOIN/STATE/RETRANSMIT
+/// fault-tolerance messages.
+pub const PROTO_VERSION: u16 = 3;
 
 // Message type bytes (first payload byte).
 const MSG_HELLO: u8 = 0x01;
@@ -67,6 +86,9 @@ const MSG_WELCOME: u8 = 0x02;
 const MSG_ROUND_START: u8 = 0x03;
 const MSG_UPLINK: u8 = 0x04;
 const MSG_SHUTDOWN: u8 = 0x05;
+const MSG_REJOIN: u8 = 0x06;
+const MSG_STATE: u8 = 0x07;
+const MSG_RETRANSMIT: u8 = 0x08;
 
 // UPLINK outcome bytes (mirror `pipeline::Produced`).
 const OUTCOME_ARRIVED: u8 = 0;
@@ -77,7 +99,63 @@ const OUTCOME_SKIPPED: u8 = 2;
 /// as protocol corruption rather than an allocation request.
 const MAX_MSG_LEN: u32 = 256 * 1024 * 1024;
 
+/// RETRANSMIT requests the server sends for one uplink before declaring
+/// the connection hopeless. Bounds the corrupt-retry loop so a peer that
+/// keeps failing integrity (or a desynced stream) can never hang a round.
+const MAX_RETRANSMITS: u32 = 3;
+
 // -- framing ----------------------------------------------------------------
+
+/// Why a transport read failed. The taxonomy is the point: [`ReadError::Eof`]
+/// and [`ReadError::TimedOut`] mean the peer is *gone* (the connection is
+/// declared dead, the drop path), while [`ReadError::Corrupt`] means bytes
+/// arrived but failed integrity — a retransmittable condition that must NOT
+/// kill the connection (PROTOCOL.md §5).
+#[derive(Debug)]
+pub enum ReadError {
+    /// The peer closed or reset the connection: no more bytes will come.
+    Eof,
+    /// The read deadline elapsed with the connection still open — a hung
+    /// or stalled peer.
+    TimedOut,
+    /// Bytes arrived but do not form a valid message: CRC32 trailer
+    /// mismatch, an oversized length prefix, or a payload that fails
+    /// validation.
+    Corrupt {
+        /// What failed to validate.
+        what: String,
+        /// Payload bytes read (and thus wasted on the wire) before the
+        /// failure was detected.
+        wasted: u64,
+    },
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Eof => write!(f, "connection closed by peer"),
+            ReadError::TimedOut => write!(f, "read deadline elapsed"),
+            ReadError::Corrupt { what, wasted } => {
+                write!(f, "corrupt message: {what} ({wasted} payload bytes wasted)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+impl From<std::io::Error> for ReadError {
+    /// Classify an I/O failure: a blown deadline keeps the connection
+    /// (TimedOut); everything else — EOF, reset, broken pipe — means the
+    /// peer is gone.
+    fn from(e: std::io::Error) -> Self {
+        use std::io::ErrorKind;
+        match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => ReadError::TimedOut,
+            _ => ReadError::Eof,
+        }
+    }
+}
 
 /// Checked `usize → u32` conversion against the protocol frame bound, for
 /// every length/count a writer serializes. A plain `as u32` cast would
@@ -91,24 +169,39 @@ fn checked_wire_len(n: usize, what: &str) -> Result<u32> {
     Ok(n as u32)
 }
 
-/// Write one length-prefixed payload.
+/// Write one length-prefixed payload with its CRC32 trailer.
 fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     w.write_all(&checked_wire_len(payload.len(), "payload")?.to_le_bytes())?;
     w.write_all(payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one length-prefixed payload.
-fn read_msg<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+/// Read one length-prefixed payload and verify its CRC32 trailer,
+/// classifying failures into the [`ReadError`] taxonomy. A trailer
+/// mismatch leaves the stream in sync (exactly one framed message was
+/// consumed), which is what makes the retransmit path possible.
+fn read_msg<R: Read>(r: &mut R) -> std::result::Result<Vec<u8>, ReadError> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len);
     if n > MAX_MSG_LEN {
-        bail!("message length {n} exceeds the {MAX_MSG_LEN}-byte protocol bound");
+        return Err(ReadError::Corrupt {
+            what: format!("length prefix {n} exceeds the {MAX_MSG_LEN}-byte protocol bound"),
+            wasted: 0,
+        });
     }
     let mut buf = vec![0u8; n as usize];
     r.read_exact(&mut buf)?;
+    let mut trailer = [0u8; 4];
+    r.read_exact(&mut trailer)?;
+    if u32::from_le_bytes(trailer) != crc32(&buf) {
+        return Err(ReadError::Corrupt {
+            what: "CRC32 trailer mismatch".into(),
+            wasted: n as u64,
+        });
+    }
     Ok(buf)
 }
 
@@ -162,6 +255,113 @@ impl<'a> Cur<'a> {
     }
 }
 
+// -- worker state (STATE message) -------------------------------------------
+
+/// Deserialized STATE payload (PROTOCOL.md §3.7): the mutable state a
+/// chaos-killed worker uploads before exiting, and a rejoining worker
+/// restores — batch-sampler position plus per-group EF residuals as
+/// lossless Raw wire frames. Everything else a worker holds is a pure
+/// function of `(config, params, round)` and is rebuilt from the WELCOME
+/// config (codec *fit* state is the one exception, which is why the
+/// rejoin parity invariant is scoped to `estimate_every = 1`; see
+/// `docs/DETERMINISM.md` §invariant 7).
+struct WorkerState {
+    client: usize,
+    sampler: SamplerState,
+    residuals: Vec<Option<Vec<f32>>>,
+}
+
+/// Serialize a worker's mutable state into a STATE payload.
+fn encode_state(
+    client: usize,
+    round: usize,
+    sampler: &SamplerState,
+    residuals: &[Option<Vec<f32>>],
+) -> Result<Vec<u8>> {
+    let mut p = Vec::new();
+    p.push(MSG_STATE);
+    p.extend_from_slice(&(client as u32).to_le_bytes());
+    p.extend_from_slice(&(round as u32).to_le_bytes());
+    p.extend_from_slice(&checked_wire_len(sampler.order.len(), "sampler order")?.to_le_bytes());
+    for &ix in &sampler.order {
+        p.extend_from_slice(&checked_wire_len(ix, "sample index")?.to_le_bytes());
+    }
+    p.extend_from_slice(&checked_wire_len(sampler.cursor, "sampler cursor")?.to_le_bytes());
+    for w in sampler.rng {
+        p.extend_from_slice(&w.to_le_bytes());
+    }
+    match sampler.rng_spare {
+        Some(x) => {
+            p.push(1);
+            p.extend_from_slice(&x.to_le_bytes());
+        }
+        None => p.push(0),
+    }
+    p.extend_from_slice(&checked_wire_len(residuals.len(), "group count")?.to_le_bytes());
+    let mut frame = Vec::new();
+    for r in residuals {
+        match r {
+            Some(res) => {
+                // Lossless Raw wire frame (kind 0): the rejoined client's
+                // residual must be bit-identical, so the lossy EF park()
+                // path is NOT used here.
+                wire::encode_raw_into(res, &mut frame);
+                p.push(1);
+                let len = checked_wire_len(frame.len(), "residual frame")?;
+                p.extend_from_slice(&len.to_le_bytes());
+                p.extend_from_slice(&frame);
+            }
+            None => p.push(0),
+        }
+    }
+    Ok(p)
+}
+
+/// Parse a STATE payload back into worker state.
+fn parse_state(msg: &[u8]) -> Result<WorkerState> {
+    let mut c = Cur::new(msg);
+    let t = c.u8()?;
+    if t != MSG_STATE {
+        bail!("expected STATE (0x07), got message type {t:#04x}");
+    }
+    let client = c.u32()? as usize;
+    let _round = c.u32()? as usize;
+    let n = c.u32()? as usize;
+    let mut order = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        order.push(c.u32()? as usize);
+    }
+    let cursor = c.u32()? as usize;
+    let mut rng = [0u64; 4];
+    for w in &mut rng {
+        *w = c.u64()?;
+    }
+    let rng_spare = match c.u8()? {
+        0 => None,
+        1 => Some(f64::from_bits(c.u64()?)),
+        other => bail!("bad sampler spare flag {other}"),
+    };
+    let ngroups = c.u32()? as usize;
+    let mut residuals = Vec::with_capacity(ngroups.min(1024));
+    for _ in 0..ngroups {
+        residuals.push(match c.u8()? {
+            0 => None,
+            1 => {
+                let len = c.u32()? as usize;
+                let mut out = Vec::new();
+                wire::decode_dequantize_into(c.take(len)?, &mut out)?;
+                Some(out)
+            }
+            other => bail!("bad residual flag {other}"),
+        });
+    }
+    Ok(WorkerState {
+        client,
+        sampler: SamplerState { order, cursor, rng, rng_spare },
+        residuals,
+    })
+}
+
 // -- server -----------------------------------------------------------------
 
 /// Socket tuning for the server side of the transport.
@@ -171,7 +371,9 @@ pub struct TcpOptions {
     /// killed worker can stall a round before it is declared dead.
     pub io_timeout: Duration,
     /// How long [`TcpServer::accept_workers`] waits for all N workers to
-    /// connect and complete the handshake.
+    /// connect and complete the handshake — and how long
+    /// [`Transport::poll_rejoins`] waits for a respawned worker to come
+    /// back after a scheduled chaos kill.
     pub accept_timeout: Duration,
 }
 
@@ -209,7 +411,8 @@ impl TcpServer {
 
     /// Accept and handshake all `cfg.clients` workers, or fail once
     /// [`TcpOptions::accept_timeout`] elapses — a deadlocked handshake
-    /// fails fast instead of hanging the run.
+    /// fails fast instead of hanging the run. The listener is kept open in
+    /// the returned transport so chaos-killed workers can REJOIN.
     pub fn accept_workers(self) -> Result<TcpTransport> {
         let n = self.cfg.clients;
         let cfg_json = self.cfg.to_json().to_json();
@@ -244,7 +447,18 @@ impl TcpServer {
                 Err(e) => return Err(e.into()),
             }
         }
-        Ok(TcpTransport { sim: SimNet::new(self.cfg.net), conns })
+        Ok(TcpTransport {
+            sim: SimNet::new(self.cfg.net),
+            conns,
+            listener: self.listener,
+            cfg: self.cfg,
+            cfg_json,
+            opts: self.opts,
+            parked_state: (0..n).map(|_| None).collect(),
+            round_rejoined: 0,
+            round_corrupt: 0,
+            round_corrupt_wasted: 0,
+        })
     }
 }
 
@@ -265,28 +479,86 @@ fn handshake_worker(stream: &mut TcpStream, n: usize, cfg_json: &str) -> Result<
     if id >= n {
         bail!("client id {id} out of range for {n} clients");
     }
+    write_welcome(stream, id, cfg_json)?;
+    Ok(id)
+}
+
+/// Send the WELCOME message (version + echoed id + config JSON) — shared by
+/// the initial handshake and the REJOIN handshake.
+fn write_welcome(stream: &mut TcpStream, id: usize, cfg_json: &str) -> Result<()> {
     let mut welcome = Vec::with_capacity(7 + cfg_json.len());
     welcome.push(MSG_WELCOME);
     welcome.extend_from_slice(&PROTO_VERSION.to_le_bytes());
     welcome.extend_from_slice(&(id as u32).to_le_bytes());
     welcome.extend_from_slice(cfg_json.as_bytes());
-    write_msg(stream, &welcome)?;
-    Ok(id)
+    write_msg(stream, &welcome)
 }
 
 /// The multi-process [`Transport`]: one TCP connection per worker plus the
 /// embedded [`SimNet`] accounting model (real bytes, simulated clock — the
-/// digest's `net_secs` stays the bandwidth/latency model, by design).
+/// digest's `net_secs` stays the bandwidth/latency model, by design). The
+/// listener stays open so chaos-killed workers can REJOIN, and each
+/// killed worker's STATE upload is parked verbatim until it does.
 pub struct TcpTransport {
     sim: SimNet,
     /// One slot per client; `None` once the connection is declared dead.
     conns: Vec<Option<TcpStream>>,
+    /// The (still-open) listener REJOIN connections arrive on.
+    listener: TcpListener,
+    cfg: ExperimentConfig,
+    /// The WELCOME config JSON, pre-rendered once.
+    cfg_json: String,
+    opts: TcpOptions,
+    /// Verbatim STATE payloads from cooperatively killed workers, shipped
+    /// back on REJOIN.
+    parked_state: Vec<Option<Vec<u8>>>,
+    /// Workers re-admitted this round (drained by `take_round_faults`).
+    round_rejoined: u32,
+    /// Corrupt messages detected this round (drained by `take_round_faults`).
+    round_corrupt: u32,
+    /// Wire bytes wasted by corrupt transmissions this round.
+    round_corrupt_wasted: u64,
 }
 
 impl TcpTransport {
     /// Clients whose connection is still alive.
     pub fn alive(&self) -> usize {
         self.conns.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// REJOIN handshake on a fresh connection: validate the claim, send
+    /// WELCOME + the parked STATE blob, and hand back the client id.
+    fn handshake_rejoin(&mut self, stream: &mut TcpStream) -> Result<usize> {
+        let msg = read_msg(stream)?;
+        let mut c = Cur::new(&msg);
+        let t = c.u8()?;
+        if t != MSG_REJOIN {
+            bail!("expected REJOIN (0x06), got message type {t:#04x}");
+        }
+        let version = c.u16()?;
+        if version != PROTO_VERSION {
+            bail!("protocol version mismatch: rejoiner speaks {version}, server {PROTO_VERSION}");
+        }
+        let id = c.u32()? as usize;
+        let last_round = c.u32()? as usize;
+        if id >= self.conns.len() {
+            bail!("rejoin from client id {id}, fleet has {}", self.conns.len());
+        }
+        if self.conns[id].is_some() {
+            bail!("client {id} claims to rejoin but its connection is alive");
+        }
+        let Some(blob) = self.parked_state[id].take() else {
+            bail!("client {id} has no parked state to rejoin with");
+        };
+        if last_round != self.cfg.scenario.chaos_kill_round {
+            bail!(
+                "client {id} rejoins from round {last_round}, state was parked at round {}",
+                self.cfg.scenario.chaos_kill_round
+            );
+        }
+        write_welcome(stream, id, &self.cfg_json)?;
+        write_msg(stream, &blob)?;
+        Ok(id)
     }
 }
 
@@ -297,6 +569,67 @@ impl Transport for TcpTransport {
 
     fn reachable(&self) -> Option<Vec<bool>> {
         Some(self.conns.iter().map(|c| c.is_some()).collect())
+    }
+
+    /// Re-admit the chaos-killed worker at the start of the round after its
+    /// scheduled kill. The server *knows the schedule* (it is a pure
+    /// function of config + seed), so this is a block-accept bounded by
+    /// [`TcpOptions::accept_timeout`], not a poll: the rejoined worker is
+    /// back before `reachable()` is consulted, which is what keeps the
+    /// kill → rejoin cycle invisible to the round structure (and hence the
+    /// digest). If the respawn never arrives the round degrades to the
+    /// drop path instead of failing.
+    fn poll_rejoins(&mut self, round: usize) -> Result<u32> {
+        let sc = &self.cfg.scenario;
+        if sc.chaos_kill_round == 0 || round != sc.chaos_kill_round + 1 {
+            return Ok(0);
+        }
+        let mut remaining: Vec<usize> = (0..self.conns.len())
+            .filter(|&i| self.parked_state[i].is_some() && self.conns[i].is_none())
+            .collect();
+        if remaining.is_empty() {
+            return Ok(0);
+        }
+        let deadline = Instant::now() + self.opts.accept_timeout;
+        let mut rejoined = 0u32;
+        while !remaining.is_empty() {
+            match self.listener.accept() {
+                Ok((mut stream, peer)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(self.opts.io_timeout))?;
+                    let id = self
+                        .handshake_rejoin(&mut stream)
+                        .with_context(|| format!("rejoin handshake with {peer}"))?;
+                    if !remaining.contains(&id) {
+                        bail!("unexpected rejoin from client {id}");
+                    }
+                    remaining.retain(|&x| x != id);
+                    self.conns[id] = Some(stream);
+                    rejoined += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        // The respawn never came back: proceed without it
+                        // (the drop path), exactly like a non-cooperative
+                        // kill.
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        self.round_rejoined += rejoined;
+        Ok(rejoined)
+    }
+
+    fn take_round_faults(&mut self) -> (u32, u32, u64) {
+        let out = (self.round_rejoined, self.round_corrupt, self.round_corrupt_wasted);
+        self.round_rejoined = 0;
+        self.round_corrupt = 0;
+        self.round_corrupt_wasted = 0;
+        out
     }
 
     /// Send ROUND_START to every live worker — actives get the parameter
@@ -352,19 +685,61 @@ impl Transport for TcpTransport {
     /// Read one UPLINK from every live active worker, in ascending client
     /// id. Sequential reads cannot deadlock — every worker computes and
     /// writes independently, and replies buffer in the sockets until read.
-    /// Any read error (EOF from a killed worker, a blown
-    /// [`TcpOptions::io_timeout`], a malformed payload) declares that
-    /// connection dead and excludes the client from the round.
+    /// EOF (a killed worker) or a blown [`TcpOptions::io_timeout`] declares
+    /// the connection dead and excludes the client from the round; a
+    /// [`ReadError::Corrupt`] instead charges the wasted bytes and takes
+    /// the RETRANSMIT path (bounded by [`MAX_RETRANSMITS`]), so corruption
+    /// alone never costs a client its round. After round
+    /// `chaos_kill_round`'s uplinks the seeded victim's STATE upload is
+    /// read and parked for the REJOIN one round later.
     fn collect_round(&mut self, round: usize, active_set: &[bool]) -> Result<Vec<RemoteUplink>> {
         let mut ups = Vec::new();
         for i in 0..self.conns.len() {
             if !active_set.get(i).copied().unwrap_or(false) {
                 continue;
             }
-            let Some(stream) = self.conns[i].as_mut() else { continue };
-            match read_uplink(stream, round, i) {
-                Ok(u) => ups.push(u),
-                Err(_) => self.conns[i] = None,
+            let mut retries = 0u32;
+            loop {
+                let Some(stream) = self.conns[i].as_mut() else { break };
+                match read_uplink(stream, round, i) {
+                    Ok(u) => {
+                        ups.push(u);
+                        break;
+                    }
+                    Err(ReadError::Corrupt { wasted, .. }) => {
+                        self.round_corrupt += 1;
+                        self.round_corrupt_wasted += wasted;
+                        retries += 1;
+                        if retries > MAX_RETRANSMITS
+                            || write_msg(stream, &[MSG_RETRANSMIT]).is_err()
+                        {
+                            self.conns[i] = None;
+                            break;
+                        }
+                    }
+                    Err(_) => {
+                        self.conns[i] = None;
+                        break;
+                    }
+                }
+            }
+        }
+        // Cooperative chaos kill: after round `chaos_kill_round`'s uplinks
+        // the seeded victim uploads its mutable state and vanishes. Park
+        // the STATE payload verbatim for the REJOIN handshake one round
+        // later. A victim that died without the upload degrades to the
+        // ordinary drop path.
+        let sc = &self.cfg.scenario;
+        if sc.chaos_kill_round > 0 && round == sc.chaos_kill_round {
+            if let Some(v) = chaos_kill_target(sc, self.cfg.seed, self.conns.len()) {
+                if let Some(stream) = self.conns[v].as_mut() {
+                    if let Ok(msg) = read_msg(stream) {
+                        if msg.first() == Some(&MSG_STATE) {
+                            self.parked_state[v] = Some(msg);
+                        }
+                    }
+                    self.conns[v] = None;
+                }
             }
         }
         Ok(ups)
@@ -403,10 +778,24 @@ impl Transport for TcpTransport {
     }
 }
 
-/// Parse one UPLINK payload from `client`, validating the round/client echo.
-fn read_uplink(stream: &mut TcpStream, round: usize, client: usize) -> Result<RemoteUplink> {
+/// Read and parse one UPLINK payload from `client`. A payload that passed
+/// framing but fails validation (wrong type, mis-echoed round/client,
+/// truncated frame list) is *corruption*, never a dead peer.
+fn read_uplink(
+    stream: &mut TcpStream,
+    round: usize,
+    client: usize,
+) -> std::result::Result<RemoteUplink, ReadError> {
     let msg = read_msg(stream)?;
-    let mut c = Cur::new(&msg);
+    parse_uplink(&msg, round, client).map_err(|e| ReadError::Corrupt {
+        what: e.to_string(),
+        wasted: msg.len() as u64,
+    })
+}
+
+/// Parse one UPLINK payload from `client`, validating the round/client echo.
+fn parse_uplink(msg: &[u8], round: usize, client: usize) -> Result<RemoteUplink> {
+    let mut c = Cur::new(msg);
     let t = c.u8()?;
     if t != MSG_UPLINK {
         bail!("expected UPLINK (0x04), got message type {t:#04x}");
@@ -448,8 +837,14 @@ pub struct WorkerOptions {
     pub io_timeout: Duration,
     /// Fault-injection hook: exit abruptly (dropping the socket, no
     /// goodbye) after participating in this many active rounds — how the
-    /// tests and `--max-rounds` simulate a killed worker.
+    /// tests and `--max-rounds` simulate a NON-cooperative kill (the
+    /// degraded drop path, unlike the chaos harness's cooperative kill).
     pub max_rounds: Option<usize>,
+    /// `Some(r)` when this process replaces a chaos-killed worker whose
+    /// last completed round was `r`: the handshake becomes REJOIN and the
+    /// worker restores its sampler + EF residual state from the server's
+    /// parked STATE blob before serving rounds.
+    pub rejoin_from: Option<usize>,
 }
 
 impl Default for WorkerOptions {
@@ -458,13 +853,51 @@ impl Default for WorkerOptions {
             connect_timeout: Duration::from_secs(30),
             io_timeout: Duration::from_secs(120),
             max_rounds: None,
+            rejoin_from: None,
         }
     }
 }
 
-/// Retry `TcpStream::connect` until it succeeds or `timeout` elapses.
-fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+/// How [`run_worker`] ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerExit {
+    /// The server sent SHUTDOWN, or `max_rounds` elapsed: a normal exit.
+    Clean,
+    /// The chaos harness killed this worker after `round`'s uplink (its
+    /// state is parked on the server). The process should be respawned
+    /// with `--rejoin-from <round>`; `tqsgd worker` signals this with
+    /// exit code 17 so the `launch` monitor knows to respawn rather than
+    /// report a crash.
+    ChaosKilled {
+        /// The last round this worker completed before dying.
+        round: usize,
+    },
+}
+
+/// Stream role for connect/rejoin backoff jitter. Worker-side wall-clock
+/// only — never touches a digest-relevant stream.
+const ROLE_BACKOFF: u64 = 0xBAC0;
+
+/// Seeded exponential backoff with jitter: attempt `k` (0-based) waits
+/// `min(cap, base * 2^k)` scaled into `[0.5, 1.0)` of itself by a draw
+/// from a dedicated per-seed stream. Deterministic in `(seed, attempt)`,
+/// so a fleet of reconnecting workers de-synchronizes reproducibly
+/// instead of stampeding the listener in lockstep.
+fn backoff_delay(seed: u64, attempt: u32, base: Duration, cap: Duration) -> Duration {
+    let envelope = base
+        .checked_mul(1u32 << attempt.min(16))
+        .map_or(cap, |d| d.min(cap));
+    let u = Rng::for_stream(seed, ROLE_BACKOFF, attempt as u64, 0).f64();
+    envelope.mul_f64(0.5 + 0.5 * u)
+}
+
+/// Retry `TcpStream::connect` until it succeeds or `timeout` elapses,
+/// sleeping [`backoff_delay`] (base 10 ms, cap 500 ms) between attempts.
+/// Shared by the initial connect and the post-kill rejoin; `seed` is the
+/// worker's client id so each worker jitters differently.
+fn connect_with_retry(addr: &str, timeout: Duration, seed: u64) -> Result<TcpStream> {
     let deadline = Instant::now() + timeout;
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -472,16 +905,23 @@ fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
                 if Instant::now() >= deadline {
                     return Err(anyhow!("connecting to coordinator at {addr}: {e}"));
                 }
-                std::thread::sleep(Duration::from_millis(20));
+                std::thread::sleep(backoff_delay(
+                    seed,
+                    attempt,
+                    Duration::from_millis(10),
+                    Duration::from_millis(500),
+                ));
+                attempt += 1;
             }
         }
     }
 }
 
 /// Run one worker process (or thread): connect to the coordinator at
-/// `addr`, handshake as `client_id`, rebuild this client's exact
-/// in-process state from the config the server sends, then serve rounds
-/// until SHUTDOWN.
+/// `addr`, handshake as `client_id` (HELLO, or REJOIN when
+/// [`WorkerOptions::rejoin_from`] is set), rebuild this client's exact
+/// in-process state from the config the server sends (plus the parked
+/// STATE blob on rejoin), then serve rounds until SHUTDOWN.
 ///
 /// Per active round the worker runs the same three client-side stages as
 /// the in-process pipelines — batch + gradient, per-group encode
@@ -490,16 +930,29 @@ fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
 /// with EF residual repair) — and reports the outcome. The server redraws
 /// the link condition from the same seeded stream, which is what makes the
 /// clean-scenario digest bit-identical to the in-process barrier run.
-pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<()> {
-    let mut stream = connect_with_retry(addr, opts.connect_timeout)?;
+///
+/// The seeded chaos harness adds three worker-side faults: payload
+/// corruption (the first transmission goes out with flipped bytes under
+/// the clean CRC, and the clean payload is re-sent on RETRANSMIT), real
+/// pre-uplink stalls, and the cooperative kill (upload STATE after the
+/// scheduled round, then exit with [`WorkerExit::ChaosKilled`]).
+pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<WorkerExit> {
+    let mut stream = connect_with_retry(addr, opts.connect_timeout, client_id as u64)?;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(opts.io_timeout))?;
 
-    // HELLO → WELCOME: version + id check, then the experiment config.
-    let mut hello = Vec::with_capacity(7);
-    hello.push(MSG_HELLO);
-    hello.extend_from_slice(&PROTO_VERSION.to_le_bytes());
-    hello.extend_from_slice(&(client_id as u32).to_le_bytes());
+    // HELLO (or REJOIN) → WELCOME: version + id check, then the config.
+    let mut hello = Vec::with_capacity(11);
+    if let Some(last_round) = opts.rejoin_from {
+        hello.push(MSG_REJOIN);
+        hello.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        hello.extend_from_slice(&(client_id as u32).to_le_bytes());
+        hello.extend_from_slice(&checked_wire_len(last_round, "rejoin round")?.to_le_bytes());
+    } else {
+        hello.push(MSG_HELLO);
+        hello.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        hello.extend_from_slice(&(client_id as u32).to_le_bytes());
+    }
     write_msg(&mut stream, &hello)?;
     let msg = read_msg(&mut stream).context("waiting for WELCOME")?;
     let mut c = Cur::new(&msg);
@@ -531,21 +984,66 @@ pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<
     let mut me = super::build_fleet(&cfg, &spec)?.clients.swap_remove(client_id);
     let scenario = ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed);
     let groups = spec.groups.clone();
+    let sc = cfg.scenario.clone();
+
+    // Rejoin: restore the mutable state the killed predecessor uploaded —
+    // sampler position and EF residuals. Codec fit state is rebuilt by the
+    // next refit, which is why rejoin parity is scoped to
+    // `estimate_every = 1` (docs/DETERMINISM.md §invariant 7).
+    if opts.rejoin_from.is_some() {
+        let msg = read_msg(&mut stream).context("waiting for STATE after REJOIN")?;
+        let st = parse_state(&msg)?;
+        if st.client != client_id {
+            bail!("STATE is for client {}, expected {client_id}", st.client);
+        }
+        me.restore_sampler(st.sampler);
+        me.import_residuals(&st.residuals);
+    }
+
+    // The cooperative kill schedule is a pure function of config + seed,
+    // so the victim knows it is the victim. A respawned (rejoined) worker
+    // never re-dies: its rounds start past the kill round anyway, but the
+    // guard keeps that explicit.
+    let kill_me = opts.rejoin_from.is_none()
+        && sc.chaos_kill_round > 0
+        && chaos_kill_target(&sc, cfg.seed, cfg.clients) == Some(client_id);
 
     let mut params: Vec<f32> = Vec::new();
     let mut active_rounds = 0usize;
+    // The last clean UPLINK payload, kept for RETRANSMIT.
+    let mut last_uplink: Vec<u8> = Vec::new();
     loop {
         let msg = read_msg(&mut stream).context("waiting for ROUND_START")?;
         let mut c = Cur::new(&msg);
         match c.u8()? {
-            MSG_SHUTDOWN => return Ok(()),
+            MSG_SHUTDOWN => return Ok(WorkerExit::Clean),
+            MSG_RETRANSMIT => {
+                // The server read our uplink as corrupt (the chaos
+                // harness's flipped bytes, or a genuinely bad link):
+                // re-send the saved clean payload.
+                if last_uplink.is_empty() {
+                    bail!("RETRANSMIT with no uplink outstanding");
+                }
+                write_msg(&mut stream, &last_uplink)?;
+            }
             MSG_ROUND_START => {
                 let round = c.u32()? as usize;
                 let active = c.u8()? != 0;
                 let count = c.u32()? as usize;
+                let dying = kill_me && round == sc.chaos_kill_round;
                 if !active {
                     // Keep-alive for a churned-out round: nothing to do (the
                     // trailing rate block is dropped with the payload).
+                    if dying {
+                        let state = encode_state(
+                            client_id,
+                            round,
+                            &me.sampler_state(),
+                            &me.export_residuals(),
+                        )?;
+                        write_msg(&mut stream, &state)?;
+                        return Ok(WorkerExit::ChaosKilled { round });
+                    }
                     continue;
                 }
                 let bytes = c.take(
@@ -584,14 +1082,18 @@ pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<
                 payload.extend_from_slice(&(round as u32).to_le_bytes());
                 payload.extend_from_slice(&(client_id as u32).to_le_bytes());
                 payload.extend_from_slice(&out.loss.to_le_bytes());
+                let mut arrived = false;
                 match produced {
                     Produced::Arrived(m, _cond) => {
+                        arrived = true;
                         payload.push(OUTCOME_ARRIVED);
-                        payload
-                            .extend_from_slice(&checked_wire_len(m.frames.len(), "frame count")?.to_le_bytes());
+                        let count = checked_wire_len(m.frames.len(), "frame count")?;
+                        payload.extend_from_slice(&count.to_le_bytes());
                         for (gi, frame) in &m.frames {
-                            payload.extend_from_slice(&checked_wire_len(*gi, "group index")?.to_le_bytes());
-                            payload.extend_from_slice(&checked_wire_len(frame.len(), "frame")?.to_le_bytes());
+                            let gi = checked_wire_len(*gi, "group index")?;
+                            let len = checked_wire_len(frame.len(), "frame")?;
+                            payload.extend_from_slice(&gi.to_le_bytes());
+                            payload.extend_from_slice(&len.to_le_bytes());
                             payload.extend_from_slice(frame);
                         }
                         me.recycle(m);
@@ -602,13 +1104,64 @@ pub fn run_worker(addr: &str, client_id: usize, opts: &WorkerOptions) -> Result<
                     }
                     Produced::Skipped => payload.push(OUTCOME_SKIPPED),
                 }
-                write_msg(&mut stream, &payload)?;
+
+                // Chaos stall: a real wall-clock sleep before the uplink,
+                // absorbed by the server's read deadline (never simulated
+                // time, so the digest is untouched).
+                if chaos_stalls(&sc, cfg.seed, client_id, round as u64) {
+                    std::thread::sleep(Duration::from_secs_f64(sc.chaos_stall_secs));
+                }
+
+                // Chaos corruption (delivered frames only, matching the
+                // in-process model): the first transmission carries
+                // `chaos_corrupt_bytes` flipped payload bytes under the
+                // CLEAN payload's CRC — a guaranteed trailer mismatch at
+                // the server, which answers RETRANSMIT.
+                let corrupt_this =
+                    arrived && chaos_corrupts(&sc, cfg.seed, client_id, round as u64);
+                if corrupt_this {
+                    let mut bad = payload.clone();
+                    for p in
+                        chaos_corrupt_positions(&sc, cfg.seed, client_id, round as u64, bad.len())
+                    {
+                        bad[p] ^= 0xFF;
+                    }
+                    stream.write_all(&checked_wire_len(bad.len(), "payload")?.to_le_bytes())?;
+                    stream.write_all(&bad)?;
+                    stream.write_all(&crc32(&payload).to_le_bytes())?;
+                    stream.flush()?;
+                } else {
+                    write_msg(&mut stream, &payload)?;
+                }
+                last_uplink = payload;
+
+                if dying {
+                    if corrupt_this {
+                        // The server deterministically answers corruption
+                        // with RETRANSMIT; serve it before dying so the
+                        // round's aggregate still includes this client.
+                        let msg = read_msg(&mut stream)
+                            .context("waiting for RETRANSMIT before chaos kill")?;
+                        if msg.first() != Some(&MSG_RETRANSMIT) {
+                            bail!("expected RETRANSMIT before chaos kill");
+                        }
+                        write_msg(&mut stream, &last_uplink)?;
+                    }
+                    let state = encode_state(
+                        client_id,
+                        round,
+                        &me.sampler_state(),
+                        &me.export_residuals(),
+                    )?;
+                    write_msg(&mut stream, &state)?;
+                    return Ok(WorkerExit::ChaosKilled { round });
+                }
 
                 active_rounds += 1;
                 if opts.max_rounds.is_some_and(|max| active_rounds >= max) {
                     // Simulated kill: vanish without a goodbye. The server
                     // must detect the dead socket and take the drop path.
-                    return Ok(());
+                    return Ok(WorkerExit::Clean);
                 }
             }
             t => bail!("unexpected message type {t:#04x} mid-run"),
@@ -666,10 +1219,130 @@ mod tests {
         write_msg(&mut buf, b"hello").unwrap();
         write_msg(&mut buf, b"").unwrap();
         assert_eq!(&buf[..4], &5u32.to_le_bytes());
+        // Trailer: CRC32 of the payload sits right after it.
+        assert_eq!(&buf[9..13], &crc32(b"hello").to_le_bytes());
         let mut r = &buf[..];
         assert_eq!(read_msg(&mut r).unwrap(), b"hello");
         assert_eq!(read_msg(&mut r).unwrap(), b"");
-        assert!(read_msg(&mut r).is_err(), "stream exhausted");
+        assert!(
+            matches!(read_msg(&mut r), Err(ReadError::Eof)),
+            "an exhausted stream is EOF, not corruption"
+        );
+    }
+
+    #[test]
+    fn framing_rejects_oversized_prefix_as_corrupt() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = &buf[..];
+        match read_msg(&mut r) {
+            Err(ReadError::Corrupt { wasted, .. }) => assert_eq!(wasted, 0),
+            other => panic!("oversized prefix must be Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crc_trailer_flags_flipped_payload_byte_as_corrupt() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_msg(&mut buf, b"hello").unwrap();
+        buf[4 + 2] ^= 0xFF; // flip one payload byte, keep the trailer
+        let mut r = &buf[..];
+        match read_msg(&mut r) {
+            Err(ReadError::Corrupt { wasted, what }) => {
+                assert_eq!(wasted, 5, "wasted = payload bytes consumed");
+                assert!(what.contains("CRC32"), "{what}");
+            }
+            other => panic!("flipped byte must be Corrupt, got {other:?}"),
+        }
+        // The stream stayed in sync: nothing is left after the bad frame.
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn read_error_taxonomy_separates_eof_timeout_corrupt() {
+        // EOF: the reader has no bytes at all.
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_msg(&mut empty), Err(ReadError::Eof)));
+
+        // TimedOut: the io layer reports a blown deadline.
+        struct Stall;
+        impl Read for Stall {
+            fn read(&mut self, _b: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::from(std::io::ErrorKind::WouldBlock))
+            }
+        }
+        assert!(matches!(read_msg(&mut Stall), Err(ReadError::TimedOut)));
+        struct Timeout;
+        impl Read for Timeout {
+            fn read(&mut self, _b: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::from(std::io::ErrorKind::TimedOut))
+            }
+        }
+        assert!(matches!(read_msg(&mut Timeout), Err(ReadError::TimedOut)));
+
+        // Corrupt: framed bytes that fail integrity (see the CRC test);
+        // a truncated payload mid-frame is EOF — the peer died mid-write.
+        let mut buf: Vec<u8> = Vec::new();
+        write_msg(&mut buf, b"hello").unwrap();
+        let mut truncated = &buf[..6];
+        assert!(matches!(read_msg(&mut truncated), Err(ReadError::Eof)));
+    }
+
+    #[test]
+    fn parse_failure_is_corrupt_not_eof() {
+        // A framed payload that is not a valid UPLINK must classify as
+        // Corrupt (retransmittable), never as a dead peer.
+        let bogus = [MSG_UPLINK, 9, 9, 9]; // truncated round echo
+        let err = parse_uplink(&bogus, 0, 0).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn backoff_is_seeded_capped_and_jittered() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(500);
+        for attempt in 0..8 {
+            let a = backoff_delay(42, attempt, base, cap);
+            let b = backoff_delay(42, attempt, base, cap);
+            assert_eq!(a, b, "same (seed, attempt) must give the same delay");
+            let envelope = base.checked_mul(1 << attempt).map_or(cap, |d| d.min(cap));
+            assert!(a >= envelope.mul_f64(0.5), "attempt {attempt}: {a:?} under half envelope");
+            assert!(a < envelope, "attempt {attempt}: {a:?} exceeds the envelope {envelope:?}");
+        }
+        // The cap bounds the envelope at large attempt counts.
+        assert!(backoff_delay(42, 30, base, cap) < cap);
+        // Different seeds de-synchronize (somewhere in the first attempts).
+        let differs =
+            (0..4).any(|k| backoff_delay(1, k, base, cap) != backoff_delay(2, k, base, cap));
+        assert!(differs, "jitter must depend on the seed");
+    }
+
+    #[test]
+    fn state_payload_roundtrips_bit_exactly() {
+        let sampler = SamplerState {
+            order: vec![3, 1, 4, 1, 5, 9, 2, 6],
+            cursor: 5,
+            rng: [1, u64::MAX, 0xDEAD_BEEF, 42],
+            rng_spare: Some(-1.25),
+        };
+        let residuals = vec![
+            Some(vec![0.5f32, -2.0, 3.25]),
+            None,
+            Some(vec![f32::MIN_POSITIVE, -0.0, 1e30]),
+        ];
+        let blob = encode_state(7, 3, &sampler, &residuals).unwrap();
+        assert_eq!(blob[0], MSG_STATE);
+        let st = parse_state(&blob).unwrap();
+        assert_eq!(st.client, 7);
+        assert_eq!(st.sampler, sampler);
+        assert_eq!(st.residuals.len(), 3);
+        assert_eq!(st.residuals[0].as_deref(), Some(&[0.5f32, -2.0, 3.25][..]));
+        assert!(st.residuals[1].is_none());
+        // Raw frames are lossless: bit-exact f32 round-trip, -0.0 included.
+        let r2 = st.residuals[2].as_ref().unwrap();
+        for (a, b) in r2.iter().zip(residuals[2].as_ref().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

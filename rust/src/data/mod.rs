@@ -240,6 +240,43 @@ impl BatchSampler {
         }
         out
     }
+
+    /// Snapshot the sampler's mutable state — the current epoch permutation,
+    /// the cursor into it, and the reshuffle RNG — so a rejoining worker or
+    /// a resumed checkpoint continues the exact batch sequence an
+    /// uninterrupted run would have drawn.
+    pub fn export_state(&self) -> SamplerState {
+        let (rng, spare) = self.rng.state();
+        SamplerState {
+            order: self.order.clone(),
+            cursor: self.cursor,
+            rng,
+            rng_spare: spare,
+        }
+    }
+
+    /// Restore a [`BatchSampler::export_state`] snapshot in place.
+    pub fn restore_state(&mut self, st: SamplerState) {
+        self.order = st.order;
+        self.cursor = st.cursor;
+        self.rng = Rng::from_state(st.rng, st.rng_spare);
+    }
+}
+
+/// A [`BatchSampler`]'s complete mutable state (see
+/// [`BatchSampler::export_state`]); serialized into worker STATE messages
+/// and coordinator checkpoints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplerState {
+    /// The current epoch's shuffled index order.
+    pub order: Vec<usize>,
+    /// Position of the next sample in `order`.
+    pub cursor: usize,
+    /// The reshuffle generator's xoshiro words.
+    pub rng: [u64; 4],
+    /// The reshuffle generator's cached Box-Muller spare (always `None` in
+    /// practice — samplers never draw normals — but carried for exactness).
+    pub rng_spare: Option<f64>,
 }
 
 /// Gather a batch into (x f32[B*784], y f32[B]) buffers for the runtime.

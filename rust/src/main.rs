@@ -9,7 +9,8 @@
 //! tqsgd perf-check --current BENCH_perf.json [--baseline BENCH_baseline.json]
 //! tqsgd serve   --listen 127.0.0.1:7700 [--clients 3 --rounds 5 ...]
 //! tqsgd worker  --connect 127.0.0.1:7700 --client-id 0
-//! tqsgd launch  [--clients 3 --rounds 5 --verify-digest ...]
+//! tqsgd launch  [--clients 3 --rounds 5 --verify-digest --chaos ...]
+//! tqsgd resume  --checkpoint run.ckpt [--checkpoint-every 1]
 //! ```
 
 use std::time::Duration;
@@ -19,13 +20,18 @@ use tqsgd::benchkit::{check_ceiling, check_regression, Report, Table};
 use tqsgd::cli::Args;
 use tqsgd::config::{ExperimentConfig, PipelineMode, Scheme};
 use tqsgd::coordinator::{
-    run_worker, teardown_workers, Coordinator, TcpOptions, TcpServer, WorkerOptions,
+    checkpoint, run_worker, scenario::chaos_kill_target, teardown_workers, Coordinator,
+    TcpOptions, TcpServer, WorkerExit, WorkerOptions,
 };
 use tqsgd::metrics::RunLog;
 use tqsgd::runtime::make_backend;
 use tqsgd::solver;
 use tqsgd::tail::{fit_gaussian, fit_laplace, fit_power_law, PowerLawModel};
-use tqsgd::train::{run_experiment, Sweep};
+use tqsgd::train::{Sweep, Trainer};
+
+/// Exit code a worker uses when a seeded chaos fault kills it — `launch`'s
+/// respawn monitor treats this (and only this) as "scheduled death".
+const EXIT_CHAOS_KILL: i32 = 17;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -39,10 +45,11 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("worker") => cmd_worker(&args),
         Some("launch") => cmd_launch(&args),
+        Some("resume") => cmd_resume(&args),
         Some(other) => {
             bail!(
                 "unknown subcommand {other:?}; try: train sweep fit-tail solve info \
-                 perf-check serve worker launch"
+                 perf-check serve worker launch resume"
             )
         }
         None => {
@@ -57,7 +64,8 @@ fn main() -> Result<()> {
                  \x20 perf-check  gate a bench JSON report against the committed baseline\n\
                  \x20 serve     coordinator server: wait for TCP workers, then train\n\
                  \x20 worker    client worker process: connect to a coordinator\n\
-                 \x20 launch    spawn N local workers + coordinator, run, tear down\n\n\
+                 \x20 launch    spawn N local workers + coordinator, run, tear down\n\
+                 \x20 resume    continue a run from a --checkpoint file (bit-exact)\n\n\
                  common flags: --model --scheme --bits --clients --rounds --lr --seed\n\
                  \x20             --backend (auto|native|pjrt) --error-feedback\n\
                  \x20             --drop-client --artifacts --preset\n\
@@ -67,12 +75,17 @@ fn main() -> Result<()> {
                  \x20             --agg-tiers (1 = flat aggregation; 2 = two-tier re-encoded tree)\n\
                  \x20             --bit-budget (fleet uplink bytes/round; 0 = scheduler off;\n\
                  \x20              pairs well with --scheme multiscale, which re-rates per round)\n\
-                 scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid|bandwidth)\n\
+                 \x20             --checkpoint PATH --checkpoint-every N (periodic resumable\n\
+                 \x20              snapshots; continue with `tqsgd resume --checkpoint PATH`)\n\
+                 scenario flags: --scenario (clean|straggler|lossy|churn|stale|noniid|bandwidth|chaos)\n\
                  \x20             --straggler-frac --straggler-mult --loss-prob --max-retries\n\
                  \x20             --dropout-prob --rejoin-prob --stale-k --stale-decay\n\
                  \x20             --noniid-alpha\n\
                  \x20             --uplink-cap --uplink-cap-frac (per-client byte caps; the\n\
-                 \x20              bandwidth preset draws seeded caps in [frac*cap, cap])"
+                 \x20              bandwidth preset draws seeded caps in [frac*cap, cap])\n\
+                 \x20             --chaos-corrupt-prob --chaos-corrupt-bytes --chaos-kill-round\n\
+                 \x20             --chaos-stall-prob --chaos-stall-secs (seeded fault injection;\n\
+                 \x20              `launch --chaos` kills + respawns a real worker process)"
             );
             Ok(())
         }
@@ -100,7 +113,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.bit_budget > 0 {
         println!("bit budget: {} uplink bytes/round (adaptive per-group rates)", cfg.bit_budget);
     }
-    let report = run_experiment(cfg.clone(), true)?;
+    let mut trainer = Trainer::new(cfg.clone())?;
+    if let Some(path) = args.get("checkpoint") {
+        let every = args.usize_or("checkpoint-every", 1)?;
+        if every == 0 {
+            bail!("--checkpoint-every must be >= 1");
+        }
+        println!("checkpointing to {path} every {every} round(s)");
+        trainer.checkpoint_to(std::path::PathBuf::from(path), every);
+    }
+    let report = trainer.run_verbose(true)?;
     println!(
         "\nfinal: acc {:.4} (best {:.4}) train_loss {:.4} bytes_up {} ({:.2} bits/param/round)",
         report.final_accuracy,
@@ -346,12 +368,23 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .get("max-rounds")
         .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--max-rounds {v:?}: {e}")))
         .transpose()?;
+    let rejoin_from = args
+        .get("rejoin-from")
+        .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--rejoin-from {v:?}: {e}")))
+        .transpose()?;
     let opts = WorkerOptions {
         connect_timeout: secs_flag(args, "connect-timeout-secs", 30.0)?,
         io_timeout: secs_flag(args, "io-timeout-secs", 120.0)?,
         max_rounds,
+        rejoin_from,
     };
-    run_worker(addr, client_id, &opts)
+    match run_worker(addr, client_id, &opts)? {
+        WorkerExit::Clean => Ok(()),
+        WorkerExit::ChaosKilled { round } => {
+            eprintln!("worker {client_id}: chaos kill after round {round}");
+            std::process::exit(EXIT_CHAOS_KILL);
+        }
+    }
 }
 
 /// Orchestrator: bind an ephemeral port, spawn `cfg.clients` local worker
@@ -359,8 +392,20 @@ fn cmd_worker(args: &Args) -> Result<()> {
 /// in-process, then tear the fleet down with a hard deadline. With
 /// `--verify-digest`, re-run the same config in-process with the barrier
 /// pipeline and fail unless the two `replay_digest()`s are bit-identical.
+///
+/// Chaos runs (`--chaos`, or any config with `chaos_kill_round > 0`) get a
+/// respawn monitor: the seeded victim worker really dies (exit code 17),
+/// and the monitor respawns it with `--rejoin-from` so it re-admits via the
+/// REJOIN handshake the next round.
 fn cmd_launch(args: &Args) -> Result<()> {
-    let cfg = base_config(args)?;
+    let mut cfg = base_config(args)?;
+    // `--chaos` shorthand for `--scenario chaos`; explicit chaos flags win.
+    if args.has("chaos")
+        && cfg.scenario.chaos_kill_round == 0
+        && cfg.scenario.chaos_corrupt_prob == 0.0
+    {
+        cfg.scenario = tqsgd::config::ScenarioConfig::preset("chaos")?;
+    }
     println!("config: {}", cfg.id());
     let listen = args.str_or("listen", "127.0.0.1:0");
     let server = TcpServer::bind(&listen, &cfg, tcp_options(args)?)?;
@@ -375,6 +420,42 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("spawning worker {i}: {e}"))?;
         children.push(child);
     }
+    // Chaos kill: hand the seeded victim's child handle to a monitor thread
+    // that waits for the scheduled death and respawns the worker process
+    // with `--rejoin-from`, exercising the real REJOIN path end to end.
+    let mut monitor = None;
+    if cfg.scenario.chaos_kill_round > 0 {
+        if let Some(victim) = chaos_kill_target(&cfg.scenario, cfg.seed, cfg.clients) {
+            let kill_round = cfg.scenario.chaos_kill_round;
+            println!("chaos: worker {victim} dies after round {kill_round}, then rejoins");
+            let mut child = children.remove(victim);
+            let exe = exe.clone();
+            let addr = addr.clone();
+            monitor = Some(std::thread::spawn(
+                move || -> Result<Option<std::process::Child>> {
+                    let status = child.wait()?;
+                    if status.code() != Some(EXIT_CHAOS_KILL) {
+                        // The run ended (or the worker failed) before the
+                        // scheduled kill; nothing to respawn.
+                        return Ok(None);
+                    }
+                    let respawn = std::process::Command::new(&exe)
+                        .args([
+                            "worker",
+                            "--connect",
+                            &addr,
+                            "--client-id",
+                            &victim.to_string(),
+                            "--rejoin-from",
+                            &kill_round.to_string(),
+                        ])
+                        .spawn()
+                        .map_err(|e| anyhow!("respawning worker {victim}: {e}"))?;
+                    Ok(Some(respawn))
+                },
+            ));
+        }
+    }
     // Run the round loop, then tear the workers down no matter how it ended.
     let result = {
         let cfg = cfg.clone();
@@ -386,6 +467,14 @@ fn cmd_launch(args: &Args) -> Result<()> {
             coord.run_remote(true)
         })()
     };
+    if let Some(m) = monitor {
+        match m.join() {
+            Ok(Ok(Some(child))) => children.push(child),
+            Ok(Ok(None)) => {}
+            Ok(Err(e)) => eprintln!("chaos monitor: {e}"),
+            Err(_) => eprintln!("chaos monitor thread panicked"),
+        }
+    }
     let teardown =
         teardown_workers(&mut children, secs_flag(args, "teardown-timeout-secs", 10.0)?);
     let log = result?;
@@ -405,6 +494,28 @@ fn cmd_launch(args: &Args) -> Result<()> {
         }
         println!("digest parity: multi-process == in-process barrier (bit-identical)");
     }
+    print_run_summary(args, &log)
+}
+
+/// Continue a checkpointed run to its configured round count. With
+/// `estimate_every = 1` the continuation is bit-identical — parameters and
+/// `replay_digest()` — to the uninterrupted run (DETERMINISM.md
+/// invariant 7). `--checkpoint-every N` keeps snapshotting to the same file.
+fn cmd_resume(args: &Args) -> Result<()> {
+    let Some(path) = args.get("checkpoint") else {
+        bail!("resume needs --checkpoint PATH (written by `train --checkpoint`)");
+    };
+    let path = std::path::PathBuf::from(path);
+    let cfg = checkpoint::load_config(&path)?;
+    println!("config: {}", cfg.id());
+    println!("resuming from {} (continuing to round {})", path.display(), cfg.rounds);
+    let backend = make_backend(&cfg)?;
+    let mut coord = Coordinator::resume(&path, backend.as_ref())?;
+    let every = args.usize_or("checkpoint-every", 0)?;
+    if every > 0 {
+        coord.checkpoint_to(path.clone(), every);
+    }
+    let log = coord.run(true)?;
     print_run_summary(args, &log)
 }
 

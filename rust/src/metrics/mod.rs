@@ -42,8 +42,18 @@ pub struct RoundRecord {
     pub dropped_clients: usize,
     /// Scenario: extra bytes burned on lost uplink attempts — retransmitted
     /// copies of delivered frames plus every attempt of frames that never
-    /// arrived at all.
+    /// arrived at all (including corrupt transmissions re-sent after a
+    /// CRC32 trailer mismatch).
     pub retransmitted_bytes: u64,
+    /// Fault tolerance: workers re-admitted this round after a chaos kill
+    /// (REJOIN handshake). Logged, but outside `replay_digest` — a
+    /// cooperative kill + rejoin is digest-transparent by design.
+    pub rejoined_clients: u32,
+    /// Fault tolerance: uplink messages that failed wire integrity (CRC32
+    /// trailer mismatch) this round and took the retransmit path. Outside
+    /// `replay_digest`; the corruption's digest-visible cost rides
+    /// `retransmitted_bytes`.
+    pub corrupt_frames: u32,
     /// Scenario: histogram of applied-frame staleness — index s holds the
     /// number of frames applied this round that were s rounds old. Empty
     /// and `vec![k]` both mean "k fresh frames, nothing late".
@@ -108,11 +118,12 @@ impl RunLog {
         let mut s = String::from(
             "round,train_loss,bytes_up,test_loss,test_accuracy,secs,net_secs,\
              compute_secs,encode_secs,agg_secs,\
-             dropped_clients,retransmitted_bytes,staleness_hist,bytes_per_client\n",
+             dropped_clients,retransmitted_bytes,rejoined_clients,corrupt_frames,\
+             staleness_hist,bytes_per_client\n",
         );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.bytes_up,
@@ -125,6 +136,8 @@ impl RunLog {
                 r.agg_secs,
                 r.dropped_clients,
                 r.retransmitted_bytes,
+                r.rejoined_clients,
+                r.corrupt_frames,
                 fmt_staleness_hist(&r.staleness_hist),
                 r.bytes_per_client,
             ));
@@ -147,6 +160,8 @@ impl RunLog {
                 ("agg_secs", json::num(r.agg_secs)),
                 ("dropped_clients", json::num(r.dropped_clients as f64)),
                 ("retransmitted_bytes", json::num(r.retransmitted_bytes as f64)),
+                ("rejoined_clients", json::num(r.rejoined_clients as f64)),
+                ("corrupt_frames", json::num(r.corrupt_frames as f64)),
                 (
                     "staleness_hist",
                     json::arr(
@@ -254,6 +269,8 @@ mod tests {
             agg_secs: 0.02,
             dropped_clients: 0,
             retransmitted_bytes: 0,
+            rejoined_clients: 0,
+            corrupt_frames: 0,
             staleness_hist: Vec::new(),
             bytes_per_client: 0,
         });
@@ -270,6 +287,8 @@ mod tests {
             agg_secs: 0.0125,
             dropped_clients: 2,
             retransmitted_bytes: 333,
+            rejoined_clients: 1,
+            corrupt_frames: 2,
             staleness_hist: vec![6, 2],
             bytes_per_client: 4096,
         });
@@ -295,9 +314,17 @@ mod tests {
         assert!(csv.contains(",333,"), "retransmitted bytes column");
         assert!(csv.contains("0:6|1:2"), "staleness histogram column");
         let header = csv.lines().next().unwrap();
-        for col in ["compute_secs", "encode_secs", "agg_secs", "bytes_per_client"] {
+        for col in [
+            "compute_secs",
+            "encode_secs",
+            "agg_secs",
+            "rejoined_clients",
+            "corrupt_frames",
+            "bytes_per_client",
+        ] {
             assert!(header.contains(col), "missing column {col}");
         }
+        assert!(csv.contains(",333,1,2,"), "fault columns follow retransmitted_bytes");
         assert!(csv.contains(",0.05,0.0625,0.0125,"), "stage columns in row order");
         assert!(csv.contains("0:6|1:2,4096"), "bytes_per_client trails the histogram");
     }
@@ -338,6 +365,14 @@ mod tests {
         // training trajectory — it must stay outside the digest.
         e.records[1].bytes_per_client = 1;
         assert_eq!(a.replay_digest(), e.replay_digest());
+        let mut f = sample_log();
+        // Fault-tolerance counters are observability, not trajectory: a
+        // chaos kill + rejoin and a corrupt-then-retransmitted frame must
+        // leave the digest untouched (the corruption's cost is already
+        // visible through retransmitted_bytes).
+        f.records[1].rejoined_clients += 1;
+        f.records[1].corrupt_frames += 1;
+        assert_eq!(a.replay_digest(), f.replay_digest());
     }
 
     #[test]

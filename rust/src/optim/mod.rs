@@ -45,6 +45,18 @@ impl MomentumSgd {
     pub fn set_lr(&mut self, lr: f64) {
         self.lr = lr;
     }
+
+    /// The momentum buffer (checkpoint serialization path).
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Restore a momentum buffer snapshot (checkpoint resume path). The
+    /// length must match the parameter vector the optimizer was built for.
+    pub fn set_velocity(&mut self, velocity: Vec<f32>) {
+        assert_eq!(velocity.len(), self.velocity.len(), "velocity length mismatch");
+        self.velocity = velocity;
+    }
 }
 
 /// Learning-rate schedule.

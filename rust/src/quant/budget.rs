@@ -242,6 +242,24 @@ impl BitBudget {
     pub fn planned_message_bytes(&self, plan: &RatePlan, client: usize) -> Option<u64> {
         plan.rates_for(client).map(|bits| self.message_bytes_at(bits))
     }
+
+    /// Snapshot the observation table — the scheduler's only mutable state
+    /// (checkpoint serialization path). Entries are the newest
+    /// `(round, α²)` per (client, layer group), `None` where nothing has
+    /// been observed yet.
+    pub fn export_obs(&self) -> Vec<Vec<Option<(usize, f64)>>> {
+        self.obs.clone()
+    }
+
+    /// Restore an [`Self::export_obs`] snapshot (checkpoint resume path).
+    /// The table shape must match this scheduler's (clients × groups).
+    pub fn import_obs(&mut self, obs: Vec<Vec<Option<(usize, f64)>>>) {
+        assert_eq!(obs.len(), self.obs.len(), "budget obs client count mismatch");
+        for (row, cur) in obs.iter().zip(&self.obs) {
+            assert_eq!(row.len(), cur.len(), "budget obs group count mismatch");
+        }
+        self.obs = obs;
+    }
 }
 
 /// Smallest admissible width per scheme: BiScaled needs s ≥ 3 (2 bits),

@@ -683,6 +683,24 @@ impl GroupCodec {
         }
     }
 
+    /// The error-feedback wrapper, when this codec carries one — the
+    /// read side of the worker STATE hand-off and checkpoint serializers.
+    pub fn ef(&self) -> Option<&super::error_feedback::ErrorFeedback> {
+        match self {
+            GroupCodec::Plain(_) => None,
+            GroupCodec::Ef(c) => Some(c),
+        }
+    }
+
+    /// Mutable access to the error-feedback wrapper (rejoin/resume state
+    /// restore).
+    pub fn ef_mut(&mut self) -> Option<&mut super::error_feedback::ErrorFeedback> {
+        match self {
+            GroupCodec::Plain(_) => None,
+            GroupCodec::Ef(c) => Some(c),
+        }
+    }
+
     /// Resident bytes of mutable codec state (plain codecs keep only their
     /// fit parameters — O(1), counted as 0 here; EF keeps the residual
     /// working set or its parked frame).

@@ -114,6 +114,32 @@ impl ErrorFeedback {
         self.residual.iter().map(|&r| (r as f64) * (r as f64)).sum::<f64>().sqrt()
     }
 
+    /// Overwrite the residual with an externally restored dense vector —
+    /// the inverse of reading [`Self::residual`], used by the worker rejoin
+    /// and checkpoint-resume paths. The restored residual is live by
+    /// definition, so any parked frame is discarded.
+    pub fn set_residual(&mut self, residual: Vec<f32>) {
+        self.residual = residual;
+        self.parked = None;
+    }
+
+    /// The parked residual frame bytes, when the residual is currently
+    /// parked (checkpoints serialize the frame verbatim to avoid a second
+    /// lossy round trip).
+    pub fn parked_frame(&self) -> Option<&[u8]> {
+        self.parked.as_deref()
+    }
+
+    /// Restore a parked residual frame verbatim (checkpoint resume path —
+    /// the exact bytes [`Self::parked_frame`] exposed). Replaces any live
+    /// dense residual, mirroring the state [`Self::park`] leaves behind.
+    pub fn set_parked_frame(&mut self, frame: Vec<u8>) {
+        self.parked = Some(frame);
+        self.residual = Vec::new();
+        self.adjusted = Vec::new();
+        self.decoded = Vec::new();
+    }
+
     // -- dormant-client parking ---------------------------------------------
 
     /// Park the residual as one quantized wire frame, freeing the dense f32

@@ -58,6 +58,7 @@ impl TrainReport {
 pub struct Trainer {
     backend: Box<dyn Backend>,
     cfg: ExperimentConfig,
+    ckpt: Option<(std::path::PathBuf, usize)>,
 }
 
 impl Trainer {
@@ -65,12 +66,18 @@ impl Trainer {
     /// train.
     pub fn new(cfg: ExperimentConfig) -> Result<Trainer> {
         let backend = make_backend(&cfg)?;
-        Ok(Trainer { backend, cfg })
+        Ok(Trainer { backend, cfg, ckpt: None })
     }
 
     /// The compute backend this trainer selected.
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
+    }
+
+    /// Save a resumable checkpoint to `path` every `every` rounds during the
+    /// next run (in-process pipelines only; see `docs/CHECKPOINT.md`).
+    pub fn checkpoint_to(&mut self, path: std::path::PathBuf, every: usize) {
+        self.ckpt = Some((path, every));
     }
 
     /// Run the experiment quietly.
@@ -81,6 +88,9 @@ impl Trainer {
     /// Run the experiment, optionally logging evals to stdout.
     pub fn run_verbose(&mut self, verbose: bool) -> Result<TrainReport> {
         let mut coord = Coordinator::new(self.cfg.clone(), self.backend.as_ref())?;
+        if let Some((path, every)) = self.ckpt.clone() {
+            coord.checkpoint_to(path, every);
+        }
         let params = coord.params.len();
         let clients = self.cfg.clients;
         let log = coord.run(verbose)?;

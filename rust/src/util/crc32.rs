@@ -1,0 +1,79 @@
+//! Vendored zero-dependency CRC32 (IEEE 802.3, reflected, poly 0xEDB88320).
+//!
+//! Every transport message carries a 4-byte CRC32 trailer over its payload
+//! (PROTOCOL.md §2), so a flipped bit on a live socket is detected as
+//! *corruption* — a retransmittable condition — instead of being
+//! misdiagnosed as a dead peer. The table-driven one-byte-at-a-time form
+//! below is the classic public-domain construction: 256-entry table built
+//! at first use, byte-reflected, initial value `0xFFFF_FFFF`, final XOR
+//! `0xFFFF_FFFF`. It matches zlib's `crc32()` bit for bit (check value:
+//! `crc32(b"123456789") == 0xCBF4_3926`).
+
+/// The 256-entry lookup table for the reflected IEEE polynomial, built once.
+fn table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// CRC32 of `bytes` (IEEE, reflected — the zlib/PNG/Ethernet checksum).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Fold `bytes` into a running (pre-final-XOR) CRC state. Start from
+/// `0xFFFF_FFFF`, finish by XORing with `0xFFFF_FFFF` — [`crc32`] does both
+/// for the one-shot case; streaming writers (the checkpoint encoder) keep
+/// the raw state across chunks.
+pub fn update(state: u32, bytes: &[u8]) -> u32 {
+    let t = table();
+    let mut c = state;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_standard_check_value() {
+        // The universal CRC32/IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_update_equals_one_shot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let one = crc32(data);
+        let mut state = 0xFFFF_FFFF;
+        for chunk in data.chunks(7) {
+            state = update(state, chunk);
+        }
+        assert_eq!(state ^ 0xFFFF_FFFF, one);
+    }
+
+    #[test]
+    fn detects_any_single_flipped_byte() {
+        let clean = b"payload under test: 0123456789abcdef".to_vec();
+        let want = crc32(&clean);
+        for i in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[i] ^= 0xFF;
+            assert_ne!(crc32(&bad), want, "flip at byte {i} must change the CRC");
+        }
+    }
+}

@@ -1,5 +1,7 @@
-//! Small shared substrates: deterministic PRNG and numerical math.
+//! Small shared substrates: deterministic PRNG, numerical math, and the
+//! vendored CRC32 behind the transport's wire-integrity trailer.
 
+pub mod crc32;
 pub mod math;
 pub mod rng;
 

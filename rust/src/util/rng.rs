@@ -51,6 +51,18 @@ impl Rng {
         Rng::new(hash_seed(&[seed, role, index, round]))
     }
 
+    /// Snapshot the generator's full state (xoshiro words + the cached
+    /// Box-Muller spare) for checkpointing. [`Rng::from_state`] restores a
+    /// generator whose future output is bit-identical to this one's.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Self {
+        Rng { s, spare_normal }
+    }
+
     /// Next raw 64-bit output (xoshiro256**).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -9,7 +9,14 @@
 //!    in-process barrier pipeline (the tcp == in-process invariant);
 //! 3. killing a worker mid-run takes the server's existing drop/reweight
 //!    path — the run finishes (no hang), records `dropped_clients`, and
-//!    the parameters stay finite.
+//!    the parameters stay finite;
+//! 4. a chaos-killed worker (cooperative kill + REJOIN next round) and
+//!    seeded payload corruption (CRC32 + retransmit) are digest-parity
+//!    with the in-process barrier model, and leave the learning
+//!    trajectory bit-identical to a fault-free run;
+//! 5. checkpoint-at-k + resume is bit-identical to the uninterrupted run
+//!    (DETERMINISM.md invariant 7) for every scheme × EF setting, plus an
+//!    EF + binding-bit-budget combination.
 //!
 //! Workers here run as threads calling the same [`run_worker`] entrypoint
 //! the `tqsgd worker` subcommand uses; the CI smoke job covers the real
@@ -20,8 +27,11 @@ use std::net::{TcpListener, TcpStream};
 use std::thread;
 use std::time::Duration;
 
-use tqsgd::config::{ExperimentConfig, PipelineMode, Scheme};
-use tqsgd::coordinator::{run_worker, Coordinator, TcpOptions, TcpServer, WorkerOptions};
+use tqsgd::config::{ExperimentConfig, PipelineMode, ScenarioConfig, Scheme};
+use tqsgd::coordinator::{
+    run_worker, Coordinator, TcpOptions, TcpServer, WorkerExit, WorkerOptions,
+};
+use tqsgd::metrics::RunLog;
 use tqsgd::quant::wire::Payload;
 use tqsgd::runtime::{backend_for, Backend};
 
@@ -233,4 +243,160 @@ fn killed_worker_takes_the_drop_path_without_hanging() {
     );
     assert!(log.records.iter().all(|r| r.train_loss.is_finite()));
     assert!(coord.params.iter().all(|p| p.is_finite()), "params must stay finite under the fault");
+}
+
+/// The chaos tentpole: the seeded kill round really kills a worker
+/// ([`WorkerExit::ChaosKilled`]), the respawned worker rejoins next round
+/// via REJOIN + the parked STATE blob, and seeded payload corruption takes
+/// the CRC32 → RETRANSMIT path. All of it must be digest-parity with the
+/// in-process barrier model of the same config, and — because the kill is
+/// cooperative and corruption is always repaired by a clean retransmit —
+/// the final parameters must be bit-identical to a fault-free run.
+#[test]
+fn chaos_killed_worker_rejoins_bit_for_bit() {
+    let mut cfg = tcp_cfg(3, 6);
+    cfg.quant.estimate_every = 1;
+    cfg.quant.error_feedback = true;
+    cfg.scenario = ScenarioConfig::preset("chaos").unwrap();
+    // Preset corruption is p=0.25; raise it so this seed is effectively
+    // guaranteed at least one corrupt frame across 3 clients × 6 rounds.
+    cfg.scenario.chaos_corrupt_prob = 0.5;
+    let kill_round = cfg.scenario.chaos_kill_round;
+    assert!(kill_round + 1 < cfg.rounds, "rejoin round must land inside the run");
+
+    let server = TcpServer::bind("127.0.0.1:0", &cfg, test_opts()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..cfg.clients)
+        .map(|id| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut rejoin_from = None;
+                loop {
+                    let opts = WorkerOptions { rejoin_from, ..WorkerOptions::default() };
+                    match run_worker(&addr, id, &opts).expect("worker failed") {
+                        WorkerExit::Clean => return,
+                        // Chaos killed us: come back as a fresh "process"
+                        // carrying only the rejoin round, like the launch
+                        // monitor's respawn with --rejoin-from.
+                        WorkerExit::ChaosKilled { round } => rejoin_from = Some(round),
+                    }
+                }
+            })
+        })
+        .collect();
+    let transport = server.accept_workers().unwrap();
+    let backend = native();
+    let mut coord =
+        Coordinator::with_transport(cfg.clone(), backend.as_ref(), Box::new(transport)).unwrap();
+    let log = coord.run_remote(false).unwrap();
+    for w in workers {
+        w.join().expect("worker thread panicked");
+    }
+
+    assert_eq!(log.records.len(), cfg.rounds, "the kill must not cost a round");
+    assert_eq!(
+        log.records[kill_round + 1].rejoined_clients, 1,
+        "the victim must rejoin exactly one round after its kill"
+    );
+    assert!(
+        log.records.iter().all(|r| r.dropped_clients == 0),
+        "a cooperative kill + rejoin must never take the drop path"
+    );
+    let corrupt: u32 = log.records.iter().map(|r| r.corrupt_frames).sum();
+    assert!(corrupt > 0, "seeded corruption must surface in corrupt_frames");
+    let retrans: u64 = log.records.iter().map(|r| r.retransmitted_bytes).sum();
+    assert!(retrans > 0, "every corrupt frame must be retransmitted");
+
+    // Digest parity with the in-process barrier model of the same chaos.
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.pipeline = PipelineMode::Barrier;
+    let mut ref_coord = Coordinator::new(ref_cfg, backend.as_ref()).unwrap();
+    let ref_log = ref_coord.run(false).unwrap();
+    assert_eq!(
+        log.replay_digest(),
+        ref_log.replay_digest(),
+        "chaos multi-process digest diverged from the in-process barrier model"
+    );
+    for (i, (a, b)) in coord.params.iter().zip(&ref_coord.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} diverged ({a} vs {b})");
+    }
+
+    // Faults repaired in-wire must be invisible to learning: same params as
+    // a run with the chaos harness off entirely.
+    let mut clean_cfg = cfg;
+    clean_cfg.pipeline = PipelineMode::Barrier;
+    clean_cfg.scenario = ScenarioConfig::default();
+    let mut clean = Coordinator::new(clean_cfg, backend.as_ref()).unwrap();
+    clean.run(false).unwrap();
+    for (i, (a, b)) in coord.params.iter().zip(&clean.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "chaos must not perturb learning (param {i})");
+    }
+}
+
+/// Invariant 7 in full: run 2 rounds, checkpoint, resume in a fresh
+/// coordinator, finish — parameters and `replay_digest()` must match the
+/// uninterrupted run bit for bit.
+fn assert_checkpoint_roundtrip(
+    cfg: &ExperimentConfig,
+    backend: &dyn Backend,
+    dir: &std::path::Path,
+    tag: &str,
+) {
+    let path = dir.join(format!("{tag}.ckpt"));
+
+    let mut full = Coordinator::new(cfg.clone(), backend).unwrap();
+    let mut full_log = RunLog { config_id: cfg.id(), ..Default::default() };
+    for _ in 0..cfg.rounds {
+        full_log.push(full.step().unwrap());
+    }
+
+    let mut head = Coordinator::new(cfg.clone(), backend).unwrap();
+    let mut head_log = RunLog { config_id: cfg.id(), ..Default::default() };
+    for _ in 0..2 {
+        head_log.push(head.step().unwrap());
+    }
+    head.checkpoint(&head_log, &path).unwrap();
+    drop(head); // the interruption: the original process is gone
+
+    let mut tail = Coordinator::resume(&path, backend).unwrap();
+    let tail_log = tail.run(false).unwrap();
+    assert_eq!(tail_log.records.len(), cfg.rounds, "{tag}: resumed log must cover every round");
+    assert_eq!(
+        tail_log.replay_digest(),
+        full_log.replay_digest(),
+        "{tag}: resumed digest diverged from the uninterrupted run"
+    );
+    for (i, (a, b)) in full.params.iter().zip(&tail.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: param {i} diverged ({a} vs {b})");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Checkpoint/resume bit-exactness (invariant 7) across the full scheme
+/// matrix, with and without error feedback, plus one EF + binding fleet
+/// bit-budget combination so the scheduler's observation table is part of
+/// the snapshot under test.
+#[test]
+fn checkpoint_resume_is_bit_exact_for_every_scheme() {
+    let backend = native();
+    let dir = std::env::temp_dir().join(format!("tqcp-props-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for scheme in Scheme::all() {
+        for ef in [false, true] {
+            let mut cfg = tcp_cfg(2, 4);
+            cfg.quant.scheme = scheme;
+            cfg.quant.estimate_every = 1;
+            cfg.quant.error_feedback = ef;
+            let tag = format!("{}-ef{}", scheme.name(), u8::from(ef));
+            assert_checkpoint_roundtrip(&cfg, backend.as_ref(), &dir, &tag);
+        }
+    }
+
+    let mut cfg = tcp_cfg(2, 4);
+    cfg.quant.scheme = Scheme::Multiscale;
+    cfg.quant.estimate_every = 1;
+    cfg.quant.error_feedback = true;
+    cfg.bit_budget = 6000; // binding at mlp_tiny sizes: the scheduler engages
+    assert_checkpoint_roundtrip(&cfg, backend.as_ref(), &dir, "multiscale-ef-budget");
 }
