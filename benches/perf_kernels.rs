@@ -1,0 +1,192 @@
+//! §Perf — isolated kernel microbenchmarks: the dispatched SIMD kernels
+//! (`quant::simd::detected_kernels()`) against the scalar reference
+//! (`quant::simd::scalar_kernels()`), same inputs, same RNG streams.
+//!
+//! Every timed pair is byte-checked for equality first — the dispatch
+//! contract is *bit-identical or bust*, so a speedup on diverging output
+//! would be meaningless. Alongside wall-clock numbers the report carries
+//! two runner-speed-independent facts: the packed bytes/element of each
+//! width (pure arithmetic, identical on every machine) and the
+//! deterministic work-unit count (elements quantized per timed closure),
+//! so two BENCH_perf_kernels.json files from different hardware can still
+//! be compared structurally.
+//!
+//! Regenerate with `cargo bench --bench perf_kernels`; CI runs
+//! `-- --quick` with `TQSGD_BENCH_JSON=BENCH_perf_kernels.json` and gates
+//! `kernel_encode_b4_melems_per_s` against `BENCH_baseline.json`
+//! (`tqsgd perf-check`). `TQSGD_FORCE_SCALAR=1` turns the dispatched
+//! column into a second scalar run (useful for measuring harness noise).
+
+use tqsgd::benchkit::{bench, section, BenchOpts, Report, Table};
+use tqsgd::quant::bitpack;
+use tqsgd::quant::simd::{detected_kernels, scalar_kernels};
+use tqsgd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_and_args();
+    let mut report = Report::new("perf_kernels", &opts);
+    let (warmup, runs) = if opts.quick { (1, 4) } else { (2, 8) };
+    let mut rng = Rng::new(99);
+    let d = 1 << 20; // 1M elements, matching perf_hotpath's working set
+    let grads: Vec<f32> =
+        (0..d).map(|_| rng.power_law_gradient(0.01, 4.0, 0.2) as f32).collect();
+
+    let sc = scalar_kernels();
+    let dt = detected_kernels();
+    println!(
+        "kernel tables: scalar = {}, detected = {}, active = {}",
+        sc.isa,
+        dt.isa,
+        tqsgd::quant::simd::active_kernels().isa
+    );
+    report.metric("kernel_bench_work_melems", d as f64 / 1e6);
+
+    // One-shot bit-identity checks on the exact benchmark inputs. Cheap
+    // relative to the timed runs, and they turn a silent divergence into a
+    // loud bench failure (the property suite covers the general case).
+    let alpha = 0.05f32;
+    for bits in [2u32, 4, 8, 12] {
+        let s = (1u32 << bits) - 1;
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let (mut r1, mut r2) = (Rng::new(1), Rng::new(1));
+        (sc.quantize_uniform_pack_into)(&grads, &mut r1, alpha, s, bits, &mut a);
+        (dt.quantize_uniform_pack_into)(&grads, &mut r2, alpha, s, bits, &mut b);
+        assert_eq!(a, b, "uniform b{bits}: dispatched bytes differ from scalar");
+    }
+    let codebook: Vec<f32> =
+        vec![-0.9, -0.45, -0.15, -0.03, 0.03, 0.15, 0.45, 0.9];
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    let (mut r1, mut r2) = (Rng::new(1), Rng::new(1));
+    (sc.quantize_codebook_pack_into)(&grads, &mut r1, &codebook, 3, &mut a);
+    (dt.quantize_codebook_pack_into)(&grads, &mut r2, &codebook, 3, &mut b);
+    assert_eq!(a, b, "codebook b3: dispatched bytes differ from scalar");
+    let mut wlut = [0.0f32; 256];
+    for (w, &c) in wlut.iter_mut().zip(&codebook) {
+        *w = 0.125 * c;
+    }
+    let (mut acc_s, mut acc_d) = (vec![0.0f32; d], vec![0.0f32; d]);
+    (sc.accumulate_packed_wlut)(&a, 3, codebook.len(), &wlut, &mut acc_s).unwrap();
+    (dt.accumulate_packed_wlut)(&b, 3, codebook.len(), &wlut, &mut acc_d).unwrap();
+    assert!(
+        acc_s.iter().zip(&acc_d).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "accumulate b3: dispatched sums differ from scalar"
+    );
+    assert_eq!(
+        (sc.max_abs)(&grads).to_bits(),
+        (dt.max_abs)(&grads).to_bits(),
+        "max_abs: dispatched result differs from scalar"
+    );
+    println!("bit-identity spot checks passed ({} vs {})", sc.isa, dt.isa);
+
+    section("uniform quantize+pack (1M elements, single core)");
+    let mut t = Table::new(&[
+        "bits",
+        "scalar",
+        "dispatched",
+        "speedup",
+        "Melem/s",
+        "bytes/elem",
+    ]);
+    for bits in [2u32, 4, 8, 12] {
+        let s = (1u32 << bits) - 1;
+        let mut buf = Vec::new();
+        let t_sc = bench(warmup, runs, || {
+            let mut r = Rng::new(1);
+            buf.clear();
+            (sc.quantize_uniform_pack_into)(&grads, &mut r, alpha, s, bits, &mut buf);
+            std::hint::black_box(&buf);
+        });
+        let t_dt = bench(warmup, runs, || {
+            let mut r = Rng::new(1);
+            buf.clear();
+            (dt.quantize_uniform_pack_into)(&grads, &mut r, alpha, s, bits, &mut buf);
+            std::hint::black_box(&buf);
+        });
+        let bytes_per_elem = bitpack::packed_len(d, bits) as f64 / d as f64;
+        t.row(&[
+            bits.to_string(),
+            t_sc.pretty(),
+            t_dt.pretty(),
+            format!("{:.2}x", t_sc.median_ns / t_dt.median_ns),
+            format!("{:.1}", t_dt.melems_per_s(d)),
+            format!("{bytes_per_elem:.3}"),
+        ]);
+        if bits == 4 {
+            report.metric("kernel_encode_b4_melems_per_s", t_dt.melems_per_s(d));
+            report.metric("kernel_encode_b4_scalar_melems_per_s", t_sc.melems_per_s(d));
+            report.metric(
+                "kernel_encode_b4_simd_speedup",
+                t_sc.median_ns / t_dt.median_ns,
+            );
+            report.metric("kernel_encode_b4_bytes_per_elem", bytes_per_elem);
+        }
+    }
+    t.print();
+    report.table("uniform quantize+pack (1M elements)", &t);
+
+    section("codebook quantize+pack / accumulate / max_abs (1M elements)");
+    let mut t = Table::new(&["kernel", "scalar", "dispatched", "speedup", "Melem/s"]);
+    let mut buf = Vec::new();
+    let t_sc = bench(warmup, runs, || {
+        let mut r = Rng::new(1);
+        buf.clear();
+        (sc.quantize_codebook_pack_into)(&grads, &mut r, &codebook, 3, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    let t_dt = bench(warmup, runs, || {
+        let mut r = Rng::new(1);
+        buf.clear();
+        (dt.quantize_codebook_pack_into)(&grads, &mut r, &codebook, 3, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    t.row(&[
+        "codebook b3".to_string(),
+        t_sc.pretty(),
+        t_dt.pretty(),
+        format!("{:.2}x", t_sc.median_ns / t_dt.median_ns),
+        format!("{:.1}", t_dt.melems_per_s(d)),
+    ]);
+    report.metric("kernel_codebook_b3_melems_per_s", t_dt.melems_per_s(d));
+
+    // `buf` now holds the codebook frame bytes from the last timed run
+    // (Rng::new(1) stream) — the accumulate input.
+    let mut acc = vec![0.0f32; d];
+    let t_sc = bench(warmup, runs, || {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        (sc.accumulate_packed_wlut)(&buf, 3, codebook.len(), &wlut, &mut acc).unwrap();
+        std::hint::black_box(&acc);
+    });
+    let t_dt = bench(warmup, runs, || {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        (dt.accumulate_packed_wlut)(&buf, 3, codebook.len(), &wlut, &mut acc).unwrap();
+        std::hint::black_box(&acc);
+    });
+    t.row(&[
+        "accumulate b3".to_string(),
+        t_sc.pretty(),
+        t_dt.pretty(),
+        format!("{:.2}x", t_sc.median_ns / t_dt.median_ns),
+        format!("{:.1}", t_dt.melems_per_s(d)),
+    ]);
+    report.metric("kernel_accumulate_b3_melems_per_s", t_dt.melems_per_s(d));
+
+    let t_sc = bench(warmup, runs, || {
+        std::hint::black_box((sc.max_abs)(&grads));
+    });
+    let t_dt = bench(warmup, runs, || {
+        std::hint::black_box((dt.max_abs)(&grads));
+    });
+    t.row(&[
+        "max_abs".to_string(),
+        t_sc.pretty(),
+        t_dt.pretty(),
+        format!("{:.2}x", t_sc.median_ns / t_dt.median_ns),
+        format!("{:.1}", t_dt.melems_per_s(d)),
+    ]);
+    report.metric("kernel_max_abs_melems_per_s", t_dt.melems_per_s(d));
+    t.print();
+    report.table("codebook / accumulate / max_abs (1M elements)", &t);
+
+    report.finish(&opts)?;
+    Ok(())
+}

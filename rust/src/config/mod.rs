@@ -502,6 +502,13 @@ pub struct ExperimentConfig {
     /// A pure performance knob — sharded aggregation is bit-identical to
     /// the serial path at every width.
     pub agg_shards: usize,
+    /// Client-side encode pool width for the barrier pipeline (the mirror
+    /// of `agg_shards` on the compression side): 0 = auto (one worker per
+    /// available core, capped by the client count), 1 = a single encode
+    /// worker. A pure performance knob — per-client codec state is
+    /// disjoint, so every width is bit-identical (the streaming pipeline
+    /// keeps its own worker-per-client channel design).
+    pub encode_threads: usize,
     /// Round execution mode: strict stage barriers, or the streaming
     /// pipeline that overlaps client encode with server decode. A pure
     /// performance knob — the two modes are bit-identical.
@@ -549,6 +556,7 @@ impl Default for ExperimentConfig {
             backend: "auto".into(),
             drop_client: usize::MAX,
             agg_shards: 0,
+            encode_threads: 0,
             pipeline: PipelineMode::default(),
             cohort_k: 0,
             agg_tiers: 1,
@@ -662,6 +670,7 @@ impl ExperimentConfig {
         }
         self.drop_client = args.usize_or("drop-client", self.drop_client)?;
         self.agg_shards = args.usize_or("agg-shards", self.agg_shards)?;
+        self.encode_threads = args.usize_or("encode-threads", self.encode_threads)?;
         if let Some(p) = args.get("pipeline") {
             self.pipeline = PipelineMode::parse(p)?;
         }
@@ -720,6 +729,7 @@ impl ExperimentConfig {
                 self.drop_client as f64
             })),
             ("agg_shards", json::num(self.agg_shards as f64)),
+            ("encode_threads", json::num(self.encode_threads as f64)),
             ("pipeline", json::s(self.pipeline.name())),
             ("cohort_k", json::num(self.cohort_k as f64)),
             ("agg_tiers", json::num(self.agg_tiers as f64)),
@@ -771,6 +781,8 @@ impl ExperimentConfig {
         cfg.drop_client = if dc < 0.0 { usize::MAX } else { dc as usize };
         // Negative values saturate to 0 = auto (float → usize casts clamp).
         cfg.agg_shards = getf("agg_shards", cfg.agg_shards as f64) as usize;
+        // Older configs without the field stay on auto encode-pool width.
+        cfg.encode_threads = getf("encode_threads", cfg.encode_threads as f64) as usize;
         // Older configs without the field stay on the barrier reference.
         if let Some(p) = v.get("pipeline").and_then(Value::as_str) {
             cfg.pipeline = PipelineMode::parse(p)?;
@@ -904,6 +916,7 @@ mod tests {
         c.drop_client = 3;
         c.backend = "native".into();
         c.agg_shards = 4;
+        c.encode_threads = 3;
         c.pipeline = PipelineMode::Streaming;
         c.cohort_k = 3;
         c.agg_tiers = 2;
@@ -917,6 +930,7 @@ mod tests {
         assert_eq!(c2.drop_client, 3);
         assert_eq!(c2.backend, "native");
         assert_eq!(c2.agg_shards, 4);
+        assert_eq!(c2.encode_threads, 3);
         assert_eq!(c2.pipeline, PipelineMode::Streaming);
         assert_eq!(c2.cohort_k, 3);
         assert_eq!(c2.agg_tiers, 2);
@@ -926,6 +940,7 @@ mod tests {
         // full participation / flat aggregation / unscheduled.
         let legacy = ExperimentConfig::from_json(&Value::parse("{}").unwrap()).unwrap();
         assert_eq!(legacy.agg_shards, 0);
+        assert_eq!(legacy.encode_threads, 0);
         assert_eq!(legacy.pipeline, PipelineMode::Barrier);
         assert_eq!(legacy.cohort_k, 0);
         assert_eq!(legacy.agg_tiers, 1);

@@ -109,6 +109,12 @@ pub struct Coordinator<'b> {
     /// number of layer groups). A pure performance knob — the sharded
     /// aggregation is bit-identical at every width.
     pub(crate) agg_shards: usize,
+    /// Client-side encode pool width for the barrier pipeline (resolved
+    /// from config at build: explicit `encode_threads`, or one per
+    /// available core, capped by the client count). The compression-side
+    /// mirror of `agg_shards` — a pure performance knob, bit-identical at
+    /// every width because per-client codec state is disjoint.
+    pub(crate) encode_threads: usize,
     /// Scratch: per-round staleness histogram, built in place each round so
     /// the working buffer never regrows in steady state. The round record
     /// still receives one sized-to-fit copy (it owns its data for the run
@@ -254,6 +260,12 @@ impl<'b> Coordinator<'b> {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         }
         .min(spec.groups.len().max(1));
+        let encode_threads = if cfg.encode_threads > 0 {
+            cfg.encode_threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+        .min(cfg.clients.max(1));
         let scenario = ScenarioEngine::new(cfg.scenario.clone(), cfg.clients, cfg.seed);
         let budget = if cfg.bit_budget > 0 || cfg.scenario.uplink_cap_bytes > 0 {
             let dims = spec.groups.iter().map(|g| g.end - g.start).collect();
@@ -276,6 +288,7 @@ impl<'b> Coordinator<'b> {
             round: 0,
             agg: vec![0.0; dim],
             agg_shards,
+            encode_threads,
             staleness_scratch: Vec::new(),
             hist_reallocs: 0,
             contrib: Vec::new(),
@@ -362,6 +375,13 @@ impl<'b> Coordinator<'b> {
     /// per available core, capped by the layer-group count).
     pub fn agg_shards(&self) -> usize {
         self.agg_shards
+    }
+
+    /// Resolved barrier-pipeline encode pool width (config
+    /// `encode_threads`, or one per available core, capped by the client
+    /// count).
+    pub fn encode_threads(&self) -> usize {
+        self.encode_threads
     }
 
     /// Cumulative bytes the two-tier aggregator tree (`agg_tiers = 2`) spent

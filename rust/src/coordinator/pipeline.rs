@@ -267,29 +267,45 @@ pub(crate) fn step_barrier(coord: &mut Coordinator<'_>) -> Result<RoundRecord> {
     let round = coord.round;
     apply_rate_plan(coord, round as u64, &start.active_set);
 
-    // Encode: per-client compression fanned out across threads. Strict
+    // Encode: per-client compression over a pool of `encode_threads` scoped
+    // workers, each owning a contiguous chunk of active clients. Strict
     // barrier — the round proceeds only once every encoder has joined.
+    // Chunks preserve client order and per-client codec state is disjoint,
+    // so the message vector (and every digest) is identical at any width.
     let t = Timer::start();
     let refit_now = round % coord.cfg.quant.estimate_every == 0;
     let seed = coord.cfg.seed;
+    let pool = coord.encode_threads.max(1);
     let msgs: Vec<Message> = {
         let groups: &[GroupRange] = &coord.groups;
-        let clients = &mut coord.clients;
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(start.active_len);
-            let mut k = 0usize;
-            for (i, c) in clients.iter_mut().enumerate() {
-                if !start.active_set[i] {
-                    continue;
-                }
-                let g = &start.grads[k];
-                let loss = start.losses[k];
-                k += 1;
-                handles.push(scope.spawn(move || {
-                    c.compress(g, groups, round, seed, refit_now, loss)
-                }));
+        let mut work: Vec<(&mut super::Client, &[f32], f32)> =
+            Vec::with_capacity(start.active_len);
+        let mut k = 0usize;
+        for (i, c) in coord.clients.iter_mut().enumerate() {
+            if !start.active_set[i] {
+                continue;
             }
-            handles.into_iter().map(|h| h.join().expect("codec thread")).collect()
+            work.push((c, &start.grads[k], start.losses[k]));
+            k += 1;
+        }
+        let chunk = work.len().div_ceil(pool).max(1);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = work
+                .chunks_mut(chunk)
+                .map(|ch| {
+                    scope.spawn(move || {
+                        ch.iter_mut()
+                            .map(|(c, g, loss)| {
+                                c.compress(g, groups, round, seed, refit_now, *loss)
+                            })
+                            .collect::<Vec<Message>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("codec thread"))
+                .collect()
         })
     };
     let encode_secs = t.secs();

@@ -21,7 +21,7 @@
 //! |-------|-------|------|
 //! | L3 | [`coordinator`], [`train`], [`quant`] | distributed runtime + wire codecs |
 //! | L2 | [`runtime::Backend`] — [`runtime::NativeBackend`] (default) or PJRT (`--features pjrt`, from `python/compile/{model,transformer}.py` HLO) | model fwd/bwd |
-//! | L1 | [`runtime::QuantKernel`] — scalar kernels in [`quant::kernels`] (default) or AOT Pallas via PJRT | quantizer kernels |
+//! | L1 | [`runtime::QuantKernel`] — runtime-dispatched kernels in [`quant::kernels`] (AVX2/SSE2/NEON via [`quant::simd`], scalar fallback; default) or AOT Pallas via PJRT | quantizer kernels |
 //!
 //! ## Backends and feature flags
 //!
@@ -62,6 +62,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
+// `unsafe` is denied crate-wide with ONE audited exception: the SIMD
+// intrinsics in `quant::simd` (which opts back in via `#![allow(unsafe_code)]`
+// and documents a SAFETY argument per entry point). Everything else —
+// including every public API — is safe Rust.
 #![deny(unsafe_code)]
 #![warn(missing_docs)]
 

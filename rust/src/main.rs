@@ -70,6 +70,7 @@ fn main() -> Result<()> {
                  \x20             --backend (auto|native|pjrt) --error-feedback\n\
                  \x20             --drop-client --artifacts --preset\n\
                  \x20             --agg-shards (server aggregation fan-out; 0 = auto)\n\
+                 \x20             --encode-threads (barrier encode pool; 0 = auto; bit-identical)\n\
                  \x20             --pipeline (barrier|streaming round engine; bit-identical)\n\
                  \x20             --cohort-k (clients sampled per round; 0 = all, K >= N = all)\n\
                  \x20             --agg-tiers (1 = flat aggregation; 2 = two-tier re-encoded tree)\n\

@@ -1,16 +1,32 @@
-//! Scalar quantization kernels — the rust-native hot path.
+//! Quantization kernels — the rust-native hot path.
 //!
-//! These mirror `python/compile/kernels/ref.py` operation-for-operation in
-//! f32 so that, given the same uniforms, the rust codec, the pure-jnp oracle
-//! and the Pallas kernel produce IDENTICAL indices (verified by the parity
-//! integration test through PJRT).
+//! The scalar implementations (`*_scalar`) mirror `python/compile/kernels/
+//! ref.py` operation-for-operation in f32 so that, given the same uniforms,
+//! the rust codec, the pure-jnp oracle and the Pallas kernel produce
+//! IDENTICAL indices (verified by the parity integration test through PJRT).
+//!
+//! The public functions in this module are thin wrappers that route every
+//! call through the process-wide [`KernelDispatch`](super::simd::KernelDispatch)
+//! table (resolved once from runtime CPU-feature detection — see
+//! [`super::simd`]). The SIMD implementations are required to be
+//! **bit-identical** to the scalar reference on every input — same
+//! truncation-floor rounding, same NaN behavior, same packed bytes — which
+//! the `simd_matches_scalar` property in `tests/quant_props.rs` pins for
+//! every scheme × bits 1..=16 × ragged length.
 
-/// Largest |g| over a gradient slice, with 4 independent accumulator lanes
-/// so the reduction has no loop-carried dependency chain and autovectorizes
-/// (a sequential `fold` forces one `max` per element in order). `max` is
-/// commutative/associative and ignores NaN operands on either side, so the
-/// result is identical to the sequential fold for every input.
+/// Largest |g| over a gradient slice (dispatched; see [`super::simd`]).
+///
+/// `max` is commutative/associative and ignores NaN operands on either
+/// side, so every lane width reduces to the same f32 as the sequential
+/// fold, for every input — pinned by `max_abs_nan_and_negzero_parity`.
 pub fn max_abs(grads: &[f32]) -> f32 {
+    (super::simd::active_kernels().max_abs)(grads)
+}
+
+/// Scalar `max_abs`: 4 independent accumulator lanes so the reduction has
+/// no loop-carried dependency chain and autovectorizes (a sequential `fold`
+/// forces one `max` per element in order).
+pub(crate) fn max_abs_scalar(grads: &[f32]) -> f32 {
     let mut lanes = [0.0f32; 4];
     let mut chunks = grads.chunks_exact(4);
     for c in &mut chunks {
@@ -31,7 +47,9 @@ pub fn max_abs(grads: &[f32]) -> f32 {
 /// precomputed `w * level_k` table (identical f32 product to the unfused
 /// `acc += w * levels[idx]`, computed once per level instead of once per
 /// element). This is the server-side decode hot path: one bitstream walk,
-/// no dense scratch buffer between decode and accumulate.
+/// no dense scratch buffer between decode and accumulate. Dispatched (see
+/// [`super::simd`]); every ISA path produces bit-identical `acc` contents,
+/// including the partially-written prefix on the error path.
 ///
 /// `packed` must hold at least `bitpack::packed_len(acc.len(), bits)` bytes
 /// (the wire-layer caller checks before dispatching) and `bits` must be in
@@ -48,9 +66,35 @@ pub fn accumulate_packed_wlut(
 ) -> Result<(), u32> {
     debug_assert!((1..=8).contains(&bits));
     debug_assert!(packed.len() >= super::bitpack::packed_len(acc.len(), bits));
+    (super::simd::active_kernels().accumulate_packed_wlut)(packed, bits, n_levels, wlut, acc)
+}
+
+/// Scalar `accumulate_packed_wlut` over the whole payload.
+pub(crate) fn accumulate_packed_wlut_scalar(
+    packed: &[u8],
+    bits: u32,
+    n_levels: usize,
+    wlut: &[f32; 256],
+    acc: &mut [f32],
+) -> Result<(), u32> {
+    accumulate_packed_wlut_from(packed, bits, n_levels, wlut, acc, 0)
+}
+
+/// Scalar accumulate walk starting at element `start` — the shared tail for
+/// the SIMD block paths, which hand over here for the ragged end of the
+/// stream (and to reproduce the exact partial-write + `Err` semantics when
+/// a block contains an out-of-range index).
+pub(crate) fn accumulate_packed_wlut_from(
+    packed: &[u8],
+    bits: u32,
+    n_levels: usize,
+    wlut: &[f32; 256],
+    acc: &mut [f32],
+    start: usize,
+) -> Result<(), u32> {
     let mask = (1u32 << bits) - 1;
-    let mut bitpos = 0usize;
-    for a in acc.iter_mut() {
+    let mut bitpos = start * bits as usize;
+    for a in acc[start..].iter_mut() {
         let byte = bitpos >> 3;
         let off = (bitpos & 7) as u32;
         let mut wide = packed[byte] as u32;
@@ -108,9 +152,22 @@ pub fn quantize_codebook_elem(g: f32, u: f32, codebook: &[f32]) -> u32 {
     (k + usize::from(u < frac)) as u32
 }
 
-/// Vectorized uniform quantization into a preallocated index buffer.
+/// Vectorized uniform quantization into a preallocated index buffer
+/// (dispatched; the table currently maps this Pallas-parity reference
+/// surface to the scalar implementation on every ISA).
 /// `uniforms` must have the same length as `grads`.
 pub fn quantize_uniform_slice(
+    grads: &[f32],
+    uniforms: &[f32],
+    alpha: f32,
+    s: u32,
+    out: &mut Vec<u32>,
+) {
+    (super::simd::active_kernels().quantize_uniform_slice)(grads, uniforms, alpha, s, out)
+}
+
+/// Scalar `quantize_uniform_slice` — the reference index computation.
+pub(crate) fn quantize_uniform_slice_scalar(
     grads: &[f32],
     uniforms: &[f32],
     alpha: f32,
@@ -134,9 +191,9 @@ pub fn quantize_uniform_slice(
 }
 
 /// Streaming LSB-first bit writer: accumulates ≤ 8-bit indices in a u64 and
-/// flushes whole bytes, so the fused pack loops share one copy of the flush
-/// arithmetic. Output is bit-identical to `bitpack::pack`.
-struct BitWriter<'a> {
+/// flushes whole bytes, so the fused pack loops (scalar and SIMD) share one
+/// copy of the flush arithmetic. Output is bit-identical to `bitpack::pack`.
+pub(crate) struct BitWriter<'a> {
     out: &'a mut Vec<u8>,
     acc: u64,
     nbits: u32,
@@ -144,13 +201,13 @@ struct BitWriter<'a> {
 
 impl<'a> BitWriter<'a> {
     #[inline(always)]
-    fn new(out: &'a mut Vec<u8>) -> Self {
+    pub(crate) fn new(out: &'a mut Vec<u8>) -> Self {
         BitWriter { out, acc: 0, nbits: 0 }
     }
 
     /// Append the low `bits` (≤ 8) of `idx`.
     #[inline(always)]
-    fn push(&mut self, idx: u64, bits: u32) {
+    pub(crate) fn push(&mut self, idx: u64, bits: u32) {
         self.acc |= idx << self.nbits;
         self.nbits += bits;
         if self.nbits >= 56 {
@@ -163,7 +220,7 @@ impl<'a> BitWriter<'a> {
     }
 
     /// Drain the remaining bits, zero-padded to whole bytes.
-    fn finish(mut self) {
+    pub(crate) fn finish(mut self) {
         while self.nbits > 0 {
             self.out.push((self.acc & 0xFF) as u8);
             self.acc >>= 8;
@@ -181,10 +238,11 @@ impl<'a> BitWriter<'a> {
 ///
 /// With a recycled `out` of sufficient capacity this performs zero heap
 /// allocation; it is the production hot path behind
-/// [`Compressor::compress_into`](super::Compressor::compress_into). The
-/// unfused slice functions remain the reference and the Pallas-parity
-/// surface, and the packed bytes are bit-identical to
-/// `bitpack::pack(&indices, bits)`.
+/// [`Compressor::compress_into`](super::Compressor::compress_into).
+/// Dispatched (see [`super::simd`]): the SIMD block paths quantize 4–8
+/// elements per iteration and are bit-identical to the scalar kernel —
+/// same RNG stream order, same indices, same packed bytes. The unfused
+/// slice functions remain the reference and the Pallas-parity surface.
 ///
 /// Widths above 8 bits (legal up to [`crate::config::MAX_BITS`]) take a
 /// staged cold path — quantize into an index buffer, then `bitpack::pack`
@@ -200,6 +258,19 @@ pub fn quantize_uniform_pack_into(
 ) {
     debug_assert!((1..=crate::config::MAX_BITS).contains(&bits));
     debug_assert!(s < (1 << bits));
+    (super::simd::active_kernels().quantize_uniform_pack_into)(grads, rng, alpha, s, bits, out)
+}
+
+/// Scalar fused uniform quantize + pack (the dispatch fallback and the
+/// bit-exactness reference for every SIMD path).
+pub(crate) fn quantize_uniform_pack_into_scalar(
+    grads: &[f32],
+    rng: &mut crate::util::Rng,
+    alpha: f32,
+    s: u32,
+    bits: u32,
+    out: &mut Vec<u8>,
+) {
     out.reserve(super::bitpack::packed_len(grads.len(), bits));
     let step = 2.0f32 * alpha / s as f32;
     let inv_step = 1.0f32 / step;
@@ -239,7 +310,7 @@ pub fn quantize_uniform_pack_into(
 
 /// Fused quantize + bit-pack for a codebook quantizer (same contract,
 /// accumulator scheme, and staged >8-bit cold path as
-/// [`quantize_uniform_pack_into`]).
+/// [`quantize_uniform_pack_into`]; dispatched, see [`super::simd`]).
 pub fn quantize_codebook_pack_into(
     grads: &[f32],
     rng: &mut crate::util::Rng,
@@ -247,9 +318,21 @@ pub fn quantize_codebook_pack_into(
     bits: u32,
     out: &mut Vec<u8>,
 ) {
-    let s = codebook.len() - 1;
     debug_assert!((1..=crate::config::MAX_BITS).contains(&bits));
-    debug_assert!(s < (1 << bits));
+    debug_assert!(codebook.len() - 1 < (1 << bits));
+    (super::simd::active_kernels().quantize_codebook_pack_into)(grads, rng, codebook, bits, out)
+}
+
+/// Scalar fused codebook quantize + pack (dispatch fallback and SIMD
+/// reference; also serves wide codebooks the block paths delegate back).
+pub(crate) fn quantize_codebook_pack_into_scalar(
+    grads: &[f32],
+    rng: &mut crate::util::Rng,
+    codebook: &[f32],
+    bits: u32,
+    out: &mut Vec<u8>,
+) {
+    let s = codebook.len() - 1;
     out.reserve(super::bitpack::packed_len(grads.len(), bits));
     let lo_bound = codebook[0];
     let hi_bound = codebook[s];
@@ -280,8 +363,19 @@ pub fn quantize_codebook_pack_into(
     w.finish();
 }
 
-/// Vectorized codebook quantization.
+/// Vectorized codebook quantization (dispatched; the table currently maps
+/// this reference surface to the scalar implementation on every ISA).
 pub fn quantize_codebook_slice(
+    grads: &[f32],
+    uniforms: &[f32],
+    codebook: &[f32],
+    out: &mut Vec<u32>,
+) {
+    (super::simd::active_kernels().quantize_codebook_slice)(grads, uniforms, codebook, out)
+}
+
+/// Scalar `quantize_codebook_slice`.
+pub(crate) fn quantize_codebook_slice_scalar(
     grads: &[f32],
     uniforms: &[f32],
     codebook: &[f32],
@@ -315,6 +409,39 @@ mod tests {
         assert_eq!(max_abs(&g), 3.0);
         g.truncate(2);
         assert_eq!(max_abs(&g), 0.5);
+    }
+
+    #[test]
+    fn max_abs_nan_and_negzero_parity() {
+        // Pin the NaN/−0.0 contract on BOTH dispatch paths: a NaN candidate
+        // is ignored (scalar `f32::max` returns the non-NaN operand; the
+        // SIMD paths must place the accumulator in the NaN-ignoring operand
+        // position), −0.0 folds to +0.0, and the result is bitwise equal
+        // between the forced-scalar and the detected table for every ragged
+        // length around the widest lane boundary.
+        let sc = crate::quant::simd::scalar_kernels();
+        let dt = crate::quant::simd::detected_kernels();
+        for n in 0..=33usize {
+            // NaNs sprinkled at every position in turn, plus signed zeros.
+            for nan_at in 0..=n {
+                let mut g: Vec<f32> = (0..n)
+                    .map(|i| if i % 3 == 0 { -0.0 } else { (i as f32 - 7.0) * 0.25 })
+                    .collect();
+                if nan_at < n {
+                    g[nan_at] = f32::NAN;
+                }
+                let a = (sc.max_abs)(&g);
+                let b = (dt.max_abs)(&g);
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} nan_at={nan_at} ({a} vs {b})");
+                let want = g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                assert_eq!(a.to_bits(), want.to_bits(), "n={n} nan_at={nan_at}");
+            }
+        }
+        // All-NaN and all-(−0.0) inputs collapse to +0.0 on both paths.
+        for g in [vec![f32::NAN; 9], vec![-0.0f32; 9]] {
+            assert_eq!((sc.max_abs)(&g).to_bits(), 0.0f32.to_bits());
+            assert_eq!((dt.max_abs)(&g).to_bits(), 0.0f32.to_bits());
+        }
     }
 
     #[test]

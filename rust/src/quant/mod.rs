@@ -3,6 +3,8 @@
 //!
 //! * [`kernels`] — scalar/slice quantization primitives (mirror ref.py),
 //!   plus the fused quantize→pack streaming kernels of the encode hot path,
+//! * [`simd`] — runtime-dispatched SIMD implementations of the hot kernels
+//!   (AVX2/SSE2/NEON, bit-identical to scalar; see [`simd::KernelDispatch`]),
 //! * [`bitpack`] — tight n-bit index packing,
 //! * [`wire`] — self-describing frames (the bytes on the simulated network),
 //! * [`codecs`] — TQSGD / TNQSGD / TBQSGD + QSGD / NQSGD / TernGrad / Top-k /
@@ -18,6 +20,7 @@ pub mod budget;
 pub mod codecs;
 pub mod error_feedback;
 pub mod kernels;
+pub mod simd;
 pub mod wire;
 
 pub use arena::FrameArena;

@@ -1,0 +1,1067 @@
+//! Runtime-dispatched SIMD implementations of the quantization hot kernels.
+//!
+//! The three hot loops (`quantize_uniform_pack_into`,
+//! `quantize_codebook_pack_into`, `accumulate_packed_wlut`) plus `max_abs`
+//! get explicit `std::arch` implementations — AVX2 and SSE2 on x86_64, NEON
+//! on aarch64 — selected **once per process** into a [`KernelDispatch`]
+//! table so the per-call overhead is a single indirect call. Everything
+//! else (the unfused slice surfaces the Pallas-parity tests exercise) is
+//! routed through the same table but currently maps to the scalar
+//! reference on every ISA.
+//!
+//! # Bit-identity contract
+//!
+//! Every entry must produce **bit-identical** results to the scalar
+//! reference in [`super::kernels`] on every input — same truncation-floor
+//! rounding, same NaN behavior, same packed bytes, same RNG stream order
+//! (one `f32` draw per element, in element order), same partial-write +
+//! `Err` semantics on corrupt codebook frames. The load-bearing intrinsic
+//! facts, each pinned by `simd_matches_scalar` in `tests/quant_props.rs`:
+//!
+//! * x86 `MINPS`/`MAXPS` return the **second** operand when either input
+//!   is NaN (and on ±0.0 ties). Bounds go in the first operand and the
+//!   value in the second to reproduce scalar `clamp`; `x` goes first in
+//!   `min(x, s_m1)` to reproduce `f32::min`'s return-the-other-operand
+//!   NaN rule.
+//! * NEON `FMIN`/`FMAX` **propagate** NaN instead, so the NEON paths
+//!   select on a `x == x` self-compare mask where the scalar semantics
+//!   require the non-NaN operand.
+//! * Ordered compares (`_CMP_LT_OQ`/`CMPLTPS`/`FCMLT`) are false on NaN,
+//!   matching scalar `<`.
+//! * `CVTTPS2DQ`/`FCVTZU` truncate toward zero, matching `as u32` for the
+//!   in-range [0, 65534] values the index math produces.
+//!
+//! # Dispatch override
+//!
+//! Setting `TQSGD_FORCE_SCALAR` to anything other than empty/`0` pins the
+//! process to the scalar table — CI runs the whole test suite once per
+//! mode. Tests that want both tables side by side in one process use
+//! [`scalar_kernels`]/[`detected_kernels`] directly instead of the env
+//! knob (the [`active_kernels`] choice is latched on first use).
+//!
+//! This module is the crate's single exception to `deny(unsafe_code)`:
+//! every `unsafe` block is a `std::arch` intrinsic call (or the raw
+//! pointer loads/stores feeding it) guarded by the runtime feature
+//! detection that installed the containing function into a table.
+#![allow(unsafe_code)]
+
+use std::sync::OnceLock;
+
+use super::kernels;
+use crate::util::Rng;
+
+/// Resolved kernel table: one function pointer per dispatched kernel.
+///
+/// Obtain one via [`active_kernels`] (honors `TQSGD_FORCE_SCALAR`),
+/// [`detected_kernels`] (best ISA for this CPU) or [`scalar_kernels`]
+/// (portable reference). All entries of all tables are safe to call on the
+/// machine that produced the table.
+pub struct KernelDispatch {
+    /// Short ISA tag for logs and bench reports: `"scalar"`, `"sse2"`,
+    /// `"avx2"` or `"neon"`.
+    pub isa: &'static str,
+    /// Largest |g| over a slice — see [`kernels::max_abs`].
+    pub max_abs: fn(&[f32]) -> f32,
+    /// Fused unpack → LUT dequantize → weighted accumulate — see
+    /// [`kernels::accumulate_packed_wlut`].
+    pub accumulate_packed_wlut:
+        fn(&[u8], u32, usize, &[f32; 256], &mut [f32]) -> Result<(), u32>,
+    /// Fused uniform quantize + bit-pack — see
+    /// [`kernels::quantize_uniform_pack_into`].
+    pub quantize_uniform_pack_into: fn(&[f32], &mut Rng, f32, u32, u32, &mut Vec<u8>),
+    /// Fused codebook quantize + bit-pack — see
+    /// [`kernels::quantize_codebook_pack_into`].
+    pub quantize_codebook_pack_into: fn(&[f32], &mut Rng, &[f32], u32, &mut Vec<u8>),
+    /// Unfused uniform quantize into an index buffer (Pallas-parity
+    /// reference surface; scalar on every ISA today).
+    pub quantize_uniform_slice: fn(&[f32], &[f32], f32, u32, &mut Vec<u32>),
+    /// Unfused codebook quantize into an index buffer (reference surface;
+    /// scalar on every ISA today).
+    pub quantize_codebook_slice: fn(&[f32], &[f32], &[f32], &mut Vec<u32>),
+}
+
+static SCALAR: KernelDispatch = KernelDispatch {
+    isa: "scalar",
+    max_abs: kernels::max_abs_scalar,
+    accumulate_packed_wlut: kernels::accumulate_packed_wlut_scalar,
+    quantize_uniform_pack_into: kernels::quantize_uniform_pack_into_scalar,
+    quantize_codebook_pack_into: kernels::quantize_codebook_pack_into_scalar,
+    quantize_uniform_slice: kernels::quantize_uniform_slice_scalar,
+    quantize_codebook_slice: kernels::quantize_codebook_slice_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelDispatch = KernelDispatch {
+    isa: "avx2",
+    max_abs: x86::avx2::max_abs,
+    accumulate_packed_wlut: x86::avx2::accumulate_packed_wlut,
+    quantize_uniform_pack_into: x86::avx2::quantize_uniform_pack_into,
+    quantize_codebook_pack_into: x86::avx2::quantize_codebook_pack_into,
+    quantize_uniform_slice: kernels::quantize_uniform_slice_scalar,
+    quantize_codebook_slice: kernels::quantize_codebook_slice_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+static SSE2: KernelDispatch = KernelDispatch {
+    isa: "sse2",
+    max_abs: x86::sse2::max_abs,
+    accumulate_packed_wlut: x86::sse2::accumulate_packed_wlut,
+    quantize_uniform_pack_into: x86::sse2::quantize_uniform_pack_into,
+    quantize_codebook_pack_into: x86::sse2::quantize_codebook_pack_into,
+    quantize_uniform_slice: kernels::quantize_uniform_slice_scalar,
+    quantize_codebook_slice: kernels::quantize_codebook_slice_scalar,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelDispatch = KernelDispatch {
+    isa: "neon",
+    max_abs: neon::max_abs,
+    accumulate_packed_wlut: neon::accumulate_packed_wlut,
+    quantize_uniform_pack_into: neon::quantize_uniform_pack_into,
+    quantize_codebook_pack_into: neon::quantize_codebook_pack_into,
+    quantize_uniform_slice: kernels::quantize_uniform_slice_scalar,
+    quantize_codebook_slice: kernels::quantize_codebook_slice_scalar,
+};
+
+/// The portable scalar reference table (always available, never SIMD).
+pub fn scalar_kernels() -> &'static KernelDispatch {
+    &SCALAR
+}
+
+/// The best table runtime CPU-feature detection allows on this machine,
+/// ignoring the `TQSGD_FORCE_SCALAR` override: AVX2 if detected, else the
+/// x86_64-baseline SSE2 on x86_64; NEON (architecturally mandatory) on
+/// aarch64; scalar elsewhere.
+pub fn detected_kernels() -> &'static KernelDispatch {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            &AVX2
+        } else {
+            &SSE2
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        &NEON
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        &SCALAR
+    }
+}
+
+/// The process-wide table every public kernel wrapper routes through.
+///
+/// Resolved exactly once, on first use: [`detected_kernels`] unless the
+/// `TQSGD_FORCE_SCALAR` environment variable is set to something other
+/// than empty or `0`, in which case the scalar table is pinned (the CI
+/// test matrix runs both modes; digests are identical by the bit-identity
+/// contract, see `docs/DETERMINISM.md` §8).
+pub fn active_kernels() -> &'static KernelDispatch {
+    static ACTIVE: OnceLock<&'static KernelDispatch> = OnceLock::new();
+    ACTIVE.get_or_init(|| match std::env::var("TQSGD_FORCE_SCALAR") {
+        Ok(v) if !v.is_empty() && v != "0" => scalar_kernels(),
+        _ => detected_kernels(),
+    })
+}
+
+/// Codebooks wider than this many interior boundaries fall back to the
+/// scalar binary search: the SIMD path counts boundaries linearly (one
+/// vector compare per boundary per block), which beats `partition_point`'s
+/// branchy O(log s) walk only while the codebook is small. Production
+/// codebooks at b ≤ 5 have ≤ 30 interior boundaries.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const CB_SIMD_MAX_INTERIOR: usize = 32;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 (8-lane) and SSE2 (4-lane, x86_64 baseline) kernel bodies.
+    //!
+    //! Both reuse the scalar expressions verbatim for ragged tails and
+    //! delegate to `accumulate_packed_wlut_from` for the accumulate tail,
+    //! so every non-block element goes through literally the same code as
+    //! the scalar table.
+
+    pub(crate) mod avx2 {
+        use crate::quant::bitpack;
+        use crate::quant::kernels::{self, BitWriter};
+        use crate::util::Rng;
+        use std::arch::x86_64::*;
+
+        /// Broadcast constants for the uniform block math.
+        #[derive(Clone, Copy)]
+        struct UniC {
+            alpha: __m256,
+            neg_alpha: __m256,
+            inv_step: __m256,
+            s_m1: __m256,
+        }
+
+        /// Quantize 8 elements: indices (pre-`.min(s)`) into `ibuf`.
+        #[inline]
+        #[target_feature(enable = "avx2")]
+        unsafe fn uniform_idx8(gp: *const f32, ubuf: &[f32; 8], c: UniC, ibuf: &mut [u32; 8]) {
+            let vg = _mm256_loadu_ps(gp);
+            // clamp(-alpha, alpha): bounds in the FIRST operand, value in
+            // the SECOND — MINPS/MAXPS return the second operand on NaN
+            // and on ±0.0 ties, which reproduces scalar `clamp` exactly
+            // (NaN g stays NaN, g's zero sign survives).
+            let gc = _mm256_min_ps(c.alpha, _mm256_max_ps(c.neg_alpha, vg));
+            let x = _mm256_mul_ps(_mm256_add_ps(gc, c.alpha), c.inv_step);
+            // x.min(s_m1): x first, so NaN x yields s_m1 — scalar
+            // `f32::min` returns the other operand on NaN.
+            let xc = _mm256_min_ps(x, c.s_m1);
+            // xc ∈ [0, s-1], s ≤ 65535 ≪ 2^24: CVTT truncation == `as u32`
+            // and the round-trip back to f32 is exact.
+            let lo_i = _mm256_cvttps_epi32(xc);
+            let lo_f = _mm256_cvtepi32_ps(lo_i);
+            // frac from the ORIGINAL x (not xc), like the scalar kernel.
+            let frac = _mm256_sub_ps(x, lo_f);
+            let u = _mm256_loadu_ps(ubuf.as_ptr());
+            // Ordered compare: false on NaN frac, like scalar `u < frac`.
+            let bump = _mm256_cmp_ps::<_CMP_LT_OQ>(u, frac);
+            // True lanes are all-ones (−1): subtracting adds the bump.
+            let idx = _mm256_sub_epi32(lo_i, _mm256_castps_si256(bump));
+            _mm256_storeu_si256(ibuf.as_mut_ptr().cast(), idx);
+        }
+
+        #[target_feature(enable = "avx2")]
+        unsafe fn uniform_pack_imp(
+            grads: &[f32],
+            rng: &mut Rng,
+            alpha: f32,
+            s: u32,
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            out.reserve(bitpack::packed_len(grads.len(), bits));
+            let step = 2.0f32 * alpha / s as f32;
+            let inv_step = 1.0f32 / step;
+            let s_m1 = (s - 1) as f32;
+            let c = UniC {
+                alpha: _mm256_set1_ps(alpha),
+                neg_alpha: _mm256_set1_ps(-alpha),
+                inv_step: _mm256_set1_ps(inv_step),
+                s_m1: _mm256_set1_ps(s_m1),
+            };
+            let n = grads.len();
+            // Uniforms are drawn 8-at-a-time into a stack buffer in element
+            // order, so the RNG stream is identical to the scalar loop's
+            // one-draw-per-element order.
+            let mut ubuf = [0.0f32; 8];
+            let mut ibuf = [0u32; 8];
+            let mut i = 0usize;
+            if bits > 8 {
+                // Staged cold path (wide indices): SIMD quantize into the
+                // index buffer, then the shared bitpack.
+                let mut idx = Vec::with_capacity(n);
+                while i + 8 <= n {
+                    for u in ubuf.iter_mut() {
+                        *u = rng.f32();
+                    }
+                    uniform_idx8(grads.as_ptr().add(i), &ubuf, c, &mut ibuf);
+                    for &k in &ibuf {
+                        idx.push(k.min(s));
+                    }
+                    i += 8;
+                }
+                for &g in &grads[i..] {
+                    let u = rng.f32();
+                    let gc = g.clamp(-alpha, alpha);
+                    let x = (gc + alpha) * inv_step;
+                    let lo = x.min(s_m1) as u32;
+                    idx.push((lo + u32::from(u < x - lo as f32)).min(s));
+                }
+                out.extend_from_slice(&bitpack::pack(&idx, bits));
+                return;
+            }
+            let mut w = BitWriter::new(out);
+            while i + 8 <= n {
+                for u in ubuf.iter_mut() {
+                    *u = rng.f32();
+                }
+                uniform_idx8(grads.as_ptr().add(i), &ubuf, c, &mut ibuf);
+                for &k in &ibuf {
+                    w.push(u64::from(k.min(s)), bits);
+                }
+                i += 8;
+            }
+            for &g in &grads[i..] {
+                let u = rng.f32();
+                let gc = g.clamp(-alpha, alpha);
+                let x = (gc + alpha) * inv_step;
+                let lo = x.min(s_m1) as u32;
+                let idx = (lo + u32::from(u < x - lo as f32)).min(s);
+                w.push(u64::from(idx), bits);
+            }
+            w.finish();
+        }
+
+        pub(crate) fn quantize_uniform_pack_into(
+            grads: &[f32],
+            rng: &mut Rng,
+            alpha: f32,
+            s: u32,
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            // SAFETY: this entry is only installed in the AVX2 table,
+            // selected after `is_x86_feature_detected!("avx2")` succeeded.
+            unsafe { uniform_pack_imp(grads, rng, alpha, s, bits, out) }
+        }
+
+        #[target_feature(enable = "avx2")]
+        unsafe fn codebook_pack_imp(
+            grads: &[f32],
+            rng: &mut Rng,
+            codebook: &[f32],
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            let s = codebook.len() - 1;
+            out.reserve(bitpack::packed_len(grads.len(), bits));
+            let lo_bound = codebook[0];
+            let hi_bound = codebook[s];
+            let interior = &codebook[1..s];
+            let vlo = _mm256_set1_ps(lo_bound);
+            let vhi = _mm256_set1_ps(hi_bound);
+            let n = grads.len();
+            let mut kbuf = [0u32; 8];
+            let mut gbuf = [0.0f32; 8];
+            let mut w = BitWriter::new(out);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let vg = _mm256_loadu_ps(grads.as_ptr().add(i));
+                // Same operand discipline as the uniform clamp.
+                let gc = _mm256_min_ps(vhi, _mm256_max_ps(vlo, vg));
+                // k = #{interior boundaries ≤ gc}: a linear compare-count,
+                // equal to scalar `partition_point` on a sorted codebook
+                // (and 0 for NaN gc — ordered compares are false on NaN).
+                let mut kv = _mm256_setzero_si256();
+                for &b in interior {
+                    let le = _mm256_cmp_ps::<_CMP_LE_OQ>(_mm256_set1_ps(b), gc);
+                    kv = _mm256_sub_epi32(kv, _mm256_castps_si256(le));
+                }
+                _mm256_storeu_si256(kbuf.as_mut_ptr().cast(), kv);
+                _mm256_storeu_ps(gbuf.as_mut_ptr(), gc);
+                // Per-lane epilogue in element order: the interpolation
+                // draws its uniform AFTER k is known and k consumes no
+                // RNG, so the stream order matches the scalar loop.
+                for (&k32, &gcj) in kbuf.iter().zip(&gbuf) {
+                    let k = k32 as usize;
+                    let lower = codebook[k];
+                    let width = codebook[k + 1] - lower;
+                    let frac = if width > 0.0 { (gcj - lower) / width } else { 0.0 };
+                    let idx = (k + usize::from(rng.f32() < frac)) as u64;
+                    w.push(idx, bits);
+                }
+                i += 8;
+            }
+            for &g in &grads[i..] {
+                let gc = g.clamp(lo_bound, hi_bound);
+                let k = interior.partition_point(|&b| b <= gc);
+                let lower = codebook[k];
+                let width = codebook[k + 1] - lower;
+                let frac = if width > 0.0 { (gc - lower) / width } else { 0.0 };
+                let idx = (k + usize::from(rng.f32() < frac)) as u64;
+                w.push(idx, bits);
+            }
+            w.finish();
+        }
+
+        pub(crate) fn quantize_codebook_pack_into(
+            grads: &[f32],
+            rng: &mut Rng,
+            codebook: &[f32],
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            if bits > 8 || codebook.len().saturating_sub(2) > super::super::CB_SIMD_MAX_INTERIOR {
+                return kernels::quantize_codebook_pack_into_scalar(grads, rng, codebook, bits, out);
+            }
+            // SAFETY: installed only in the AVX2 table (runtime-detected).
+            unsafe { codebook_pack_imp(grads, rng, codebook, bits, out) }
+        }
+
+        #[target_feature(enable = "avx2")]
+        unsafe fn accumulate_imp(
+            packed: &[u8],
+            bits: u32,
+            n_levels: usize,
+            wlut: &[f32; 256],
+            acc: &mut [f32],
+        ) -> Result<(), u32> {
+            let mask = (1u64 << bits) - 1;
+            let n = acc.len();
+            let mut e = 0usize;
+            // 8-element blocks start on a byte boundary for every bits in
+            // 1..=8 (8·bits ≡ 0 mod 8), so each block is one u64 window.
+            'blocks: while e + 8 <= n {
+                let byte = (e * bits as usize) >> 3;
+                let Some(win) = packed.get(byte..byte + 8) else { break };
+                let word = u64::from_le_bytes(win.try_into().unwrap());
+                let mut ib = [0u32; 8];
+                for (j, slot) in ib.iter_mut().enumerate() {
+                    let idx = ((word >> (j as u32 * bits)) & mask) as u32;
+                    if idx as usize >= n_levels {
+                        // Hand the whole block to the scalar walk so the
+                        // partially-written prefix and the Err(first_bad)
+                        // match it bit-for-bit.
+                        break 'blocks;
+                    }
+                    *slot = idx;
+                }
+                let vi = _mm256_loadu_si256(ib.as_ptr().cast());
+                let lut = _mm256_i32gather_ps::<4>(wlut.as_ptr(), vi);
+                let a = _mm256_loadu_ps(acc.as_ptr().add(e));
+                _mm256_storeu_ps(acc.as_mut_ptr().add(e), _mm256_add_ps(a, lut));
+                e += 8;
+            }
+            kernels::accumulate_packed_wlut_from(packed, bits, n_levels, wlut, acc, e)
+        }
+
+        pub(crate) fn accumulate_packed_wlut(
+            packed: &[u8],
+            bits: u32,
+            n_levels: usize,
+            wlut: &[f32; 256],
+            acc: &mut [f32],
+        ) -> Result<(), u32> {
+            if bits > 8 {
+                // An 8-element block only fits the u64 window for bits ≤ 8
+                // (callers with a 256-entry LUT never exceed it, but the
+                // table entry must not rely on that).
+                return kernels::accumulate_packed_wlut_scalar(packed, bits, n_levels, wlut, acc);
+            }
+            // SAFETY: installed only in the AVX2 table (runtime-detected).
+            unsafe { accumulate_imp(packed, bits, n_levels, wlut, acc) }
+        }
+
+        #[target_feature(enable = "avx2")]
+        unsafe fn max_abs_imp(grads: &[f32]) -> f32 {
+            let sign = _mm256_set1_ps(-0.0);
+            let mut acc = _mm256_setzero_ps();
+            let mut chunks = grads.chunks_exact(8);
+            for c in &mut chunks {
+                let v = _mm256_loadu_ps(c.as_ptr());
+                // abs via sign-bit clear; MAXPS with the candidate FIRST
+                // returns the accumulator (second operand) when the
+                // candidate is NaN — NaN elements are ignored exactly like
+                // scalar `f32::max`. The accumulator itself is never NaN.
+                acc = _mm256_max_ps(_mm256_andnot_ps(sign, v), acc);
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+            // All lanes are non-NaN and ≥ +0.0, so any reduction order
+            // gives the identical f32.
+            let mut m = lanes.iter().fold(0.0f32, |m, &x| m.max(x));
+            for &g in chunks.remainder() {
+                m = m.max(g.abs());
+            }
+            m
+        }
+
+        pub(crate) fn max_abs(grads: &[f32]) -> f32 {
+            // SAFETY: installed only in the AVX2 table (runtime-detected).
+            unsafe { max_abs_imp(grads) }
+        }
+    }
+
+    pub(crate) mod sse2 {
+        use crate::quant::bitpack;
+        use crate::quant::kernels::{self, BitWriter};
+        use crate::util::Rng;
+        use std::arch::x86_64::*;
+
+        /// Broadcast constants for the uniform block math (4-lane).
+        #[derive(Clone, Copy)]
+        struct UniC {
+            alpha: __m128,
+            neg_alpha: __m128,
+            inv_step: __m128,
+            s_m1: __m128,
+        }
+
+        /// Quantize 4 elements: indices (pre-`.min(s)`) into `ibuf`.
+        /// Operand-order rules are identical to the AVX2 block — SSE
+        /// MINPS/MAXPS/CMPLTPS share the AVX NaN and tie semantics.
+        #[inline]
+        #[target_feature(enable = "sse2")]
+        unsafe fn uniform_idx4(gp: *const f32, ubuf: &[f32; 4], c: UniC, ibuf: &mut [u32; 4]) {
+            let vg = _mm_loadu_ps(gp);
+            let gc = _mm_min_ps(c.alpha, _mm_max_ps(c.neg_alpha, vg));
+            let x = _mm_mul_ps(_mm_add_ps(gc, c.alpha), c.inv_step);
+            let xc = _mm_min_ps(x, c.s_m1);
+            let lo_i = _mm_cvttps_epi32(xc);
+            let lo_f = _mm_cvtepi32_ps(lo_i);
+            let frac = _mm_sub_ps(x, lo_f);
+            let u = _mm_loadu_ps(ubuf.as_ptr());
+            let bump = _mm_cmplt_ps(u, frac);
+            let idx = _mm_sub_epi32(lo_i, _mm_castps_si128(bump));
+            _mm_storeu_si128(ibuf.as_mut_ptr().cast(), idx);
+        }
+
+        #[target_feature(enable = "sse2")]
+        unsafe fn uniform_pack_imp(
+            grads: &[f32],
+            rng: &mut Rng,
+            alpha: f32,
+            s: u32,
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            out.reserve(bitpack::packed_len(grads.len(), bits));
+            let step = 2.0f32 * alpha / s as f32;
+            let inv_step = 1.0f32 / step;
+            let s_m1 = (s - 1) as f32;
+            let c = UniC {
+                alpha: _mm_set1_ps(alpha),
+                neg_alpha: _mm_set1_ps(-alpha),
+                inv_step: _mm_set1_ps(inv_step),
+                s_m1: _mm_set1_ps(s_m1),
+            };
+            let n = grads.len();
+            let mut ubuf = [0.0f32; 4];
+            let mut ibuf = [0u32; 4];
+            let mut i = 0usize;
+            if bits > 8 {
+                let mut idx = Vec::with_capacity(n);
+                while i + 4 <= n {
+                    for u in ubuf.iter_mut() {
+                        *u = rng.f32();
+                    }
+                    uniform_idx4(grads.as_ptr().add(i), &ubuf, c, &mut ibuf);
+                    for &k in &ibuf {
+                        idx.push(k.min(s));
+                    }
+                    i += 4;
+                }
+                for &g in &grads[i..] {
+                    let u = rng.f32();
+                    let gc = g.clamp(-alpha, alpha);
+                    let x = (gc + alpha) * inv_step;
+                    let lo = x.min(s_m1) as u32;
+                    idx.push((lo + u32::from(u < x - lo as f32)).min(s));
+                }
+                out.extend_from_slice(&bitpack::pack(&idx, bits));
+                return;
+            }
+            let mut w = BitWriter::new(out);
+            while i + 4 <= n {
+                for u in ubuf.iter_mut() {
+                    *u = rng.f32();
+                }
+                uniform_idx4(grads.as_ptr().add(i), &ubuf, c, &mut ibuf);
+                for &k in &ibuf {
+                    w.push(u64::from(k.min(s)), bits);
+                }
+                i += 4;
+            }
+            for &g in &grads[i..] {
+                let u = rng.f32();
+                let gc = g.clamp(-alpha, alpha);
+                let x = (gc + alpha) * inv_step;
+                let lo = x.min(s_m1) as u32;
+                let idx = (lo + u32::from(u < x - lo as f32)).min(s);
+                w.push(u64::from(idx), bits);
+            }
+            w.finish();
+        }
+
+        pub(crate) fn quantize_uniform_pack_into(
+            grads: &[f32],
+            rng: &mut Rng,
+            alpha: f32,
+            s: u32,
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            // SAFETY: SSE2 is part of the x86_64 baseline; this table is
+            // only constructed on x86_64.
+            unsafe { uniform_pack_imp(grads, rng, alpha, s, bits, out) }
+        }
+
+        #[target_feature(enable = "sse2")]
+        unsafe fn codebook_pack_imp(
+            grads: &[f32],
+            rng: &mut Rng,
+            codebook: &[f32],
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            let s = codebook.len() - 1;
+            out.reserve(bitpack::packed_len(grads.len(), bits));
+            let lo_bound = codebook[0];
+            let hi_bound = codebook[s];
+            let interior = &codebook[1..s];
+            let vlo = _mm_set1_ps(lo_bound);
+            let vhi = _mm_set1_ps(hi_bound);
+            let n = grads.len();
+            let mut kbuf = [0u32; 4];
+            let mut gbuf = [0.0f32; 4];
+            let mut w = BitWriter::new(out);
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let vg = _mm_loadu_ps(grads.as_ptr().add(i));
+                let gc = _mm_min_ps(vhi, _mm_max_ps(vlo, vg));
+                let mut kv = _mm_setzero_si128();
+                for &b in interior {
+                    let le = _mm_cmple_ps(_mm_set1_ps(b), gc);
+                    kv = _mm_sub_epi32(kv, _mm_castps_si128(le));
+                }
+                _mm_storeu_si128(kbuf.as_mut_ptr().cast(), kv);
+                _mm_storeu_ps(gbuf.as_mut_ptr(), gc);
+                for (&k32, &gcj) in kbuf.iter().zip(&gbuf) {
+                    let k = k32 as usize;
+                    let lower = codebook[k];
+                    let width = codebook[k + 1] - lower;
+                    let frac = if width > 0.0 { (gcj - lower) / width } else { 0.0 };
+                    let idx = (k + usize::from(rng.f32() < frac)) as u64;
+                    w.push(idx, bits);
+                }
+                i += 4;
+            }
+            for &g in &grads[i..] {
+                let gc = g.clamp(lo_bound, hi_bound);
+                let k = interior.partition_point(|&b| b <= gc);
+                let lower = codebook[k];
+                let width = codebook[k + 1] - lower;
+                let frac = if width > 0.0 { (gc - lower) / width } else { 0.0 };
+                let idx = (k + usize::from(rng.f32() < frac)) as u64;
+                w.push(idx, bits);
+            }
+            w.finish();
+        }
+
+        pub(crate) fn quantize_codebook_pack_into(
+            grads: &[f32],
+            rng: &mut Rng,
+            codebook: &[f32],
+            bits: u32,
+            out: &mut Vec<u8>,
+        ) {
+            if bits > 8 || codebook.len().saturating_sub(2) > super::super::CB_SIMD_MAX_INTERIOR {
+                return kernels::quantize_codebook_pack_into_scalar(grads, rng, codebook, bits, out);
+            }
+            // SAFETY: SSE2 is part of the x86_64 baseline.
+            unsafe { codebook_pack_imp(grads, rng, codebook, bits, out) }
+        }
+
+        #[target_feature(enable = "sse2")]
+        unsafe fn accumulate_imp(
+            packed: &[u8],
+            bits: u32,
+            n_levels: usize,
+            wlut: &[f32; 256],
+            acc: &mut [f32],
+        ) -> Result<(), u32> {
+            let mask = (1u64 << bits) - 1;
+            let n = acc.len();
+            let mut e = 0usize;
+            // Still 8 elements per block (two 4-lane halves) so block
+            // starts stay byte-aligned for every bits in 1..=8. SSE2 has
+            // no gather: the LUT reads stay scalar, the adds vectorize.
+            'blocks: while e + 8 <= n {
+                let byte = (e * bits as usize) >> 3;
+                let Some(win) = packed.get(byte..byte + 8) else { break };
+                let word = u64::from_le_bytes(win.try_into().unwrap());
+                let mut lut = [0.0f32; 8];
+                for (j, slot) in lut.iter_mut().enumerate() {
+                    let idx = ((word >> (j as u32 * bits)) & mask) as usize;
+                    if idx >= n_levels {
+                        break 'blocks;
+                    }
+                    *slot = wlut[idx];
+                }
+                let a0 = _mm_loadu_ps(acc.as_ptr().add(e));
+                let a1 = _mm_loadu_ps(acc.as_ptr().add(e + 4));
+                _mm_storeu_ps(acc.as_mut_ptr().add(e), _mm_add_ps(a0, _mm_loadu_ps(lut.as_ptr())));
+                _mm_storeu_ps(
+                    acc.as_mut_ptr().add(e + 4),
+                    _mm_add_ps(a1, _mm_loadu_ps(lut.as_ptr().add(4))),
+                );
+                e += 8;
+            }
+            kernels::accumulate_packed_wlut_from(packed, bits, n_levels, wlut, acc, e)
+        }
+
+        pub(crate) fn accumulate_packed_wlut(
+            packed: &[u8],
+            bits: u32,
+            n_levels: usize,
+            wlut: &[f32; 256],
+            acc: &mut [f32],
+        ) -> Result<(), u32> {
+            if bits > 8 {
+                // The 8-element u64 window requires bits ≤ 8.
+                return kernels::accumulate_packed_wlut_scalar(packed, bits, n_levels, wlut, acc);
+            }
+            // SAFETY: SSE2 is part of the x86_64 baseline.
+            unsafe { accumulate_imp(packed, bits, n_levels, wlut, acc) }
+        }
+
+        #[target_feature(enable = "sse2")]
+        unsafe fn max_abs_imp(grads: &[f32]) -> f32 {
+            let sign = _mm_set1_ps(-0.0);
+            let mut acc = _mm_setzero_ps();
+            let mut chunks = grads.chunks_exact(4);
+            for c in &mut chunks {
+                let v = _mm_loadu_ps(c.as_ptr());
+                // Candidate first: MAXPS returns the accumulator on NaN.
+                acc = _mm_max_ps(_mm_andnot_ps(sign, v), acc);
+            }
+            let mut lanes = [0.0f32; 4];
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+            let mut m = lanes.iter().fold(0.0f32, |m, &x| m.max(x));
+            for &g in chunks.remainder() {
+                m = m.max(g.abs());
+            }
+            m
+        }
+
+        pub(crate) fn max_abs(grads: &[f32]) -> f32 {
+            // SAFETY: SSE2 is part of the x86_64 baseline.
+            unsafe { max_abs_imp(grads) }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON (4-lane) kernel bodies. NEON is architecturally mandatory on
+    //! AArch64, so no runtime probe is needed. The key divergence from the
+    //! x86 paths: `FMIN`/`FMAX` PROPAGATE NaN, so wherever the scalar
+    //! semantics require returning the non-NaN operand, these paths select
+    //! explicitly on a `v == v` self-compare mask.
+
+    use crate::quant::bitpack;
+    use crate::quant::kernels::{self, BitWriter};
+    use crate::util::Rng;
+    use std::arch::aarch64::*;
+
+    /// Broadcast constants for the uniform block math.
+    #[derive(Clone, Copy)]
+    struct UniC {
+        alpha: float32x4_t,
+        neg_alpha: float32x4_t,
+        inv_step: float32x4_t,
+        s_m1: float32x4_t,
+    }
+
+    /// Quantize 4 elements: indices (pre-`.min(s)`) into `ibuf`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn uniform_idx4(gp: *const f32, ubuf: &[f32; 4], c: UniC, ibuf: &mut [u32; 4]) {
+        let vg = vld1q_f32(gp);
+        // Scalar `clamp` propagates NaN — FMIN/FMAX do too, and their
+        // ±0.0 ordering (-0.0 < +0.0) never changes an in-range value.
+        let gc = vminq_f32(c.alpha, vmaxq_f32(c.neg_alpha, vg));
+        let x = vmulq_f32(vaddq_f32(gc, c.alpha), c.inv_step);
+        // Scalar `x.min(s_m1)` returns s_m1 on NaN x, but FMIN would
+        // propagate the NaN — select on x==x (false only for NaN lanes).
+        let not_nan = vceqq_f32(x, x);
+        let xc = vbslq_f32(not_nan, vminq_f32(x, c.s_m1), c.s_m1);
+        // FCVTZU truncates toward zero (and −0.0 → 0), matching `as u32`.
+        let lo_i = vcvtq_u32_f32(xc);
+        let lo_f = vcvtq_f32_u32(lo_i);
+        let frac = vsubq_f32(x, lo_f);
+        let u = vld1q_f32(ubuf.as_ptr());
+        // FCMLT is false on NaN, like scalar `<`.
+        let bump = vcltq_f32(u, frac);
+        // True lanes are all-ones (−1 wrapping): subtract adds the bump.
+        let idx = vsubq_u32(lo_i, bump);
+        vst1q_u32(ibuf.as_mut_ptr(), idx);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn uniform_pack_imp(
+        grads: &[f32],
+        rng: &mut Rng,
+        alpha: f32,
+        s: u32,
+        bits: u32,
+        out: &mut Vec<u8>,
+    ) {
+        out.reserve(bitpack::packed_len(grads.len(), bits));
+        let step = 2.0f32 * alpha / s as f32;
+        let inv_step = 1.0f32 / step;
+        let s_m1 = (s - 1) as f32;
+        let c = UniC {
+            alpha: vdupq_n_f32(alpha),
+            neg_alpha: vdupq_n_f32(-alpha),
+            inv_step: vdupq_n_f32(inv_step),
+            s_m1: vdupq_n_f32(s_m1),
+        };
+        let n = grads.len();
+        let mut ubuf = [0.0f32; 4];
+        let mut ibuf = [0u32; 4];
+        let mut i = 0usize;
+        if bits > 8 {
+            let mut idx = Vec::with_capacity(n);
+            while i + 4 <= n {
+                for u in ubuf.iter_mut() {
+                    *u = rng.f32();
+                }
+                uniform_idx4(grads.as_ptr().add(i), &ubuf, c, &mut ibuf);
+                for &k in &ibuf {
+                    idx.push(k.min(s));
+                }
+                i += 4;
+            }
+            for &g in &grads[i..] {
+                let u = rng.f32();
+                let gc = g.clamp(-alpha, alpha);
+                let x = (gc + alpha) * inv_step;
+                let lo = x.min(s_m1) as u32;
+                idx.push((lo + u32::from(u < x - lo as f32)).min(s));
+            }
+            out.extend_from_slice(&bitpack::pack(&idx, bits));
+            return;
+        }
+        let mut w = BitWriter::new(out);
+        while i + 4 <= n {
+            for u in ubuf.iter_mut() {
+                *u = rng.f32();
+            }
+            uniform_idx4(grads.as_ptr().add(i), &ubuf, c, &mut ibuf);
+            for &k in &ibuf {
+                w.push(u64::from(k.min(s)), bits);
+            }
+            i += 4;
+        }
+        for &g in &grads[i..] {
+            let u = rng.f32();
+            let gc = g.clamp(-alpha, alpha);
+            let x = (gc + alpha) * inv_step;
+            let lo = x.min(s_m1) as u32;
+            let idx = (lo + u32::from(u < x - lo as f32)).min(s);
+            w.push(u64::from(idx), bits);
+        }
+        w.finish();
+    }
+
+    pub(crate) fn quantize_uniform_pack_into(
+        grads: &[f32],
+        rng: &mut Rng,
+        alpha: f32,
+        s: u32,
+        bits: u32,
+        out: &mut Vec<u8>,
+    ) {
+        // SAFETY: NEON is mandatory on AArch64; this table only exists
+        // there.
+        unsafe { uniform_pack_imp(grads, rng, alpha, s, bits, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn codebook_pack_imp(
+        grads: &[f32],
+        rng: &mut Rng,
+        codebook: &[f32],
+        bits: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let s = codebook.len() - 1;
+        out.reserve(bitpack::packed_len(grads.len(), bits));
+        let lo_bound = codebook[0];
+        let hi_bound = codebook[s];
+        let interior = &codebook[1..s];
+        let vlo = vdupq_n_f32(lo_bound);
+        let vhi = vdupq_n_f32(hi_bound);
+        let n = grads.len();
+        let mut kbuf = [0u32; 4];
+        let mut gbuf = [0.0f32; 4];
+        let mut w = BitWriter::new(out);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vg = vld1q_f32(grads.as_ptr().add(i));
+            // clamp: NaN propagates through FMIN/FMAX like scalar clamp.
+            let gc = vminq_f32(vhi, vmaxq_f32(vlo, vg));
+            // Linear boundary count (== partition_point on sorted input);
+            // FCMLE is false on NaN, so NaN gc counts 0 like scalar.
+            let mut kv = vdupq_n_u32(0);
+            for &b in interior {
+                let le = vcleq_f32(vdupq_n_f32(b), gc);
+                kv = vsubq_u32(kv, le);
+            }
+            vst1q_u32(kbuf.as_mut_ptr(), kv);
+            vst1q_f32(gbuf.as_mut_ptr(), gc);
+            for (&k32, &gcj) in kbuf.iter().zip(&gbuf) {
+                let k = k32 as usize;
+                let lower = codebook[k];
+                let width = codebook[k + 1] - lower;
+                let frac = if width > 0.0 { (gcj - lower) / width } else { 0.0 };
+                let idx = (k + usize::from(rng.f32() < frac)) as u64;
+                w.push(idx, bits);
+            }
+            i += 4;
+        }
+        for &g in &grads[i..] {
+            let gc = g.clamp(lo_bound, hi_bound);
+            let k = interior.partition_point(|&b| b <= gc);
+            let lower = codebook[k];
+            let width = codebook[k + 1] - lower;
+            let frac = if width > 0.0 { (gc - lower) / width } else { 0.0 };
+            let idx = (k + usize::from(rng.f32() < frac)) as u64;
+            w.push(idx, bits);
+        }
+        w.finish();
+    }
+
+    pub(crate) fn quantize_codebook_pack_into(
+        grads: &[f32],
+        rng: &mut Rng,
+        codebook: &[f32],
+        bits: u32,
+        out: &mut Vec<u8>,
+    ) {
+        if bits > 8 || codebook.len().saturating_sub(2) > super::CB_SIMD_MAX_INTERIOR {
+            return kernels::quantize_codebook_pack_into_scalar(grads, rng, codebook, bits, out);
+        }
+        // SAFETY: NEON is mandatory on AArch64.
+        unsafe { codebook_pack_imp(grads, rng, codebook, bits, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn accumulate_imp(
+        packed: &[u8],
+        bits: u32,
+        n_levels: usize,
+        wlut: &[f32; 256],
+        acc: &mut [f32],
+    ) -> Result<(), u32> {
+        let mask = (1u64 << bits) - 1;
+        let n = acc.len();
+        let mut e = 0usize;
+        // 8 elements per block (two 4-lane halves) so block starts stay
+        // byte-aligned for every bits in 1..=8; LUT reads stay scalar.
+        'blocks: while e + 8 <= n {
+            let byte = (e * bits as usize) >> 3;
+            let Some(win) = packed.get(byte..byte + 8) else { break };
+            let word = u64::from_le_bytes(win.try_into().unwrap());
+            let mut lut = [0.0f32; 8];
+            for (j, slot) in lut.iter_mut().enumerate() {
+                let idx = ((word >> (j as u32 * bits)) & mask) as usize;
+                if idx >= n_levels {
+                    break 'blocks;
+                }
+                *slot = wlut[idx];
+            }
+            let a0 = vld1q_f32(acc.as_ptr().add(e));
+            let a1 = vld1q_f32(acc.as_ptr().add(e + 4));
+            vst1q_f32(acc.as_mut_ptr().add(e), vaddq_f32(a0, vld1q_f32(lut.as_ptr())));
+            vst1q_f32(acc.as_mut_ptr().add(e + 4), vaddq_f32(a1, vld1q_f32(lut.as_ptr().add(4))));
+            e += 8;
+        }
+        kernels::accumulate_packed_wlut_from(packed, bits, n_levels, wlut, acc, e)
+    }
+
+    pub(crate) fn accumulate_packed_wlut(
+        packed: &[u8],
+        bits: u32,
+        n_levels: usize,
+        wlut: &[f32; 256],
+        acc: &mut [f32],
+    ) -> Result<(), u32> {
+        if bits > 8 {
+            // The 8-element u64 window requires bits ≤ 8.
+            return kernels::accumulate_packed_wlut_scalar(packed, bits, n_levels, wlut, acc);
+        }
+        // SAFETY: NEON is mandatory on AArch64.
+        unsafe { accumulate_imp(packed, bits, n_levels, wlut, acc) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn max_abs_imp(grads: &[f32]) -> f32 {
+        let mut acc = vdupq_n_f32(0.0);
+        let mut chunks = grads.chunks_exact(4);
+        for c in &mut chunks {
+            let a = vabsq_f32(vld1q_f32(c.as_ptr()));
+            // FMAX propagates NaN: replace NaN candidates with the current
+            // accumulator first, matching scalar `f32::max`'s NaN-ignore.
+            let cand = vbslq_f32(vceqq_f32(a, a), a, acc);
+            acc = vmaxq_f32(acc, cand);
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), acc);
+        let mut m = lanes.iter().fold(0.0f32, |m, &x| m.max(x));
+        for &g in chunks.remainder() {
+            m = m.max(g.abs());
+        }
+        m
+    }
+
+    pub(crate) fn max_abs(grads: &[f32]) -> f32 {
+        // SAFETY: NEON is mandatory on AArch64.
+        unsafe { max_abs_imp(grads) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bitpack;
+
+    // The exhaustive scheme × bits 1..=16 × ragged-length sweep lives in
+    // tests/quant_props.rs (`simd_matches_scalar`); these are fast inline
+    // smoke checks that every table entry executes and agrees.
+
+    fn tables() -> Vec<&'static KernelDispatch> {
+        vec![scalar_kernels(), detected_kernels(), active_kernels()]
+    }
+
+    #[test]
+    fn every_table_round_trips_the_uniform_pack() {
+        let mut seed_rng = Rng::new(7);
+        let g: Vec<f32> = (0..1000).map(|_| (seed_rng.student_t(3.0) * 0.01) as f32).collect();
+        let mut want = Vec::new();
+        let mut r = Rng::new(5);
+        (scalar_kernels().quantize_uniform_pack_into)(&g, &mut r, 0.03, 15, 4, &mut want);
+        for t in tables() {
+            let mut out = Vec::new();
+            let mut r = Rng::new(5);
+            (t.quantize_uniform_pack_into)(&g, &mut r, 0.03, 15, 4, &mut out);
+            assert_eq!(out, want, "isa={}", t.isa);
+        }
+    }
+
+    #[test]
+    fn every_table_agrees_on_accumulate_and_max_abs() {
+        let mut rng = Rng::new(8);
+        let n = 777usize;
+        let idx: Vec<u32> = (0..n).map(|_| rng.below(8) as u32).collect();
+        let packed = bitpack::pack(&idx, 3);
+        let mut wlut = [0.0f32; 256];
+        for (k, slot) in wlut.iter_mut().enumerate().take(8) {
+            *slot = 0.125 * (k as f32 - 3.0);
+        }
+        let base: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let mut want = base.clone();
+        (scalar_kernels().accumulate_packed_wlut)(&packed, 3, 8, &wlut, &mut want).unwrap();
+        for t in tables() {
+            let mut acc = base.clone();
+            (t.accumulate_packed_wlut)(&packed, 3, 8, &wlut, &mut acc).unwrap();
+            assert_eq!(acc, want, "isa={}", t.isa);
+            assert_eq!(
+                (t.max_abs)(&base).to_bits(),
+                (scalar_kernels().max_abs)(&base).to_bits(),
+                "isa={}",
+                t.isa
+            );
+        }
+    }
+
+    #[test]
+    fn detected_isa_is_plausible_for_this_arch() {
+        let isa = detected_kernels().isa;
+        #[cfg(target_arch = "x86_64")]
+        assert!(isa == "avx2" || isa == "sse2", "{isa}");
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(isa, "neon");
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert_eq!(isa, "scalar");
+        // The scalar table is always reachable regardless.
+        assert_eq!(scalar_kernels().isa, "scalar");
+    }
+}

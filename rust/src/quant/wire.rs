@@ -545,8 +545,11 @@ pub fn decode_dequantize(bytes: &[u8]) -> Result<Vec<f32>> {
 /// entirely. For uniform/codebook/multiscale frames with bits ≤ 8 and at
 /// most 256 levels the per-level products `w * level_k` are precomputed
 /// into a 256-entry LUT, so the inner loop is an unpack, a table load and
-/// an add; wider frames (legal up to [`MAX_BITS`]) fall back to a staged
-/// unpack with the identical per-element f32 operations.
+/// an add — executed by the runtime-dispatched
+/// [`super::kernels::accumulate_packed_wlut`] (SIMD gather-add where the
+/// CPU supports it, bit-identical to scalar; see [`super::simd`]); wider
+/// frames (legal up to [`MAX_BITS`]) fall back to a staged unpack with the
+/// identical per-element f32 operations.
 ///
 /// Bit-identity contract (the server's sharded aggregation relies on it,
 /// property-tested across schemes × bits): every element receives exactly

@@ -476,9 +476,12 @@ enum KernelOp {
     Stats,
 }
 
-/// Scalar-kernel implementation of [`QuantKernel`], mirroring the Pallas
+/// CPU-kernel implementation of [`QuantKernel`], mirroring the Pallas
 /// artifact entry points (`quant_uniform_b*`, `quant_nonuniform_b*`,
-/// `quant_biscaled_b*`, `tail_stats`).
+/// `quant_biscaled_b*`, `tail_stats`). Routes through the
+/// runtime-dispatched tables in [`crate::quant::simd`] (like every
+/// `quant::kernels` caller), so the slice surface picks up SIMD where the
+/// CPU offers it while staying bit-identical to the scalar reference.
 pub struct NativeQuantKernel {
     op: KernelOp,
     entry: String,

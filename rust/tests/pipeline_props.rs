@@ -118,6 +118,35 @@ fn streaming_is_bit_identical_at_every_shard_width() {
     }
 }
 
+/// Encode-pool sweep: the barrier pipeline's client-side encode pool
+/// (`encode_threads`, the compression-side mirror of `agg_shards`) chunks
+/// the active clients in order and per-client codec state is disjoint, so
+/// every pool width must reproduce the single-worker run bit-for-bit —
+/// digest and parameters — in every preset. Invariant 8 in
+/// docs/DETERMINISM.md.
+#[test]
+fn barrier_encode_pool_is_bit_identical_at_every_width() {
+    let backend = native();
+    for preset in PRESETS {
+        let reference = {
+            let mut cfg = grid_cfg(Scheme::Tqsgd, 4, preset);
+            cfg.encode_threads = 1;
+            cfg.pipeline = PipelineMode::Barrier;
+            run(backend.as_ref(), &cfg, 3)
+        };
+        for threads in [1usize, 2, 7] {
+            let mut cfg = grid_cfg(Scheme::Tqsgd, 4, preset);
+            cfg.encode_threads = threads;
+            cfg.pipeline = PipelineMode::Barrier;
+            let got = run(backend.as_ref(), &cfg, 3);
+            assert_eq!(
+                reference, got,
+                "tqsgd@{preset} encode_threads={threads} != single worker"
+            );
+        }
+    }
+}
+
 /// Error feedback moves state repair (`restore_lost`) onto the encode
 /// workers in streaming mode; the per-client mutation sequence is unchanged
 /// so lossy EF runs must stay bit-identical too.

@@ -380,6 +380,123 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
 }
 
 // ---------------------------------------------------------------------------
+// SIMD dispatch: the detected kernel table is bit-identical to scalar
+// ---------------------------------------------------------------------------
+
+/// The dispatch contract of `quant::simd` (invariant 8 in
+/// docs/DETERMINISM.md): at every bit width the wire can carry (1..=16) and
+/// ragged lengths around the SIMD block size — including lengths below one
+/// block, NaN and signed-zero inputs — the detected table produces
+/// byte-identical packed streams off identical RNG draws, bit-identical
+/// accumulates (including the partial-write + `Err(first_bad_index)` path
+/// for corrupt frames) and bit-identical `max_abs`.
+#[test]
+fn simd_matches_scalar() {
+    let sc = tqsgd::quant::simd::scalar_kernels();
+    let dt = tqsgd::quant::simd::detected_kernels();
+    for bits in 1..=16u32 {
+        prop::check(6, |rng| {
+            // Length buckets: below one 8-lane block / one block + ragged
+            // tail / a few hundred elements.
+            let n = match rng.below(3) {
+                0 => rng.below(8) as usize,
+                1 => 8 + rng.below(9) as usize,
+                _ => rng.below(400) as usize,
+            };
+            let mut g: Vec<f32> =
+                (0..n).map(|_| (rng.student_t(3.0) * 0.01) as f32).collect();
+            if n > 0 {
+                g[rng.below(n as u64) as usize] = -0.0;
+                if rng.below(2) == 1 {
+                    g[rng.below(n as u64) as usize] = f32::NAN;
+                }
+            }
+            let alpha = (0.01 + rng.f64() * 0.2) as f32;
+            let s = (1u32 << bits) - 1;
+            let seed = rng.below(1u64 << 32);
+
+            // Uniform quantize+pack: same RNG stream, same appended bytes
+            // (non-empty prefix pins the append-to-frame semantics).
+            let (mut a, mut b) = (vec![0x5Au8], vec![0x5Au8]);
+            let (mut r1, mut r2) = (Rng::new(seed), Rng::new(seed));
+            (sc.quantize_uniform_pack_into)(&g, &mut r1, alpha, s, bits, &mut a);
+            (dt.quantize_uniform_pack_into)(&g, &mut r2, alpha, s, bits, &mut b);
+            prop::assert_prop(
+                a == b,
+                format!("uniform b{bits} n{n}: dispatched bytes != scalar"),
+            )?;
+
+            // Codebook quantize+pack: small codebooks take the SIMD lane
+            // path, > 32 interior levels the delegation path — both must
+            // match scalar.
+            let max_len = (1usize << bits).min(40);
+            let cb_len = 2 + rng.below((max_len - 1) as u64) as usize;
+            let mut cb: Vec<f32> =
+                (0..cb_len).map(|_| (rng.f64() * 0.4 - 0.2) as f32).collect();
+            cb.sort_by(f32::total_cmp);
+            for i in 1..cb.len() {
+                if cb[i] <= cb[i - 1] {
+                    cb[i] = cb[i - 1] + 1e-3;
+                }
+            }
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            let (mut r1, mut r2) = (Rng::new(seed ^ 1), Rng::new(seed ^ 1));
+            (sc.quantize_codebook_pack_into)(&g, &mut r1, &cb, bits, &mut a);
+            (dt.quantize_codebook_pack_into)(&g, &mut r2, &cb, bits, &mut b);
+            prop::assert_prop(
+                a == b,
+                format!("codebook b{bits} len{cb_len} n{n}: dispatched bytes != scalar"),
+            )?;
+
+            // Accumulate (bits 1..=8: one LUT byte per index): bit-identical
+            // sums into a dirty accumulator, and identical partial-write +
+            // Err on an injected out-of-range index.
+            if bits <= 8 {
+                let n_levels = cb.len();
+                let mut wlut = [0.0f32; 256];
+                for (w, &c) in wlut.iter_mut().zip(&cb) {
+                    *w = 0.3 * c;
+                }
+                let mut idx: Vec<u32> =
+                    (0..n).map(|_| rng.below(n_levels as u64) as u32).collect();
+                let packed = bitpack::pack(&idx, bits);
+                let mut acc_a: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+                let mut acc_b = acc_a.clone();
+                let ra = (sc.accumulate_packed_wlut)(&packed, bits, n_levels, &wlut, &mut acc_a);
+                let rb = (dt.accumulate_packed_wlut)(&packed, bits, n_levels, &wlut, &mut acc_b);
+                prop::assert_prop(
+                    ra == rb && bits_eq(&acc_a, &acc_b),
+                    format!("accumulate b{bits} n{n}: dispatched != scalar"),
+                )?;
+                if n > 0 && n_levels < (1usize << bits) {
+                    idx[rng.below(n as u64) as usize] = (1u32 << bits) - 1;
+                    let packed = bitpack::pack(&idx, bits);
+                    let mut acc_a: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+                    let mut acc_b = acc_a.clone();
+                    let ra =
+                        (sc.accumulate_packed_wlut)(&packed, bits, n_levels, &wlut, &mut acc_a);
+                    let rb =
+                        (dt.accumulate_packed_wlut)(&packed, bits, n_levels, &wlut, &mut acc_b);
+                    prop::assert_prop(
+                        ra.is_err() && ra == rb && bits_eq(&acc_a, &acc_b),
+                        format!(
+                            "accumulate b{bits} n{n}: corrupt-frame Err/partial-write \
+                             dispatched != scalar"
+                        ),
+                    )?;
+                }
+            }
+
+            // max_abs: bit-identical (covers NaN skip and -0.0 → +0.0).
+            prop::assert_prop(
+                (sc.max_abs)(&g).to_bits() == (dt.max_abs)(&g).to_bits(),
+                format!("max_abs n{n}: dispatched != scalar"),
+            )
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Error feedback: (transmitted + residual) conserves the true gradient
 // ---------------------------------------------------------------------------
 
